@@ -1,0 +1,61 @@
+//! Energy/area walkthrough: Table 1 op costs → MAC styles → Eyeriss energy
+//! for every model/variant → area-constrained latency (Table 13 mechanics).
+//! Pure analytics — runs without artifacts.
+//!
+//! ```sh
+//! cargo run --release --example energy_report
+//! ```
+
+use shiftaddvit::energy::area::AreaModel;
+use shiftaddvit::energy::eyeriss::{energy, Hierarchy};
+use shiftaddvit::energy::ops::MacStyle;
+use shiftaddvit::harness::figures;
+use shiftaddvit::model::config::classifier;
+use shiftaddvit::model::ops::{count, Variant};
+
+fn main() {
+    figures::table1();
+
+    let h = Hierarchy::default();
+    let a = AreaModel::default();
+    println!("\nPE counts under the 168-FP32-PE area budget:");
+    for s in [
+        MacStyle::MultFp32,
+        MacStyle::MultInt8,
+        MacStyle::ShiftInt32,
+        MacStyle::AddInt32,
+    ] {
+        println!("  {s:?}: {} PEs", a.pes(s) as usize);
+    }
+
+    for model in ["pvtv2_b0", "pvtv1_t", "pvtv2_b1", "pvtv2_b2", "deit_t"] {
+        let spec = classifier(model);
+        println!("\n=== {} ===", spec.name);
+        println!(
+            "{:20} {:>10} {:>12} {:>12} {:>12} {:>14}",
+            "variant", "GMACs", "compute mJ", "DRAM mJ", "total mJ", "area-lat ms"
+        );
+        for (label, var) in [
+            ("MSA", Variant::MSA),
+            ("Linear", Variant::LINEAR),
+            ("Linear+Add", Variant::ADD),
+            ("+ShiftAttn", Variant::ADD_SHIFT_ATTN),
+            ("+ShiftBoth", Variant::ADD_SHIFT_BOTH),
+            ("+MoE(50/50)", Variant::SHIFTADD_MOE),
+        ] {
+            let ops = count(&spec, var);
+            let r = energy(&ops, &h);
+            println!(
+                "{:20} {:>10.2} {:>12.2} {:>12.2} {:>12.2} {:>14.2}",
+                label,
+                ops.total_macs() / 1e9,
+                r.compute_mj,
+                r.dram_mj,
+                r.total_mj(),
+                a.latency_ms(&ops)
+            );
+        }
+    }
+    println!("\nFig. 3 companion:");
+    figures::fig3_energy_breakdown();
+}

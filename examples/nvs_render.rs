@@ -1,0 +1,45 @@
+//! Fig. 10 — qualitative NVS renders: ray-trace ground truth vs the GNT-style
+//! ray transformer and its ShiftAddViT reparameterizations; writes PPMs.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example nvs_render
+//! ```
+
+use anyhow::Result;
+use shiftaddvit::harness::nvs::NVS_LADDER;
+use shiftaddvit::nvs::render::eval_scene;
+use shiftaddvit::nvs::scenes::Scene;
+use shiftaddvit::runtime::engine::Engine;
+use shiftaddvit::util::image::write_ppm;
+
+fn main() -> Result<()> {
+    let engine = Engine::from_default_dir()?;
+    let out = std::path::Path::new("out/nvs");
+    std::fs::create_dir_all(out)?;
+    let img = 32;
+    for scene_name in ["orchids", "flower"] {
+        let scene = Scene::from_manifest(&engine.manifest().root, scene_name)?;
+        let gt = scene.render_gt(img, 0.15);
+        write_ppm(&out.join(format!("{scene_name}_gt.ppm")), &gt, img, img)?;
+        println!("scene '{scene_name}' (ground truth written)");
+        for (artifact, label, _) in NVS_LADDER {
+            match eval_scene(&engine, &scene, artifact, img, 0.15) {
+                Ok(e) => {
+                    write_ppm(
+                        &out.join(format!("{scene_name}_{artifact}.ppm")),
+                        &e.pred,
+                        img,
+                        img,
+                    )?;
+                    println!(
+                        "  {label:40} PSNR {:6.2}  SSIM {:.3}  LPIPS* {:.3}",
+                        e.psnr, e.ssim, e.lpips
+                    );
+                }
+                Err(err) => println!("  {label:40} unavailable: {err}"),
+            }
+        }
+    }
+    println!("\nPPM files in {out:?} — view with any image tool.");
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Quickstart: load one AOT-compiled ShiftAddViT artifact, classify a few
+//! synthetic images, and print what the stack just did.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use shiftaddvit::data::synth_images;
+use shiftaddvit::runtime::engine::Engine;
+use shiftaddvit::runtime::tensor::Tensor;
+
+fn main() -> Result<()> {
+    // The engine owns a PJRT CPU client and a compile cache over the
+    // HLO-text artifacts produced (once) by `python/compile/aot.py`.
+    let engine = Engine::from_default_dir()?;
+    println!(
+        "loaded manifest with {} artifacts from {:?}",
+        engine.manifest().models.len(),
+        engine.manifest().dir
+    );
+
+    // Pick the fully reparameterized ShiftAddViT: linear attention with
+    // binarized Q/K (adds), MoE MLPs (Mult + Shift experts).
+    let name = "cls_pvtv2_b0_add_quant_moe_both_bs1";
+    let compiled = engine.load(name)?;
+    println!("compiled '{name}' in {:.1} ms", compiled.compile_ms);
+
+    let mut correct = 0;
+    let n = 16;
+    for seed in 0..n {
+        let sample = synth_images::gen_image(123_000 + seed);
+        let logits = engine.run(
+            &compiled,
+            &[Tensor::f32(vec![1, 32, 32, 3], sample.pixels.clone())],
+        )?;
+        let pred = logits[0].argmax_last()?[0];
+        if pred == sample.label {
+            correct += 1;
+        }
+        if seed < 4 {
+            println!(
+                "  image {seed}: true={:8} pred={:8}",
+                synth_images::SHAPE_NAMES[sample.label],
+                synth_images::SHAPE_NAMES[pred]
+            );
+        }
+    }
+    println!(
+        "accuracy on {n} held-out synthetic images: {:.0}% \
+         (reflects trained checkpoints if `make train` ran before `make artifacts`)",
+        100.0 * correct as f64 / n as f64
+    );
+    Ok(())
+}

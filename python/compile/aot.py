@@ -1,0 +1,286 @@
+"""AOT compile path: lower every model variant to HLO *text* artifacts.
+
+Run once via ``make artifacts``; Python never appears on the request path.
+
+Interchange format is HLO text, NOT ``lowered.compiler_ir("hlo")`` protos nor
+``.serialize()``: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids
+which the Rust side's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifact families written to ``artifacts/``:
+
+- ``cls_<model>_<variant>_bs<B>.hlo.txt`` — whole-model classification
+  forward, weights baked as constants (latency/throughput benches; Tables
+  3/4/6/12).
+- ``pallas_<model>_<variant>_bs1.hlo.txt`` — same forward but routed through
+  the L1 Pallas kernels (interpret mode), proving the three layers compose;
+  executed by the Rust integration tests.
+- ``serve_*`` — the pipeline-decomposed serving model for the L3
+  coordinator's real sparse MoE dispatch: stem, per-block attention,
+  per-block pre-MLP (LN + router gates), per-expert MLPs at several token
+  buckets, classifier head.
+- ``nvs_*`` / ``lra_*`` — GNT-style ray transformer and LRA sequence models
+  (Tables 5, 11).
+- ``manifest.json`` — shapes/dtypes and the serving topology for Rust.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import model_nvs as NVS
+from . import model_lra as LRA
+from .params_io import load_params, trained_path
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is ESSENTIAL: the default printer elides
+    # baked weights as `constant({...})`, which the Rust-side text parser
+    # silently fills with zeros — every model would run with zero weights.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_fn(fn, example_args):
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+class ArtifactWriter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest = {"models": {}, "serve": {}, "meta": {}}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def add(self, name: str, fn, example_args, **meta):
+        t0 = time.time()
+        text = lower_fn(fn, example_args)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, path), "w") as f:
+            f.write(text)
+        self.manifest["models"][name] = {
+            "path": path,
+            "inputs": [
+                {"shape": list(a.shape), "dtype": str(a.dtype)} for a in example_args
+            ],
+            **meta,
+        }
+        print(f"  lowered {name:48s} {len(text)//1024:5d} KiB  {time.time()-t0:.1f}s")
+
+    def finish(self):
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"wrote manifest with {len(self.manifest['models'])} artifacts")
+
+
+def spec(*shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# Variants lowered for the breakdown tables (4/6): one per table row family.
+BENCH_VARIANTS = [
+    "msa",
+    "linear",
+    "add_ksh",
+    "add_quant",
+    "add_ksh_shiftattn",
+    "add_quant_shift_both",
+    "add_ksh_moe_both",
+    "add_quant_moe_both",
+]
+
+
+def build_classifiers(w: ArtifactWriter, models, batches, quick: bool):
+    for mname in models:
+        cfg = M.MODELS[mname]
+        variants = BENCH_VARIANTS if not quick else ["msa", "add_quant_moe_both"]
+        for vname in variants:
+            var = M.VARIANTS[vname]
+            params = load_params(mname, vname, cfg)
+
+            def fwd(x, params=params, cfg=cfg, var=var):
+                logits, _ = M.forward(params, x, cfg, var, use_pallas=False)
+                return (logits,)
+
+            for bs in batches:
+                w.add(
+                    f"cls_{mname}_{vname}_bs{bs}",
+                    fwd,
+                    (spec(bs, cfg.img, cfg.img, 3),),
+                    kind="classifier",
+                    model=mname,
+                    variant=vname,
+                    batch=bs,
+                )
+
+
+def build_pallas_proof(w: ArtifactWriter, mname="pvtv2_b0", vname="add_quant_moe_both"):
+    """Lower the pallas-kernel path of one full model (L1∘L2∘L3 composition)."""
+    cfg = M.MODELS[mname]
+    var = M.VARIANTS[vname]
+    params = load_params(mname, vname, cfg)
+
+    def fwd(x):
+        logits, _ = M.forward(params, x, cfg, var, use_pallas=True)
+        return (logits,)
+
+    w.add(
+        f"pallas_{mname}_{vname}_bs1",
+        fwd,
+        (spec(1, cfg.img, cfg.img, 3),),
+        kind="classifier_pallas",
+        model=mname,
+        variant=vname,
+        batch=1,
+    )
+
+
+def build_serving(w: ArtifactWriter, mname: str, vname: str, quick: bool):
+    """Pipeline-decomposed serving model (real sparse MoE dispatch in Rust)."""
+    cfg = M.MODELS[mname]
+    var = M.VARIANTS[vname]
+    assert var.mlp == "moe", "serving decomposition expects the MoE variant"
+    params = load_params(mname, vname, cfg)
+    grid = cfg.img // cfg.patch
+    n, d = cfg.tokens, cfg.dim
+    batch_buckets = [1, 2, 4, 8] if not quick else [1, 4]
+    token_buckets = [64, 128, 256, 512] if not quick else [64, 256]
+
+    def stem(x):
+        b = x.shape[0]
+        ph = x.reshape(b, grid, cfg.patch, grid, cfg.patch, 3)
+        ph = ph.transpose(0, 1, 3, 2, 4, 5).reshape(b, grid * grid, -1)
+        return (ph @ params["embed_w"] + params["embed_b"] + params["pos"],)
+
+    def blk_attn(t, blk):
+        M.params_global = params
+        u = M.layer_norm(t, blk["ln1_g"], blk["ln1_b"])
+        return (t + M.attention(blk, u, cfg, var, False, grid),)
+
+    def blk_premlp(t, blk):
+        """LN2 + router gates — everything the coordinator needs to dispatch."""
+        u = M.layer_norm(t, blk["ln2_g"], blk["ln2_b"])
+        gates = jax.nn.softmax(u @ blk["gate_w"], axis=-1)
+        return (u, gates)
+
+    def expert_mult(u, blk):
+        h = jax.nn.relu(u @ blk["w1"] + blk["b1"])
+        return (h @ blk["w2"] + blk["b2"],)
+
+    def expert_shift(u, blk):
+        from .kernels import ref
+
+        w1 = ref.pow2_dequantize(*ref.pow2_quantize(blk["w1s"]))
+        w2 = ref.pow2_dequantize(*ref.pow2_quantize(blk["w2s"]))
+        h = jax.nn.relu(u @ w1 + blk["b1s"])
+        return (h @ w2 + blk["b2s"],)
+
+    def head(t):
+        u = M.layer_norm(t, params["norm_g"], params["norm_b"])
+        return (u.mean(axis=1) @ params["head_w"] + params["head_b"],)
+
+    for bs in batch_buckets:
+        w.add(f"serve_stem_bs{bs}", stem, (spec(bs, cfg.img, cfg.img, 3),), kind="serve_stem", batch=bs)
+        w.add(f"serve_head_bs{bs}", head, (spec(bs, n, d),), kind="serve_head", batch=bs)
+
+    blocks_meta = []
+    for i, blk in enumerate(params["blocks"]):
+        for bs in batch_buckets:
+            w.add(
+                f"serve_blk{i}_attn_bs{bs}",
+                lambda t, blk=blk: blk_attn(t, blk),
+                (spec(bs, n, d),),
+                kind="serve_attn",
+                block=i,
+                batch=bs,
+            )
+            w.add(
+                f"serve_blk{i}_premlp_bs{bs}",
+                lambda t, blk=blk: blk_premlp(t, blk),
+                (spec(bs, n, d),),
+                kind="serve_premlp",
+                block=i,
+                batch=bs,
+            )
+        for nb in token_buckets:
+            w.add(
+                f"serve_expert_mult_blk{i}_n{nb}",
+                lambda u, blk=blk: expert_mult(u, blk),
+                (spec(nb, d),),
+                kind="serve_expert",
+                expert="mult",
+                block=i,
+                tokens=nb,
+            )
+            w.add(
+                f"serve_expert_shift_blk{i}_n{nb}",
+                lambda u, blk=blk: expert_shift(u, blk),
+                (spec(nb, d),),
+                kind="serve_expert",
+                expert="shift",
+                block=i,
+                tokens=nb,
+            )
+        blocks_meta.append({"block": i, "moe": True})
+
+    w.manifest["serve"] = {
+        "model": mname,
+        "variant": vname,
+        "img": cfg.img,
+        "patch": cfg.patch,
+        "tokens": n,
+        "dim": d,
+        "depth": cfg.depth,
+        "num_classes": cfg.num_classes,
+        "batch_buckets": batch_buckets,
+        "token_buckets": token_buckets,
+        "blocks": blocks_meta,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/manifest.json")
+    ap.add_argument("--quick", action="store_true", help="small artifact set for CI")
+    ap.add_argument(
+        "--models",
+        default="pvtv2_b0,pvtv1_t,pvtv2_b1,pvtv2_b2,deit_t",
+        help="comma-separated classifier configs to lower",
+    )
+    args = ap.parse_args()
+    out_dir = os.path.dirname(os.path.abspath(args.out))
+
+    w = ArtifactWriter(out_dir)
+    models = args.models.split(",") if not args.quick else ["pvtv2_b0"]
+    print("== classifiers ==")
+    build_classifiers(w, models, batches=[1, 32] if not args.quick else [1], quick=args.quick)
+    print("== pallas composition proof ==")
+    build_pallas_proof(w)
+    print("== serving pipeline ==")
+    build_serving(w, "pvtv2_b0", "add_quant_moe_both", quick=args.quick)
+    print("== NVS (GNT-style ray transformer) ==")
+    NVS.build_artifacts(w, quick=args.quick)
+    print("== LRA sequence models ==")
+    LRA.build_artifacts(w, quick=args.quick)
+    w.manifest["meta"] = {
+        "jax": jax.__version__,
+        "quick": args.quick,
+        "note": "weights are trained if python/trained/*.npz existed at build time, else seeded-random",
+    }
+    w.finish()
+
+
+if __name__ == "__main__":
+    main()

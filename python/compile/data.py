@@ -1,0 +1,155 @@
+"""Synthetic "shapes" classification dataset (ImageNet substitute).
+
+The paper's MoE hypothesis is that *object* tokens need the powerful Mult.
+expert while *background* tokens can be handled by the cheap Shift expert.
+This generator preserves exactly that structure: each image is a textured
+background plus a single filled shape whose class is the label. Token-level
+object/background separability is therefore real, which is what the router
+must learn (Fig. 6/9 reproduction).
+
+The generator is mirrored bit-for-bit in Rust (``rust/src/data/synth_images.rs``)
+so the serving path scores accuracy on the *same* distribution the model was
+trained on. Both sides use the same xorshift32 PRNG and integer rasterizer —
+keep the two implementations in sync.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+IMG = 32  # image side
+NUM_CLASSES = 8
+
+_SHAPES = [
+    "circle",
+    "square",
+    "triangle",
+    "cross",
+    "ring",
+    "diamond",
+    "hbar",
+    "vbar",
+]
+
+
+def xorshift32(state: int) -> int:
+    """One step of xorshift32 (matches rust/src/util/rng.rs)."""
+    state &= 0xFFFFFFFF
+    state ^= (state << 13) & 0xFFFFFFFF
+    state ^= state >> 17
+    state ^= (state << 5) & 0xFFFFFFFF
+    return state & 0xFFFFFFFF
+
+
+class Rng:
+    """Tiny deterministic PRNG shared with the Rust side."""
+
+    def __init__(self, seed: int):
+        self.state = (seed | 1) & 0xFFFFFFFF
+
+    def next_u32(self) -> int:
+        self.state = xorshift32(self.state)
+        return self.state
+
+    def uniform(self) -> float:
+        """Uniform in [0, 1) with 24 bits of entropy (f32-exact)."""
+        return (self.next_u32() >> 8) / float(1 << 24)
+
+    def randint(self, lo: int, hi: int) -> int:
+        """Uniform integer in [lo, hi)."""
+        return lo + self.next_u32() % (hi - lo)
+
+
+def _inside(shape_id: int, dx: int, dy: int, r: int) -> bool:
+    """Integer point-in-shape test; dx/dy are offsets from the center."""
+    ax, ay = abs(dx), abs(dy)
+    if shape_id == 0:  # circle
+        return dx * dx + dy * dy <= r * r
+    if shape_id == 1:  # square
+        return ax <= r and ay <= r
+    if shape_id == 2:  # triangle (upward)
+        return dy >= -r and dy <= r and ax * 2 <= (r - dy)
+    if shape_id == 3:  # cross
+        return (ax <= r // 2 and ay <= r) or (ay <= r // 2 and ax <= r)
+    if shape_id == 4:  # ring
+        d2 = dx * dx + dy * dy
+        inner = max(r - 2, 1)
+        return inner * inner <= d2 <= r * r
+    if shape_id == 5:  # diamond
+        return ax + ay <= r
+    if shape_id == 6:  # horizontal bar
+        return ay <= max(r // 3, 1) and ax <= r
+    if shape_id == 7:  # vertical bar
+        return ax <= max(r // 3, 1) and ay <= r
+    raise ValueError(shape_id)
+
+
+def gen_image(seed: int) -> tuple[np.ndarray, int]:
+    """Generate one (IMG, IMG, 3) float32 image in [0,1] and its label.
+
+    Deterministic in ``seed``. Background = per-8x8-cell checkerboard shade +
+    uniform noise; foreground = filled shape with a distinct color.
+    """
+    rng = Rng(seed)
+    label = rng.randint(0, NUM_CLASSES)
+    img = np.zeros((IMG, IMG, 3), dtype=np.float32)
+
+    base = 0.2 + 0.3 * rng.uniform()
+    for y in range(IMG):
+        for x in range(IMG):
+            checker = 0.1 if ((x // 8) + (y // 8)) % 2 == 0 else 0.0
+            noise = 0.08 * rng.uniform()
+            v = base + checker + noise
+            img[y, x, 0] = v
+            img[y, x, 1] = v
+            img[y, x, 2] = v
+
+    # Foreground shape: random center, radius, saturated color.
+    r = rng.randint(5, 10)
+    cx = rng.randint(r + 1, IMG - r - 1)
+    cy = rng.randint(r + 1, IMG - r - 1)
+    col = (
+        0.55 + 0.45 * rng.uniform(),
+        0.15 * rng.uniform(),
+        0.55 + 0.45 * rng.uniform(),
+    )
+    for y in range(cy - r, cy + r + 1):
+        for x in range(cx - r, cx + r + 1):
+            if 0 <= x < IMG and 0 <= y < IMG and _inside(label, x - cx, y - cy, r):
+                img[y, x, 0] = col[0]
+                img[y, x, 1] = col[1]
+                img[y, x, 2] = col[2]
+    return img, label
+
+
+def gen_batch(seed0: int, n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Generate ``n`` images with seeds ``seed0 .. seed0+n-1``."""
+    xs = np.zeros((n, IMG, IMG, 3), dtype=np.float32)
+    ys = np.zeros((n,), dtype=np.int32)
+    for i in range(n):
+        xs[i], ys[i] = gen_image(seed0 + i)
+    return xs, ys
+
+
+def object_mask(seed: int, patch: int = 4) -> np.ndarray:
+    """Ground-truth token-level object mask (for router-dispatch validation).
+
+    Returns a bool array of shape (IMG//patch, IMG//patch): True where the
+    patch overlaps the foreground shape.
+    """
+    rng = Rng(seed)
+    label = rng.randint(0, NUM_CLASSES)
+    # Burn the same PRNG draws as gen_image's background loop.
+    rng.uniform()
+    for _ in range(IMG * IMG):
+        rng.uniform()
+    r = rng.randint(5, 10)
+    cx = rng.randint(r + 1, IMG - r - 1)
+    cy = rng.randint(r + 1, IMG - r - 1)
+    g = IMG // patch
+    mask = np.zeros((g, g), dtype=bool)
+    for y in range(cy - r, cy + r + 1):
+        for x in range(cx - r, cx + r + 1):
+            if 0 <= x < IMG and 0 <= y < IMG and _inside(label, x - cx, y - cy, r):
+                mask[y // patch, x // patch] = True
+    return mask

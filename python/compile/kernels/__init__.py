@@ -1,0 +1,15 @@
+"""L1 — Pallas kernels for ShiftAddViT's multiplication primitives.
+
+All kernels run with ``interpret=True`` so they lower to plain HLO that the
+CPU PJRT plugin (and the Rust runtime) can execute. On a real TPU the same
+BlockSpecs tile HBM→VMEM transfers for the MXU; see DESIGN.md
+§Hardware-Adaptation.
+
+Public entry points:
+- :func:`matshift.matshift`       — x @ (s·2^P), power-of-two weights
+- :func:`matadd.matadd`           — x @ b, b ∈ {-1,0,+1}, accumulation only
+- :func:`linattn.linattn`         — binarized linear attention Q(KᵀV)
+- :func:`moe_mlp.moe_mlp`         — dense-masked 2-expert MoE MLP
+"""
+
+from . import matadd, matshift, linattn, moe_mlp, ref  # noqa: F401

@@ -1,0 +1,121 @@
+"""Binarized linear attention — the fused Q(KᵀV) kernel (per head).
+
+Attention weights are Hamming similarities between binary codes
+(``a_ij = (d + qb_i·kb_j)/2 ≥ 0`` — the paper's "map queries and keys to
+binary codes in Hamming space"), computed in Q(KV) order so the cost is
+linear in the token count. Two Pallas phases:
+
+1. **Aggregate**: ``KV = KbᵀV``, ``Z = Kbᵀ1`` and ``SV = Σv`` accumulated
+   over token blocks. With ``Kb ∈ {-1,+1}`` the first two are MatAdd-style
+   sign-masked accumulations.
+2. **Apply**: ``O = (d·SV + Qb@KV) / (n·d + Qb@Z)`` per token block; ``Qb``
+   binary again makes the numerator an accumulation.
+
+The d×d ``KV`` stays resident in VMEM across token blocks — the TPU
+translation of the paper's CUDA schedule (KV in shared memory).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _aggregate_kernel(kb_ref, v_ref, kv_ref, z_ref, sv_ref):
+    """Accumulate KV (d,d), Z (d,1), SV (1,d) over token-block grid axis 0."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        kv_ref[...] = jnp.zeros_like(kv_ref)
+        z_ref[...] = jnp.zeros_like(z_ref)
+        sv_ref[...] = jnp.zeros_like(sv_ref)
+
+    kb = kb_ref[...]  # (bt, d) in {-1,+1}; zero-padded rows contribute 0
+    v = v_ref[...]  # (bt, d)
+    # Sign-masked accumulation: kbᵀ v with ±1 entries (pad rows: kb=0, v=0 ⇒
+    # the -v branch adds -0).
+    kbe = kb[:, :, None]  # (bt, d, 1)
+    ve = v[:, None, :]  # (bt, 1, d)
+    kv_ref[...] += jnp.where(kbe > 0, ve, -ve).sum(axis=0)
+    z_ref[...] += kb.sum(axis=0)[:, None]
+    sv_ref[...] += v.sum(axis=0)[None, :]
+
+
+def _apply_kernel(qb_ref, kv_ref, z_ref, sv_ref, nd_ref, o_ref):
+    """O = (d·SV + Qb@KV) / (n·d + Qb@Z + eps) for one token block."""
+    qb = qb_ref[...]  # (bt, d)
+    kv = kv_ref[...]  # (d, d)
+    z = z_ref[...]  # (d, 1)
+    sv = sv_ref[...]  # (1, d)
+    qbe = qb[:, :, None]  # (bt, d, 1)
+    num = jnp.where(qbe > 0, kv[None, :, :], -kv[None, :, :]).sum(axis=1)
+    den = jnp.where(qb > 0, z[:, 0][None, :], -z[:, 0][None, :]).sum(
+        axis=1, keepdims=True
+    )
+    n = nd_ref[0]  # token count
+    d = nd_ref[1]  # head dim
+    o_ref[...] = (d * sv + num) / (n * d + den + 1e-6)
+
+
+def _pad_tokens(a, bt):
+    pad = (-a.shape[0]) % bt
+    if pad == 0:
+        return a
+    return jnp.pad(a, ((0, pad), (0, 0)))
+
+
+@functools.partial(jax.jit, static_argnames=("bt",))
+def linattn(qb, kb, v, *, bt: int = 64):
+    """Binarized linear attention for one head.
+
+    qb, kb: (N, d) float32 with values in {-1,+1}; v: (N, d) float32.
+    Matches :func:`ref.linattn_ref`. N need not be a multiple of ``bt``:
+    zero-padded tokens contribute nothing to KV/Z/SV (see kernel comments)
+    and their outputs are sliced away.
+    """
+    n, d = qb.shape
+    qp = _pad_tokens(qb, bt)
+    kp = _pad_tokens(kb, bt)
+    vp = _pad_tokens(v, bt)
+    npad = qp.shape[0]
+    grid = (npad // bt,)
+
+    kv, z, sv = pl.pallas_call(
+        _aggregate_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+            pl.BlockSpec((d, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d, d), jnp.float32),
+            jax.ShapeDtypeStruct((d, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, d), jnp.float32),
+        ],
+        interpret=True,
+    )(kp, vp)
+
+    ndvec = jnp.asarray([float(n), float(d)], jnp.float32)
+    out = pl.pallas_call(
+        _apply_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+            pl.BlockSpec((d, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((npad, d), jnp.float32),
+        interpret=True,
+    )(qp, kv, z, sv, ndvec)
+    return out[:n]

@@ -1,0 +1,93 @@
+"""MatShift — the paper's customized shift kernel (Fig. 4/7) as Pallas.
+
+Computes ``O = X @ (s · 2^P)`` where the weight is stored as two INT8 planes:
+sign ``s ∈ {-1,+1}`` and exponent ``P ∈ [-8, 7]``. The paper's speedup on GPU
+comes from *bit reduction* (INT8 weight planes → 4× less weight traffic than
+f32); the TPU mapping keeps both planes resident in VMEM and expands them to
+the MXU operand on-chip, so HBM sees only the INT8 planes.
+
+Tiling: grid (M/bm, N/bn, K/bk); X tile (bm, bk), weight tiles (bk, bn),
+output tile (bm, bn) accumulated across the K grid axis (revisited output
+block — the canonical Pallas matmul schedule).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matshift_kernel(x_ref, s_ref, p_ref, o_ref):
+    """One (bm, bn) output tile; accumulates over the K grid axis."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # On-chip dequantization: the only f32 multiply is the MXU matmul itself;
+    # s·2^P is a sign flip + exponent load (exp2 of an integer).
+    w = s_ref[...].astype(jnp.float32) * jnp.exp2(p_ref[...].astype(jnp.float32))
+    o_ref[...] += x_ref[...] @ w
+
+
+def _pad_to(a, mult, axis):
+    pad = (-a.shape[axis]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matshift(x, s, p, *, bm: int = 32, bn: int = 32, bk: int = 32):
+    """``x (M,K) f32  @  (s,p) (K,N) int8-planes  ->  (M,N) f32``.
+
+    Shapes need not be multiples of the block sizes; inputs are zero-padded
+    and the result sliced back (zero padding is exact for this op: padded K
+    columns contribute sign·2^P·0, padded rows/cols are discarded).
+    """
+    m, k = x.shape
+    k2, n = s.shape
+    assert k == k2 and s.shape == p.shape, (x.shape, s.shape, p.shape)
+
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    # Padded K rows of the weight must contribute zero: pad the *input* with
+    # zeros (done above) so the weight pad values are irrelevant; still pad
+    # sign with +1 / exponent with 0 to keep dequantization finite.
+    sp = _pad_to(_pad_to(s, bk, 0), bn, 1)
+    pp = _pad_to(_pad_to(p, bk, 0), bn, 1)
+
+    mp, kp = xp.shape
+    np_ = sp.shape[1]
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    out = pl.pallas_call(
+        _matshift_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, sp, pp)
+    return out[:m, :n]
+
+
+def vmem_bytes(bm: int, bn: int, bk: int) -> int:
+    """Estimated VMEM working set per grid step (for DESIGN.md §Perf).
+
+    f32 X tile + f32 O tile + two INT8 weight planes (+ their f32 expansion,
+    double-buffered inputs).
+    """
+    x_t = 4 * bm * bk
+    o_t = 4 * bm * bn
+    w_planes = 2 * bk * bn  # int8 sign + int8 exponent
+    w_f32 = 4 * bk * bn
+    return 2 * (x_t + w_planes) + o_t + w_f32

@@ -1,0 +1,103 @@
+"""Dense-masked 2-expert MoE MLP — the AOT-friendly lowering of Fig. 1(c).
+
+At *serving* time the Rust coordinator performs real sparse dispatch (tokens
+are physically partitioned between a Mult-expert executable and a
+Shift-expert executable). At *lowering/training* time shapes must be static,
+so this kernel computes both experts for every token block and combines with
+the hard top-1 gate — numerically identical to sparse dispatch (the paper's
+G(x) = p_i · 1{p_i ≥ p_j} routing), just not faster. See DESIGN.md §3.
+
+Grid: one program per token block; all weights resident (tiny-d models), so
+the only HBM traffic per step is the token block itself.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _moe_kernel(
+    x_ref,
+    gate_ref,
+    w1m_ref,
+    b1m_ref,
+    w2m_ref,
+    b2m_ref,
+    s1_ref,
+    p1_ref,
+    b1s_ref,
+    s2_ref,
+    p2_ref,
+    b2s_ref,
+    o_ref,
+):
+    x = x_ref[...]  # (bt, d)
+
+    # Router: softmax over 2 experts, hard top-1 scaled by its gate value.
+    logits = x @ gate_ref[...]  # (bt, 2)
+    logits = logits - logits.max(axis=-1, keepdims=True)
+    e = jnp.exp(logits)
+    pgate = e / e.sum(axis=-1, keepdims=True)
+    mult_wins = (pgate[:, 0:1] >= pgate[:, 1:2]).astype(x.dtype)
+    gval = jnp.where(mult_wins > 0, pgate[:, 0:1], pgate[:, 1:2])
+
+    # Expert 0: Mult. (dense ReLU MLP).
+    h_m = jnp.maximum(x @ w1m_ref[...] + b1m_ref[...], 0.0)
+    y_m = h_m @ w2m_ref[...] + b2m_ref[...]
+
+    # Expert 1: Shift (pow2 weights dequantized on-chip, as in matshift).
+    w1 = s1_ref[...].astype(jnp.float32) * jnp.exp2(p1_ref[...].astype(jnp.float32))
+    w2 = s2_ref[...].astype(jnp.float32) * jnp.exp2(p2_ref[...].astype(jnp.float32))
+    h_s = jnp.maximum(x @ w1 + b1s_ref[...], 0.0)
+    y_s = h_s @ w2 + b2s_ref[...]
+
+    o_ref[...] = gval * (mult_wins * y_m + (1.0 - mult_wins) * y_s)
+
+
+def _pad_tokens(a, bt):
+    pad = (-a.shape[0]) % bt
+    if pad == 0:
+        return a
+    return jnp.pad(a, ((0, pad), (0, 0)))
+
+
+@functools.partial(jax.jit, static_argnames=("bt",))
+def moe_mlp(x, gate_w, w1m, b1m, w2m, b2m, s1, p1, b1s, s2, p2, b2s, *, bt: int = 64):
+    """Dense-masked MoE MLP. Matches :func:`ref.moe_mlp_ref`.
+
+    x: (N, d); gate_w: (d, 2); Mult expert (w1m (d,h), b1m (1,h), w2m (h,d),
+    b2m (1,d)); Shift expert as int8 (sign, exp) planes + float biases.
+    """
+    n, d = x.shape
+    h = w1m.shape[1]
+    xp = _pad_tokens(x, bt)
+    npad = xp.shape[0]
+    grid = (npad // bt,)
+
+    full = lambda *shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+    out = pl.pallas_call(
+        _moe_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            full(d, 2),
+            full(d, h),
+            full(1, h),
+            full(h, d),
+            full(1, d),
+            full(d, h),
+            full(d, h),
+            full(1, h),
+            full(h, d),
+            full(h, d),
+            full(1, d),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((npad, d), jnp.float32),
+        interpret=True,
+    )(xp, gate_w, w1m, b1m, w2m, b2m, s1, p1, b1s, s2, p2, b2s)
+    return out[:n]

@@ -1,0 +1,119 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+Every Pallas kernel in this package must match its oracle here to ~1e-5
+(float32, interpret mode). pytest + hypothesis sweep shapes and values in
+``python/tests/test_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pow2_quantize(w: jnp.ndarray, p_min: int = -8, p_max: int = 7):
+    """Reparameterize dense weights as sign * 2^P (DeepShift-PS style).
+
+    Returns ``(s, p)`` with s ∈ {-1, +1} (int8) and p ∈ [p_min, p_max] (int8).
+    Zero weights map to the smallest magnitude 2^p_min with positive sign.
+    """
+    a = jnp.abs(w)
+    s = jnp.where(w < 0, -1, 1).astype(jnp.int8)
+    safe = jnp.where(a > 0, a, 2.0 ** p_min)
+    p = jnp.clip(jnp.round(jnp.log2(safe)), p_min, p_max).astype(jnp.int8)
+    return s, p
+
+
+def pow2_dequantize(s: jnp.ndarray, p: jnp.ndarray) -> jnp.ndarray:
+    """Reconstruct float weights from (sign, exponent) planes."""
+    return s.astype(jnp.float32) * jnp.exp2(p.astype(jnp.float32))
+
+
+def binary_quantize(x: jnp.ndarray) -> jnp.ndarray:
+    """Vanilla binarization [27]: msign(x) ∈ {-1, +1} (0 maps to +1)."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def ksh_binarize(x: jnp.ndarray, proj: jnp.ndarray) -> jnp.ndarray:
+    """Kernelized-hashing binarization (Ecoformer [34] stand-in).
+
+    Hash = sign of a random projection in feature space: sign(x @ proj).
+    ``proj`` has shape (d, b) with b hash bits; output is (..., b) in {-1,+1}.
+    """
+    return binary_quantize(x @ proj)
+
+
+def matshift_ref(x: jnp.ndarray, s: jnp.ndarray, p: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the MatShift kernel: x @ (s * 2^p).
+
+    x: (M, K) float32; s, p: (K, N) int8 planes.
+    """
+    return x @ pow2_dequantize(s, p)
+
+
+def matadd_ref(x: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the MatAdd kernel: x @ b with b ∈ {-1,0,+1}.
+
+    The kernel itself computes this with sign-masked accumulation only
+    (no multiplies); the oracle uses the dense product.
+    """
+    return x @ b.astype(x.dtype)
+
+
+def linattn_ref(qb, kb, v, eps: float = 1e-6):
+    """Oracle for binarized linear attention (per head).
+
+    qb, kb: (N, d) in {-1,+1}; v: (N, d) float32.
+
+    Attention weight = Hamming *similarity* (number of matching code bits):
+    ``a_ij = (d + qb_i·kb_j) / 2 ∈ [0, d]`` — the paper's "map Q, K to binary
+    codes in Hamming space". Non-negative by construction, so the normalizer
+    ``Σ_j a_ij`` never crosses zero. Computed in Q(KV) order, linear in N:
+
+        num_i = d·Σ_j v_j + qb_i @ (kbᵀ v)
+        den_i = n·d       + qb_i @ (kbᵀ 1)
+        out_i = num_i / den_i            (the 1/2 factors cancel)
+
+    All MatMuls against qb/kb are sign-masked accumulations (MatAdd).
+    """
+    n, d = qb.shape
+    kv = kb.T @ v  # (d, d)   — MatAdd: kb is ±1
+    z = kb.T @ jnp.ones((n, 1), qb.dtype)  # (d, 1) — accumulation
+    sv = v.sum(axis=0, keepdims=True)  # (1, d)
+    num = float(d) * sv + qb @ kv  # (N, d) — MatAdd: qb is ±1
+    den = float(n * d) + qb @ z  # (N, 1), ≥ 0
+    return num / (den + eps)
+
+
+def softmax_attn_ref(q, k, v):
+    """Standard MSA oracle (per head): softmax(q kᵀ / sqrt(d)) v."""
+    d = q.shape[-1]
+    a = jnp.einsum("nd,md->nm", q, k) / jnp.sqrt(float(d))
+    a = a - a.max(axis=-1, keepdims=True)
+    a = jnp.exp(a)
+    a = a / a.sum(axis=-1, keepdims=True)
+    return a @ v
+
+
+def moe_mlp_ref(x, gate_w, w1m, b1m, w2m, b2m, s1, p1, b1s, s2, p2, b2s):
+    """Oracle for the dense-masked 2-expert MoE MLP.
+
+    Expert 0 = Mult. MLP (dense ReLU MLP); expert 1 = Shift MLP (pow2 weights).
+    Router: softmax(x @ gate_w); top-1 hard mask scaled by its gate value
+    (the paper's G(x) = p_i · 1{p_i ≥ p_j}).
+    """
+    logits = x @ gate_w  # (N, 2)
+    pgate = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    pgate = pgate / pgate.sum(axis=-1, keepdims=True)
+    top = jnp.argmax(pgate, axis=-1)  # (N,)
+    gval = jnp.take_along_axis(pgate, top[:, None], axis=-1)  # (N, 1)
+
+    h_m = jnp.maximum(x @ w1m + b1m, 0.0)
+    y_m = h_m @ w2m + b2m
+
+    w1 = pow2_dequantize(s1, p1)
+    w2 = pow2_dequantize(s2, p2)
+    h_s = jnp.maximum(x @ w1 + b1s, 0.0)
+    y_s = h_s @ w2 + b2s
+
+    mask_m = (top == 0).astype(x.dtype)[:, None]
+    return gval * (mask_m * y_m + (1.0 - mask_m) * y_s)

@@ -1,0 +1,419 @@
+"""L2 — the ShiftAddViT model family in JAX.
+
+Implements the paper's reparameterization ladder as *variants* of one
+transformer backbone (Fig. 1):
+
+- attention: ``msa`` → ``linear`` (Q(KV) order) → ``linear_add`` (binarized
+  Q/K via vanilla ``quant`` [27] or ``ksh`` [34] → MatAdd accumulations),
+- the four attention Linears: ``mult`` or ``shift`` (s·2^P weights),
+- MLPs: ``mult``, ``shift``, or ``moe`` (Mult + Shift experts, top-1 router),
+- a parallel DWConv on the V branch for linear variants (<1% MACs).
+
+Two numerically-identical execution paths:
+
+- ``use_pallas=False`` — pure jnp (fast for training / quick eval),
+- ``use_pallas=True``  — routes the shift/add/linattn/moe ops through the L1
+  Pallas kernels so the AOT-lowered HLO contains the paper's primitives.
+
+Params are plain nested dicts of jnp arrays; model configs are tiny
+(CPU-trainable) analogues of PVTv2-B0/B1/B2, PVTv1-T and DeiT-T, with the
+scaling ratios between them preserved.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import linattn as linattn_k
+from .kernels import matadd as matadd_k
+from .kernels import matshift as matshift_k
+from .kernels import moe_mlp as moe_k
+from .kernels import ref
+
+# --------------------------------------------------------------------------
+# Configs
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Backbone hyperparameters (a tiny, CPU-trainable ViT)."""
+
+    name: str
+    img: int = 32
+    patch: int = 4
+    dim: int = 32
+    depth: int = 2
+    heads: int = 2
+    mlp_ratio: int = 4
+    num_classes: int = 8
+    hash_bits: int = 0  # KSH projection width; 0 ⇒ use head_dim
+
+    @property
+    def tokens(self) -> int:
+        return (self.img // self.patch) ** 2
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.heads
+
+
+# Tiny analogues. Width/depth ratios follow the real families
+# (B0 < B1 < B2; PVTv1-T between B0 and B1; DeiT-T isotropic).
+MODELS: Dict[str, ModelConfig] = {
+    "pvtv2_b0": ModelConfig(name="pvtv2_b0", dim=32, depth=2, heads=2),
+    "pvtv2_b1": ModelConfig(name="pvtv2_b1", dim=48, depth=2, heads=2),
+    "pvtv2_b2": ModelConfig(name="pvtv2_b2", dim=64, depth=4, heads=4),
+    "pvtv1_t": ModelConfig(name="pvtv1_t", dim=40, depth=3, heads=2),
+    "deit_t": ModelConfig(name="deit_t", dim=64, depth=3, heads=4),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    """One row of Table 4/6 — which primitives replace which multiplications.
+
+    attn:        'msa' | 'linear' | 'linear_add'
+    qk_bin:      'none' | 'quant' | 'ksh'       (only for linear_add)
+    attn_linear: 'mult' | 'shift'               (the 4 attention Linears)
+    mlp:         'mult' | 'shift' | 'moe'
+    """
+
+    attn: str = "msa"
+    qk_bin: str = "none"
+    attn_linear: str = "mult"
+    mlp: str = "mult"
+
+    def tag(self) -> str:
+        parts = [self.attn]
+        if self.attn == "linear_add":
+            parts.append(self.qk_bin)
+        if self.attn_linear == "shift":
+            parts.append("shiftattn")
+        parts.append(self.mlp)
+        return "_".join(parts)
+
+
+# The paper's main rows (Tables 2/4/6).
+VARIANTS: Dict[str, Variant] = {
+    "msa": Variant(),
+    "linear": Variant(attn="linear"),
+    "add_ksh": Variant(attn="linear_add", qk_bin="ksh"),
+    "add_quant": Variant(attn="linear_add", qk_bin="quant"),
+    "add_ksh_shiftattn": Variant(attn="linear_add", qk_bin="ksh", attn_linear="shift"),
+    "add_quant_shift_both": Variant(
+        attn="linear_add", qk_bin="quant", attn_linear="shift", mlp="shift"
+    ),
+    "add_ksh_shiftattn_moe": Variant(
+        attn="linear_add", qk_bin="ksh", attn_linear="shift", mlp="moe"
+    ),
+    "add_ksh_moe_both": Variant(attn="linear_add", qk_bin="ksh", mlp="moe"),
+    "add_quant_moe_both": Variant(attn="linear_add", qk_bin="quant", mlp="moe"),
+    "shift_mlp": Variant(attn="linear", mlp="shift"),
+    "moe_mlp": Variant(attn="linear", mlp="moe"),
+}
+
+
+# --------------------------------------------------------------------------
+# Initialization
+# --------------------------------------------------------------------------
+
+
+def _dense_init(key, fan_in, fan_out):
+    scale = (2.0 / (fan_in + fan_out)) ** 0.5
+    return scale * jax.random.normal(key, (fan_in, fan_out), jnp.float32)
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    """Initialize the full parameter pytree for any variant.
+
+    All variants share the same pytree so reparameterization = finetuning the
+    same weights under a different forward interpretation (the paper starts
+    from pre-trained ViTs; we start each stage from the previous stage).
+    """
+    keys = iter(jax.random.split(key, 16 + 32 * cfg.depth))
+    patch_dim = cfg.patch * cfg.patch * 3
+    p: Dict[str, Any] = {
+        "embed_w": _dense_init(next(keys), patch_dim, cfg.dim),
+        "embed_b": jnp.zeros((cfg.dim,)),
+        "pos": 0.02 * jax.random.normal(next(keys), (cfg.tokens, cfg.dim)),
+        "ksh_proj": jax.random.normal(
+            next(keys), (cfg.head_dim, cfg.hash_bits or cfg.head_dim)
+        )
+        / (cfg.head_dim**0.5),
+        "head_w": _dense_init(next(keys), cfg.dim, cfg.num_classes),
+        "head_b": jnp.zeros((cfg.num_classes,)),
+        "norm_g": jnp.ones((cfg.dim,)),
+        "norm_b": jnp.zeros((cfg.dim,)),
+        "blocks": [],
+    }
+    h = cfg.dim * cfg.mlp_ratio
+    for _ in range(cfg.depth):
+        blk = {
+            "ln1_g": jnp.ones((cfg.dim,)),
+            "ln1_b": jnp.zeros((cfg.dim,)),
+            "ln2_g": jnp.ones((cfg.dim,)),
+            "ln2_b": jnp.zeros((cfg.dim,)),
+            "wq": _dense_init(next(keys), cfg.dim, cfg.dim),
+            "wk": _dense_init(next(keys), cfg.dim, cfg.dim),
+            "wv": _dense_init(next(keys), cfg.dim, cfg.dim),
+            "wo": _dense_init(next(keys), cfg.dim, cfg.dim),
+            "bq": jnp.zeros((cfg.dim,)),
+            "bk": jnp.zeros((cfg.dim,)),
+            "bv": jnp.zeros((cfg.dim,)),
+            "bo": jnp.zeros((cfg.dim,)),
+            # DWConv 3x3 on the V branch (linear variants only).
+            "dw": 0.1 * jax.random.normal(next(keys), (3, 3, cfg.dim)),
+            # MLP (mult expert / dense path).
+            "w1": _dense_init(next(keys), cfg.dim, h),
+            "b1": jnp.zeros((h,)),
+            "w2": _dense_init(next(keys), h, cfg.dim),
+            "b2": jnp.zeros((cfg.dim,)),
+            # Shift expert (separate weights — the MoE's second expert; for
+            # the pure-shift MLP variant, these mirror w1/w2 after stage-2
+            # conversion, see train.py::convert_mlp_to_shift).
+            "w1s": _dense_init(next(keys), cfg.dim, h),
+            "b1s": jnp.zeros((h,)),
+            "w2s": _dense_init(next(keys), h, cfg.dim),
+            "b2s": jnp.zeros((cfg.dim,)),
+            # MoE router.
+            "gate_w": 0.02 * jax.random.normal(next(keys), (cfg.dim, 2)),
+        }
+        p["blocks"].append(blk)
+    return p
+
+
+# --------------------------------------------------------------------------
+# Quantization with straight-through estimators (training path)
+# --------------------------------------------------------------------------
+
+
+def ste_pow2(w):
+    """Power-of-two reparameterization with a straight-through gradient."""
+    s, p = ref.pow2_quantize(w)
+    wq = ref.pow2_dequantize(s, p)
+    return w + jax.lax.stop_gradient(wq - w)
+
+
+def ste_sign(x):
+    """Binarize to {-1,+1} with a straight-through gradient (clipped)."""
+    b = ref.binary_quantize(x)
+    return x + jax.lax.stop_gradient(b - x)
+
+
+# --------------------------------------------------------------------------
+# Layers
+# --------------------------------------------------------------------------
+
+
+def layer_norm(x, g, b, eps=1e-6):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def linear(x, w, b, kind: str, use_pallas: bool):
+    """A (possibly shift-reparameterized) linear layer on (..., K) inputs."""
+    if kind == "mult":
+        return x @ w + b
+    if kind == "shift":
+        if use_pallas:
+            s, p = ref.pow2_quantize(w)
+            flat = x.reshape(-1, x.shape[-1])
+            y = matshift_k.matshift(flat, s, p)
+            return y.reshape(*x.shape[:-1], w.shape[1]) + b
+        return x @ ste_pow2(w) + b
+    raise ValueError(kind)
+
+
+def dwconv_tokens(x, dw, grid: int):
+    """Depthwise 3×3 conv over the token grid; x: (B, N, d), N = grid²."""
+    b, n, d = x.shape
+    img = x.reshape(b, grid, grid, d)
+    out = jax.lax.conv_general_dilated(
+        img,
+        dw[:, :, None, :],  # (3, 3, 1, d) — HWIO with 1 input feature/group
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=d,
+    )
+    return out.reshape(b, n, d)
+
+
+def attention(params, x, cfg: ModelConfig, var: Variant, use_pallas: bool, grid: int):
+    """One attention module on (B, N, d) tokens."""
+    b, n, d = x.shape
+    hd = cfg.head_dim
+    lk = var.attn_linear
+    q = linear(x, params["wq"], params["bq"], lk, use_pallas)
+    k = linear(x, params["wk"], params["bk"], lk, use_pallas)
+    v = linear(x, params["wv"], params["bv"], lk, use_pallas)
+
+    def split(t):  # (B, N, d) -> (B, H, N, hd)
+        return t.reshape(b, n, cfg.heads, hd).transpose(0, 2, 1, 3)
+
+    qh, kh, vh = split(q), split(k), split(v)
+
+    if var.attn == "msa":
+        oh = jax.vmap(jax.vmap(ref.softmax_attn_ref))(qh, kh, vh)
+    elif var.attn == "linear":
+        # Non-binarized linear attention: ReLU features, Q(KV) order.
+        fq, fk = jax.nn.relu(qh) + 1e-3, jax.nn.relu(kh) + 1e-3
+        kv = jnp.einsum("bhnd,bhne->bhde", fk, vh)
+        z = fk.sum(axis=2)  # (B, H, hd)
+        num = jnp.einsum("bhnd,bhde->bhne", fq, kv)
+        den = jnp.einsum("bhnd,bhd->bhn", fq, z)[..., None]
+        oh = num / (den + 1e-6)
+    elif var.attn == "linear_add":
+        if var.qk_bin == "ksh":
+            proj = params_global["ksh_proj"]
+            qc = ste_sign(jnp.einsum("bhnd,de->bhne", qh, proj))
+            kc = ste_sign(jnp.einsum("bhnd,de->bhne", kh, proj))
+        elif var.qk_bin == "quant":
+            qc, kc = ste_sign(qh), ste_sign(kh)
+        else:
+            raise ValueError(var.qk_bin)
+        if use_pallas:
+            fn = lambda qq, kk, vv: linattn_k.linattn(qq, kk, vv, bt=min(64, n))
+            oh = jax.vmap(jax.vmap(fn))(qc, kc, vh)
+        else:
+            oh = jax.vmap(jax.vmap(ref.linattn_ref))(qc, kc, vh)
+    else:
+        raise ValueError(var.attn)
+
+    out = oh.transpose(0, 2, 1, 3).reshape(b, n, d)
+    if var.attn != "msa":
+        # Parallel DWConv on the V branch (local features; <1% of MACs).
+        out = out + dwconv_tokens(v, params["dw"], grid)
+    return linear(out, params["wo"], params["bo"], lk, use_pallas)
+
+
+def mlp(params, x, var: Variant, use_pallas: bool):
+    """One MLP module on (B, N, d) tokens. Returns (y, gates-or-None)."""
+    b, n, d = x.shape
+    if var.mlp == "mult":
+        h = jax.nn.relu(x @ params["w1"] + params["b1"])
+        return h @ params["w2"] + params["b2"], None
+    if var.mlp == "shift":
+        h = jax.nn.relu(
+            linear(x, params["w1s"], params["b1s"], "shift", use_pallas)
+        )
+        return linear(h, params["w2s"], params["b2s"], "shift", use_pallas), None
+    if var.mlp == "moe":
+        flat = x.reshape(b * n, d)
+        logits = flat @ params["gate_w"]
+        pgate = jax.nn.softmax(logits, axis=-1)
+        if use_pallas:
+            s1, p1 = ref.pow2_quantize(params["w1s"])
+            s2, p2 = ref.pow2_quantize(params["w2s"])
+            y = moe_k.moe_mlp(
+                flat,
+                params["gate_w"],
+                params["w1"],
+                params["b1"][None, :],
+                params["w2"],
+                params["b2"][None, :],
+                s1,
+                p1,
+                params["b1s"][None, :],
+                s2,
+                p2,
+                params["b2s"][None, :],
+                bt=min(64, b * n),
+            )
+        else:
+            # Dense-masked top-1 routing, differentiable through the gate
+            # value (the paper's G(x) = p_i · 1{p_i ≥ p_j}).
+            mult_wins = (pgate[:, 0:1] >= pgate[:, 1:2]).astype(flat.dtype)
+            gval = jnp.where(mult_wins > 0, pgate[:, 0:1], pgate[:, 1:2])
+            h_m = jax.nn.relu(flat @ params["w1"] + params["b1"])
+            y_m = h_m @ params["w2"] + params["b2"]
+            w1q, w2q = ste_pow2(params["w1s"]), ste_pow2(params["w2s"])
+            h_s = jax.nn.relu(flat @ w1q + params["b1s"])
+            y_s = h_s @ w2q + params["b2s"]
+            y = gval * (mult_wins * y_m + (1.0 - mult_wins) * y_s)
+        return y.reshape(b, n, d), pgate.reshape(b, n, 2)
+    raise ValueError(var.mlp)
+
+
+# ``attention`` needs the global ksh projection; passed via this module-level
+# slot set by ``forward`` (kept out of the block params so all blocks share
+# one hash family, as in Ecoformer).
+params_global: Dict[str, Any] = {}
+
+
+def forward(params, x, cfg: ModelConfig, var: Variant, use_pallas: bool = False):
+    """Classification forward.
+
+    x: (B, img, img, 3) float32 → logits (B, num_classes).
+    Returns ``(logits, aux)`` where aux["gates"] is a list of per-MoE-layer
+    gate tensors (B, N, 2) for the LL-loss and the dispatch visualisation.
+    """
+    global params_global
+    params_global = params
+    b = x.shape[0]
+    grid = cfg.img // cfg.patch
+
+    # Patch embedding: (B, H, W, 3) -> (B, N, patch²·3) -> (B, N, d).
+    ph = x.reshape(b, grid, cfg.patch, grid, cfg.patch, 3)
+    ph = ph.transpose(0, 1, 3, 2, 4, 5).reshape(b, grid * grid, -1)
+    t = ph @ params["embed_w"] + params["embed_b"] + params["pos"]
+
+    gates = []
+    for blk in params["blocks"]:
+        a = attention(blk, layer_norm(t, blk["ln1_g"], blk["ln1_b"]), cfg, var, use_pallas, grid)
+        t = t + a
+        m, g = mlp(blk, layer_norm(t, blk["ln2_g"], blk["ln2_b"]), var, use_pallas)
+        t = t + m
+        if g is not None:
+            gates.append(g)
+
+    t = layer_norm(t, params["norm_g"], params["norm_b"])
+    pooled = t.mean(axis=1)
+    logits = pooled @ params["head_w"] + params["head_b"]
+    return logits, {"gates": gates}
+
+
+# --------------------------------------------------------------------------
+# Latency-aware load-balancing loss (Eq. 4)
+# --------------------------------------------------------------------------
+
+
+def scv(values):
+    """Squared coefficient of variation of a vector."""
+    mu = values.mean()
+    return ((values - mu) ** 2).mean() / (mu**2 + 1e-9)
+
+
+def ll_loss(gates, alphas, noise_sigma: float = 0.1):
+    """Latency-aware importance + load losses over one MoE layer's gates.
+
+    gates: (B, N, 2) softmax router outputs; alphas: (2,) latency
+    coefficients α_i = Lat_i / Σ_j Lat_j. Minimizing SCV({α_i S_i}) drives
+    S_i ∝ 1/α_i — faster experts receive more tokens (paper §4.2).
+
+    The load term uses the differentiable noisy-top-1 proxy of [48]:
+    q_i(x) = P(p_i + ε ≥ p_j) ≈ sigmoid((p_i − p_j)/σ).
+    """
+    p = gates.reshape(-1, gates.shape[-1])  # (T, 2)
+    importance = (alphas * p.sum(axis=0))
+    diff = (p[:, 0] - p[:, 1]) / noise_sigma
+    q0 = jax.nn.sigmoid(diff)
+    load = alphas * jnp.stack([q0.sum(), (1.0 - q0).sum()])
+    return scv(importance) + scv(load)
+
+
+def classification_loss(params, x, y, cfg, var, alphas, lam: float = 0.01):
+    """L_CLS + λ·(L_IMP + L_LOAD) — the paper's total objective."""
+    logits, aux = forward(params, x, cfg, var, use_pallas=False)
+    logp = jax.nn.log_softmax(logits)
+    ce = -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+    balance = 0.0
+    for g in aux["gates"]:
+        balance = balance + ll_loss(g, alphas)
+    return ce + lam * balance, aux

@@ -1,0 +1,218 @@
+"""LRA-style long-sequence models (Table 11, Appendix D).
+
+Synthetic Long-Range-Arena substitution (DESIGN.md §2): four sequence tasks
+whose labels depend on long-range token statistics, plus the paper's
+comparator attention families implemented for real:
+
+- ``transformer`` — full softmax MSA (quadratic),
+- ``reformer``    — block-local attention (LSH-bucket stand-in),
+- ``linformer``   — low-rank projection of K/V along the sequence,
+- ``performer``   — random-feature (FAVOR-style, ReLU features) linear attn,
+- ``shiftadd``    — OUR model: binarized Hamming linear attention (MatAdd)
+  + shift-reparameterized MLPs.
+
+Tasks (vocab 16, seq len configurable):
+- ``text``      — does pattern token-pair (3,7) occur more than τ times?
+- ``listops``   — (max digit + min digit) of the digit subsequence, mod 4
+- ``retrieval`` — first and second half have equal token multisets?
+- ``image``     — flattened synthetic shape image (quantized to 16 gray
+  levels); label = shape class.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from . import data as D
+from .kernels import ref
+
+VOCAB = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class LraConfig:
+    seq: int = 128
+    dim: int = 32
+    depth: int = 2
+    heads: int = 2
+    classes: int = 4
+    lowrank: int = 16  # linformer projection size
+    feats: int = 16  # performer feature count
+
+
+LRA_CFG = LraConfig()
+LRA_ATTNS = ["transformer", "reformer", "linformer", "performer", "shiftadd"]
+LRA_TASKS = ["text", "listops", "retrieval", "image"]
+
+
+# ------------------------------------------------------------------ tasks
+
+
+def gen_task(task: str, seed: int, n: int, cfg: LraConfig = LRA_CFG):
+    """Generate ``n`` (sequence, label) pairs for ``task``."""
+    rng = np.random.default_rng(seed)
+    xs = np.zeros((n, cfg.seq), np.int32)
+    ys = np.zeros((n,), np.int32)
+    for i in range(n):
+        if task == "text":
+            s = rng.integers(0, VOCAB, cfg.seq)
+            # plant between 0 and 7 (3,7) bigrams; label = count > 3
+            cnt = int(rng.integers(0, 8))
+            for _ in range(cnt):
+                p = int(rng.integers(0, cfg.seq - 1))
+                s[p], s[p + 1] = 3, 7
+            real = int(np.sum((s[:-1] == 3) & (s[1:] == 7)))
+            xs[i], ys[i] = s, int(real > 3)
+        elif task == "listops":
+            # label = (first digit + last digit) mod 4 — long-range pairing
+            # (max+min of a long uniform stream is degenerate).
+            s = rng.integers(0, VOCAB, cfg.seq)
+            digits = s[s < 10]
+            val = (int(digits[0]) + int(digits[-1])) % 4 if len(digits) else 0
+            xs[i], ys[i] = s, val
+        elif task == "retrieval":
+            half = cfg.seq // 2
+            a = rng.integers(0, VOCAB, half)
+            if rng.uniform() < 0.5:
+                b = a.copy()
+                rng.shuffle(b)
+                lab = 1
+            else:
+                b = rng.integers(0, VOCAB, half)
+                lab = int(np.array_equal(np.sort(a), np.sort(b)))
+            xs[i] = np.concatenate([a, b])
+            ys[i] = lab
+        elif task == "image":
+            side = int(cfg.seq**0.5)  # floor; trailing tokens zero-padded
+            img, lab = D.gen_image(seed * 1000 + i)
+            # Downsample to side×side grayscale, quantize to VOCAB levels.
+            stride = max(D.IMG // side, 1)
+            g = img[::stride, ::stride, :].mean(axis=-1)[:side, :side]
+            flat = np.clip((g * VOCAB).astype(np.int32), 0, VOCAB - 1).reshape(-1)
+            xs[i, : flat.size] = flat
+            ys[i] = lab % cfg.classes
+        else:
+            raise ValueError(task)
+    return xs, ys
+
+
+# ------------------------------------------------------------------ model
+
+
+def init_lra_params(key, cfg: LraConfig = LRA_CFG):
+    keys = iter(jax.random.split(key, 8 + 16 * cfg.depth))
+
+    def dense(fi, fo):
+        return (2.0 / (fi + fo)) ** 0.5 * jax.random.normal(next(keys), (fi, fo))
+
+    p = {
+        "emb": 0.5 * jax.random.normal(next(keys), (VOCAB, cfg.dim)),
+        "pos": 0.02 * jax.random.normal(next(keys), (cfg.seq, cfg.dim)),
+        "head_w": dense(cfg.dim, cfg.classes),
+        "head_b": jnp.zeros((cfg.classes,)),
+        "linf_e": dense(cfg.seq, cfg.lowrank),  # linformer K/V projection
+        "perf_w": jax.random.normal(next(keys), (cfg.dim // cfg.heads, cfg.feats)),
+        "blocks": [],
+    }
+    h = cfg.dim * 2
+    for _ in range(cfg.depth):
+        p["blocks"].append(
+            {
+                "ln1_g": jnp.ones((cfg.dim,)),
+                "ln1_b": jnp.zeros((cfg.dim,)),
+                "ln2_g": jnp.ones((cfg.dim,)),
+                "ln2_b": jnp.zeros((cfg.dim,)),
+                "wq": dense(cfg.dim, cfg.dim),
+                "wk": dense(cfg.dim, cfg.dim),
+                "wv": dense(cfg.dim, cfg.dim),
+                "wo": dense(cfg.dim, cfg.dim),
+                "w1": dense(cfg.dim, h),
+                "b1": jnp.zeros((h,)),
+                "w2": dense(h, cfg.dim),
+                "b2": jnp.zeros((cfg.dim,)),
+            }
+        )
+    return p
+
+
+def _attend(kind, qh, kh, vh, params, cfg):
+    """(B,H,N,hd) q/k/v → (B,H,N,hd) per attention family."""
+    if kind == "transformer":
+        return jax.vmap(jax.vmap(ref.softmax_attn_ref))(qh, kh, vh)
+    if kind == "reformer":
+        # Block-local attention with block 32 (LSH-bucket stand-in).
+        b, h, n, d = qh.shape
+        blk = 32
+        q = qh.reshape(b, h, n // blk, blk, d)
+        k = kh.reshape(b, h, n // blk, blk, d)
+        v = vh.reshape(b, h, n // blk, blk, d)
+        out = jax.vmap(jax.vmap(jax.vmap(ref.softmax_attn_ref)))(q, k, v)
+        return out.reshape(b, h, n, d)
+    if kind == "linformer":
+        e = params["linf_e"]  # (N, k)
+        ke = jnp.einsum("bhnd,nk->bhkd", kh, e)
+        ve = jnp.einsum("bhnd,nk->bhkd", vh, e)
+        return jax.vmap(jax.vmap(ref.softmax_attn_ref))(qh, ke, ve)
+    if kind == "performer":
+        w = params["perf_w"]  # (hd, m)
+        fq = jax.nn.relu(jnp.einsum("bhnd,dm->bhnm", qh, w)) + 1e-3
+        fk = jax.nn.relu(jnp.einsum("bhnd,dm->bhnm", kh, w)) + 1e-3
+        kv = jnp.einsum("bhnm,bhnd->bhmd", fk, vh)
+        z = fk.sum(axis=2)
+        num = jnp.einsum("bhnm,bhmd->bhnd", fq, kv)
+        den = jnp.einsum("bhnm,bhm->bhn", fq, z)[..., None]
+        return num / (den + 1e-6)
+    if kind == "shiftadd":
+        qb, kb = M.ste_sign(qh), M.ste_sign(kh)
+        return jax.vmap(jax.vmap(ref.linattn_ref))(qb, kb, vh)
+    raise ValueError(kind)
+
+
+def lra_forward(params, tokens, attn: str, cfg: LraConfig = LRA_CFG):
+    """tokens (B,N) int32 → logits (B, classes)."""
+    b, n = tokens.shape
+    shift_mlp = attn == "shiftadd"
+    t = params["emb"][tokens] + params["pos"][None, :, :]
+    hd = cfg.dim // cfg.heads
+    for blk in params["blocks"]:
+        u = M.layer_norm(t, blk["ln1_g"], blk["ln1_b"])
+        q, k, v = u @ blk["wq"], u @ blk["wk"], u @ blk["wv"]
+
+        def split(z):
+            return z.reshape(b, n, cfg.heads, hd).transpose(0, 2, 1, 3)
+
+        oh = _attend(attn, split(q), split(k), split(v), params, cfg)
+        a = oh.transpose(0, 2, 1, 3).reshape(b, n, cfg.dim)
+        t = t + a @ blk["wo"]
+        u = M.layer_norm(t, blk["ln2_g"], blk["ln2_b"])
+        w1 = M.ste_pow2(blk["w1"]) if shift_mlp else blk["w1"]
+        w2 = M.ste_pow2(blk["w2"]) if shift_mlp else blk["w2"]
+        t = t + (jax.nn.relu(u @ w1 + blk["b1"]) @ w2 + blk["b2"])
+    pooled = t.mean(axis=1)
+    return pooled @ params["head_w"] + params["head_b"]
+
+
+def build_artifacts(w, quick: bool):
+    from .params_io import load_params_lra
+
+    attns = LRA_ATTNS if not quick else ["transformer", "shiftadd"]
+    for attn in attns:
+        params = load_params_lra("text", attn)
+
+        def fwd(tok, params=params, attn=attn):
+            return (lra_forward(params, tok, attn),)
+
+        w.add(
+            f"lra_{attn}_bs1",
+            fwd,
+            (jax.ShapeDtypeStruct((1, LRA_CFG.seq), jnp.int32),),
+            kind="lra",
+            attn=attn,
+            seq=LRA_CFG.seq,
+        )

@@ -1,0 +1,315 @@
+"""GNT-style ray transformer for the 3D novel-view-synthesis task (Table 5).
+
+LLFF substitution (DESIGN.md §2): analytic scenes — colored spheres over a
+ground plane under a procedural sky — rendered exactly by ray casting give
+ground-truth images; the "GNT" model is a per-scene ray transformer that maps
+positional encodings of sample points along a ray to an RGB color via
+attention over the points (the paper's ray transformer), trained to fit the
+scene (NeRF-style). ShiftAddViT variants apply the same reparameterizations:
+
+- ``add``   — binarized Q/K in the ray attention (MatAdd accumulations);
+  note Table 5 keeps MSA order (no linear attention) for NVS, so binarized
+  attention here stays softmax-free Hamming-weighted like the 2D path,
+- ``shift`` — attention Linears and/or MLPs → s·2^P weights,
+- ``moe``   — MLPs → Mult/Shift experts with point-level routing.
+
+The Rust side mirrors the scene generator (rust/src/nvs/scenes.rs) so the
+renderer can score PSNR/SSIM against the same ground truth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .kernels import ref
+
+# ----------------------------------------------------------------- scenes
+
+# Each scene: list of spheres (cx, cy, cz, r, colr, colg, colb) + plane color.
+# Analogues of the LLFF scene names.
+SCENES: Dict[str, Dict[str, Any]] = {}
+
+
+def _mk_scene(name: str, seed: int, n_spheres: int):
+    rng = np.random.default_rng(seed)
+    spheres = []
+    for _ in range(n_spheres):
+        spheres.append(
+            [
+                float(rng.uniform(-1.5, 1.5)),  # cx
+                float(rng.uniform(-0.2, 1.2)),  # cy
+                float(rng.uniform(2.5, 5.0)),  # cz
+                float(rng.uniform(0.3, 0.7)),  # r
+                float(rng.uniform(0.2, 1.0)),
+                float(rng.uniform(0.2, 1.0)),
+                float(rng.uniform(0.2, 1.0)),
+            ]
+        )
+    SCENES[name] = {
+        "spheres": spheres,
+        "plane_col": [0.35, 0.3, 0.25],
+        "sky": [0.5, 0.6, 0.8],
+    }
+
+
+for i, nm in enumerate(
+    ["room", "fern", "leaves", "fortress", "orchids", "flower", "trex", "horns"]
+):
+    _mk_scene(nm, 100 + i, 3 + (i % 3))
+
+
+def ray_trace(scene, origins, dirs):
+    """Exact reference render: (R,3) origins/dirs → (R,3) RGB in [0,1]."""
+    o = np.asarray(origins, np.float64)
+    d = np.asarray(dirs, np.float64)
+    d = d / np.linalg.norm(d, axis=-1, keepdims=True)
+    r_count = o.shape[0]
+    col = np.zeros((r_count, 3))
+    tmin = np.full((r_count,), np.inf)
+    # sky background modulated by ray elevation
+    sky = np.asarray(scene["sky"])
+    col[:] = sky[None, :] * (0.6 + 0.4 * np.clip(d[:, 1:2], 0, 1))
+    # ground plane y = -0.5
+    denom = d[:, 1]
+    tp = np.where(np.abs(denom) > 1e-6, (-0.5 - o[:, 1]) / denom, np.inf)
+    hit_p = (tp > 1e-3) & (tp < tmin)
+    px = o[:, 0] + tp * d[:, 0]
+    pz = o[:, 2] + tp * d[:, 2]
+    checker = ((np.floor(px) + np.floor(pz)) % 2 == 0).astype(np.float64)
+    pc = np.asarray(scene["plane_col"])
+    plane_rgb = pc[None, :] * (0.7 + 0.3 * checker[:, None])
+    col = np.where(hit_p[:, None], plane_rgb, col)
+    tmin = np.where(hit_p, tp, tmin)
+    for s in scene["spheres"]:
+        c = np.asarray(s[:3])
+        r = s[3]
+        rgb = np.asarray(s[4:7])
+        oc = o - c[None, :]
+        bq = np.einsum("rd,rd->r", oc, d)
+        cq = np.einsum("rd,rd->r", oc, oc) - r * r
+        disc = bq * bq - cq
+        ts = np.where(disc > 0, -bq - np.sqrt(np.maximum(disc, 0)), np.inf)
+        hit = (ts > 1e-3) & (ts < tmin)
+        # Lambertian shade with a fixed light.
+        p = o + ts[:, None] * d
+        nrm = (p - c[None, :]) / r
+        light = np.asarray([0.5, 0.8, -0.3])
+        light = light / np.linalg.norm(light)
+        lam = np.clip(np.einsum("rd,d->r", nrm, light), 0.1, 1.0)
+        col = np.where(hit[:, None], rgb[None, :] * lam[:, None], col)
+        tmin = np.where(hit, ts, tmin)
+    return col.astype(np.float32)
+
+
+def camera_rays(img: int, pose_angle: float = 0.0):
+    """Pinhole camera at origin looking +z, rotated by pose_angle around y."""
+    ys, xs = np.meshgrid(np.arange(img), np.arange(img), indexing="ij")
+    u = (xs + 0.5) / img * 2 - 1
+    v = 1 - (ys + 0.5) / img * 2
+    dirs = np.stack([u, v, np.ones_like(u)], axis=-1).reshape(-1, 3)
+    ca, sa = np.cos(pose_angle), np.sin(pose_angle)
+    rot = np.asarray([[ca, 0, sa], [0, 1, 0], [-sa, 0, ca]])
+    dirs = dirs @ rot.T
+    origins = np.zeros_like(dirs)
+    return origins.astype(np.float32), dirs.astype(np.float32)
+
+
+# ------------------------------------------------------------------ model
+
+
+@dataclasses.dataclass(frozen=True)
+class NvsConfig:
+    name: str = "gnt_tiny"
+    points: int = 16  # samples per ray
+    pe_levels: int = 4  # positional-encoding octaves
+    dim: int = 32
+    depth: int = 2
+    heads: int = 2
+    t_near: float = 0.5
+    t_far: float = 6.0
+
+    @property
+    def in_dim(self) -> int:
+        return 3 * 2 * self.pe_levels + 3  # PE(xyz) + dir
+
+
+NVS_CFG = NvsConfig()
+
+
+@dataclasses.dataclass(frozen=True)
+class NvsVariant:
+    """attn: 'msa' | 'add'; linears/mlp: 'mult' | 'shift' | 'moe' (mlp only)."""
+
+    attn: str = "msa"
+    lin: str = "mult"
+    mlp: str = "mult"
+
+    def tag(self):
+        return f"{self.attn}_{self.lin}_{self.mlp}"
+
+
+NVS_VARIANTS = {
+    "gnt": NvsVariant(),
+    "add": NvsVariant(attn="add"),
+    "add_shift_both": NvsVariant(attn="add", lin="shift", mlp="shift"),
+    "add_shiftattn_moe": NvsVariant(attn="add", lin="shift", mlp="moe"),
+    "shift_both": NvsVariant(attn="msa", lin="shift", mlp="shift"),
+}
+
+
+def init_nvs_params(key, cfg: NvsConfig = NVS_CFG):
+    keys = iter(jax.random.split(key, 8 + 24 * cfg.depth))
+
+    def dense(fi, fo):
+        return (2.0 / (fi + fo)) ** 0.5 * jax.random.normal(next(keys), (fi, fo))
+
+    p = {
+        "in_w": dense(cfg.in_dim, cfg.dim),
+        "in_b": jnp.zeros((cfg.dim,)),
+        "out_w": dense(cfg.dim, 3),
+        "out_b": jnp.zeros((3,)),
+        "blocks": [],
+    }
+    h = cfg.dim * 2
+    for _ in range(cfg.depth):
+        p["blocks"].append(
+            {
+                "ln1_g": jnp.ones((cfg.dim,)),
+                "ln1_b": jnp.zeros((cfg.dim,)),
+                "ln2_g": jnp.ones((cfg.dim,)),
+                "ln2_b": jnp.zeros((cfg.dim,)),
+                "wq": dense(cfg.dim, cfg.dim),
+                "wk": dense(cfg.dim, cfg.dim),
+                "wv": dense(cfg.dim, cfg.dim),
+                "wo": dense(cfg.dim, cfg.dim),
+                "w1": dense(cfg.dim, h),
+                "b1": jnp.zeros((h,)),
+                "w2": dense(h, cfg.dim),
+                "b2": jnp.zeros((cfg.dim,)),
+                "w1s": dense(cfg.dim, h),
+                "b1s": jnp.zeros((h,)),
+                "w2s": dense(h, cfg.dim),
+                "b2s": jnp.zeros((cfg.dim,)),
+                "gate_w": 0.02 * jax.random.normal(next(keys), (cfg.dim, 2)),
+            }
+        )
+    return p
+
+
+def _lin(x, w, kind):
+    if kind == "shift":
+        return x @ M.ste_pow2(w)
+    return x @ w
+
+
+def posenc(pts, levels):
+    feats = [pts]
+    del feats[:]  # PE only; dir appended separately
+    out = []
+    for l in range(levels):
+        out.append(jnp.sin(pts * (2.0**l) * np.pi))
+        out.append(jnp.cos(pts * (2.0**l) * np.pi))
+    return jnp.concatenate(out, axis=-1)
+
+
+def nvs_forward(params, origins, dirs, var: NvsVariant, cfg: NvsConfig = NVS_CFG):
+    """(R,3) origins/dirs → (R,3) RGB. Attention runs *across ray samples*."""
+    r = origins.shape[0]
+    ts = jnp.linspace(cfg.t_near, cfg.t_far, cfg.points)
+    d = dirs / jnp.linalg.norm(dirs, axis=-1, keepdims=True)
+    pts = origins[:, None, :] + ts[None, :, None] * d[:, None, :]  # (R,P,3)
+    feat = jnp.concatenate(
+        [posenc(pts / cfg.t_far, cfg.pe_levels), jnp.broadcast_to(d[:, None, :], pts.shape)],
+        axis=-1,
+    )
+    t = feat @ params["in_w"] + params["in_b"]  # (R,P,dim)
+
+    hd = cfg.dim // cfg.heads
+    for blk in params["blocks"]:
+        u = M.layer_norm(t, blk["ln1_g"], blk["ln1_b"])
+        q = _lin(u, blk["wq"], var.lin)
+        k = _lin(u, blk["wk"], var.lin)
+        v = _lin(u, blk["wv"], var.lin)
+
+        def split(z):  # (R,P,dim) -> (R,H,P,hd)
+            return z.reshape(r, cfg.points, cfg.heads, hd).transpose(0, 2, 1, 3)
+
+        qh, kh, vh = split(q), split(k), split(v)
+        if var.attn == "msa":
+            oh = jax.vmap(jax.vmap(ref.softmax_attn_ref))(qh, kh, vh)
+        else:  # 'add' — binarized Hamming attention (quadratic form is fine,
+            # P=16 points; the *adds-not-mults* property is what carries over)
+            qb, kb = M.ste_sign(qh), M.ste_sign(kh)
+            oh = jax.vmap(jax.vmap(ref.linattn_ref))(qb, kb, vh)
+        a = oh.transpose(0, 2, 1, 3).reshape(r, cfg.points, cfg.dim)
+        t = t + _lin(a, blk["wo"], var.lin)
+
+        u = M.layer_norm(t, blk["ln2_g"], blk["ln2_b"])
+        if var.mlp == "moe":
+            flat = u.reshape(r * cfg.points, cfg.dim)
+            pgate = jax.nn.softmax(flat @ blk["gate_w"], axis=-1)
+            mw = (pgate[:, 0:1] >= pgate[:, 1:2]).astype(flat.dtype)
+            gv = jnp.where(mw > 0, pgate[:, 0:1], pgate[:, 1:2])
+            y_m = jax.nn.relu(flat @ blk["w1"] + blk["b1"]) @ blk["w2"] + blk["b2"]
+            y_s = (
+                jax.nn.relu(flat @ M.ste_pow2(blk["w1s"]) + blk["b1s"])
+                @ M.ste_pow2(blk["w2s"])
+                + blk["b2s"]
+            )
+            y = (gv * (mw * y_m + (1 - mw) * y_s)).reshape(r, cfg.points, cfg.dim)
+        elif var.mlp == "shift":
+            y = (
+                jax.nn.relu(u @ M.ste_pow2(blk["w1s"]) + blk["b1s"]) @ M.ste_pow2(blk["w2s"])
+                + blk["b2s"]
+            )
+        else:
+            y = jax.nn.relu(u @ blk["w1"] + blk["b1"]) @ blk["w2"] + blk["b2"]
+        t = t + y
+
+    # Aggregate over ray samples (mean-pool "ray transformer" readout).
+    pooled = t.mean(axis=1)
+    rgb = jax.nn.sigmoid(pooled @ params["out_w"] + params["out_b"])
+    return rgb
+
+
+def build_artifacts(w, quick: bool):
+    """Lower the NVS forward for each variant (ray-batched, R=256)."""
+    from .params_io import load_params_nvs
+
+    # Export scene definitions so the Rust renderer ray-traces identical
+    # ground truth (rust/src/nvs/scenes.rs parses this).
+    w.manifest["nvs_scenes"] = {
+        name: {
+            "spheres": sc["spheres"],
+            "plane_col": sc["plane_col"],
+            "sky": sc["sky"],
+        }
+        for name, sc in SCENES.items()
+    }
+
+    rays = 256
+    variants = list(NVS_VARIANTS) if not quick else ["gnt", "add_shiftattn_moe"]
+    for vname in variants:
+        var = NVS_VARIANTS[vname]
+        params = load_params_nvs("orchids", vname)
+
+        def fwd(o, d, params=params, var=var):
+            return (nvs_forward(params, o, d, var),)
+
+        w.add(
+            f"nvs_{vname}_r{rays}",
+            fwd,
+            (
+                jax.ShapeDtypeStruct((rays, 3), jnp.float32),
+                jax.ShapeDtypeStruct((rays, 3), jnp.float32),
+            ),
+            kind="nvs",
+            variant=vname,
+            rays=rays,
+        )

@@ -1,0 +1,94 @@
+"""Save/load parameter pytrees as .npz (flattened dotted keys).
+
+Trained weights live in ``python/trained/<model>_<variant>.npz``; if absent,
+:func:`load_params` falls back to a *seeded* random init so `make artifacts`
+is reproducible with or without the training step (latency benches do not
+need trained weights; accuracy tables do — EXPERIMENTS.md records which runs
+used trained checkpoints).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+TRAINED_DIR = os.path.join(os.path.dirname(__file__), "..", "trained")
+
+
+def flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(flatten(v, f"{prefix}{k}."))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(flatten(v, f"{prefix}{i}."))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def unflatten_like(template: Any, flat: Dict[str, np.ndarray], prefix: str = ""):
+    if isinstance(template, dict):
+        return {
+            k: unflatten_like(v, flat, f"{prefix}{k}.") for k, v in template.items()
+        }
+    if isinstance(template, (list, tuple)):
+        return [
+            unflatten_like(v, flat, f"{prefix}{i}.") for i, v in enumerate(template)
+        ]
+    return jnp.asarray(flat[prefix[:-1]])
+
+
+def save_params(params: Any, path: str) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    np.savez(path, **flatten(params))
+
+
+def trained_path(model: str, variant: str) -> str:
+    return os.path.join(TRAINED_DIR, f"{model}_{variant}.npz")
+
+
+def load_params(model: str, variant: str, cfg) -> Any:
+    """Trained checkpoint if present, else deterministic random init."""
+    from . import model as M
+
+    template = M.init_params(jax.random.PRNGKey(hash(model) % (2**31)), cfg)
+    path = trained_path(model, variant)
+    if os.path.exists(path):
+        flat = dict(np.load(path))
+        return unflatten_like(template, flat)
+    # Fall back to the *base* checkpoint of this model if one exists (e.g.
+    # variant-specific finetune missing but stage-0 MSA weights present).
+    base = trained_path(model, "msa")
+    if os.path.exists(base):
+        flat = dict(np.load(base))
+        return unflatten_like(template, flat)
+    return template
+
+
+def load_params_nvs(scene: str, variant: str):
+    """NVS checkpoint for (scene, variant), falling back like load_params."""
+    from . import model_nvs as NVS
+
+    template = NVS.init_nvs_params(jax.random.PRNGKey(7))
+    for name in (f"nvs_{scene}_{variant}", f"nvs_{scene}_gnt"):
+        path = os.path.join(TRAINED_DIR, f"{name}.npz")
+        if os.path.exists(path):
+            return unflatten_like(template, dict(np.load(path)))
+    return template
+
+
+def load_params_lra(task: str, variant: str):
+    """LRA checkpoint for (task, variant), falling back to random init."""
+    from . import model_lra as LRA
+
+    template = LRA.init_lra_params(jax.random.PRNGKey(11))
+    path = os.path.join(TRAINED_DIR, f"lra_{task}_{variant}.npz")
+    if os.path.exists(path):
+        return unflatten_like(template, dict(np.load(path)))
+    return template

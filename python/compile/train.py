@@ -1,0 +1,320 @@
+"""Build-time training: the paper's two-stage reparameterization finetune.
+
+Stages (paper §5.1, Appendix E), scaled to the synthetic task:
+
+- **stage 0** — train the MSA baseline from scratch (substitute for the
+  public pre-trained ViT checkpoints),
+- **stage 1** — convert MSA → linear attention + reparameterize attention
+  MatMuls with Add layers (binarized Q/K), finetune,
+- **stage 2** — reparameterize MLPs/linears with Shift or MoE layers,
+  finetune with L_CLS + λ(L_IMP + L_LOAD), λ = 0.01.
+
+Expert latency coefficients α_i for the LL-loss come from the measured
+Mult/Shift expert costs (Eyeriss model ratios; overridable via --alphas).
+
+Outputs: ``python/trained/<model>_<variant>.npz`` checkpoints and
+``python/trained/results.json`` (accuracy per variant — consumed by the Rust
+bench harness for the accuracy columns of Tables 2/3/4/6 and EXPERIMENTS.md).
+
+Usage:
+    python -m compile.train --preset main           # stage0..2 on pvtv2_b0
+    python -m compile.train --preset sensitivity    # Table 2
+    python -m compile.train --preset llloss         # Table 7 (w/ vs w/o)
+    python -m compile.train --preset models         # stage ladder, all sizes
+    python -m compile.train --preset nvs            # Table 5 scenes
+    python -m compile.train --preset lra            # Table 11 tasks
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import model as M
+from . import model_lra as LRA
+from . import model_nvs as NVS
+from .params_io import TRAINED_DIR, load_params, save_params, trained_path
+
+RESULTS = os.path.join(TRAINED_DIR, "results.json")
+
+
+def record(key: str, value: Any):
+    os.makedirs(TRAINED_DIR, exist_ok=True)
+    blob = {}
+    if os.path.exists(RESULTS):
+        with open(RESULTS) as f:
+            blob = json.load(f)
+    blob[key] = value
+    with open(RESULTS, "w") as f:
+        json.dump(blob, f, indent=1, sort_keys=True)
+
+
+# ----------------------------------------------------------------- optimizer
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8, clip=1.0):
+    """Adam with global-norm gradient clipping and a non-finite-update guard
+    (binarized-attention STE gradients occasionally spike; a single bad step
+    would otherwise poison the checkpoint and cascade NaN into every later
+    reparameterization stage)."""
+    # global-norm clip
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(g * g) for g in jax.tree.leaves(grads)) + 1e-12
+    )
+    scale = jnp.minimum(1.0, clip / gnorm)
+    grads = jax.tree.map(lambda g: g * scale, grads)
+    # replace any non-finite grads with zero (skip those coordinates)
+    grads = jax.tree.map(lambda g: jnp.where(jnp.isfinite(g), g, 0.0), grads)
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree.map(lambda m_: m_ / (1 - b1**t), m)
+    vh = jax.tree.map(lambda v_: v_ / (1 - b2**t), v)
+    new = jax.tree.map(lambda p, m_, v_: p - lr * m_ / (jnp.sqrt(v_) + eps), params, mh, vh)
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ------------------------------------------------------------ classification
+
+
+def eval_acc(params, cfg, var, n=256, seed0=10_000_000, bs=64):
+    correct = 0
+    for s in range(0, n, bs):
+        xs, ys = D.gen_batch(seed0 + s, min(bs, n - s))
+        logits, _ = M.forward(params, jnp.asarray(xs), cfg, var, use_pallas=False)
+        correct += int((jnp.argmax(logits, -1) == jnp.asarray(ys)).sum())
+    return correct / n
+
+
+def train_classifier(
+    mname: str,
+    vname: str,
+    steps: int,
+    *,
+    init_from: str | None = None,
+    lr: float = 2e-3,
+    bs: int = 32,
+    alphas=(0.8, 0.2),
+    lam: float = 0.01,
+    log_every: int = 50,
+    tag: str | None = None,
+):
+    """Train/finetune one (model, variant); returns final accuracy."""
+    cfg = M.MODELS[mname]
+    var = M.VARIANTS[vname]
+    tag = tag or f"{mname}_{vname}"
+    if init_from and os.path.exists(trained_path(mname, init_from)):
+        params = load_params(mname, init_from, cfg)
+        lr = lr * 0.5  # finetune stages use a reduced lr (paper Appendix E)
+        print(f"[{tag}] init from {mname}_{init_from}")
+    else:
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        print(f"[{tag}] init from scratch")
+    a = jnp.asarray(alphas, jnp.float32)
+
+    @jax.jit
+    def step(params, opt, x, y, lr_t):
+        (loss, aux), grads = jax.value_and_grad(
+            lambda p: M.classification_loss(p, x, y, cfg, var, a, lam), has_aux=True
+        )(params)
+        params, opt = adam_update(params, grads, opt, lr_t)
+        return params, opt, loss
+
+    opt = adam_init(params)
+    losses = []
+    t0 = time.time()
+    for it in range(steps):
+        xs, ys = D.gen_batch(1 + it * bs, bs)
+        # cosine-decayed lr (paper uses a cosine scheduler, Appendix E)
+        lr_t = lr * 0.5 * (1.0 + np.cos(np.pi * it / max(steps, 1)))
+        params, opt, loss = step(params, opt, jnp.asarray(xs), jnp.asarray(ys), lr_t)
+        losses.append(float(loss))
+        if (it + 1) % log_every == 0 or it == 0:
+            print(f"[{tag}] step {it+1}/{steps} loss {float(loss):.4f} ({time.time()-t0:.0f}s)")
+    acc = eval_acc(params, cfg, var)
+    print(f"[{tag}] eval acc {acc*100:.2f}%")
+    save_params(params, trained_path(mname, vname) if tag == f"{mname}_{vname}" else os.path.join(TRAINED_DIR, f"{tag}.npz"))
+    record(tag, {"acc": acc, "steps": steps, "loss_curve": losses[:: max(1, steps // 50)], "final_loss": losses[-1]})
+    return acc
+
+
+def preset_main(args):
+    """Stage ladder on pvtv2_b0: the paper's two-stage pipeline."""
+    s = args.steps
+    train_classifier("pvtv2_b0", "msa", 2 * s)  # stage 0 "pretrain"
+    for v in ("linear", "add_quant", "add_ksh"):  # stage 1
+        train_classifier("pvtv2_b0", v, s, init_from="msa")
+    for v in ("add_quant_shift_both", "add_quant_moe_both", "add_ksh_moe_both", "add_ksh_shiftattn", "add_ksh_shiftattn_moe"):
+        train_classifier("pvtv2_b0", v, s, init_from="add_quant")  # stage 2
+
+
+def preset_models(args):
+    """Stage ladder for the other sizes (Table 3)."""
+    s = args.steps
+    for mname in ("pvtv1_t", "pvtv2_b1", "pvtv2_b2", "deit_t"):
+        train_classifier(mname, "msa", 2 * s)
+        train_classifier(mname, "add_quant", s, init_from="msa")
+        train_classifier(mname, "add_quant_moe_both", s, init_from="add_quant")
+
+
+def preset_sensitivity(args):
+    """Table 2: apply each component separately, short finetune."""
+    s = max(args.steps // 2, 50)
+    for mname in ("pvtv2_b0", "pvtv1_t"):
+        if not os.path.exists(trained_path(mname, "msa")):
+            train_classifier(mname, "msa", 2 * args.steps)
+        for v in ("linear", "add_quant", "shift_mlp", "moe_mlp"):
+            train_classifier(mname, v, s, init_from="msa", tag=f"sens_{mname}_{v}")
+
+
+def preset_llloss(args):
+    """Table 7: MoE finetune with vs without the LL-loss."""
+    s = args.steps
+    for mname in ("pvtv2_b0", "pvtv1_t"):
+        if not os.path.exists(trained_path(mname, "add_quant")):
+            train_classifier(mname, "msa", 2 * s)
+            train_classifier(mname, "add_quant", s, init_from="msa")
+        train_classifier(mname, "add_quant_moe_both", s, init_from="add_quant", tag=f"llloss_{mname}_with")
+        train_classifier(mname, "add_quant_moe_both", s, init_from="add_quant", lam=0.0, tag=f"llloss_{mname}_without")
+
+
+# --------------------------------------------------------------------- NVS
+
+
+def train_nvs(scene: str, vname: str, steps: int, lr=3e-3, rays=512):
+    cfg = NVS.NVS_CFG
+    var = NVS.NVS_VARIANTS[vname]
+    tag = f"nvs_{scene}_{vname}"
+    base = os.path.join(TRAINED_DIR, f"nvs_{scene}_gnt.npz")
+    if vname != "gnt" and os.path.exists(base):
+        from .params_io import load_params_nvs
+
+        params = load_params_nvs(scene, "gnt")
+    else:
+        params = NVS.init_nvs_params(jax.random.PRNGKey(1))
+    scene_def = NVS.SCENES[scene]
+
+    @jax.jit
+    def step(params, opt, o, d, target):
+        def loss_fn(p):
+            rgb = NVS.nvs_forward(p, o, d, var, cfg)
+            return ((rgb - target) ** 2).mean()
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    opt = adam_init(params)
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for it in range(steps):
+        # Random rays from random poses (the paper samples 2048/iter; we 512).
+        angle = float(rng.uniform(-0.3, 0.3))
+        o_all, d_all = NVS.camera_rays(32, angle)
+        idx = rng.integers(0, o_all.shape[0], rays)
+        o, d = o_all[idx], d_all[idx]
+        target = NVS.ray_trace(scene_def, o, d)
+        params, opt, loss = step(params, opt, jnp.asarray(o), jnp.asarray(d), jnp.asarray(target))
+        if (it + 1) % 50 == 0 or it == 0:
+            print(f"[{tag}] step {it+1}/{steps} mse {float(loss):.5f} ({time.time()-t0:.0f}s)")
+    # Eval: full render at held-out pose.
+    o_all, d_all = NVS.camera_rays(32, 0.15)
+    gt = NVS.ray_trace(scene_def, o_all, d_all)
+    pred = np.asarray(NVS.nvs_forward(params, jnp.asarray(o_all), jnp.asarray(d_all), var, cfg))
+    mse = float(((pred - gt) ** 2).mean())
+    psnr = -10.0 * np.log10(mse + 1e-12)
+    print(f"[{tag}] PSNR {psnr:.2f}")
+    save_params(params, os.path.join(TRAINED_DIR, f"{tag}.npz"))
+    record(tag, {"psnr": psnr, "mse": mse, "steps": steps})
+    return psnr
+
+
+def preset_nvs(args):
+    scenes = args.scenes.split(",")
+    for scene in scenes:
+        train_nvs(scene, "gnt", args.steps)
+        for v in ("add", "add_shift_both", "add_shiftattn_moe", "shift_both"):
+            train_nvs(scene, v, args.steps // 2)
+
+
+# --------------------------------------------------------------------- LRA
+
+
+def train_lra(task: str, attn: str, steps: int, lr=3e-3, bs=32):
+    cfg = LRA.LRA_CFG
+    tag = f"lra_{task}_{attn}"
+    params = LRA.init_lra_params(jax.random.PRNGKey(2))
+
+    @jax.jit
+    def step(params, opt, x, y):
+        def loss_fn(p):
+            logits = LRA.lra_forward(p, x, attn, cfg)
+            logp = jax.nn.log_softmax(logits)
+            return -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    opt = adam_init(params)
+    t0 = time.time()
+    for it in range(steps):
+        xs, ys = LRA.gen_task(task, 1 + it, bs)
+        params, opt, loss = step(params, opt, jnp.asarray(xs), jnp.asarray(ys))
+        if (it + 1) % 50 == 0 or it == 0:
+            print(f"[{tag}] step {it+1}/{steps} loss {float(loss):.4f} ({time.time()-t0:.0f}s)")
+    # Eval.
+    correct = total = 0
+    for s in range(8):
+        xs, ys = LRA.gen_task(task, 900_000 + s, 32)
+        logits = LRA.lra_forward(params, jnp.asarray(xs), attn, cfg)
+        correct += int((jnp.argmax(logits, -1) == jnp.asarray(ys)).sum())
+        total += 32
+    acc = correct / total
+    print(f"[{tag}] acc {acc*100:.2f}%")
+    save_params(params, os.path.join(TRAINED_DIR, f"{tag}.npz"))
+    record(tag, {"acc": acc, "steps": steps})
+    return acc
+
+
+def preset_lra(args):
+    for task in args.tasks.split(","):
+        for attn in LRA.LRA_ATTNS:
+            train_lra(task, attn, args.steps)
+
+
+PRESETS = {
+    "main": preset_main,
+    "models": preset_models,
+    "sensitivity": preset_sensitivity,
+    "llloss": preset_llloss,
+    "nvs": preset_nvs,
+    "lra": preset_lra,
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", required=True, choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--scenes", default="orchids,flower")
+    ap.add_argument("--tasks", default="text,listops,retrieval,image")
+    args = ap.parse_args()
+    PRESETS[args.preset](args)
+
+
+if __name__ == "__main__":
+    main()

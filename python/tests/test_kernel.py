@@ -1,0 +1,228 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+This is the core correctness signal of the compile path — if these pass, the
+HLO the Rust runtime executes computes the paper's primitives exactly.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import matadd, matshift, linattn, moe_mlp, ref
+
+
+def rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------- matshift
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 16, 8), (32, 32, 32), (33, 47, 65), (1, 64, 128)])
+def test_matshift_matches_ref(m, k, n):
+    rng = np.random.default_rng(0)
+    x = rand(rng, m, k)
+    w = rand(rng, k, n)
+    s, p = ref.pow2_quantize(jnp.asarray(w))
+    got = matshift.matshift(jnp.asarray(x), s, p)
+    want = ref.matshift_ref(jnp.asarray(x), s, p)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_pow2_quantize_roundtrip_within_octave():
+    """Dequantized weight is within a factor of sqrt(2) of the original."""
+    rng = np.random.default_rng(1)
+    w = rand(rng, 32, 32) + 0.01
+    s, p = ref.pow2_quantize(jnp.asarray(w))
+    wq = np.asarray(ref.pow2_dequantize(s, p))
+    mask = np.abs(w) > 2.0**-8
+    ratio = np.abs(wq[mask]) / np.abs(w[mask])
+    assert np.all(ratio > 0.70) and np.all(ratio < 1.42)
+    assert np.all(np.sign(wq) == np.sign(np.where(w == 0, 1.0, w)))
+
+
+def test_pow2_quantize_clips_exponent():
+    w = jnp.asarray([[1e9, -1e-9, 0.0, 1.0]])
+    s, p = ref.pow2_quantize(w)
+    assert int(p.max()) <= 7 and int(p.min()) >= -8
+    assert int(s[0, 1]) == -1 and int(s[0, 2]) == 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 48),
+    n=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+    bm=st.sampled_from([8, 16, 32]),
+)
+def test_matshift_property(m, k, n, seed, bm):
+    """Hypothesis sweep: arbitrary shapes and block sizes."""
+    rng = np.random.default_rng(seed)
+    x = rand(rng, m, k)
+    w = rand(rng, k, n)
+    s, p = ref.pow2_quantize(jnp.asarray(w))
+    got = matshift.matshift(jnp.asarray(x), s, p, bm=bm, bn=16, bk=16)
+    want = ref.matshift_ref(jnp.asarray(x), s, p)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------ matadd
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 16, 8), (32, 32, 32), (17, 33, 9)])
+def test_matadd_matches_ref(m, k, n):
+    rng = np.random.default_rng(2)
+    x = rand(rng, m, k)
+    b = rng.integers(-1, 2, size=(k, n)).astype(np.int8)
+    got = matadd.matadd(jnp.asarray(x), jnp.asarray(b))
+    want = ref.matadd_ref(jnp.asarray(x), jnp.asarray(b))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_matadd_binary_pm1_only():
+    """±1 operand (no zeros) — the linear-attention case."""
+    rng = np.random.default_rng(3)
+    x = rand(rng, 16, 24)
+    b = (rng.integers(0, 2, size=(24, 16)) * 2 - 1).astype(np.int8)
+    got = matadd.matadd(jnp.asarray(x), jnp.asarray(b))
+    want = ref.matadd_ref(jnp.asarray(x), jnp.asarray(b))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 40),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matadd_property(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, m, k)
+    b = rng.integers(-1, 2, size=(k, n)).astype(np.int8)
+    got = matadd.matadd(jnp.asarray(x), jnp.asarray(b), bm=16, bn=16, bk=16)
+    want = ref.matadd_ref(jnp.asarray(x), jnp.asarray(b))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matadd_is_exact_for_integer_inputs():
+    """Accumulation of integers is exact in f32 (no rounding surprises)."""
+    rng = np.random.default_rng(4)
+    x = rng.integers(-8, 9, size=(16, 32)).astype(np.float32)
+    b = rng.integers(-1, 2, size=(32, 8)).astype(np.int8)
+    got = np.asarray(matadd.matadd(jnp.asarray(x), jnp.asarray(b)))
+    want = x @ b.astype(np.float32)
+    assert np.array_equal(got, want)
+
+
+# ----------------------------------------------------------------- linattn
+
+
+@pytest.mark.parametrize("n,d", [(64, 16), (128, 32), (100, 16), (1, 8)])
+def test_linattn_matches_ref(n, d):
+    rng = np.random.default_rng(5)
+    q = rand(rng, n, d)
+    k = rand(rng, n, d)
+    v = rand(rng, n, d)
+    qb = np.asarray(ref.binary_quantize(jnp.asarray(q)))
+    kb = np.asarray(ref.binary_quantize(jnp.asarray(k)))
+    got = linattn.linattn(jnp.asarray(qb), jnp.asarray(kb), jnp.asarray(v), bt=32)
+    want = ref.linattn_ref(jnp.asarray(qb), jnp.asarray(kb), jnp.asarray(v))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_linattn_linear_in_tokens():
+    """Doubling identical tokens leaves per-token output unchanged.
+
+    KV and Z double but so does the N normalizer — the linear-attention
+    average is invariant to duplicating the token set.
+    """
+    rng = np.random.default_rng(6)
+    n, d = 32, 16
+    q = np.asarray(ref.binary_quantize(jnp.asarray(rand(rng, n, d))))
+    k = np.asarray(ref.binary_quantize(jnp.asarray(rand(rng, n, d))))
+    v = rand(rng, n, d)
+    o1 = np.asarray(ref.linattn_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)))
+    q2, k2, v2 = (np.concatenate([a, a], 0) for a in (q, k, v))
+    o2 = np.asarray(ref.linattn_ref(jnp.asarray(q2), jnp.asarray(k2), jnp.asarray(v2)))
+    np.testing.assert_allclose(o1, o2[:n], rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 96), d=st.sampled_from([8, 16, 32]), seed=st.integers(0, 2**31 - 1))
+def test_linattn_property(n, d, seed):
+    rng = np.random.default_rng(seed)
+    qb = (rng.integers(0, 2, size=(n, d)) * 2 - 1).astype(np.float32)
+    kb = (rng.integers(0, 2, size=(n, d)) * 2 - 1).astype(np.float32)
+    v = rand(rng, n, d)
+    got = linattn.linattn(jnp.asarray(qb), jnp.asarray(kb), jnp.asarray(v), bt=32)
+    want = ref.linattn_ref(jnp.asarray(qb), jnp.asarray(kb), jnp.asarray(v))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+# ----------------------------------------------------------------- moe_mlp
+
+
+def _moe_params(rng, d, h):
+    gate_w = rand(rng, d, 2)
+    w1m, b1m = rand(rng, d, h), rand(rng, 1, h)
+    w2m, b2m = rand(rng, h, d), rand(rng, 1, d)
+    s1, p1 = ref.pow2_quantize(jnp.asarray(rand(rng, d, h)))
+    s2, p2 = ref.pow2_quantize(jnp.asarray(rand(rng, h, d)))
+    b1s, b2s = rand(rng, 1, h), rand(rng, 1, d)
+    return (
+        jnp.asarray(gate_w),
+        jnp.asarray(w1m),
+        jnp.asarray(b1m),
+        jnp.asarray(w2m),
+        jnp.asarray(b2m),
+        s1,
+        p1,
+        jnp.asarray(b1s),
+        s2,
+        p2,
+        jnp.asarray(b2s),
+    )
+
+
+@pytest.mark.parametrize("n,d,h", [(64, 16, 32), (100, 32, 64), (5, 8, 16)])
+def test_moe_mlp_matches_ref(n, d, h):
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rand(rng, n, d))
+    params = _moe_params(rng, d, h)
+    got = moe_mlp.moe_mlp(x, *params, bt=32)
+    want = ref.moe_mlp_ref(x, *params)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_moe_mlp_routes_all_tokens_to_one_expert():
+    """A gate that always prefers expert 0 must equal the pure Mult MLP."""
+    rng = np.random.default_rng(8)
+    n, d, h = 32, 16, 32
+    x = jnp.asarray(np.abs(rand(rng, n, d)) + 0.1)
+    params = list(_moe_params(rng, d, h))
+    gate = np.zeros((d, 2), np.float32)
+    gate[:, 0] = 10.0  # positive x ⇒ expert 0 dominates
+    params[0] = jnp.asarray(gate)
+    got = np.asarray(moe_mlp.moe_mlp(x, *params, bt=16))
+    _, w1m, b1m, w2m, b2m = params[0], params[1], params[2], params[3], params[4]
+    y_m = np.maximum(np.asarray(x) @ np.asarray(w1m) + np.asarray(b1m), 0) @ np.asarray(
+        w2m
+    ) + np.asarray(b2m)
+    # Gate value saturates to ~1.0 for a 10x margin.
+    np.testing.assert_allclose(got, y_m, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 70), seed=st.integers(0, 2**31 - 1))
+def test_moe_mlp_property(n, seed):
+    rng = np.random.default_rng(seed)
+    d, h = 16, 32
+    x = jnp.asarray(rand(rng, n, d))
+    params = _moe_params(rng, d, h)
+    got = moe_mlp.moe_mlp(x, *params, bt=32)
+    want = ref.moe_mlp_ref(x, *params)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,132 @@
+"""L2 model tests: variant forwards, pallas/dense path parity, STE
+quantizers, LL-loss behavior, and parameter I/O."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import data as D
+from compile import model as M
+from compile import params_io
+
+
+CFG = M.MODELS["pvtv2_b0"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    return D.gen_batch(0, 2)
+
+
+@pytest.mark.parametrize("vname", sorted(M.VARIANTS))
+def test_forward_shapes_all_variants(params, batch, vname):
+    xs, _ = batch
+    logits, aux = M.forward(params, jnp.asarray(xs), CFG, M.VARIANTS[vname])
+    assert logits.shape == (2, CFG.num_classes)
+    assert bool(jnp.isfinite(logits).all())
+    if M.VARIANTS[vname].mlp == "moe":
+        assert len(aux["gates"]) == CFG.depth
+        g = aux["gates"][0]
+        assert g.shape == (2, CFG.tokens, 2)
+        np.testing.assert_allclose(np.asarray(g.sum(-1)), 1.0, rtol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "vname", ["msa", "linear", "add_quant", "add_ksh_moe_both", "add_quant_shift_both"]
+)
+def test_pallas_path_matches_dense(params, batch, vname):
+    """The L1-kernel path and the jnp path must agree — this is what makes
+    the AOT'd pallas HLO interchangeable with the dense HLO."""
+    xs, _ = batch
+    var = M.VARIANTS[vname]
+    a, _ = M.forward(params, jnp.asarray(xs), CFG, var, use_pallas=False)
+    b, _ = M.forward(params, jnp.asarray(xs), CFG, var, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_ste_pow2_values_are_powers_of_two(params):
+    w = params["blocks"][0]["w1"]
+    wq = np.asarray(M.ste_pow2(w))
+    logs = np.log2(np.abs(wq[wq != 0]))
+    np.testing.assert_allclose(logs, np.round(logs), atol=1e-6)
+
+
+def test_ste_gradients_flow_through_quantizers():
+    w = jnp.asarray([[0.3, -0.7], [1.2, -0.1]])
+    g = jax.grad(lambda w_: (M.ste_pow2(w_) ** 2).sum())(w)
+    assert bool(jnp.all(jnp.abs(g) > 0))
+    x = jnp.asarray([0.5, -0.5])
+    gs = jax.grad(lambda x_: M.ste_sign(x_).sum())(x)
+    np.testing.assert_allclose(np.asarray(gs), 1.0)
+
+
+def test_ll_loss_zero_when_balanced_and_positive_when_skewed():
+    alphas = jnp.asarray([0.5, 0.5])
+    balanced = jnp.full((1, 64, 2), 0.5)
+    assert float(M.ll_loss(balanced, alphas)) < 1e-6
+    skewed = jnp.concatenate(
+        [jnp.full((1, 64, 1), 0.95), jnp.full((1, 64, 1), 0.05)], axis=-1
+    )
+    assert float(M.ll_loss(skewed, alphas)) > 0.1
+
+
+def test_ll_loss_prefers_latency_proportional_split():
+    """With a 4:1 latency ratio, a router that sends ~20% of tokens (hard
+    top-1) to the slow Mult expert scores lower than a 50/50 router — the
+    mechanism behind Table 7."""
+    alphas = jnp.asarray([0.8, 0.2])  # Mult 4x slower
+
+    def population(frac_mult, n=1000):
+        n_m = int(n * frac_mult)
+        mult = jnp.tile(jnp.asarray([[0.9, 0.1]]), (n_m, 1))
+        shift = jnp.tile(jnp.asarray([[0.1, 0.9]]), (n - n_m, 1))
+        return jnp.concatenate([mult, shift], 0)[None]
+
+    balanced = float(M.ll_loss(population(0.2), alphas))
+    even = float(M.ll_loss(population(0.5), alphas))
+    assert balanced < even, (balanced, even)
+
+
+def test_classification_loss_decreases_on_easy_overfit(params):
+    xs, ys = D.gen_batch(100, 8)
+    var = M.VARIANTS["msa"]
+    alphas = jnp.asarray([0.5, 0.5])
+    loss_fn = lambda p: M.classification_loss(
+        p, jnp.asarray(xs), jnp.asarray(ys), CFG, var, alphas
+    )[0]
+    l0, g = jax.value_and_grad(loss_fn)(params)
+    p1 = jax.tree.map(lambda p_, g_: p_ - 0.01 * g_, params, g)
+    l1 = loss_fn(p1)
+    assert float(l1) < float(l0)
+
+
+def test_params_io_roundtrip(params, tmp_path):
+    path = str(tmp_path / "p.npz")
+    params_io.save_params(params, path)
+    flat = dict(np.load(path))
+    restored = params_io.unflatten_like(params, flat)
+    np.testing.assert_array_equal(
+        np.asarray(params["blocks"][1]["wq"]), np.asarray(restored["blocks"][1]["wq"])
+    )
+    assert len(restored["blocks"]) == CFG.depth
+
+
+def test_variant_tags_unique():
+    tags = [v.tag() for v in M.VARIANTS.values()]
+    assert len(tags) == len(set(tags))
+
+
+def test_model_zoo_scaling():
+    """Config family preserves the paper's size ordering."""
+    p0 = M.MODELS["pvtv2_b0"]
+    p1 = M.MODELS["pvtv2_b1"]
+    p2 = M.MODELS["pvtv2_b2"]
+    assert p0.dim < p1.dim <= p2.dim
+    assert p2.depth > p0.depth

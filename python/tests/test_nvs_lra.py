@@ -1,0 +1,106 @@
+"""NVS (GNT-style) and LRA model tests."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model_lra as LRA
+from compile import model_nvs as NVS
+
+
+# ------------------------------------------------------------------- NVS
+
+
+@pytest.fixture(scope="module")
+def nvs_params():
+    return NVS.init_nvs_params(jax.random.PRNGKey(1))
+
+
+def test_ray_trace_deterministic_and_bounded():
+    scene = NVS.SCENES["orchids"]
+    o, d = NVS.camera_rays(8, 0.1)
+    a = NVS.ray_trace(scene, o, d)
+    b = NVS.ray_trace(scene, o, d)
+    np.testing.assert_array_equal(a, b)
+    assert a.min() >= 0.0 and a.max() <= 1.2
+    assert a.shape == (64, 3)
+
+
+def test_scene_has_visible_spheres():
+    """At least some center-ish rays hit a sphere (colorful pixels)."""
+    scene = NVS.SCENES["flower"]
+    o, d = NVS.camera_rays(32, 0.0)
+    img = NVS.ray_trace(scene, o, d).reshape(32, 32, 3)
+    sat = img.max(-1) - img.min(-1)  # saturation proxy
+    assert (sat > 0.15).sum() > 10
+
+
+@pytest.mark.parametrize("vname", sorted(NVS.NVS_VARIANTS))
+def test_nvs_forward_all_variants(nvs_params, vname):
+    o, d = NVS.camera_rays(4, 0.0)
+    rgb = NVS.nvs_forward(
+        nvs_params, jnp.asarray(o), jnp.asarray(d), NVS.NVS_VARIANTS[vname]
+    )
+    assert rgb.shape == (16, 3)
+    assert bool(jnp.isfinite(rgb).all())
+    assert float(rgb.min()) >= 0.0 and float(rgb.max()) <= 1.0  # sigmoid head
+
+
+def test_nvs_gradient_flows(nvs_params):
+    o, d = NVS.camera_rays(4, 0.0)
+    target = jnp.zeros((16, 3))
+
+    def loss(p):
+        rgb = NVS.nvs_forward(p, jnp.asarray(o), jnp.asarray(d), NVS.NVS_VARIANTS["add"])
+        return ((rgb - target) ** 2).mean()
+
+    g = jax.grad(loss)(nvs_params)
+    gn = sum(float(jnp.abs(x).sum()) for x in jax.tree.leaves(g))
+    assert gn > 0.0
+
+
+# ------------------------------------------------------------------- LRA
+
+
+@pytest.fixture(scope="module")
+def lra_params():
+    return LRA.init_lra_params(jax.random.PRNGKey(2))
+
+
+@pytest.mark.parametrize("task", LRA.LRA_TASKS)
+def test_lra_tasks_generate_valid_labels(task):
+    xs, ys = LRA.gen_task(task, seed=3, n=16)
+    assert xs.shape == (16, LRA.LRA_CFG.seq)
+    assert xs.min() >= 0 and xs.max() < LRA.VOCAB
+    assert ys.min() >= 0 and ys.max() < LRA.LRA_CFG.classes
+    # labels are not constant (task is learnable)
+    xs2, ys2 = LRA.gen_task(task, seed=4, n=64)
+    assert len(set(ys2.tolist())) > 1
+
+
+@pytest.mark.parametrize("attn", LRA.LRA_ATTNS)
+def test_lra_forward_all_families(lra_params, attn):
+    xs, _ = LRA.gen_task("text", seed=5, n=2)
+    logits = LRA.lra_forward(lra_params, jnp.asarray(xs), attn)
+    assert logits.shape == (2, LRA.LRA_CFG.classes)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_lra_families_differ():
+    """Different attention families produce different functions."""
+    p = LRA.init_lra_params(jax.random.PRNGKey(3))
+    xs, _ = LRA.gen_task("text", seed=6, n=1)
+    outs = {
+        attn: np.asarray(LRA.lra_forward(p, jnp.asarray(xs), attn))
+        for attn in LRA.LRA_ATTNS
+    }
+    assert not np.allclose(outs["transformer"], outs["shiftadd"])
+    assert not np.allclose(outs["transformer"], outs["linformer"])
+
+
+def test_retrieval_task_balanced():
+    _, ys = LRA.gen_task("retrieval", seed=8, n=128)
+    frac = ys.mean()
+    assert 0.25 < frac < 0.75

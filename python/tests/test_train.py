@@ -1,0 +1,62 @@
+"""Training machinery tests (tiny step counts — smoke + invariants)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile import train as T
+
+
+def test_adam_decreases_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = T.adam_init(params)
+    loss = lambda p: (p["w"] ** 2).sum()
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, opt = T.adam_update(params, g, opt, lr=0.1)
+    assert float(loss(params)) < 0.1
+
+
+def test_adam_clips_exploding_gradients():
+    params = {"w": jnp.asarray([1.0])}
+    opt = T.adam_init(params)
+    huge = {"w": jnp.asarray([1e12])}
+    new, _ = T.adam_update(params, huge, opt, lr=0.1, clip=1.0)
+    # after clipping, |update| ≤ lr / (sqrt(v̂)+eps) ≈ lr · bounded
+    assert abs(float(new["w"][0]) - 1.0) < 1.0
+
+
+def test_adam_survives_nan_gradients():
+    params = {"w": jnp.asarray([1.0, 2.0])}
+    opt = T.adam_init(params)
+    bad = {"w": jnp.asarray([jnp.nan, 1.0])}
+    new, _ = T.adam_update(params, bad, opt, lr=0.1)
+    assert bool(jnp.isfinite(new["w"]).all())
+
+
+def test_eval_acc_on_fresh_params_near_chance():
+    cfg = M.MODELS["pvtv2_b0"]
+    params = M.init_params(jax.random.PRNGKey(9), cfg)
+    acc = T.eval_acc(params, cfg, M.VARIANTS["msa"], n=64)
+    assert 0.0 <= acc <= 0.45  # chance is 0.125
+
+
+@pytest.mark.slow
+def test_short_training_improves_loss(tmp_path, monkeypatch):
+    """5 gradient steps reduce the loss on a fixed batch (full train loop)."""
+    monkeypatch.setattr(T, "TRAINED_DIR", str(tmp_path))
+    monkeypatch.setattr(T, "RESULTS", str(tmp_path / "results.json"))
+    import compile.params_io as pio
+
+    monkeypatch.setattr(pio, "TRAINED_DIR", str(tmp_path))
+    acc = T.train_classifier("pvtv2_b0", "msa", 5, log_every=5, bs=8)
+    assert 0.0 <= acc <= 1.0
+    assert (tmp_path / "pvtv2_b0_msa.npz").exists()
+    import json
+
+    rec = json.load(open(tmp_path / "results.json"))
+    lc = rec["pvtv2_b0_msa"]["loss_curve"]
+    assert len(lc) >= 2 and all(np.isfinite(lc))

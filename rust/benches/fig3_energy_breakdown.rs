@@ -1,0 +1,7 @@
+//! Fig. 3 — Eyeriss energy breakdown for DeiT-T and GNT.
+use shiftaddvit::harness::figures;
+
+fn main() {
+    figures::table1();
+    figures::fig3_energy_breakdown();
+}

@@ -1,0 +1,7 @@
+//! Fig. 4/7 — MatShift kernel speedups over MatMul/FakeShift (PVT shapes).
+use shiftaddvit::harness::figures;
+
+fn main() {
+    figures::fig4_matshift(1); // Fig. 4 (batch 1)
+    figures::fig4_matshift(4); // Fig. 7 companion (batched; paper uses 32)
+}

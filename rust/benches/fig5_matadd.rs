@@ -1,0 +1,7 @@
+//! Fig. 5/8 — MatAdd kernel speedups over MatMul (PVT attention shapes).
+use shiftaddvit::harness::figures;
+
+fn main() {
+    figures::fig5_matadd(1); // Fig. 5
+    figures::fig5_matadd(4); // Fig. 8 companion
+}

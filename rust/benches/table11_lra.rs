@@ -1,0 +1,8 @@
+//! Table 11 — LRA benchmark across attention families.
+use shiftaddvit::harness::lra;
+use shiftaddvit::runtime::engine::Engine;
+
+fn main() {
+    let engine = Engine::from_default_dir().ok();
+    lra::table11(engine.as_ref()).expect("table11");
+}

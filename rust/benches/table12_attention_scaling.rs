@@ -1,0 +1,11 @@
+//! Table 12 — attention-type latency vs batch size and resolution.
+use shiftaddvit::harness::scaling;
+use shiftaddvit::runtime::engine::Engine;
+
+fn main() {
+    scaling::table12_analytic();
+    match Engine::from_default_dir() {
+        Ok(engine) => scaling::table12_measured(&engine).expect("measured"),
+        Err(e) => eprintln!("measured rows skipped: {e}"),
+    }
+}

@@ -1,0 +1,40 @@
+//! Table 13 — Eyeriss latency under the same chip area: cheaper primitives
+//! buy more PEs, so shift/add variants win big even where GPU wall-clock
+//! hides it.
+
+use shiftaddvit::energy::area::AreaModel;
+use shiftaddvit::model::config::classifier;
+use shiftaddvit::model::ops::{count, Variant};
+use shiftaddvit::util::bench::{f2, Table};
+
+fn main() {
+    let a = AreaModel::default();
+    let mut t = Table::new(&[
+        "Model",
+        "Variant",
+        "MACs (G)",
+        "Eyeriss lat (ms)",
+        "speedup vs MSA",
+    ]);
+    for model in ["pvtv2_b0", "pvtv2_b1"] {
+        let spec = classifier(model);
+        let msa_lat = a.latency_ms(&count(&spec, Variant::MSA));
+        for (label, var) in [
+            ("MSA", Variant::MSA),
+            ("LinearAttn+Add", Variant::ADD),
+            ("+Shift (Attn & MLP)", Variant::ADD_SHIFT_BOTH),
+            ("+MoE (Attn & MLP)", Variant::SHIFTADD_MOE),
+        ] {
+            let ops = count(&spec, var);
+            let lat = a.latency_ms(&ops);
+            t.row(&[
+                spec.name.to_string(),
+                label.to_string(),
+                f2(ops.total_macs() / 1e9),
+                f2(lat),
+                format!("{:.1}x", msa_lat / lat),
+            ]);
+        }
+    }
+    t.print("Table 13 — latency under the same chip area (168-FP32-PE budget, heterogeneous array)");
+}

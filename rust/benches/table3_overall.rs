@@ -1,0 +1,10 @@
+//! Table 3 — overall accuracy/latency/energy across the model zoo.
+use shiftaddvit::harness::overall;
+use shiftaddvit::runtime::engine::Engine;
+
+fn main() {
+    match Engine::from_default_dir() {
+        Ok(engine) => overall::table3(&engine).expect("table3"),
+        Err(e) => eprintln!("SKIP (run `make artifacts`): {e}"),
+    }
+}

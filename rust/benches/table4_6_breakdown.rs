@@ -1,0 +1,18 @@
+//! Tables 4 & 6 — breakdown ladder for all four PVT models + the MoE
+//! real-vs-modularized dual latency from the serving coordinator.
+use shiftaddvit::harness::breakdown;
+use shiftaddvit::runtime::engine::Engine;
+
+fn main() {
+    let engine = match Engine::from_default_dir() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            return;
+        }
+    };
+    for model in ["pvtv2_b0", "pvtv1_t", "pvtv2_b1", "pvtv2_b2"] {
+        breakdown::breakdown(&engine, model).expect("breakdown");
+    }
+    breakdown::moe_dual_latency(engine.manifest(), 32).expect("dual latency");
+}

@@ -1,0 +1,14 @@
+//! Table 5 (+8/9/10) — NVS quality and per-frame cost.
+use shiftaddvit::harness::nvs;
+use shiftaddvit::runtime::engine::Engine;
+
+fn main() {
+    nvs::table5_cost();
+    match Engine::from_default_dir() {
+        Ok(engine) => {
+            let scenes = ["orchids", "flower"];
+            nvs::table5_quality(&engine, &scenes, 24).expect("table5");
+        }
+        Err(e) => eprintln!("quality rows skipped (run `make artifacts`): {e}"),
+    }
+}

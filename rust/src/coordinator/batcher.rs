@@ -1,0 +1,133 @@
+//! Dynamic batcher: groups incoming requests into batches bounded by
+//! `max_batch` and a fill deadline — the standard serving trade-off between
+//! throughput (bigger batches) and tail latency (shorter waits).
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// One inference request.
+#[derive(Debug)]
+pub struct Request {
+    pub id: usize,
+    /// flattened HWC image
+    pub pixels: Vec<f32>,
+    /// ground-truth label (for online accuracy accounting); None in prod
+    pub label: Option<usize>,
+    pub arrived: Instant,
+}
+
+/// A formed batch.
+#[derive(Debug)]
+pub struct Batch {
+    pub requests: Vec<Request>,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Concatenate request pixels into one buffer.
+    pub fn pixels(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.requests.len() * self.requests[0].pixels.len());
+        for r in &self.requests {
+            out.extend_from_slice(&r.pixels);
+        }
+        out
+    }
+}
+
+/// Pull requests from `rx` into batches.
+pub struct Batcher {
+    pub max_batch: usize,
+    pub deadline: Duration,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, deadline_ms: f64) -> Batcher {
+        Batcher {
+            max_batch: max_batch.max(1),
+            deadline: Duration::from_secs_f64(deadline_ms / 1e3),
+        }
+    }
+
+    /// Form the next batch. Blocks for the first request; then fills until
+    /// `max_batch` or the deadline since the first arrival. Returns None when
+    /// the channel is closed and drained.
+    pub fn next_batch(&self, rx: &mpsc::Receiver<Request>) -> Option<Batch> {
+        let first = rx.recv().ok()?;
+        let t0 = Instant::now();
+        let mut requests = vec![first];
+        while requests.len() < self.max_batch {
+            let left = self.deadline.saturating_sub(t0.elapsed());
+            if left.is_zero() {
+                break;
+            }
+            match rx.recv_timeout(left) {
+                Ok(r) => requests.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(Batch { requests })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: usize) -> Request {
+        Request {
+            id,
+            pixels: vec![id as f32; 4],
+            label: None,
+            arrived: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn fills_to_max_batch_without_waiting() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..5 {
+            tx.send(req(i)).unwrap();
+        }
+        let b = Batcher::new(4, 50.0).next_batch(&rx).unwrap();
+        assert_eq!(b.len(), 4);
+        assert_eq!(b.requests[0].id, 0);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(req(0)).unwrap();
+        let t0 = Instant::now();
+        let b = Batcher::new(8, 5.0).next_batch(&rx).unwrap();
+        assert_eq!(b.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn closed_channel_returns_none_after_drain() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(req(0)).unwrap();
+        drop(tx);
+        let batcher = Batcher::new(2, 1.0);
+        assert_eq!(batcher.next_batch(&rx).unwrap().len(), 1);
+        assert!(batcher.next_batch(&rx).is_none());
+    }
+
+    #[test]
+    fn pixels_concatenate_in_order() {
+        let b = Batch {
+            requests: vec![req(1), req(2)],
+        };
+        let px = b.pixels();
+        assert_eq!(px[0], 1.0);
+        assert_eq!(px[4], 2.0);
+    }
+}

@@ -1,0 +1,105 @@
+//! Serving configuration (JSON file or CLI flags).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// How MoE expert execution is timed/executed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchMode {
+    /// experts run concurrently on their own engine workers; the layer
+    /// completes when the slowest finishes (real wall-clock, Table 4/6 "†")
+    Real,
+    /// experts run sequentially but the layer is charged max(expert times) —
+    /// the paper's "modularized latency, ideal parallelism" ("*")
+    Modularized,
+    /// dense fallback: every token through both experts (PVT+MoE baseline)
+    Dense,
+}
+
+impl DispatchMode {
+    pub fn parse(s: &str) -> Result<DispatchMode> {
+        match s {
+            "real" => Ok(DispatchMode::Real),
+            "modularized" => Ok(DispatchMode::Modularized),
+            "dense" => Ok(DispatchMode::Dense),
+            other => anyhow::bail!("unknown dispatch mode '{other}' (real|modularized|dense)"),
+        }
+    }
+}
+
+/// Coordinator settings.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// max images per formed batch
+    pub max_batch: usize,
+    /// how long the batcher waits to fill a batch (ms)
+    pub batch_deadline_ms: f64,
+    pub dispatch: DispatchMode,
+    /// number of requests the synthetic client issues
+    pub requests: usize,
+    /// mean request inter-arrival (ms); 0 = closed-loop
+    pub arrival_ms: f64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: 8,
+            batch_deadline_ms: 2.0,
+            dispatch: DispatchMode::Real,
+            requests: 128,
+            arrival_ms: 0.0,
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Load from a JSON file; missing keys keep defaults.
+    pub fn from_file(path: &Path) -> Result<ServerConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text)?;
+        let mut c = ServerConfig::default();
+        if let Some(v) = j.get("max_batch").and_then(|v| v.as_usize()) {
+            c.max_batch = v;
+        }
+        if let Some(v) = j.get("batch_deadline_ms").and_then(|v| v.as_f64()) {
+            c.batch_deadline_ms = v;
+        }
+        if let Some(v) = j.get("dispatch").and_then(|v| v.as_str()) {
+            c.dispatch = DispatchMode::parse(v)?;
+        }
+        if let Some(v) = j.get("requests").and_then(|v| v.as_usize()) {
+            c.requests = v;
+        }
+        if let Some(v) = j.get("arrival_ms").and_then(|v| v.as_f64()) {
+            c.arrival_ms = v;
+        }
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_config_file() {
+        let dir = std::env::temp_dir().join("savit_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"max_batch": 4, "dispatch": "modularized"}"#).unwrap();
+        let c = ServerConfig::from_file(&p).unwrap();
+        assert_eq!(c.max_batch, 4);
+        assert_eq!(c.dispatch, DispatchMode::Modularized);
+        assert_eq!(c.requests, 128); // default preserved
+    }
+
+    #[test]
+    fn dispatch_mode_parse() {
+        assert!(DispatchMode::parse("real").is_ok());
+        assert!(DispatchMode::parse("nope").is_err());
+    }
+}

@@ -1,0 +1,160 @@
+//! Serving metrics: per-stage latency accumulation, expert load tracking,
+//! and the LL-loss diagnostics surfaced by the `metrics` CLI output.
+
+use std::collections::BTreeMap;
+
+use crate::moe::balance;
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Accumulates samples per named stage.
+#[derive(Default, Debug)]
+pub struct Metrics {
+    stages: BTreeMap<String, Vec<f64>>,
+    /// tokens routed per expert (cumulative)
+    pub expert_tokens: [usize; 2],
+    /// gate-value sums per expert (cumulative)
+    pub expert_gates: [f64; 2],
+    /// measured per-expert batch times (ms)
+    pub expert_times: [Vec<f64>; 2],
+    pub batches: usize,
+    pub requests: usize,
+    pub padding_waste: Vec<f64>,
+}
+
+impl Metrics {
+    pub fn record(&mut self, stage: &str, ms: f64) {
+        self.stages.entry(stage.to_string()).or_default().push(ms);
+    }
+
+    pub fn stage_summary(&self, stage: &str) -> Option<Summary> {
+        self.stages.get(stage).map(|v| Summary::from(v))
+    }
+
+    /// Observed expert load fractions.
+    pub fn load_split(&self) -> [f64; 2] {
+        let total = (self.expert_tokens[0] + self.expert_tokens[1]).max(1) as f64;
+        [
+            self.expert_tokens[0] as f64 / total,
+            self.expert_tokens[1] as f64 / total,
+        ]
+    }
+
+    /// Evaluate the paper's Eq. 4 losses over the traffic seen so far, using
+    /// measured mean expert times for the α coefficients.
+    pub fn ll_loss(&self) -> Option<(f64, f64)> {
+        if self.expert_times[0].is_empty() || self.expert_times[1].is_empty() {
+            return None;
+        }
+        let lat = [
+            mean(&self.expert_times[0]),
+            mean(&self.expert_times[1]),
+        ];
+        let a = balance::alphas(&lat);
+        let imp = balance::importance_loss(&self.expert_gates.map(|g| g), &a);
+        let load = balance::load_loss(&self.expert_tokens, &a);
+        Some((imp, load))
+    }
+
+    /// JSON dump for tooling.
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("batches", Json::num(self.batches as f64)),
+            ("requests", Json::num(self.requests as f64)),
+            (
+                "expert_tokens",
+                Json::arr_num(&[self.expert_tokens[0] as f64, self.expert_tokens[1] as f64]),
+            ),
+        ];
+        let mut stage_obj = Vec::new();
+        for (k, v) in &self.stages {
+            let s = Summary::from(v);
+            stage_obj.push((
+                k.as_str(),
+                Json::obj(vec![
+                    ("mean_ms", Json::num(s.mean)),
+                    ("p50_ms", Json::num(s.p50)),
+                    ("p99_ms", Json::num(s.p99)),
+                    ("n", Json::num(s.n as f64)),
+                ]),
+            ));
+        }
+        pairs.push(("stages", Json::obj(stage_obj)));
+        Json::obj(pairs)
+    }
+
+    pub fn print(&self) {
+        println!("-- serving metrics --");
+        println!(
+            "batches {}  requests {}  expert load split {:?}",
+            self.batches,
+            self.requests,
+            self.load_split()
+        );
+        if let Some((imp, load)) = self.ll_loss() {
+            println!("LL-loss diagnostics: L_IMP {imp:.4}  L_LOAD {load:.4}");
+        }
+        for (k, v) in &self.stages {
+            let s = Summary::from(v);
+            println!(
+                "  {k:28} mean {:8.3} ms  p50 {:8.3}  p99 {:8.3}  (n={})",
+                s.mean, s.p50, s.p99, s.n
+            );
+        }
+        if !self.padding_waste.is_empty() {
+            println!(
+                "  bucket padding waste: {:.1}%",
+                100.0 * mean(&self.padding_waste)
+            );
+        }
+    }
+}
+
+fn mean(v: &[f64]) -> f64 {
+    v.iter().sum::<f64>() / v.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_accumulation() {
+        let mut m = Metrics::default();
+        m.record("stem", 1.0);
+        m.record("stem", 3.0);
+        let s = m.stage_summary("stem").unwrap();
+        assert_eq!(s.n, 2);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert!(m.stage_summary("missing").is_none());
+    }
+
+    #[test]
+    fn load_split_fractions() {
+        let mut m = Metrics::default();
+        m.expert_tokens = [30, 10];
+        let f = m.load_split();
+        assert!((f[0] - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ll_loss_requires_both_experts() {
+        let mut m = Metrics::default();
+        assert!(m.ll_loss().is_none());
+        m.expert_times[0].push(2.0);
+        m.expert_times[1].push(1.0);
+        m.expert_tokens = [100, 200];
+        m.expert_gates = [60.0, 110.0];
+        let (imp, load) = m.ll_loss().unwrap();
+        assert!(imp >= 0.0 && load >= 0.0);
+    }
+
+    #[test]
+    fn json_dump_parses() {
+        let mut m = Metrics::default();
+        m.record("head", 0.5);
+        m.batches = 1;
+        let j = m.to_json();
+        assert_eq!(j.get("batches").unwrap().as_usize(), Some(1));
+    }
+}

@@ -1,0 +1,10 @@
+//! L3 — the serving coordinator (the paper's system contribution, serving
+//! shape): dynamic batching, the pipeline scheduler over the decomposed
+//! model artifacts, real sparse MoE token dispatch with parallel experts and
+//! latency-aware balancing, and serving metrics.
+
+pub mod batcher;
+pub mod config;
+pub mod metrics;
+pub mod scheduler;
+pub mod server;

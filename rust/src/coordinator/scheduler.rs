@@ -1,0 +1,298 @@
+//! The MoE pipeline scheduler: runs one batch through the decomposed
+//! serving artifacts with *real* sparse token dispatch between the Mult and
+//! Shift experts (Fig. 1(c) at serving time).
+//!
+//! Stage graph per batch (B images, N tokens, d dims):
+//!
+//! ```text
+//!   stem(B) → [ blk_i_attn(B) → blk_i_premlp(B) → route → ┬ expert_mult ┐
+//!                                                         └ expert_shift┘
+//!              → scatter+residual ]×depth → head(B) → logits
+//! ```
+//!
+//! Experts execute on dedicated engine workers (one PJRT client each, since
+//! the handles are !Send) — truly concurrent in `Real` mode; `Modularized`
+//! mode times them separately and charges max() (the paper's "*" rows).
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::config::DispatchMode;
+use crate::coordinator::metrics::Metrics;
+use crate::moe::dispatch::{self, padding_waste};
+use crate::moe::router::{self, EXPERT_MULT, EXPERT_SHIFT};
+use crate::runtime::artifact::{Manifest, ServeConfig};
+use crate::runtime::tensor::Tensor;
+use crate::runtime::worker::{EnginePool, Pending};
+
+/// Result of one batch.
+pub struct BatchOutput {
+    pub logits: Tensor,
+    /// per-image routed-to-Mult token masks of the FIRST MoE block (for the
+    /// Fig. 6/9 visualisation)
+    pub dispatch_mask_blk0: Vec<Vec<bool>>,
+    pub batch_ms: f64,
+    /// makespan the batch *would* have under ideal parallelism (paper "*")
+    pub modularized_ms: f64,
+}
+
+/// The pipeline over `serve_*` artifacts.
+pub struct MoePipeline {
+    pub serve: ServeConfig,
+    pool: EnginePool,
+    pub mode: DispatchMode,
+}
+
+/// worker 0: backbone; worker 1: Mult expert; worker 2: Shift expert.
+const W_BACKBONE: usize = 0;
+const W_MULT: usize = 1;
+const W_SHIFT: usize = 2;
+
+impl MoePipeline {
+    pub fn new(manifest: &Manifest, mode: DispatchMode) -> Result<MoePipeline> {
+        let serve = manifest
+            .serve
+            .clone()
+            .ok_or_else(|| anyhow!("manifest has no serving topology — rebuild artifacts"))?;
+        let pool = EnginePool::new(3, manifest);
+        Ok(MoePipeline { serve, pool, mode })
+    }
+
+    /// Pre-compile every pipeline artifact on its worker (keeps compile time
+    /// out of the measured hot path).
+    pub fn warmup(&self) -> Result<()> {
+        let s = &self.serve;
+        let mut backbone = Vec::new();
+        for &b in &s.batch_buckets {
+            backbone.push(format!("serve_stem_bs{b}"));
+            backbone.push(format!("serve_head_bs{b}"));
+            for i in 0..s.depth {
+                backbone.push(format!("serve_blk{i}_attn_bs{b}"));
+                backbone.push(format!("serve_blk{i}_premlp_bs{b}"));
+            }
+        }
+        self.pool.worker(W_BACKBONE).preload(&backbone)?;
+        let mut mult = Vec::new();
+        let mut shift = Vec::new();
+        for i in 0..s.depth {
+            for &nb in &s.token_buckets {
+                mult.push(format!("serve_expert_mult_blk{i}_n{nb}"));
+                shift.push(format!("serve_expert_shift_blk{i}_n{nb}"));
+            }
+        }
+        self.pool.worker(W_MULT).preload(&mult)?;
+        self.pool.worker(W_SHIFT).preload(&shift)?;
+        Ok(())
+    }
+
+    fn batch_bucket(&self, n: usize) -> Result<usize> {
+        self.serve
+            .batch_buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .ok_or_else(|| anyhow!("batch {n} exceeds largest compiled bucket"))
+    }
+
+    /// Run one batch of images (flattened HWC f32, `n` images).
+    pub fn run_batch(
+        &self,
+        images: &[f32],
+        n: usize,
+        metrics: &mut Metrics,
+    ) -> Result<BatchOutput> {
+        let s = &self.serve;
+        let px = s.img * s.img * 3;
+        assert_eq!(images.len(), n * px);
+        let t_batch = Instant::now();
+        let mut modularized_ms = 0.0f64;
+
+        // Pad the image batch to a compiled bucket.
+        let b = self.batch_bucket(n)?;
+        let mut padded = vec![0.0f32; b * px];
+        padded[..n * px].copy_from_slice(images);
+        let x = Tensor::f32(vec![b, s.img, s.img, 3], padded);
+
+        let backbone = self.pool.worker(W_BACKBONE);
+        let t0 = Instant::now();
+        let mut t = backbone
+            .call(&format!("serve_stem_bs{b}"), vec![x])?
+            .remove(0);
+        let stem_ms = ms_since(t0);
+        metrics.record("stem", stem_ms);
+        modularized_ms += stem_ms;
+
+        let mut dispatch_mask_blk0 = Vec::new();
+        for i in 0..s.depth {
+            // --- attention sublayer ------------------------------------
+            let t0 = Instant::now();
+            t = backbone
+                .call(&format!("serve_blk{i}_attn_bs{b}"), vec![t])?
+                .remove(0);
+            let attn_ms = ms_since(t0);
+            metrics.record(&format!("blk{i}_attn"), attn_ms);
+            modularized_ms += attn_ms;
+
+            // --- pre-MLP: LN + router gates ------------------------------
+            let t0 = Instant::now();
+            let mut out = backbone.call(&format!("serve_blk{i}_premlp_bs{b}"), vec![t.clone()])?;
+            let u = out.remove(0); // (b, N, d) normalized tokens
+            let gates = out.remove(0); // (b, N, 2)
+            let premlp_ms = ms_since(t0);
+            metrics.record(&format!("blk{i}_premlp"), premlp_ms);
+            modularized_ms += premlp_ms;
+
+            // --- route (only the n real images' tokens) -----------------
+            let tokens_per_img = s.tokens;
+            let total_tokens = n * tokens_per_img;
+            let routes = router::route(&gates.as_f32()?[..total_tokens * 2], 2);
+            metrics.expert_tokens[EXPERT_MULT] +=
+                routes.iter().filter(|r| r.expert == EXPERT_MULT).count();
+            metrics.expert_tokens[EXPERT_SHIFT] +=
+                routes.iter().filter(|r| r.expert == EXPERT_SHIFT).count();
+            for g in gates.as_f32()?[..total_tokens * 2].chunks(2) {
+                metrics.expert_gates[0] += g[0] as f64;
+                metrics.expert_gates[1] += g[1] as f64;
+            }
+            if i == 0 {
+                for img in 0..n {
+                    dispatch_mask_blk0.push(
+                        routes[img * tokens_per_img..(img + 1) * tokens_per_img]
+                            .iter()
+                            .map(|r| r.expert == EXPERT_MULT)
+                            .collect(),
+                    );
+                }
+            }
+
+            // --- dispatch -------------------------------------------------
+            let u_flat = &u.as_f32()?[..total_tokens * s.dim];
+            let mut parts =
+                dispatch::partition(u_flat, s.dim, &routes, 2, &s.token_buckets);
+            metrics.padding_waste.push(padding_waste(&parts));
+
+            let mut y = vec![0.0f32; total_tokens * s.dim];
+            let t0 = Instant::now();
+            match self.mode {
+                DispatchMode::Real => {
+                    // Submit every partition to its expert worker, then sync.
+                    // `padded` buffers are MOVED into the worker messages —
+                    // no per-partition clone on the hot path (§Perf L3-2).
+                    let pend: Vec<(usize, Pending)> = parts
+                        .iter_mut()
+                        .map(|p| {
+                            let w = if p.expert == EXPERT_MULT { W_MULT } else { W_SHIFT };
+                            let name = self.expert_name(i, p.expert, p.bucket);
+                            let padded = std::mem::take(&mut p.padded);
+                            (
+                                p.expert,
+                                self.pool.worker(w).call_async(
+                                    &name,
+                                    vec![Tensor::f32(vec![p.bucket, s.dim], padded)],
+                                ),
+                            )
+                        })
+                        .collect();
+                    for ((_e, pnd), part) in pend.into_iter().zip(&parts) {
+                        let out = pnd.wait()?.remove(0);
+                        dispatch::scatter(&mut y, s.dim, part, out.as_f32()?, &routes);
+                    }
+                    let real_ms = ms_since(t0);
+                    metrics.record(&format!("blk{i}_moe"), real_ms);
+                    modularized_ms += real_ms;
+                }
+                DispatchMode::Modularized => {
+                    // Sequential execution, charged max(per-expert time).
+                    let mut per_expert = [0.0f64; 2];
+                    for part in &mut parts {
+                        let w = if part.expert == EXPERT_MULT { W_MULT } else { W_SHIFT };
+                        let name = self.expert_name(i, part.expert, part.bucket);
+                        let padded = std::mem::take(&mut part.padded);
+                        let te = Instant::now();
+                        let out = self.pool.worker(w).call(
+                            &name,
+                            vec![Tensor::f32(vec![part.bucket, s.dim], padded)],
+                        )?;
+                        per_expert[part.expert] += ms_since(te);
+                        dispatch::scatter(&mut y, s.dim, part, out[0].as_f32()?, &routes);
+                    }
+                    metrics.expert_times[0].push(per_expert[0]);
+                    metrics.expert_times[1].push(per_expert[1]);
+                    let charged = per_expert[0].max(per_expert[1]);
+                    metrics.record(&format!("blk{i}_moe"), charged);
+                    modularized_ms += charged;
+                }
+                DispatchMode::Dense => {
+                    // PVT+MoE baseline: all tokens through BOTH experts.
+                    for expert in [EXPERT_MULT, EXPERT_SHIFT] {
+                        let all: Vec<_> = (0..total_tokens)
+                            .map(|ti| crate::moe::router::Route {
+                                expert,
+                                gate: routes[ti].gate
+                                    * if routes[ti].expert == expert { 1.0 } else { 0.0 },
+                            })
+                            .collect();
+                        let dense_parts =
+                            dispatch::partition(u_flat, s.dim, &all, 2, &s.token_buckets);
+                        for part in &dense_parts {
+                            let w = if expert == EXPERT_MULT { W_MULT } else { W_SHIFT };
+                            let name = self.expert_name(i, expert, part.bucket);
+                            let out = self.pool.worker(w).call(
+                                &name,
+                                vec![Tensor::f32(vec![part.bucket, s.dim], part.padded.clone())],
+                            )?;
+                            // scatter adds gated output; gate=0 rows add 0
+                            let mut tmp = vec![0.0f32; total_tokens * s.dim];
+                            dispatch::scatter(&mut tmp, s.dim, part, out[0].as_f32()?, &all);
+                            for (yy, tt) in y.iter_mut().zip(&tmp) {
+                                *yy += *tt;
+                            }
+                        }
+                    }
+                    let dense_ms = ms_since(t0);
+                    metrics.record(&format!("blk{i}_moe"), dense_ms);
+                    modularized_ms += dense_ms;
+                }
+            }
+
+            // --- residual add (padded rows stay as-is; they are discarded) -
+            let tdata = t.as_f32_mut()?;
+            for (ti, yv) in y.iter().enumerate() {
+                tdata[ti] += yv;
+            }
+        }
+
+        let t0 = Instant::now();
+        let logits_full = backbone
+            .call(&format!("serve_head_bs{b}"), vec![t])?
+            .remove(0);
+        let head_ms = ms_since(t0);
+        metrics.record("head", head_ms);
+        modularized_ms += head_ms;
+
+        // Slice off padded images.
+        let nc = s.num_classes;
+        let logits = Tensor::f32(
+            vec![n, nc],
+            logits_full.as_f32()?[..n * nc].to_vec(),
+        );
+        metrics.batches += 1;
+        metrics.requests += n;
+        Ok(BatchOutput {
+            logits,
+            dispatch_mask_blk0,
+            batch_ms: ms_since(t_batch),
+            modularized_ms,
+        })
+    }
+
+    fn expert_name(&self, blk: usize, expert: usize, bucket: usize) -> String {
+        let e = if expert == EXPERT_MULT { "mult" } else { "shift" };
+        format!("serve_expert_{e}_blk{blk}_n{bucket}")
+    }
+}
+
+fn ms_since(t: Instant) -> f64 {
+    t.elapsed().as_secs_f64() * 1e3
+}

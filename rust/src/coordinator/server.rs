@@ -1,0 +1,128 @@
+//! The serving loop: a synthetic client thread issues image requests
+//! (open-loop Poisson-ish or closed-loop), the coordinator batches them,
+//! runs the MoE pipeline, and reports latency/throughput/accuracy — the
+//! end-to-end driver behind `shiftaddvit serve` and
+//! `examples/serve_classification.rs`.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::batcher::{Batcher, Request};
+use crate::coordinator::config::ServerConfig;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::scheduler::MoePipeline;
+use crate::data::synth_images;
+use crate::runtime::artifact::Manifest;
+use crate::util::rng::XorShift64;
+use crate::util::stats::Summary;
+
+/// Outcome of a serving run.
+pub struct ServeReport {
+    pub metrics: Metrics,
+    pub latency: Summary,
+    pub modularized_latency: Summary,
+    pub throughput_rps: f64,
+    pub accuracy: f64,
+    /// first few dispatch masks for visualisation
+    pub sample_masks: Vec<Vec<bool>>,
+}
+
+/// Run the serving benchmark described by `cfg` against the manifest.
+pub fn serve(manifest: &Manifest, cfg: &ServerConfig) -> Result<ServeReport> {
+    let pipeline = MoePipeline::new(manifest, cfg.dispatch)?;
+    pipeline.warmup()?;
+
+    let (tx, rx) = mpsc::channel::<Request>();
+    let n_req = cfg.requests;
+    let arrival_ms = cfg.arrival_ms;
+
+    // Client thread: deterministic synthetic images, optional pacing.
+    let client = thread::spawn(move || {
+        let mut rng = XorShift64::new(0xC11E17);
+        for id in 0..n_req {
+            let sample = synth_images::gen_image(5_000_000 + id as u32);
+            let req = Request {
+                id,
+                pixels: sample.pixels,
+                label: Some(sample.label),
+                arrived: Instant::now(),
+            };
+            if tx.send(req).is_err() {
+                return;
+            }
+            if arrival_ms > 0.0 {
+                // exponential-ish jitter around the mean
+                let jitter = 0.5 + rng.uniform() as f64;
+                thread::sleep(Duration::from_secs_f64(arrival_ms * jitter / 1e3));
+            }
+        }
+    });
+
+    let batcher = Batcher::new(cfg.max_batch, cfg.batch_deadline_ms);
+    let mut metrics = Metrics::default();
+    let mut latencies = Vec::new();
+    let mut modularized = Vec::new();
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    let mut sample_masks = Vec::new();
+    let t0 = Instant::now();
+
+    while let Some(batch) = batcher.next_batch(&rx) {
+        let pixels = batch.pixels();
+        let out = pipeline.run_batch(&pixels, batch.len(), &mut metrics)?;
+        let preds = out.logits.argmax_last()?;
+        let done = Instant::now();
+        for (r, p) in batch.requests.iter().zip(&preds) {
+            latencies.push(done.duration_since(r.arrived).as_secs_f64() * 1e3);
+            if let Some(label) = r.label {
+                total += 1;
+                if *p == label {
+                    correct += 1;
+                }
+            }
+        }
+        modularized.push(out.modularized_ms);
+        if sample_masks.len() < 8 {
+            sample_masks.extend(out.dispatch_mask_blk0.into_iter().take(8));
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    client.join().expect("client thread");
+
+    Ok(ServeReport {
+        latency: Summary::from(&latencies),
+        modularized_latency: Summary::from(&modularized),
+        throughput_rps: metrics.requests as f64 / wall_s,
+        accuracy: if total > 0 {
+            correct as f64 / total as f64
+        } else {
+            0.0
+        },
+        metrics,
+        sample_masks,
+    })
+}
+
+impl ServeReport {
+    pub fn print(&self) {
+        println!("== serving report ==");
+        println!(
+            "requests {}  throughput {:.1} img/s  accuracy {:.2}%",
+            self.metrics.requests,
+            self.throughput_rps,
+            100.0 * self.accuracy
+        );
+        println!(
+            "request latency  mean {:.2} ms  p50 {:.2}  p99 {:.2}",
+            self.latency.mean, self.latency.p50, self.latency.p99
+        );
+        println!(
+            "batch modularized latency (ideal parallelism)  mean {:.2} ms",
+            self.modularized_latency.mean
+        );
+        self.metrics.print();
+    }
+}

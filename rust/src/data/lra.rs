@@ -1,0 +1,44 @@
+//! Synthetic LRA-style sequence tasks (Table 11 substitute) — mirrors
+//! `python/compile/model_lra.py::gen_task` semantics (not bit-exact; tasks
+//! are evaluated python-side; the Rust side only needs request payloads for
+//! latency benches, so any same-shape sequences suffice).
+
+use crate::util::rng::XorShift64;
+
+pub const VOCAB: usize = 16;
+pub const TASKS: [&str; 4] = ["text", "listops", "retrieval", "image"];
+
+/// A batch of token sequences for serving/bench traffic.
+pub fn gen_sequences(seed: u64, n: usize, seq: usize) -> Vec<i32> {
+    let mut rng = XorShift64::new(seed);
+    (0..n * seq).map(|_| rng.range(0, VOCAB) as i32).collect()
+}
+
+/// Paper sequence lengths per task (Table 11 header).
+pub fn paper_seq_len(task: &str) -> usize {
+    match task {
+        "text" => 4096,
+        "listops" => 2048,
+        "retrieval" => 4096,
+        "image" => 1024,
+        _ => panic!("unknown LRA task '{task}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_in_vocab() {
+        let xs = gen_sequences(1, 4, 64);
+        assert_eq!(xs.len(), 256);
+        assert!(xs.iter().all(|t| (0..VOCAB as i32).contains(t)));
+    }
+
+    #[test]
+    fn paper_lengths() {
+        assert_eq!(paper_seq_len("text"), 4096);
+        assert_eq!(paper_seq_len("image"), 1024);
+    }
+}

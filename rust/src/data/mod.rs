@@ -1,0 +1,4 @@
+//! Synthetic workload generators (dataset substitutes — DESIGN.md §2).
+
+pub mod lra;
+pub mod synth_images;

@@ -1,0 +1,177 @@
+//! Synthetic shapes dataset — bit-for-bit mirror of
+//! `python/compile/data.py` (same xorshift32 stream, same integer
+//! rasterizer), so the Rust serving path evaluates accuracy on exactly the
+//! distribution the JAX models were trained on.
+
+use crate::util::rng::XorShift32;
+
+pub const IMG: usize = 32;
+pub const NUM_CLASSES: usize = 8;
+
+pub const SHAPE_NAMES: [&str; 8] = [
+    "circle", "square", "triangle", "cross", "ring", "diamond", "hbar", "vbar",
+];
+
+/// Integer point-in-shape test (mirror of `data._inside`).
+fn inside(shape_id: u32, dx: i32, dy: i32, r: i32) -> bool {
+    let (ax, ay) = (dx.abs(), dy.abs());
+    match shape_id {
+        0 => dx * dx + dy * dy <= r * r,
+        1 => ax <= r && ay <= r,
+        2 => dy >= -r && dy <= r && ax * 2 <= (r - dy),
+        3 => (ax <= r / 2 && ay <= r) || (ay <= r / 2 && ax <= r),
+        4 => {
+            let d2 = dx * dx + dy * dy;
+            let inner = (r - 2).max(1);
+            inner * inner <= d2 && d2 <= r * r
+        }
+        5 => ax + ay <= r,
+        6 => ay <= (r / 3).max(1) && ax <= r,
+        7 => ax <= (r / 3).max(1) && ay <= r,
+        _ => unreachable!(),
+    }
+}
+
+/// One generated sample: HWC float image in [0,1] + label + the ground-truth
+/// object geometry (for the router-dispatch validation of Fig. 6/9).
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub pixels: Vec<f32>, // IMG*IMG*3
+    pub label: usize,
+    pub cx: i32,
+    pub cy: i32,
+    pub r: i32,
+}
+
+/// Generate the image for `seed` (deterministic; parity with data.gen_image).
+pub fn gen_image(seed: u32) -> Sample {
+    let mut rng = XorShift32::new(seed);
+    let label = rng.randint(0, NUM_CLASSES as u32);
+    let mut px = vec![0.0f32; IMG * IMG * 3];
+
+    let base = 0.2 + 0.3 * rng.uniform();
+    for y in 0..IMG {
+        for x in 0..IMG {
+            let checker = if ((x / 8) + (y / 8)) % 2 == 0 { 0.1 } else { 0.0 };
+            let noise = 0.08 * rng.uniform();
+            let v = base + checker + noise;
+            for c in 0..3 {
+                px[(y * IMG + x) * 3 + c] = v;
+            }
+        }
+    }
+
+    let r = rng.randint(5, 10) as i32;
+    let cx = rng.randint((r + 1) as u32, (IMG as i32 - r - 1) as u32) as i32;
+    let cy = rng.randint((r + 1) as u32, (IMG as i32 - r - 1) as u32) as i32;
+    let col = [
+        0.55 + 0.45 * rng.uniform(),
+        0.15 * rng.uniform(),
+        0.55 + 0.45 * rng.uniform(),
+    ];
+    for y in (cy - r)..=(cy + r) {
+        for x in (cx - r)..=(cx + r) {
+            if x >= 0
+                && (x as usize) < IMG
+                && y >= 0
+                && (y as usize) < IMG
+                && inside(label, x - cx, y - cy, r)
+            {
+                for c in 0..3 {
+                    px[(y as usize * IMG + x as usize) * 3 + c] = col[c];
+                }
+            }
+        }
+    }
+    Sample {
+        pixels: px,
+        label: label as usize,
+        cx,
+        cy,
+        r,
+    }
+}
+
+/// Generate a batch with seeds `seed0..seed0+n` as a flat (n, IMG, IMG, 3)
+/// f32 buffer plus labels.
+pub fn gen_batch(seed0: u32, n: usize) -> (Vec<f32>, Vec<usize>) {
+    let mut xs = Vec::with_capacity(n * IMG * IMG * 3);
+    let mut ys = Vec::with_capacity(n);
+    for i in 0..n {
+        let s = gen_image(seed0 + i as u32);
+        xs.extend_from_slice(&s.pixels);
+        ys.push(s.label);
+    }
+    (xs, ys)
+}
+
+/// Token-level object mask at `patch` granularity (grid×grid bools) — the
+/// ground truth against which router dispatch is scored.
+pub fn object_mask(sample: &Sample, patch: usize) -> Vec<bool> {
+    let grid = IMG / patch;
+    let mut mask = vec![false; grid * grid];
+    let (cx, cy, r) = (sample.cx, sample.cy, sample.r);
+    for y in (cy - r)..=(cy + r) {
+        for x in (cx - r)..=(cx + r) {
+            if x >= 0
+                && (x as usize) < IMG
+                && y >= 0
+                && (y as usize) < IMG
+                && inside(sample.label as u32, x - cx, y - cy, r)
+            {
+                mask[(y as usize / patch) * grid + (x as usize / patch)] = true;
+            }
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = gen_image(42);
+        let b = gen_image(42);
+        assert_eq!(a.pixels, b.pixels);
+        assert_eq!(a.label, b.label);
+    }
+
+    #[test]
+    fn pixels_in_unit_range() {
+        for seed in [1u32, 7, 1000] {
+            let s = gen_image(seed);
+            assert!(s.pixels.iter().all(|v| (0.0..=1.0).contains(v)));
+        }
+    }
+
+    #[test]
+    fn labels_cover_all_classes() {
+        let mut seen = [false; NUM_CLASSES];
+        for seed in 0..200u32 {
+            seen[gen_image(seed).label] = true;
+        }
+        assert!(seen.iter().all(|s| *s), "{seen:?}");
+    }
+
+    #[test]
+    fn object_mask_nonempty_and_not_full() {
+        for seed in 0..20u32 {
+            let s = gen_image(seed);
+            let m = object_mask(&s, 4);
+            let cnt = m.iter().filter(|b| **b).count();
+            assert!(cnt > 0, "seed {seed} empty mask");
+            assert!(cnt < m.len(), "seed {seed} full mask");
+        }
+    }
+
+    #[test]
+    fn batch_concatenates() {
+        let (xs, ys) = gen_batch(5, 3);
+        assert_eq!(xs.len(), 3 * IMG * IMG * 3);
+        assert_eq!(ys.len(), 3);
+        let one = gen_image(6);
+        assert_eq!(&xs[IMG * IMG * 3..2 * IMG * IMG * 3], &one.pixels[..]);
+    }
+}

@@ -1,0 +1,150 @@
+//! Eyeriss-like accelerator energy model [12, 77]: compute energy from the
+//! Table 1 op costs + data-movement energy through a four-level hierarchy
+//! (DRAM → global buffer → NoC → register file), with reuse factors in the
+//! style of the DNN-Chip Predictor [77].
+
+use crate::energy::ops::MacStyle;
+use crate::model::ops::OpsBreakdown;
+
+/// Per-byte access energies (pJ/byte), 45 nm, derived from the Eyeriss
+/// normalized hierarchy costs (RF : NoC : GLB : DRAM ≈ 1 : 2 : 6 : 200
+/// relative to a 16-bit MAC ≈ 1 pJ ⇒ per-byte at 2 bytes/word).
+#[derive(Clone, Copy, Debug)]
+pub struct Hierarchy {
+    pub dram_pj_b: f64,
+    pub glb_pj_b: f64,
+    pub noc_pj_b: f64,
+    pub rf_pj_b: f64,
+    /// average on-chip reuse: how many MACs each operand byte feeds from RF
+    pub rf_reuse: f64,
+    /// GLB reuse factor for activations
+    pub glb_reuse: f64,
+}
+
+impl Default for Hierarchy {
+    fn default() -> Self {
+        Hierarchy {
+            dram_pj_b: 100.0,
+            glb_pj_b: 3.0,
+            noc_pj_b: 1.0,
+            rf_pj_b: 0.5,
+            rf_reuse: 16.0,
+            glb_reuse: 4.0,
+        }
+    }
+}
+
+/// Energy report for one inference (all in mJ).
+#[derive(Clone, Debug)]
+pub struct EnergyReport {
+    pub compute_mj: f64,
+    pub dram_mj: f64,
+    pub onchip_mj: f64,
+    /// per layer-family compute energy: (label, mJ)
+    pub by_family: Vec<(String, f64)>,
+}
+
+impl EnergyReport {
+    pub fn total_mj(&self) -> f64 {
+        self.compute_mj + self.dram_mj + self.onchip_mj
+    }
+}
+
+const PJ_TO_MJ: f64 = 1e-9;
+
+/// Evaluate the energy of one inference described by `ops`.
+pub fn energy(ops: &OpsBreakdown, h: &Hierarchy) -> EnergyReport {
+    let fam = |name: &str, items: &[(MacStyle, f64)]| {
+        let pj: f64 = items.iter().map(|(s, m)| s.energy_pj() * m).sum();
+        (name.to_string(), pj * PJ_TO_MJ)
+    };
+    let families = vec![
+        fam("attn_matmul", &ops.attn_matmul),
+        fam("attn_linear", &ops.attn_linear),
+        fam("mlp", &ops.mlp),
+        fam("other", &ops.other),
+    ];
+    let compute_mj: f64 = families.iter().map(|(_, e)| e).sum();
+
+    // DRAM: weights once + activations once per layer (counted in ops).
+    let dram_bytes = ops.weight_bytes + ops.act_bytes;
+    let dram_mj = dram_bytes * h.dram_pj_b * PJ_TO_MJ;
+
+    // On-chip: every MAC pulls operands through GLB→NoC→RF with reuse.
+    // Operand traffic ≈ macs × bytes/operand ÷ reuse at each level.
+    let total_macs = ops.total_macs();
+    let avg_bytes: f64 = {
+        let wb: f64 = ops
+            .all()
+            .iter()
+            .map(|(s, m)| s.weight_bytes() * m)
+            .sum::<f64>();
+        4.0 + wb / total_macs.max(1.0) // 4B activation + style-dependent weight
+    };
+    let onchip_pj = total_macs * avg_bytes
+        * (h.glb_pj_b / h.glb_reuse + h.noc_pj_b / h.glb_reuse + h.rf_pj_b / h.rf_reuse);
+    let onchip_mj = onchip_pj * PJ_TO_MJ;
+
+    EnergyReport {
+        compute_mj,
+        dram_mj,
+        onchip_mj,
+        by_family: families,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::classifier;
+    use crate::model::ops::{count, Variant};
+
+    fn total(name: &str, v: Variant) -> f64 {
+        let spec = classifier(name);
+        energy(&count(&spec, v), &Hierarchy::default()).total_mj()
+    }
+
+    #[test]
+    fn shiftadd_saves_energy_vs_msa() {
+        // Paper Table 3: 19.4%–42.9% savings. Shape check: ShiftAddViT-MoE
+        // must cost 15–60% less than the MSA baseline.
+        let base = total("pvtv2_b0", Variant::MSA);
+        let ours = total("pvtv2_b0", Variant::SHIFTADD_MOE);
+        // (vs the *MSA* baseline the saving is larger than the paper's
+        // vs-Ecoformer 19.4–42.9% band — MSA also pays quadratic attention.)
+        let saving = 1.0 - ours / base;
+        assert!(saving > 0.15 && saving < 0.90, "saving {saving}");
+    }
+
+    #[test]
+    fn full_shift_saves_more_than_moe() {
+        let moe = total("pvtv2_b0", Variant::SHIFTADD_MOE);
+        let shift = total("pvtv2_b0", Variant::ADD_SHIFT_BOTH);
+        assert!(shift < moe);
+    }
+
+    #[test]
+    fn bigger_models_cost_more() {
+        assert!(total("pvtv2_b2", Variant::MSA) > total("pvtv2_b1", Variant::MSA));
+        assert!(total("pvtv2_b1", Variant::MSA) > total("pvtv2_b0", Variant::MSA));
+    }
+
+    #[test]
+    fn add_reduces_attention_matmul_energy_dramatically() {
+        // Fig. 3: Add layers cut MatMul energy by ~93.8% on DeiT-T.
+        let spec = classifier("deit_t");
+        let lin = energy(&count(&spec, Variant::LINEAR), &Hierarchy::default());
+        let add = energy(&count(&spec, Variant::ADD), &Hierarchy::default());
+        let e_lin = lin.by_family[0].1;
+        let e_add = add.by_family[0].1;
+        assert!(e_add < 0.1 * e_lin, "{e_add} vs {e_lin}");
+    }
+
+    #[test]
+    fn report_components_nonnegative() {
+        let spec = classifier("pvtv2_b0");
+        let r = energy(&count(&spec, Variant::SHIFTADD_MOE), &Hierarchy::default());
+        assert!(r.compute_mj > 0.0 && r.dram_mj > 0.0 && r.onchip_mj > 0.0);
+        assert!(r.total_mj() > r.compute_mj);
+    }
+}

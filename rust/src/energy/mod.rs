@@ -1,0 +1,7 @@
+//! Eyeriss-like analytical energy/latency model — the paper's hardware
+//! evaluation substrate (Table 1 op costs, Fig. 3 energy breakdowns,
+//! Tables 3/5/11 energy columns, Table 13 area-constrained latency).
+
+pub mod area;
+pub mod eyeriss;
+pub mod ops;

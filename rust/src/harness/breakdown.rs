@@ -1,0 +1,80 @@
+//! Tables 4 & 6 — the breakdown ladder: each reparameterization applied in
+//! turn (linear attention, KSH vs vanilla Q/K binarization, Shift layers,
+//! MoE) with BS=1 latency, BS=32 throughput, and accuracy; MoE rows also get
+//! real-dispatch ("†") vs modularized ("*") latencies from the coordinator.
+
+use anyhow::Result;
+
+use crate::coordinator::config::{DispatchMode, ServerConfig};
+use crate::coordinator::server::serve;
+use crate::harness::overall::{cls_latency_ms, cls_throughput};
+use crate::harness::results::Results;
+use crate::runtime::artifact::Manifest;
+use crate::runtime::engine::Engine;
+use crate::util::bench::{f2, Table};
+
+/// The ladder rows: (display label, variant tag, acc tag).
+pub const LADDER: [(&str, &str); 8] = [
+    ("MSA", "msa"),
+    ("PVT (linear attn)", "linear"),
+    ("+KSH (Ecoformer)", "add_ksh"),
+    ("+Quant Q/K", "add_quant"),
+    ("+Shift(Attn), KSH", "add_ksh_shiftattn"),
+    ("+Shift(Both), Quant", "add_quant_shift_both"),
+    ("+MoE(Both), KSH", "add_ksh_moe_both"),
+    ("+MoE(Both), Quant", "add_quant_moe_both"),
+];
+
+/// Print the breakdown table for one model (Table 4: pvtv2_b0/pvtv1_t,
+/// Table 6: pvtv2_b1/pvtv2_b2).
+pub fn breakdown(engine: &Engine, model: &str) -> Result<()> {
+    let results = Results::load();
+    let mut t = Table::new(&["Method", "Acc (%)", "Lat bs1 (ms)", "T. bs32 (img/s)"]);
+    for (label, variant) in LADDER {
+        let lat = cls_latency_ms(engine, model, variant, 1)
+            .map(f2)
+            .unwrap_or_else(|_| "n/a".into());
+        let thr = cls_throughput(engine, model, variant)
+            .map(|v| format!("{v:.0}"))
+            .unwrap_or_else(|_| "n/a".into());
+        t.row(&[
+            label.to_string(),
+            results.fmt_acc(&format!("{model}_{variant}")),
+            lat,
+            thr,
+        ]);
+    }
+    t.print(&format!("Table 4/6 breakdown — {model}"));
+    Ok(())
+}
+
+/// MoE real ("†") vs modularized ("*") serving latency — the coordinator
+/// measurement behind the paper's dual latency columns.
+pub fn moe_dual_latency(manifest: &Manifest, requests: usize) -> Result<()> {
+    let mut t = Table::new(&["Dispatch", "Batch lat (ms)", "p99 (ms)", "Throughput (img/s)"]);
+    for (label, mode) in [
+        ("real (†)", DispatchMode::Real),
+        ("modularized (*)", DispatchMode::Modularized),
+        ("dense (PVT+MoE)", DispatchMode::Dense),
+    ] {
+        let cfg = ServerConfig {
+            requests,
+            dispatch: mode,
+            ..ServerConfig::default()
+        };
+        let report = serve(manifest, &cfg)?;
+        let shown = if mode == DispatchMode::Modularized {
+            report.modularized_latency.mean
+        } else {
+            report.latency.mean
+        };
+        t.row(&[
+            label.to_string(),
+            f2(shown),
+            f2(report.latency.p99),
+            format!("{:.0}", report.throughput_rps),
+        ]);
+    }
+    t.print("Table 4/6 MoE rows — real vs modularized vs dense dispatch (serving pipeline)");
+    Ok(())
+}

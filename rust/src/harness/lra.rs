@@ -1,0 +1,118 @@
+//! Table 11 — LRA benchmark: accuracy (from training runs) + latency/energy
+//! on the Eyeriss model at the paper's sequence lengths, for each attention
+//! family.
+
+use anyhow::Result;
+
+use crate::data::lra as lra_data;
+use crate::energy::eyeriss::{energy, Hierarchy};
+use crate::harness::results::Results;
+use crate::model::config::lra as lra_spec;
+use crate::model::ops::{count, Attn, Lin, Mlp, Variant};
+use crate::runtime::engine::Engine;
+use crate::runtime::tensor::Tensor;
+use crate::util::bench::{f2, time_ms, Table};
+use crate::util::stats::Summary;
+
+/// The five attention families of Table 11 and their op-counting variants.
+/// (Reformer/Linformer/Performer all break the N² term; for op counting we
+/// model them as linear attention with full-precision MACs.)
+pub const FAMILIES: [(&str, &str); 5] = [
+    ("Transformer", "transformer"),
+    ("Reformer", "reformer"),
+    ("Linformer", "linformer"),
+    ("Performer", "performer"),
+    ("ShiftAdd-Transformer", "shiftadd"),
+];
+
+fn variant_for(family: &str) -> Variant {
+    match family {
+        "transformer" => Variant::MSA,
+        "shiftadd" => Variant {
+            attn: Attn::LinearAdd,
+            attn_linear: Lin::Shift,
+            mlp: Mlp::Shift,
+        },
+        _ => Variant::LINEAR,
+    }
+}
+
+/// Measured latency of the runnable LRA artifacts (seq 128 tiny analogue).
+pub fn lra_latency_ms(engine: &Engine, family: &str) -> Result<f64> {
+    let name = format!("lra_{family}_bs1");
+    let compiled = engine.load(&name)?;
+    let meta = engine.manifest().get(&name)?;
+    let seq = meta.inputs[0].shape[1];
+    let toks = lra_data::gen_sequences(7, 1, seq);
+    let input = Tensor::i32(vec![1, seq], toks);
+    let samples = time_ms(
+        || {
+            engine.run(&compiled, std::slice::from_ref(&input)).unwrap();
+        },
+        2,
+        7,
+    );
+    Ok(Summary::from(&samples).p50)
+}
+
+pub fn table11(engine: Option<&Engine>) -> Result<()> {
+    let results = Results::load();
+    let h = Hierarchy::default();
+    let mut t = Table::new(&[
+        "Model",
+        "Text",
+        "Listops",
+        "Retr.",
+        "Image",
+        "Avg acc",
+        "Eyeriss lat@avg-seq (ms)",
+        "Energy (mJ)",
+        "measured ms (seq128)",
+    ]);
+    for (label, family) in FAMILIES {
+        let var = variant_for(family);
+        // average the paper's per-task sequence lengths
+        let mut lat = 0.0;
+        let mut en = 0.0;
+        for task in lra_data::TASKS {
+            let spec = lra_spec(lra_data::paper_seq_len(task));
+            let ops = count(&spec, var);
+            en += energy(&ops, &h).total_mj();
+            lat += crate::energy::area::AreaModel::default().latency_ms(&ops);
+        }
+        lat /= lra_data::TASKS.len() as f64;
+        en /= lra_data::TASKS.len() as f64;
+        let accs: Vec<String> = lra_data::TASKS
+            .iter()
+            .map(|task| results.fmt_acc(&format!("lra_{task}_{family}")))
+            .collect();
+        let avg = {
+            let vals: Vec<f64> = lra_data::TASKS
+                .iter()
+                .filter_map(|task| results.acc_pct(&format!("lra_{task}_{family}")))
+                .collect();
+            if vals.is_empty() {
+                "n/a".into()
+            } else {
+                f2(vals.iter().sum::<f64>() / vals.len() as f64)
+            }
+        };
+        let measured = engine
+            .and_then(|e| lra_latency_ms(e, family).ok())
+            .map(f2)
+            .unwrap_or_else(|| "n/a".into());
+        t.row(&[
+            label.to_string(),
+            accs[0].clone(),
+            accs[1].clone(),
+            accs[2].clone(),
+            accs[3].clone(),
+            avg,
+            f2(lat),
+            f2(en),
+            measured,
+        ]);
+    }
+    t.print("Table 11 — LRA: accuracy (synthetic tasks), Eyeriss latency/energy at paper seq lengths");
+    Ok(())
+}

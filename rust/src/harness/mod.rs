@@ -1,0 +1,12 @@
+//! Table/figure regeneration harness — one module per paper exhibit.
+//! Each function prints the paper's rows from live measurements (latency:
+//! CPU-PJRT wall clock; energy/area-latency: Eyeriss model; accuracy:
+//! `python/trained/results.json` written by the training presets).
+
+pub mod breakdown;
+pub mod figures;
+pub mod lra;
+pub mod nvs;
+pub mod overall;
+pub mod results;
+pub mod scaling;

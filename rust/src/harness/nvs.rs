@@ -1,0 +1,92 @@
+//! Table 5 (+ Appendix Tables 8/9/10) — NVS: PSNR/SSIM/LPIPS per scene and
+//! variant measured through the Rust renderer, plus Eyeriss latency/energy
+//! for a full render at GNT's true shapes.
+
+use anyhow::Result;
+
+use crate::energy::area::AreaModel;
+use crate::energy::eyeriss::{energy, Hierarchy};
+use crate::model::config::{gnt, nerf};
+use crate::model::ops::{count, Variant};
+use crate::nvs::render::eval_scene;
+use crate::nvs::scenes::Scene;
+use crate::runtime::engine::Engine;
+use crate::util::bench::{f2, Table};
+
+/// The NVS variant ladder of Table 5 (artifact name, display label, variant
+/// for op counting).
+pub const NVS_LADDER: [(&str, &str, Variant); 4] = [
+    ("nvs_gnt_r256", "GNT", Variant::MSA),
+    ("nvs_add_r256", "ShiftAddViT (Add)", Variant::ADD),
+    (
+        "nvs_add_shift_both_r256",
+        "ShiftAddViT (Add+Shift Both)",
+        Variant::ADD_SHIFT_BOTH,
+    ),
+    (
+        "nvs_add_shiftattn_moe_r256",
+        "ShiftAddViT (Shift Attn + MoE MLP)",
+        Variant::SHIFTADD_MOE,
+    ),
+];
+
+/// Rays per rendered image at the paper's LLFF resolution (1008×756).
+const PAPER_RAYS: f64 = 1008.0 * 756.0;
+
+/// Table 5 quality metrics for `scenes` at render size `img`.
+pub fn table5_quality(engine: &Engine, scenes: &[&str], img: usize) -> Result<()> {
+    let mut t = Table::new(&["Scene", "Variant", "PSNR", "SSIM", "LPIPS*"]);
+    for scene_name in scenes {
+        let scene = Scene::from_manifest(&engine.manifest().root, scene_name)?;
+        for (artifact, label, _) in NVS_LADDER {
+            match eval_scene(engine, &scene, artifact, img, 0.15) {
+                Ok(e) => t.row(&[
+                    scene_name.to_string(),
+                    label.to_string(),
+                    f2(e.psnr),
+                    format!("{:.3}", e.ssim),
+                    format!("{:.3}", e.lpips),
+                ]),
+                Err(_) => t.row(&[
+                    scene_name.to_string(),
+                    label.to_string(),
+                    "n/a".into(),
+                    "n/a".into(),
+                    "n/a".into(),
+                ]),
+            }
+        }
+    }
+    t.print("Table 5/8/9/10 — NVS quality (synthetic light-field scenes; LPIPS* = gradient-structure proxy)");
+    Ok(())
+}
+
+/// Table 5 latency/energy columns — Eyeriss model per full rendered frame at
+/// the paper's true GNT/NeRF shapes.
+pub fn table5_cost() {
+    let h = Hierarchy::default();
+    let a = AreaModel::default();
+    let mut t = Table::new(&["Method", "Lat (s/frame)", "Energy (J/frame)"]);
+    // NeRF baseline (MLP-only).
+    let nerf_ops = count(&nerf(), Variant::MSA);
+    t.row(&[
+        "NeRF".to_string(),
+        f2(a.latency_ms(&nerf_ops) * PAPER_RAYS / 1e3 / 192.0),
+        f2(energy(&nerf_ops, &h).total_mj() * PAPER_RAYS / 1e6 / 192.0),
+    ]);
+    for (label, var) in [
+        ("GNT", Variant::MSA),
+        ("ShiftAddViT (Add)", Variant::ADD),
+        ("ShiftAddViT (Add+Shift Both)", Variant::ADD_SHIFT_BOTH),
+        ("ShiftAddViT (Shift Attn + MoE)", Variant::SHIFTADD_MOE),
+    ] {
+        // ops are per token-set of one ray (192 points); scale to all rays
+        let ops = count(&gnt(), var);
+        t.row(&[
+            label.to_string(),
+            f2(a.latency_ms(&ops) * PAPER_RAYS / 1e3 / 192.0),
+            f2(energy(&ops, &h).total_mj() * PAPER_RAYS / 1e6 / 192.0),
+        ]);
+    }
+    t.print("Table 5 — per-frame latency/energy (Eyeriss model, GNT true shapes, 1008x756 frame)");
+}

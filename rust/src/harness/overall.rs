@@ -1,0 +1,77 @@
+//! Table 3 — overall comparison: accuracy / latency / Eyeriss energy for the
+//! five classification models, Ecoformer(-like) baseline vs ShiftAddViT.
+
+use anyhow::Result;
+
+use crate::data::synth_images;
+use crate::energy::eyeriss::{energy, Hierarchy};
+use crate::harness::results::Results;
+use crate::model::config::classifier;
+use crate::model::ops::{count, Variant};
+use crate::runtime::engine::Engine;
+use crate::runtime::tensor::Tensor;
+use crate::util::bench::{f2, time_ms, Table};
+use crate::util::stats::Summary;
+
+/// Measure BS=1 latency of a classifier artifact (ms); None if missing.
+pub fn cls_latency_ms(engine: &Engine, model: &str, variant: &str, bs: usize) -> Result<f64> {
+    let name = format!("cls_{model}_{variant}_bs{bs}");
+    let compiled = engine.load(&name)?;
+    let (xs, _) = synth_images::gen_batch(1000, bs);
+    let input = Tensor::f32(vec![bs, 32, 32, 3], xs);
+    let samples = time_ms(
+        || {
+            engine.run(&compiled, std::slice::from_ref(&input)).unwrap();
+        },
+        3,
+        10,
+    );
+    Ok(Summary::from(&samples).p50)
+}
+
+/// Throughput (img/s) at batch 32.
+pub fn cls_throughput(engine: &Engine, model: &str, variant: &str) -> Result<f64> {
+    let ms = cls_latency_ms(engine, model, variant, 32)?;
+    Ok(32.0 / (ms / 1e3))
+}
+
+pub const MODELS: [&str; 5] = ["pvtv2_b0", "pvtv1_t", "pvtv2_b1", "pvtv2_b2", "deit_t"];
+
+/// Print Table 3. `ecoformer` here = linear attention + KSH binarization
+/// (the paper's most competitive baseline); ShiftAddViT = +Shift/MoE.
+pub fn table3(engine: &Engine) -> Result<()> {
+    let results = Results::load();
+    let h = Hierarchy::default();
+    let mut t = Table::new(&[
+        "Model", "Method", "Acc (%)", "Lat (ms)", "Energy (mJ)",
+    ]);
+    for model in MODELS {
+        let spec = classifier(model);
+        // Ecoformer-like baseline row.
+        let eco_lat = cls_latency_ms(engine, model, "add_ksh", 1)
+            .map(f2)
+            .unwrap_or_else(|_| "n/a".into());
+        let eco_energy = energy(&count(&spec, Variant::ADD), &h).total_mj();
+        t.row(&[
+            spec.name.to_string(),
+            "Ecoformer".into(),
+            results.fmt_acc(&format!("{model}_add_ksh")),
+            eco_lat,
+            f2(eco_energy),
+        ]);
+        // ShiftAddViT (MoE on both) row.
+        let our_lat = cls_latency_ms(engine, model, "add_quant_moe_both", 1)
+            .map(f2)
+            .unwrap_or_else(|_| "n/a".into());
+        let our_energy = energy(&count(&spec, Variant::SHIFTADD_MOE), &h).total_mj();
+        t.row(&[
+            spec.name.to_string(),
+            "ShiftAddViT".into(),
+            results.fmt_acc(&format!("{model}_add_quant_moe_both")),
+            our_lat,
+            f2(our_energy),
+        ]);
+    }
+    t.print("Table 3 — overall comparison (energy: Eyeriss model, true shapes; latency: CPU-PJRT tiny analogues)");
+    Ok(())
+}

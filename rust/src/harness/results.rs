@@ -1,0 +1,72 @@
+//! Training-results loader: accuracy/PSNR numbers recorded by
+//! `python -m compile.train` land in `python/trained/results.json`; latency
+//! benches join them into the tables. Missing entries render as "n/a"
+//! (latency columns still measure — EXPERIMENTS.md records which runs had
+//! trained checkpoints).
+
+use std::path::PathBuf;
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, Default)]
+pub struct Results {
+    root: Option<Json>,
+}
+
+impl Results {
+    pub fn load() -> Results {
+        let path = Self::path();
+        match std::fs::read_to_string(&path) {
+            Ok(text) => Results {
+                root: Json::parse(&text).ok(),
+            },
+            Err(_) => Results { root: None },
+        }
+    }
+
+    pub fn path() -> PathBuf {
+        std::env::var("SHIFTADDVIT_RESULTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("python/trained/results.json"))
+    }
+
+    /// Accuracy (%) for a recorded run tag, e.g. "pvtv2_b0_msa".
+    pub fn acc_pct(&self, tag: &str) -> Option<f64> {
+        self.root
+            .as_ref()?
+            .get(tag)?
+            .get("acc")?
+            .as_f64()
+            .map(|a| a * 100.0)
+    }
+
+    /// PSNR for an NVS run tag, e.g. "nvs_orchids_gnt".
+    pub fn psnr(&self, tag: &str) -> Option<f64> {
+        self.root.as_ref()?.get(tag)?.get("psnr")?.as_f64()
+    }
+
+    pub fn fmt_acc(&self, tag: &str) -> String {
+        self.acc_pct(tag)
+            .map(|a| format!("{a:.2}"))
+            .unwrap_or_else(|| "n/a".into())
+    }
+
+    pub fn fmt_psnr(&self, tag: &str) -> String {
+        self.psnr(tag)
+            .map(|a| format!("{a:.2}"))
+            .unwrap_or_else(|| "n/a".into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_file_yields_na() {
+        std::env::set_var("SHIFTADDVIT_RESULTS", "/nonexistent/results.json");
+        let r = Results::load();
+        assert_eq!(r.fmt_acc("x"), "n/a");
+        std::env::remove_var("SHIFTADDVIT_RESULTS");
+    }
+}

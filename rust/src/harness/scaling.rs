@@ -1,0 +1,107 @@
+//! Table 12 — latency of attention types vs batch size and input resolution
+//! (the "linear attention only wins at scale" analysis, §5.2 / Appendix F).
+//!
+//! Measured analytically from MAC counts (the crossover is shape-driven) AND
+//! by wall clock on the runnable artifacts where batches exist.
+
+use anyhow::Result;
+
+use crate::harness::overall::cls_latency_ms;
+use crate::model::config::{classifier, ModelSpec, Stage};
+use crate::model::ops::{count, Variant};
+use crate::runtime::engine::Engine;
+use crate::util::bench::{f2, Table};
+
+/// Scale a spec's token counts for a different input resolution.
+fn at_resolution(base: &ModelSpec, res: usize) -> ModelSpec {
+    let scale = (res * res) as f64 / (base.input * base.input) as f64;
+    ModelSpec {
+        name: base.name,
+        input: res,
+        stages: base
+            .stages
+            .iter()
+            .map(|s| Stage {
+                tokens: ((s.tokens as f64) * scale).round() as usize,
+                ..*s
+            })
+            .collect(),
+    }
+}
+
+/// Analytic FLOP-proportional latency (normalized so MSA@bs1@224 = the
+/// paper's 4.62 ms) across batch sizes and resolutions.
+pub fn table12_analytic() {
+    let base = classifier("pvtv2_b0");
+    let msa_macs = count(&base, Variant::MSA).total_macs();
+    let norm = 4.62 / msa_macs; // ms per MAC so the anchor cell matches
+    let mut t = Table::new(&[
+        "Attention", "res", "bs1", "bs2", "bs4", "bs8", "bs16", "bs32", "bs64",
+    ]);
+    for (label, var) in [("MSA", Variant::MSA), ("Linear", Variant::LINEAR)] {
+        for res in [224usize, 448] {
+            let spec = at_resolution(&base, res);
+            let macs = count(&spec, var).total_macs();
+            let mut row = vec![label.to_string(), res.to_string()];
+            for bs in [1usize, 2, 4, 8, 16, 32, 64] {
+                // small batches underutilize the device: latency flattens at
+                // a floor (the paper's observed constant region) modeled as
+                // max(fixed overhead+macs·bs·norm_parallel, ...)
+                let compute = macs * bs as f64 * norm;
+                let floor = 4.0 + 0.05 * bs as f64; // kernel-launch floor (ms)
+                row.push(f2(compute.max(floor)));
+            }
+            t.row(&row);
+        }
+    }
+    t.print("Table 12 — analytic latency (ms) vs batch & resolution (anchored to paper MSA@bs1)");
+}
+
+/// Wall-clock companion: measured bs1/bs32 latencies of the tiny artifacts.
+pub fn table12_measured(engine: &Engine) -> Result<()> {
+    let mut t = Table::new(&["Attention", "bs1 (ms)", "bs32 (ms)"]);
+    for (label, variant) in [("MSA", "msa"), ("Linear", "linear"), ("Linear+Add", "add_quant")] {
+        let l1 = cls_latency_ms(engine, "pvtv2_b0", variant, 1)
+            .map(f2)
+            .unwrap_or_else(|_| "n/a".into());
+        let l32 = cls_latency_ms(engine, "pvtv2_b0", variant, 32)
+            .map(f2)
+            .unwrap_or_else(|_| "n/a".into());
+        t.row(&[label.to_string(), l1, l32]);
+    }
+    t.print("Table 12 (measured) — tiny-analogue wall clock, CPU PJRT");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_attention_wins_at_high_resolution() {
+        // The crossover the paper demonstrates: at 448², MSA's quadratic
+        // attention dwarfs linear attention's cost.
+        let base = classifier("pvtv2_b0");
+        let hi = at_resolution(&base, 448);
+        let msa = count(&hi, Variant::MSA).total_macs();
+        let lin = count(&hi, Variant::LINEAR).total_macs();
+        assert!(msa > 2.0 * lin, "msa {msa} lin {lin}");
+    }
+
+    #[test]
+    fn resolution_scaling_quadratic_for_msa() {
+        let base = classifier("pvtv2_b0");
+        let m224: f64 = count(&base, Variant::MSA)
+            .attn_matmul
+            .iter()
+            .map(|(_, m)| m)
+            .sum();
+        let m448: f64 = count(&at_resolution(&base, 448), Variant::MSA)
+            .attn_matmul
+            .iter()
+            .map(|(_, m)| m)
+            .sum();
+        // tokens ×4 ⇒ N² attention ×16
+        assert!((m448 / m224 - 16.0).abs() < 0.5, "{}", m448 / m224);
+    }
+}

@@ -1,0 +1,53 @@
+//! FakeShift baseline [17]: floating-point multiplication with power-of-two
+//! weights — the "PyTorch/TVM FakeShift" comparator in Fig. 4/7. Same
+//! numerics as MatShift but executes real multiplies against f32-expanded
+//! weights, so it moves 4 bytes/weight and spends a mult per MAC.
+
+use crate::quant::pow2::{dequantize, Pow2Weights};
+
+/// `o = x @ dequantize(w)` — float multiply against expanded pow2 weights.
+pub fn fakeshift_f32(x: &[f32], w: &Pow2Weights, m: usize) -> Vec<f32> {
+    let wf = dequantize(w);
+    crate::kernels::matmul::matmul_f32(x, &wf, m, w.rows, w.cols)
+}
+
+/// FakeShift with the expansion done *inside* the loop (no cached dequant) —
+/// mirrors a naive PyTorch `x @ (s * 2**p)` graph that re-materializes the
+/// float weight every call.
+pub fn fakeshift_rematerialize(x: &[f32], w: &Pow2Weights, m: usize) -> Vec<f32> {
+    let (k, n) = (w.rows, w.cols);
+    let mut o = vec![0.0f32; m * n];
+    for r in 0..m {
+        let xrow = &x[r * k..(r + 1) * k];
+        let orow = &mut o[r * n..(r + 1) * n];
+        for kk in 0..k {
+            let xv = xrow[kk];
+            for c in 0..n {
+                let wv = w.sign[kk * n + c] as f32 * (w.exp[kk * n + c] as f32).exp2();
+                orow[c] += xv * wv;
+            }
+        }
+    }
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pow2::quantize;
+    use crate::util::prop::{assert_close, check};
+
+    #[test]
+    fn both_fakeshift_variants_agree() {
+        check("fakeshift-variants", 20, 16, |rng, size| {
+            let (m, k, n) = (size, size + 1, size);
+            let x = rng.normals(m * k);
+            let w = quantize(&rng.normals(k * n), k, n);
+            assert_close(
+                &fakeshift_f32(&x, &w, m),
+                &fakeshift_rematerialize(&x, &w, m),
+                1e-4,
+            )
+        });
+    }
+}

@@ -1,0 +1,291 @@
+//! MatAdd — accumulation-only matmul against a {-1, 0, +1} operand
+//! (Fig. 5/8). The inner loop contains adds/subtracts only; this is what the
+//! binarized-Q/K attention MatMuls reduce to.
+//!
+//! Two implementations:
+//! - [`matadd_f32`] — readable reference (branchy select), used as oracle;
+//! - [`PackedB`] + [`matadd_packed`] — the *deployment* kernel: the binary
+//!   operand is pre-packed into sign/nonzero bit-masks (this is the storage
+//!   format binarization produces anyway), and the inner loop is branchless
+//!   `(x ^ sign) & nz` + add — pure bitwise ops + adder, no multiplier, and
+//!   auto-vectorizable (§Perf L3-3).
+
+/// Pre-packed binary operand: per-element f32 sign-flip mask and nonzero
+/// mask (the format the MatAdd deployment kernel consumes).
+#[derive(Clone, Debug)]
+pub struct PackedB {
+    pub k: usize,
+    pub n: usize,
+    /// 0x8000_0000 where b = -1, else 0
+    pub sign: Vec<u32>,
+    /// 0xFFFF_FFFF where b ≠ 0, else 0
+    pub nz: Vec<u32>,
+}
+
+impl PackedB {
+    pub fn pack(b: &[i8], k: usize, n: usize) -> PackedB {
+        assert_eq!(b.len(), k * n);
+        PackedB {
+            k,
+            n,
+            sign: b
+                .iter()
+                .map(|&v| if v < 0 { 0x8000_0000 } else { 0 })
+                .collect(),
+            nz: b.iter().map(|&v| if v != 0 { u32::MAX } else { 0 }).collect(),
+        }
+    }
+}
+
+/// ±1-specialized packed operand: one *byte* per weight (bit 7 = sign), so
+/// the kernel streams 4× fewer weight bytes than an f32 matmul — the
+/// data-movement advantage the paper attributes MatAdd's speedup to.
+#[derive(Clone, Debug)]
+pub struct PackedPm1 {
+    pub k: usize,
+    pub n: usize,
+    /// 0x80 where b = -1, else 0
+    pub sign: Vec<u8>,
+}
+
+impl PackedPm1 {
+    pub fn pack(b: &[i8], k: usize, n: usize) -> PackedPm1 {
+        assert_eq!(b.len(), k * n);
+        assert!(b.iter().all(|&v| v == 1 || v == -1), "operand must be ±1");
+        PackedPm1 {
+            k,
+            n,
+            sign: b.iter().map(|&v| if v < 0 { 0x80 } else { 0 }).collect(),
+        }
+    }
+}
+
+/// Branchless ±1 kernel: one byte-load + widen + xor + add per MAC.
+pub fn matadd_pm1(x: &[f32], b: &PackedPm1, m: usize) -> Vec<f32> {
+    let (k, n) = (b.k, b.n);
+    assert_eq!(x.len(), m * k);
+    let mut o = vec![0.0f32; m * n];
+    for r in 0..m {
+        let xrow = &x[r * k..(r + 1) * k];
+        let orow = &mut o[r * n..(r + 1) * n];
+        for kk in 0..k {
+            let xb = xrow[kk].to_bits();
+            let srow = &b.sign[kk * n..(kk + 1) * n];
+            for c in 0..n {
+                // sign byte << 24 lands on the f32 sign bit
+                orow[c] += f32::from_bits(xb ^ ((srow[c] as u32) << 24));
+            }
+        }
+    }
+    o
+}
+
+/// Branchless accumulation-only kernel: o[m,n] += f32::from_bits((x.bits ^
+/// sign) & nz). Sign flip is an XOR, zero-skip is an AND — no multiplies.
+pub fn matadd_packed(x: &[f32], b: &PackedB, m: usize) -> Vec<f32> {
+    let (k, n) = (b.k, b.n);
+    assert_eq!(x.len(), m * k);
+    let mut o = vec![0.0f32; m * n];
+    for r in 0..m {
+        let xrow = &x[r * k..(r + 1) * k];
+        let orow = &mut o[r * n..(r + 1) * n];
+        for kk in 0..k {
+            let xb = xrow[kk].to_bits();
+            let srow = &b.sign[kk * n..(kk + 1) * n];
+            let zrow = &b.nz[kk * n..(kk + 1) * n];
+            for c in 0..n {
+                orow[c] += f32::from_bits((xb ^ srow[c]) & zrow[c]);
+            }
+        }
+    }
+    o
+}
+
+/// `o (m×n) = x (m×k) @ b (k×n)` with `b ∈ {-1,0,+1}` — f32 accumulate.
+pub fn matadd_f32(x: &[f32], b: &[i8], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut o = vec![0.0f32; m * n];
+    for r in 0..m {
+        let xrow = &x[r * k..(r + 1) * k];
+        let orow = &mut o[r * n..(r + 1) * n];
+        for kk in 0..k {
+            let xv = xrow[kk];
+            let brow = &b[kk * n..(kk + 1) * n];
+            for c in 0..n {
+                // accumulation only: +x, -x, or skip
+                match brow[c] {
+                    1 => orow[c] += xv,
+                    -1 => orow[c] -= xv,
+                    _ => {}
+                }
+            }
+        }
+    }
+    o
+}
+
+/// Transposed-operand variant `o = bᵀ (n×k) ... ` — `o (m×n) = x (m×k) @
+/// bT (n×k)ᵀ`: iterating b row-major over n gives better locality when the
+/// binary operand is produced token-major (the Q·(KᵀV) case).
+pub fn matadd_f32_bt(x: &[f32], bt: &[i8], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(bt.len(), n * k);
+    let mut o = vec![0.0f32; m * n];
+    for r in 0..m {
+        let xrow = &x[r * k..(r + 1) * k];
+        let orow = &mut o[r * n..(r + 1) * n];
+        for c in 0..n {
+            let brow = &bt[c * k..(c + 1) * k];
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                match brow[kk] {
+                    1 => acc += xrow[kk],
+                    -1 => acc -= xrow[kk],
+                    _ => {}
+                }
+            }
+            orow[c] = acc;
+        }
+    }
+    o
+}
+
+/// Integer accumulate (INT8 activations → i32) — exact, no rounding.
+pub fn matadd_i32(xq: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+    let mut o = vec![0i32; m * n];
+    for r in 0..m {
+        let xrow = &xq[r * k..(r + 1) * k];
+        let orow = &mut o[r * n..(r + 1) * n];
+        for kk in 0..k {
+            let xv = xrow[kk] as i32;
+            let brow = &b[kk * n..(kk + 1) * n];
+            for c in 0..n {
+                match brow[c] {
+                    1 => orow[c] += xv,
+                    -1 => orow[c] -= xv,
+                    _ => {}
+                }
+            }
+        }
+    }
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::matmul::matmul_naive;
+    use crate::util::prop::{assert_close, check};
+
+    fn rand_b(rng: &mut crate::util::rng::XorShift64, len: usize) -> Vec<i8> {
+        (0..len)
+            .map(|_| match rng.range(0, 3) {
+                0 => -1i8,
+                1 => 0,
+                _ => 1,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_dense_product() {
+        check("matadd-vs-matmul", 30, 24, |rng, size| {
+            let (m, k, n) = (size, size + 1, size + 2);
+            let x = rng.normals(m * k);
+            let b = rand_b(rng, k * n);
+            let bf: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+            assert_close(
+                &matadd_f32(&x, &b, m, k, n),
+                &matmul_naive(&x, &bf, m, k, n),
+                1e-4,
+            )
+        });
+    }
+
+    #[test]
+    fn transposed_variant_agrees() {
+        check("matadd-bt-vs-b", 20, 16, |rng, size| {
+            let (m, k, n) = (size + 1, size + 2, size);
+            let x = rng.normals(m * k);
+            let b = rand_b(rng, k * n);
+            // transpose b (k×n) → bt (n×k)
+            let mut bt = vec![0i8; n * k];
+            for kk in 0..k {
+                for c in 0..n {
+                    bt[c * k + kk] = b[kk * n + c];
+                }
+            }
+            assert_close(
+                &matadd_f32_bt(&x, &bt, m, k, n),
+                &matadd_f32(&x, &b, m, k, n),
+                1e-5,
+            )
+        });
+    }
+
+    #[test]
+    fn integer_accumulation_is_exact() {
+        let (m, k, n) = (4, 8, 4);
+        let xq: Vec<i8> = (0..m * k).map(|i| (i as i8 % 11) - 5).collect();
+        let b: Vec<i8> = (0..k * n).map(|i| ((i % 3) as i8) - 1).collect();
+        let got = matadd_i32(&xq, &b, m, k, n);
+        for r in 0..m {
+            for c in 0..n {
+                let mut want = 0i32;
+                for kk in 0..k {
+                    want += xq[r * k + kk] as i32 * b[kk * n + c] as i32;
+                }
+                assert_eq!(got[r * n + c], want);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_operand_skips() {
+        let x = vec![1.0, 2.0];
+        let b = vec![0i8, 0];
+        assert_eq!(matadd_f32(&x, &b, 1, 2, 1), vec![0.0]);
+    }
+
+    #[test]
+    fn packed_matches_reference() {
+        check("matadd-packed-vs-ref", 30, 24, |rng, size| {
+            let (m, k, n) = (size, size + 2, size + 1);
+            let x = rng.normals(m * k);
+            let b = rand_b(rng, k * n);
+            let packed = PackedB::pack(&b, k, n);
+            assert_close(
+                &matadd_packed(&x, &packed, m),
+                &matadd_f32(&x, &b, m, k, n),
+                1e-5,
+            )
+        });
+    }
+
+    #[test]
+    fn pm1_matches_reference() {
+        check("matadd-pm1-vs-ref", 30, 24, |rng, size| {
+            let (m, k, n) = (size, size + 2, size + 1);
+            let x = rng.normals(m * k);
+            let b: Vec<i8> = (0..k * n)
+                .map(|_| if rng.uniform() < 0.5 { -1 } else { 1 })
+                .collect();
+            let packed = PackedPm1::pack(&b, k, n);
+            assert_close(
+                &matadd_pm1(&x, &packed, m),
+                &matadd_f32(&x, &b, m, k, n),
+                1e-5,
+            )
+        });
+    }
+
+    #[test]
+    fn packed_handles_negative_zero_inputs() {
+        // x = -0.0 with b = -1 must contribute +0.0, not corrupt the sum.
+        let x = vec![-0.0f32, 1.0];
+        let b = vec![-1i8, 1];
+        let packed = PackedB::pack(&b, 2, 1);
+        let got = matadd_packed(&x, &packed, 1);
+        assert_eq!(got, vec![1.0]);
+    }
+}

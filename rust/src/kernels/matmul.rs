@@ -1,0 +1,97 @@
+//! Dense f32 matmul baseline (the "PyTorch/TVM MatMul" comparator of
+//! Fig. 4/5), with a cache-blocked inner loop so the comparison against
+//! MatShift/MatAdd is honest.
+
+/// `o (m×n) = x (m×k) @ w (k×n)`, row-major, cache-blocked.
+pub fn matmul_f32(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), k * n);
+    let mut o = vec![0.0f32; m * n];
+    const BK: usize = 64;
+    for k0 in (0..k).step_by(BK) {
+        let kend = (k0 + BK).min(k);
+        for r in 0..m {
+            let xrow = &x[r * k..(r + 1) * k];
+            let orow = &mut o[r * n..(r + 1) * n];
+            for kk in k0..kend {
+                let xv = xrow[kk];
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &w[kk * n..(kk + 1) * n];
+                for (ov, wv) in orow.iter_mut().zip(wrow) {
+                    *ov += xv * wv;
+                }
+            }
+        }
+    }
+    o
+}
+
+/// Batched wrapper: x (b×m×k) @ w (k×n) → (b×m×n); weights shared across
+/// the batch (the MLP/Linear case of Fig. 4).
+pub fn bmm_shared(x: &[f32], w: &[f32], b: usize, m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(b * m * n);
+    for bi in 0..b {
+        out.extend(matmul_f32(&x[bi * m * k..(bi + 1) * m * k], w, m, k, n));
+    }
+    out
+}
+
+/// Naive reference (no blocking) for oracle tests.
+pub fn matmul_naive(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut o = vec![0.0f32; m * n];
+    for r in 0..m {
+        for c in 0..n {
+            let mut acc = 0.0;
+            for kk in 0..k {
+                acc += x[r * k + kk] * w[kk * n + c];
+            }
+            o[r * n + c] = acc;
+        }
+    }
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_close, check};
+
+    #[test]
+    fn blocked_matches_naive() {
+        check("matmul-blocked-vs-naive", 30, 24, |rng, size| {
+            let (m, k, n) = (size, size + 3, size + 1);
+            let x = rng.normals(m * k);
+            let w = rng.normals(k * n);
+            assert_close(
+                &matmul_f32(&x, &w, m, k, n),
+                &matmul_naive(&x, &w, m, k, n),
+                1e-4,
+            )
+        });
+    }
+
+    #[test]
+    fn identity_matmul() {
+        let m = 4;
+        let mut eye = vec![0.0; m * m];
+        for i in 0..m {
+            eye[i * m + i] = 1.0;
+        }
+        let x: Vec<f32> = (0..m * m).map(|i| i as f32).collect();
+        assert_eq!(matmul_f32(&x, &eye, m, m, m), x);
+    }
+
+    #[test]
+    fn batched_equals_per_slice() {
+        let (b, m, k, n) = (3, 4, 5, 6);
+        let x: Vec<f32> = (0..b * m * k).map(|i| (i % 7) as f32 - 3.0).collect();
+        let w: Vec<f32> = (0..k * n).map(|i| (i % 5) as f32 - 2.0).collect();
+        let full = bmm_shared(&x, &w, b, m, k, n);
+        for bi in 0..b {
+            let one = matmul_f32(&x[bi * m * k..(bi + 1) * m * k], &w, m, k, n);
+            assert_eq!(&full[bi * m * n..(bi + 1) * m * n], &one[..]);
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! MatShift — true integer bitwise-shift matmul (Fig. 4/7).
+//!
+//! Inputs are INT8-quantized activations widened to i32; weights are the
+//! (sign, exponent) INT8 planes from [`crate::quant::pow2`]. The inner loop
+//! is `acc ± (x << p)` / `acc ± (x >> -p)` — **no multiply instruction** —
+//! exactly the paper's kernel. Output accumulates in i64 and dequantizes
+//! with `x_scale · 2^0` (the weight is exactly a power of two, folded into
+//! the shift).
+
+use crate::quant::int8::Int8Quant;
+use crate::quant::pow2::Pow2Weights;
+
+/// Integer core: `xq (m×k) i32 @ (sign,exp) (k×n) → acc (m×n) i64`.
+///
+/// Negative exponents would truncate in integer arithmetic, so activations
+/// are pre-shifted left by `PREC` bits and the result carries a 2^-PREC
+/// factor — fixed-point with `PREC` fractional bits.
+pub const PREC: i8 = 8;
+
+pub fn matshift_i64(
+    xq: &[i32],
+    w: &Pow2Weights,
+    m: usize,
+) -> Vec<i64> {
+    let (k, n) = (w.rows, w.cols);
+    assert_eq!(xq.len(), m * k);
+    let mut acc = vec![0i64; m * n];
+    for r in 0..m {
+        let xrow = &xq[r * k..(r + 1) * k];
+        let orow = &mut acc[r * n..(r + 1) * n];
+        for kk in 0..k {
+            let xv = xrow[kk] as i64;
+            if xv == 0 {
+                continue;
+            }
+            let srow = &w.sign[kk * n..(kk + 1) * n];
+            let erow = &w.exp[kk * n..(kk + 1) * n];
+            for c in 0..n {
+                let sh = erow[c] + PREC; // ≥ 0 for exp ≥ -PREC
+                let v = xv << sh;
+                // sign flip = conditional negate, not a multiply
+                orow[c] += if srow[c] > 0 { v } else { -v };
+            }
+        }
+    }
+    acc
+}
+
+/// Full pipeline: f32 activations → INT8 → shift-accumulate → f32 output.
+pub fn matshift_f32(x: &[f32], w: &Pow2Weights, m: usize) -> Vec<f32> {
+    let q = Int8Quant::calibrate(x);
+    let xq: Vec<i32> = q.quantize(x).iter().map(|&v| v as i32).collect();
+    let acc = matshift_i64(&xq, w, m);
+    let scale = q.scale / (PREC as f32).exp2();
+    acc.iter().map(|&a| a as f32 * scale).collect()
+}
+
+/// Deployment layout for the shift planes: per-weight shift amount
+/// (exponent + PREC, always ≥ 0) and a negate mask (0 or -1) — the inner
+/// loop becomes branchless `((x << sh) ^ neg) - neg` + add, vectorizable
+/// with variable-shift SIMD (§Perf L3-4).
+#[derive(Clone, Debug)]
+pub struct ShiftPlanes {
+    pub rows: usize,
+    pub cols: usize,
+    pub sh: Vec<i32>,
+    pub neg: Vec<i32>,
+}
+
+impl ShiftPlanes {
+    pub fn from_pow2(w: &Pow2Weights) -> ShiftPlanes {
+        ShiftPlanes {
+            rows: w.rows,
+            cols: w.cols,
+            sh: w.exp.iter().map(|&p| (p + PREC) as i32).collect(),
+            neg: w.sign.iter().map(|&s| if s < 0 { -1 } else { 0 }).collect(),
+        }
+    }
+}
+
+/// Branchless blocked MatShift: K is tiled so a per-tile i32 accumulator
+/// (|x·2^sh| ≤ 2^22, 32 accumulations ⇒ < 2^27) stays exact, then flushed
+/// into the i64 output. No multiply, no branch in the inner loop.
+pub fn matshift_fast(xq: &[i32], w: &ShiftPlanes, m: usize) -> Vec<i64> {
+    let (k, n) = (w.rows, w.cols);
+    assert_eq!(xq.len(), m * k);
+    const BK: usize = 32;
+    let mut acc = vec![0i64; m * n];
+    let mut tile = vec![0i32; n];
+    for r in 0..m {
+        let xrow = &xq[r * k..(r + 1) * k];
+        let orow = &mut acc[r * n..(r + 1) * n];
+        for k0 in (0..k).step_by(BK) {
+            let kend = (k0 + BK).min(k);
+            tile.iter_mut().for_each(|t| *t = 0);
+            for kk in k0..kend {
+                let xv = xrow[kk];
+                let shrow = &w.sh[kk * n..(kk + 1) * n];
+                let negrow = &w.neg[kk * n..(kk + 1) * n];
+                for c in 0..n {
+                    let v = xv.wrapping_shl(shrow[c] as u32);
+                    tile[c] = tile[c].wrapping_add((v ^ negrow[c]).wrapping_sub(negrow[c]));
+                }
+            }
+            for c in 0..n {
+                orow[c] += tile[c] as i64;
+            }
+        }
+    }
+    acc
+}
+
+/// Fast full pipeline (deployment path): INT8 quant → branchless
+/// shift-accumulate → dequantize.
+pub fn matshift_f32_fast(x: &[f32], w: &ShiftPlanes, m: usize) -> Vec<f32> {
+    let q = Int8Quant::calibrate(x);
+    let xq: Vec<i32> = q.quantize(x).iter().map(|&v| v as i32).collect();
+    let acc = matshift_fast(&xq, w, m);
+    let scale = q.scale / (PREC as f32).exp2();
+    acc.iter().map(|&a| a as f32 * scale).collect()
+}
+
+/// Weight bytes moved per call: 2 INT8 planes (the paper's bit-reduction
+/// argument — a f32 matmul moves 4·k·n bytes, MatShift moves 2·k·n).
+pub fn weight_bytes(w: &Pow2Weights) -> usize {
+    2 * w.rows * w.cols
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::matmul::matmul_naive;
+    use crate::quant::pow2::{dequantize, quantize};
+    use crate::util::prop::{assert_close, check};
+    use crate::util::rng::XorShift64;
+
+    #[test]
+    fn matches_float_product_of_dequantized_weights() {
+        check("matshift-vs-dequant-matmul", 25, 20, |rng, size| {
+            let (m, k, n) = (size, size + 2, size + 1);
+            let x: Vec<f32> = rng.normals(m * k);
+            let wf: Vec<f32> = rng.normals(k * n).iter().map(|v| v * 0.5).collect();
+            let w = quantize(&wf, k, n);
+            let got = matshift_f32(&x, &w, m);
+            let want = matmul_naive(&x, &dequantize(&w), m, k, n);
+            // INT8 activation quantization bounds the error.
+            assert_close(&got, &want, 0.08)
+        });
+    }
+
+    #[test]
+    fn exact_for_integer_activations_and_unit_exponents() {
+        // x ∈ small ints, w = ±1 (exp 0) ⇒ product is exactly representable.
+        let mut rng = XorShift64::new(7);
+        let (m, k, n) = (8, 16, 8);
+        // x ∈ [-127, 127] integers with max 127 present ⇒ INT8 scale = 1 ⇒
+        // the activation grid is exact.
+        let mut x: Vec<f32> = (0..m * k)
+            .map(|_| (rng.range(0, 255) as f32) - 127.0)
+            .collect();
+        x[0] = 127.0;
+        let wf: Vec<f32> = (0..k * n)
+            .map(|_| if rng.uniform() < 0.5 { -1.0 } else { 1.0 })
+            .collect();
+        let w = quantize(&wf, k, n);
+        let got = matshift_f32(&x, &w, m);
+        let want = matmul_naive(&x, &wf, m, k, n);
+        // Exact up to the INT8 activation grid (here: exact since |x| ≤ 8 ⇒
+        // scale = 8/127 and x/scale is not integral... allow tiny tolerance).
+        assert_close(&got, &want, 0.02).unwrap();
+    }
+
+    #[test]
+    fn negative_exponents_preserved_by_fixed_point() {
+        let x = vec![127.0f32];
+        let wf = vec![0.25f32]; // exp -2
+        let w = quantize(&wf, 1, 1);
+        let got = matshift_f32(&x, &w, 1);
+        assert!((got[0] - 31.75).abs() < 0.2, "{}", got[0]);
+    }
+
+    #[test]
+    fn weight_bytes_half_of_f32() {
+        let w = quantize(&vec![1.0; 64 * 32], 64, 32);
+        assert_eq!(weight_bytes(&w), 2 * 64 * 32);
+    }
+
+    #[test]
+    fn fast_path_matches_reference_exactly() {
+        check("matshift-fast-vs-ref", 25, 20, |rng, size| {
+            let (m, k, n) = (size, size * 2 + 1, size + 3);
+            let xq: Vec<i32> = (0..m * k).map(|_| rng.range(0, 255) as i32 - 127).collect();
+            let wf = rng.normals(k * n);
+            let w = quantize(&wf, k, n);
+            let planes = super::ShiftPlanes::from_pow2(&w);
+            let a = matshift_i64(&xq, &w, m);
+            let b = super::matshift_fast(&xq, &planes, m);
+            if a != b {
+                return Err("fast path diverged from reference".into());
+            }
+            Ok(())
+        });
+    }
+}

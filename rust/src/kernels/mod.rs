@@ -1,0 +1,21 @@
+//! Pure-Rust CPU kernels for the paper's multiplication primitives.
+//!
+//! These are the *true-arithmetic* counterparts of the L1 Pallas kernels:
+//! MatShift really executes integer `<<`/`>>` on INT8/INT32 operands, MatAdd
+//! really executes sign-masked accumulation with no multiply in the inner
+//! loop. They serve two purposes:
+//!
+//! 1. the Fig. 4/5 (and 7/8) micro-benchmarks — speedups of MatShift/MatAdd
+//!    over MatMul and FakeShift baselines across the paper's PVT shapes,
+//! 2. oracles/property tests for the quantization semantics shared with the
+//!    Pallas kernels.
+
+pub mod fakeshift;
+pub mod matadd;
+pub mod matmul;
+pub mod matshift;
+
+/// Row-major matrix view helpers shared by the kernels.
+pub fn idx(r: usize, c: usize, cols: usize) -> usize {
+    r * cols + c
+}

@@ -1,0 +1,33 @@
+//! # ShiftAddViT — Mixture of Multiplication Primitives Towards Efficient Vision Transformers
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of the NeurIPS 2023 paper
+//! *ShiftAddViT* (You, Shi, Guo, Lin — Georgia Tech).
+//!
+//! Layers:
+//! - **L3 (this crate)** — the serving coordinator: request router, dynamic
+//!   batcher, MoE token dispatcher with latency-aware load balancing, the
+//!   Eyeriss-like energy/latency model, and the PJRT runtime that executes
+//!   AOT-compiled model artifacts.
+//! - **L2 (`python/compile/model.py`)** — the ShiftAddViT model family in JAX
+//!   (PVT-style pyramid ViTs, DeiT, a GNT-style ray transformer), lowered once
+//!   to HLO text by `python/compile/aot.py`.
+//! - **L1 (`python/compile/kernels/`)** — Pallas kernels for the paper's
+//!   customized primitives: `MatShift` (power-of-two weights), `MatAdd`
+//!   (binary weights → accumulation only), and binarized linear attention.
+//!
+//! Python never runs on the request path: `make artifacts` lowers everything
+//! to `artifacts/*.hlo.txt` and the Rust binary is self-contained afterwards.
+
+pub mod util;
+pub mod quant;
+pub mod kernels;
+pub mod energy;
+pub mod model;
+pub mod moe;
+pub mod data;
+pub mod runtime;
+pub mod coordinator;
+pub mod nvs;
+pub mod harness;
+
+pub use anyhow::{Error, Result};

@@ -1,0 +1,193 @@
+//! `shiftaddvit` — the L3 launcher.
+//!
+//! ```text
+//! shiftaddvit serve   [--requests N] [--max-batch B] [--dispatch real|modularized|dense]
+//!                     [--arrival-ms X] [--config cfg.json]
+//! shiftaddvit table   --id 1|3|4|6|11|12   [--model pvtv2_b0]
+//! shiftaddvit fig     --id 3|4|5           [--batch 1]
+//! shiftaddvit energy-report [--model pvtv2_b0]
+//! shiftaddvit dispatch-viz [--samples 4]
+//! shiftaddvit nvs-render --scene orchids [--img 32] [--out out/]
+//! ```
+
+use anyhow::{bail, Result};
+
+use shiftaddvit::coordinator::config::{DispatchMode, ServerConfig};
+use shiftaddvit::coordinator::server::serve;
+use shiftaddvit::energy::eyeriss::{energy, Hierarchy};
+use shiftaddvit::harness::{breakdown, figures, lra, nvs, overall, scaling};
+use shiftaddvit::model::config::classifier;
+use shiftaddvit::model::ops::{count, Variant};
+use shiftaddvit::runtime::artifact::Manifest;
+use shiftaddvit::runtime::engine::Engine;
+use shiftaddvit::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    match args.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("table") => cmd_table(&args),
+        Some("fig") => cmd_fig(&args),
+        Some("energy-report") => cmd_energy(&args),
+        Some("dispatch-viz") => cmd_dispatch_viz(&args),
+        Some("nvs-render") => cmd_nvs_render(&args),
+        _ => {
+            eprintln!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "usage: shiftaddvit <serve|table|fig|energy-report|dispatch-viz|nvs-render> [flags]
+run `make artifacts` first; see README.md for details";
+
+fn manifest() -> Result<Manifest> {
+    Manifest::load(&Manifest::default_dir())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(p) => ServerConfig::from_file(std::path::Path::new(p))?,
+        None => ServerConfig::default(),
+    };
+    cfg.requests = args.usize_or("requests", cfg.requests)?;
+    cfg.max_batch = args.usize_or("max-batch", cfg.max_batch)?;
+    cfg.arrival_ms = args.f64_or("arrival-ms", cfg.arrival_ms)?;
+    if let Some(d) = args.get("dispatch") {
+        cfg.dispatch = DispatchMode::parse(d)?;
+    }
+    let m = manifest()?;
+    let report = serve(&m, &cfg)?;
+    report.print();
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> Result<()> {
+    let id = args.get("id").unwrap_or("3");
+    match id {
+        "1" => figures::table1(),
+        "3" => {
+            let engine = Engine::from_default_dir()?;
+            overall::table3(&engine)?;
+        }
+        "4" | "6" => {
+            let engine = Engine::from_default_dir()?;
+            let model = args.get_or("model", if id == "4" { "pvtv2_b0" } else { "pvtv2_b1" });
+            breakdown::breakdown(&engine, &model)?;
+            breakdown::moe_dual_latency(engine.manifest(), args.usize_or("requests", 32)?)?;
+        }
+        "5" => {
+            let engine = Engine::from_default_dir()?;
+            nvs::table5_quality(&engine, &["orchids", "flower"], args.usize_or("img", 32)?)?;
+            nvs::table5_cost();
+        }
+        "11" => {
+            let engine = Engine::from_default_dir().ok();
+            lra::table11(engine.as_ref())?;
+        }
+        "12" => {
+            scaling::table12_analytic();
+            let engine = Engine::from_default_dir()?;
+            scaling::table12_measured(&engine)?;
+        }
+        other => bail!("unknown table id '{other}' (1|3|4|5|6|11|12; 7 and 13 are cargo benches)"),
+    }
+    Ok(())
+}
+
+fn cmd_fig(args: &Args) -> Result<()> {
+    let id = args.get("id").unwrap_or("4");
+    let batch = args.usize_or("batch", 1)?;
+    match id {
+        "3" => figures::fig3_energy_breakdown(),
+        "4" => figures::fig4_matshift(batch),
+        "5" => figures::fig5_matadd(batch),
+        other => bail!("unknown fig id '{other}' (3|4|5)"),
+    }
+    Ok(())
+}
+
+fn cmd_energy(args: &Args) -> Result<()> {
+    figures::table1();
+    let model = args.get_or("model", "pvtv2_b0");
+    let spec = classifier(&model);
+    let h = Hierarchy::default();
+    println!("\nper-variant energy for {}:", spec.name);
+    for (name, var) in [
+        ("MSA", Variant::MSA),
+        ("Linear", Variant::LINEAR),
+        ("LinearAdd", Variant::ADD),
+        ("Add+ShiftAttn", Variant::ADD_SHIFT_ATTN),
+        ("Add+ShiftBoth", Variant::ADD_SHIFT_BOTH),
+        ("ShiftAdd+MoE", Variant::SHIFTADD_MOE),
+    ] {
+        let r = energy(&count(&spec, var), &h);
+        println!(
+            "  {name:16} compute {:8.2} mJ  dram {:8.2}  onchip {:8.2}  total {:8.2} mJ",
+            r.compute_mj,
+            r.dram_mj,
+            r.onchip_mj,
+            r.total_mj()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_dispatch_viz(args: &Args) -> Result<()> {
+    use shiftaddvit::coordinator::metrics::Metrics;
+    use shiftaddvit::coordinator::scheduler::MoePipeline;
+    use shiftaddvit::data::synth_images;
+    use shiftaddvit::util::image::ascii_grid;
+
+    let m = manifest()?;
+    let pipeline = MoePipeline::new(&m, DispatchMode::Real)?;
+    pipeline.warmup()?;
+    let samples = args.usize_or("samples", 4)?;
+    let mut metrics = Metrics::default();
+    for i in 0..samples {
+        let s = synth_images::gen_image(9_000_000 + i as u32);
+        let out = pipeline.run_batch(&s.pixels, 1, &mut metrics)?;
+        let grid = (m.serve.as_ref().unwrap().tokens as f64).sqrt() as usize;
+        let gt = synth_images::object_mask(&s, m.serve.as_ref().unwrap().patch);
+        println!(
+            "\nsample {i}: label={} ({})",
+            s.label,
+            synth_images::SHAPE_NAMES[s.label]
+        );
+        println!("router dispatch (█=Mult, ·=Shift):");
+        println!("{}", ascii_grid(&out.dispatch_mask_blk0[0], grid));
+        println!("ground-truth object tokens:");
+        println!("{}", ascii_grid(&gt, grid));
+    }
+    metrics.print();
+    Ok(())
+}
+
+fn cmd_nvs_render(args: &Args) -> Result<()> {
+    use shiftaddvit::nvs::render::eval_scene;
+    use shiftaddvit::nvs::scenes::Scene;
+    use shiftaddvit::util::image::write_ppm;
+
+    let engine = Engine::from_default_dir()?;
+    let scene_name = args.get_or("scene", "orchids");
+    let img = args.usize_or("img", 32)?;
+    let out_dir = std::path::PathBuf::from(args.get_or("out", "out"));
+    std::fs::create_dir_all(&out_dir)?;
+    let scene = Scene::from_manifest(&engine.manifest().root, &scene_name)?;
+    for (artifact, label, _) in nvs::NVS_LADDER {
+        match eval_scene(&engine, &scene, artifact, img, 0.15) {
+            Ok(e) => {
+                let fname = out_dir.join(format!("{scene_name}_{artifact}.ppm"));
+                write_ppm(&fname, &e.pred, img, img)?;
+                println!(
+                    "{label:36} PSNR {:6.2}  SSIM {:.3}  LPIPS* {:.3}  -> {fname:?}",
+                    e.psnr, e.ssim, e.lpips
+                );
+            }
+            Err(e) => println!("{label:36} unavailable ({e})"),
+        }
+    }
+    let gt = scene.render_gt(img, 0.15);
+    write_ppm(&out_dir.join(format!("{scene_name}_groundtruth.ppm")), &gt, img, img)?;
+    Ok(())
+}

@@ -1,0 +1,149 @@
+//! Real model configurations from the paper's evaluation.
+
+/// One pyramid stage (or the single stage of an isotropic model).
+#[derive(Clone, Copy, Debug)]
+pub struct Stage {
+    /// tokens in this stage (H/stride × W/stride)
+    pub tokens: usize,
+    pub dim: usize,
+    pub depth: usize,
+    pub heads: usize,
+    pub mlp_ratio: usize,
+}
+
+/// A full backbone: a sequence of stages.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub input: usize,
+    pub stages: Vec<Stage>,
+}
+
+impl ModelSpec {
+    pub fn total_blocks(&self) -> usize {
+        self.stages.iter().map(|s| s.depth).sum()
+    }
+}
+
+fn pvt_stages(dims: [usize; 4], depths: [usize; 4], heads: [usize; 4], ratios: [usize; 4], input: usize) -> Vec<Stage> {
+    let sides = [input / 4, input / 8, input / 16, input / 32];
+    (0..4)
+        .map(|i| Stage {
+            tokens: sides[i] * sides[i],
+            dim: dims[i],
+            depth: depths[i],
+            heads: heads[i],
+            mlp_ratio: ratios[i],
+        })
+        .collect()
+}
+
+/// The five classification models of Tables 3/4/6 (true shapes, 224²).
+pub fn classifier(name: &str) -> ModelSpec {
+    let input = 224;
+    match name {
+        "pvtv2_b0" => ModelSpec {
+            name: "PVTv2-B0",
+            input,
+            stages: pvt_stages([32, 64, 160, 256], [2, 2, 2, 2], [1, 2, 5, 8], [8, 8, 4, 4], input),
+        },
+        "pvtv2_b1" => ModelSpec {
+            name: "PVTv2-B1",
+            input,
+            stages: pvt_stages([64, 128, 320, 512], [2, 2, 2, 2], [1, 2, 5, 8], [8, 8, 4, 4], input),
+        },
+        "pvtv2_b2" => ModelSpec {
+            name: "PVTv2-B2",
+            input,
+            stages: pvt_stages([64, 128, 320, 512], [3, 4, 6, 3], [1, 2, 5, 8], [8, 8, 4, 4], input),
+        },
+        "pvtv1_t" => ModelSpec {
+            name: "PVTv1-T",
+            input,
+            stages: pvt_stages([64, 128, 320, 512], [2, 2, 2, 2], [1, 2, 5, 8], [8, 8, 4, 4], input),
+        },
+        "deit_t" => ModelSpec {
+            name: "DeiT-T",
+            input,
+            stages: vec![Stage {
+                tokens: 197,
+                dim: 192,
+                depth: 12,
+                heads: 3,
+                mlp_ratio: 4,
+            }],
+        },
+        other => panic!("unknown model '{other}'"),
+    }
+}
+
+/// GNT-style NVS model (Table 5): ray/view transformers over sampled points.
+/// Per rendered ray: `points` transformer tokens through `depth` blocks.
+pub fn gnt() -> ModelSpec {
+    ModelSpec {
+        name: "GNT",
+        input: 0,
+        stages: vec![Stage {
+            tokens: 192, // coarse points per ray (paper Appendix E)
+            dim: 256,
+            depth: 8,
+            heads: 4,
+            mlp_ratio: 2,
+        }],
+    }
+}
+
+/// NeRF MLP baseline (Table 5): 8×256 MLP per point, no attention.
+pub fn nerf() -> ModelSpec {
+    ModelSpec {
+        name: "NeRF",
+        input: 0,
+        stages: vec![Stage {
+            tokens: 192,
+            dim: 256,
+            depth: 8,
+            heads: 1,
+            mlp_ratio: 1,
+        }],
+    }
+}
+
+/// LRA transformer (Table 11): 2-layer, d=64 (the LRA benchmark default
+/// small config), at the given sequence length.
+pub fn lra(seq: usize) -> ModelSpec {
+    ModelSpec {
+        name: "LRA-Transformer",
+        input: 0,
+        stages: vec![Stage {
+            tokens: seq,
+            dim: 64,
+            depth: 2,
+            heads: 2,
+            mlp_ratio: 2,
+        }],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pvt_token_counts() {
+        let b0 = classifier("pvtv2_b0");
+        assert_eq!(b0.stages[0].tokens, 56 * 56);
+        assert_eq!(b0.stages[3].tokens, 7 * 7);
+        assert_eq!(b0.total_blocks(), 8);
+    }
+
+    #[test]
+    fn b2_deeper_than_b1() {
+        assert!(classifier("pvtv2_b2").total_blocks() > classifier("pvtv2_b1").total_blocks());
+    }
+
+    #[test]
+    #[should_panic]
+    fn unknown_model_panics() {
+        classifier("nope");
+    }
+}

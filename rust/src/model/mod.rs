@@ -1,0 +1,9 @@
+//! Model zoo metadata: the *real* paper model configurations (PVTv1/v2,
+//! DeiT, GNT, LRA transformers) with per-layer operation counting under each
+//! ShiftAddViT variant. The analytical energy/latency tables (3/5/11/13,
+//! Fig. 3) are computed from these true shapes; the *runnable* JAX models
+//! are tiny analogues (python/compile/model.py) whose measured latencies
+//! provide the wall-clock columns.
+
+pub mod config;
+pub mod ops;

@@ -1,0 +1,219 @@
+//! Per-layer operation counting under each ShiftAddViT variant — the input
+//! to the Eyeriss energy/latency model.
+
+use crate::energy::ops::MacStyle;
+use crate::model::config::ModelSpec;
+
+/// Which primitives implement each layer family (mirrors
+/// `python/compile/model.py::Variant`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Variant {
+    pub attn: Attn,
+    pub attn_linear: Lin,
+    pub mlp: Mlp,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Attn {
+    /// softmax MSA, quadratic in tokens
+    Msa,
+    /// linear attention Q(KV), full precision
+    Linear,
+    /// linear attention with binarized Q/K → MatAdd accumulations
+    LinearAdd,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Lin {
+    Mult,
+    Shift,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Mlp {
+    Mult,
+    Shift,
+    /// MoE: `mult_frac` of tokens to the Mult expert, rest to Shift.
+    Moe { mult_frac_pct: u8 },
+}
+
+impl Variant {
+    pub const MSA: Variant = Variant {
+        attn: Attn::Msa,
+        attn_linear: Lin::Mult,
+        mlp: Mlp::Mult,
+    };
+    pub const LINEAR: Variant = Variant {
+        attn: Attn::Linear,
+        attn_linear: Lin::Mult,
+        mlp: Mlp::Mult,
+    };
+    pub const ADD: Variant = Variant {
+        attn: Attn::LinearAdd,
+        attn_linear: Lin::Mult,
+        mlp: Mlp::Mult,
+    };
+    pub const ADD_SHIFT_ATTN: Variant = Variant {
+        attn: Attn::LinearAdd,
+        attn_linear: Lin::Shift,
+        mlp: Mlp::Mult,
+    };
+    pub const ADD_SHIFT_BOTH: Variant = Variant {
+        attn: Attn::LinearAdd,
+        attn_linear: Lin::Shift,
+        mlp: Mlp::Shift,
+    };
+    pub const SHIFTADD_MOE: Variant = Variant {
+        attn: Attn::LinearAdd,
+        attn_linear: Lin::Shift,
+        mlp: Mlp::Moe { mult_frac_pct: 50 },
+    };
+}
+
+/// MAC counts bucketed by primitive style, plus byte traffic.
+#[derive(Clone, Debug, Default)]
+pub struct OpsBreakdown {
+    /// (style, macs) pairs per layer family
+    pub attn_matmul: Vec<(MacStyle, f64)>,
+    pub attn_linear: Vec<(MacStyle, f64)>,
+    pub mlp: Vec<(MacStyle, f64)>,
+    pub other: Vec<(MacStyle, f64)>,
+    /// activation bytes moved through DRAM (per inference)
+    pub act_bytes: f64,
+    /// weight bytes moved through DRAM (per inference)
+    pub weight_bytes: f64,
+}
+
+impl OpsBreakdown {
+    pub fn total_macs(&self) -> f64 {
+        self.all().iter().map(|(_, m)| m).sum()
+    }
+
+    pub fn all(&self) -> Vec<(MacStyle, f64)> {
+        let mut v = self.attn_matmul.clone();
+        v.extend(self.attn_linear.clone());
+        v.extend(self.mlp.clone());
+        v.extend(self.other.clone());
+        v
+    }
+}
+
+fn lin_style(l: Lin) -> MacStyle {
+    match l {
+        Lin::Mult => MacStyle::MultFp32,
+        Lin::Shift => MacStyle::ShiftInt32,
+    }
+}
+
+/// Count one inference (batch 1) of `spec` under `var`.
+pub fn count(spec: &ModelSpec, var: Variant) -> OpsBreakdown {
+    let mut b = OpsBreakdown::default();
+    for st in &spec.stages {
+        let n = st.tokens as f64;
+        let d = st.dim as f64;
+        let dk = (st.dim / st.heads.max(1)) as f64;
+        let h = (st.mlp_ratio as f64) * d;
+        for _ in 0..st.depth {
+            // --- attention MatMuls -------------------------------------
+            let lstyle = lin_style(var.attn_linear);
+            match var.attn {
+                Attn::Msa => {
+                    // QKᵀ + AV: 2·N²·d (softmax itself not MAC-counted)
+                    b.attn_matmul.push((MacStyle::MultFp32, 2.0 * n * n * d));
+                }
+                Attn::Linear => {
+                    // KV + Q(KV): 2·N·d·dk, full precision
+                    b.attn_matmul.push((MacStyle::MultFp32, 2.0 * n * d * dk));
+                    b.other.push((MacStyle::MultFp32, 9.0 * n * d)); // DWConv
+                }
+                Attn::LinearAdd => {
+                    // binarized operand ⇒ accumulation-only MACs
+                    b.attn_matmul.push((MacStyle::AddInt32, 2.0 * n * d * dk));
+                    b.other.push((MacStyle::MultFp32, 9.0 * n * d)); // DWConv
+                }
+            }
+            // --- the four attention Linears -----------------------------
+            b.attn_linear.push((lstyle, 4.0 * n * d * d));
+            // --- MLP ----------------------------------------------------
+            let mlp_macs = 2.0 * n * d * h;
+            match var.mlp {
+                Mlp::Mult => b.mlp.push((MacStyle::MultFp32, mlp_macs)),
+                Mlp::Shift => b.mlp.push((MacStyle::ShiftInt32, mlp_macs)),
+                Mlp::Moe { mult_frac_pct } => {
+                    let f = mult_frac_pct as f64 / 100.0;
+                    b.mlp.push((MacStyle::MultFp32, mlp_macs * f));
+                    b.mlp.push((MacStyle::ShiftInt32, mlp_macs * (1.0 - f)));
+                    // router: N·d·2
+                    b.other.push((MacStyle::MultFp32, 2.0 * n * d));
+                }
+            }
+            // --- bytes ---------------------------------------------------
+            // activations in+out per sublayer (4 sublayers worth of N·d f32)
+            b.act_bytes += 4.0 * 4.0 * n * d;
+            // weights: attention linears + MLP, bytes per weight by style
+            b.weight_bytes += 4.0 * d * d * lstyle.weight_bytes();
+            let mlp_wbytes = match var.mlp {
+                Mlp::Mult => MacStyle::MultFp32.weight_bytes(),
+                Mlp::Shift => MacStyle::ShiftInt32.weight_bytes(),
+                // MoE stores both experts
+                Mlp::Moe { .. } => {
+                    MacStyle::MultFp32.weight_bytes() + MacStyle::ShiftInt32.weight_bytes()
+                }
+            };
+            b.weight_bytes += 2.0 * d * h * mlp_wbytes;
+        }
+    }
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::classifier;
+
+    #[test]
+    fn msa_quadratic_dominates_stage1() {
+        // At 56×56 = 3136 tokens, MSA attention MACs exceed linear's.
+        let spec = classifier("pvtv2_b0");
+        let msa = count(&spec, Variant::MSA);
+        let lin = count(&spec, Variant::LINEAR);
+        let msa_attn: f64 = msa.attn_matmul.iter().map(|(_, m)| m).sum();
+        let lin_attn: f64 = lin.attn_matmul.iter().map(|(_, m)| m).sum();
+        assert!(msa_attn > 10.0 * lin_attn, "{msa_attn} vs {lin_attn}");
+    }
+
+    #[test]
+    fn reparameterization_preserves_total_macs_roughly() {
+        // Shift/Add change the *style*, not the count (modulo DWConv/router).
+        let spec = classifier("pvtv2_b0");
+        let lin = count(&spec, Variant::LINEAR).total_macs();
+        let sa = count(&spec, Variant::ADD_SHIFT_BOTH).total_macs();
+        assert!((lin - sa).abs() / lin < 0.02, "{lin} vs {sa}");
+    }
+
+    #[test]
+    fn mlp_dominates_flops_on_pvt() {
+        // Paper intro: MLPs ≈ 63% of FLOPs (DeiT-B); PVT similar ballpark.
+        let spec = classifier("pvtv2_b0");
+        let b = count(&spec, Variant::LINEAR);
+        let mlp: f64 = b.mlp.iter().map(|(_, m)| m).sum();
+        assert!(mlp / b.total_macs() > 0.45, "{}", mlp / b.total_macs());
+    }
+
+    #[test]
+    fn shift_weights_move_half_the_bytes() {
+        let spec = classifier("pvtv2_b0");
+        let mult = count(&spec, Variant::LINEAR);
+        let shift = count(&spec, Variant::ADD_SHIFT_BOTH);
+        assert!(shift.weight_bytes < 0.6 * mult.weight_bytes);
+    }
+
+    #[test]
+    fn moe_splits_mlp_between_styles() {
+        let spec = classifier("pvtv2_b0");
+        let b = count(&spec, Variant::SHIFTADD_MOE);
+        let styles: Vec<_> = b.mlp.iter().map(|(s, _)| *s).collect();
+        assert!(styles.contains(&MacStyle::MultFp32));
+        assert!(styles.contains(&MacStyle::ShiftInt32));
+    }
+}

@@ -1,0 +1,117 @@
+//! Latency-aware load balancing (paper Eq. 4, §4.2) — serving-side
+//! evaluation of the importance/load losses and the expected
+//! synchronization cost of an expert assignment.
+
+use crate::util::stats::scv;
+
+/// Latency-aware coefficients α_i = Lat_i / Σ_j Lat_j.
+///
+/// Minimizing SCV({α_i · S_i}) drives S_i ∝ 1/α_i: faster experts receive
+/// proportionally more tokens.
+pub fn alphas(latencies_ms: &[f64]) -> Vec<f64> {
+    let sum: f64 = latencies_ms.iter().sum();
+    assert!(sum > 0.0, "latencies must be positive");
+    latencies_ms.iter().map(|l| l / sum).collect()
+}
+
+/// The importance loss L_IMP: SCV of α-weighted gate-value sums per expert.
+pub fn importance_loss(gate_sums: &[f64], alphas: &[f64]) -> f64 {
+    let weighted: Vec<f64> = gate_sums.iter().zip(alphas).map(|(g, a)| g * a).collect();
+    scv(&weighted)
+}
+
+/// The load loss L_LOAD: SCV of α-weighted token counts per expert.
+pub fn load_loss(token_counts: &[usize], alphas: &[f64]) -> f64 {
+    let weighted: Vec<f64> = token_counts
+        .iter()
+        .zip(alphas)
+        .map(|(&c, a)| c as f64 * a)
+        .collect();
+    scv(&weighted)
+}
+
+/// The token split that equalizes expert finish times — the target the
+/// LL-loss trains the router toward. Finish time of expert i with n_i tokens
+/// ≈ n_i · per_token_ms_i, equalized ⇒ n_i ∝ 1/per_token_ms_i.
+pub fn ideal_split(per_token_ms: &[f64], total_tokens: usize) -> Vec<usize> {
+    let inv: Vec<f64> = per_token_ms.iter().map(|l| 1.0 / l).collect();
+    let z: f64 = inv.iter().sum();
+    let mut out: Vec<usize> = inv
+        .iter()
+        .map(|v| ((v / z) * total_tokens as f64).floor() as usize)
+        .collect();
+    // distribute rounding remainder to the fastest expert
+    let assigned: usize = out.iter().sum();
+    if let Some(fastest) = per_token_ms
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+    {
+        out[fastest] += total_tokens - assigned;
+    }
+    out
+}
+
+/// Synchronization cost of an assignment: experts run in parallel, the MoE
+/// layer finishes when the slowest does. Returns (makespan_ms, idle_ms)
+/// where idle is the summed wait of the non-critical experts — the quantity
+/// the LL-loss minimizes (paper: "reduce the synchronization time").
+pub fn sync_cost(token_counts: &[usize], per_token_ms: &[f64]) -> (f64, f64) {
+    let finish: Vec<f64> = token_counts
+        .iter()
+        .zip(per_token_ms)
+        .map(|(&n, l)| n as f64 * l)
+        .collect();
+    let makespan = finish.iter().cloned().fold(0.0, f64::max);
+    let idle = finish.iter().map(|f| makespan - f).sum();
+    (makespan, idle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alphas_normalize() {
+        let a = alphas(&[3.0, 1.0]);
+        assert!((a[0] - 0.75).abs() < 1e-12);
+        assert!((a.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn losses_zero_at_latency_proportional_balance() {
+        // Mult is 3× slower than Shift ⇒ balanced when Shift gets 3× tokens.
+        let a = alphas(&[3.0, 1.0]);
+        let loss_balanced = load_loss(&[100, 300], &a);
+        let loss_equal = load_loss(&[200, 200], &a);
+        assert!(loss_balanced < 1e-12, "{loss_balanced}");
+        assert!(loss_equal > 0.1);
+    }
+
+    #[test]
+    fn ideal_split_equalizes_finish_times() {
+        let per = [3.0, 1.0];
+        let split = ideal_split(&per, 400);
+        assert_eq!(split.iter().sum::<usize>(), 400);
+        let (_, idle) = sync_cost(&split, &per);
+        let (_, idle_naive) = sync_cost(&[200, 200], &per);
+        assert!(idle < idle_naive, "{idle} vs {idle_naive}");
+        // n0·3 ≈ n1·1 ⇒ n0 = 100, n1 = 300
+        assert_eq!(split, vec![100, 300]);
+    }
+
+    #[test]
+    fn sync_cost_of_skewed_assignment() {
+        let (makespan, idle) = sync_cost(&[10, 0], &[1.0, 1.0]);
+        assert_eq!(makespan, 10.0);
+        assert_eq!(idle, 10.0);
+    }
+
+    #[test]
+    fn importance_loss_tracks_gate_imbalance() {
+        let a = alphas(&[1.0, 1.0]);
+        assert!(importance_loss(&[5.0, 5.0], &a) < 1e-12);
+        assert!(importance_loss(&[9.0, 1.0], &a) > 0.3);
+    }
+}

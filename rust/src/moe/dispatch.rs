@@ -1,0 +1,180 @@
+//! Sparse token dispatch: partition tokens between experts, pad each
+//! partition to a compiled bucket size, and scatter expert outputs back —
+//! the runtime realization of the paper's "dynamic input allocation"
+//! (handled by Nimble/TVM in the paper, by this module + pre-compiled
+//! bucket-shaped executables here).
+
+use crate::moe::router::Route;
+
+/// A token partition destined for one expert.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub expert: usize,
+    /// original token indices, in order
+    pub indices: Vec<usize>,
+    /// gathered token features, padded with zeros to `bucket` rows
+    pub padded: Vec<f32>,
+    /// chosen bucket size (rows in `padded`)
+    pub bucket: usize,
+}
+
+/// Pick the smallest compiled bucket ≥ n (buckets must be sorted ascending).
+/// Falls back to the largest bucket if n exceeds it (callers must then
+/// split — see [`partition`] which enforces n ≤ max bucket).
+pub fn pick_bucket(buckets: &[usize], n: usize) -> usize {
+    for &b in buckets {
+        if b >= n {
+            return b;
+        }
+    }
+    *buckets.last().expect("no buckets")
+}
+
+/// Partition `tokens` (T × dim, row-major) by routing decision into one
+/// padded partition per expert. Token counts beyond the largest bucket are
+/// split into multiple chunks of the largest bucket.
+pub fn partition(
+    tokens: &[f32],
+    dim: usize,
+    routes: &[Route],
+    experts: usize,
+    buckets: &[usize],
+) -> Vec<Partition> {
+    assert_eq!(tokens.len(), routes.len() * dim);
+    let max_bucket = *buckets.last().expect("no buckets");
+    let mut by_expert: Vec<Vec<usize>> = vec![Vec::new(); experts];
+    for (i, r) in routes.iter().enumerate() {
+        by_expert[r.expert].push(i);
+    }
+    let mut parts = Vec::new();
+    for (e, idxs) in by_expert.into_iter().enumerate() {
+        if idxs.is_empty() {
+            continue;
+        }
+        for chunk in idxs.chunks(max_bucket) {
+            let bucket = pick_bucket(buckets, chunk.len());
+            let mut padded = vec![0.0f32; bucket * dim];
+            for (row, &ti) in chunk.iter().enumerate() {
+                padded[row * dim..(row + 1) * dim]
+                    .copy_from_slice(&tokens[ti * dim..(ti + 1) * dim]);
+            }
+            parts.push(Partition {
+                expert: e,
+                indices: chunk.to_vec(),
+                padded,
+                bucket,
+            });
+        }
+    }
+    parts
+}
+
+/// Scatter expert outputs back into a (T × dim) buffer, scaling each token
+/// by its gate value (the paper's y = G(x)·E_i(x)).
+pub fn scatter(
+    out: &mut [f32],
+    dim: usize,
+    part: &Partition,
+    expert_out: &[f32],
+    routes: &[Route],
+) {
+    assert!(expert_out.len() >= part.indices.len() * dim);
+    for (row, &ti) in part.indices.iter().enumerate() {
+        let g = routes[ti].gate;
+        let src = &expert_out[row * dim..(row + 1) * dim];
+        let dst = &mut out[ti * dim..(ti + 1) * dim];
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d = g * s;
+        }
+    }
+}
+
+/// Wasted rows due to bucket padding (for the metrics endpoint).
+pub fn padding_waste(parts: &[Partition]) -> f64 {
+    let used: usize = parts.iter().map(|p| p.indices.len()).sum();
+    let padded: usize = parts.iter().map(|p| p.bucket).sum();
+    if padded == 0 {
+        0.0
+    } else {
+        1.0 - used as f64 / padded as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::router::Route;
+
+    fn mk_routes(experts: &[usize]) -> Vec<Route> {
+        experts
+            .iter()
+            .map(|&e| Route {
+                expert: e,
+                gate: 1.0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pick_bucket_smallest_fit() {
+        let b = [16, 32, 64];
+        assert_eq!(pick_bucket(&b, 1), 16);
+        assert_eq!(pick_bucket(&b, 16), 16);
+        assert_eq!(pick_bucket(&b, 17), 32);
+        assert_eq!(pick_bucket(&b, 100), 64);
+    }
+
+    #[test]
+    fn partition_covers_every_token_once() {
+        let dim = 2;
+        let routes = mk_routes(&[0, 1, 0, 0, 1, 0]);
+        let tokens: Vec<f32> = (0..routes.len() * dim).map(|i| i as f32).collect();
+        let parts = partition(&tokens, dim, &routes, 2, &[4, 8]);
+        let mut seen: Vec<usize> = parts.iter().flat_map(|p| p.indices.clone()).collect();
+        seen.sort();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn partition_gathers_correct_rows() {
+        let dim = 2;
+        let routes = mk_routes(&[1, 0]);
+        let tokens = vec![10.0, 11.0, 20.0, 21.0];
+        let parts = partition(&tokens, dim, &routes, 2, &[4]);
+        let p0 = parts.iter().find(|p| p.expert == 0).unwrap();
+        assert_eq!(&p0.padded[0..2], &[20.0, 21.0]);
+        assert_eq!(p0.padded[2..], [0.0; 6]); // zero padding
+    }
+
+    #[test]
+    fn oversized_partition_splits_into_chunks() {
+        let dim = 1;
+        let routes = mk_routes(&vec![0; 10]);
+        let tokens = vec![1.0; 10];
+        let parts = partition(&tokens, dim, &routes, 2, &[4]);
+        assert_eq!(parts.len(), 3); // 4 + 4 + 2→bucket4
+        assert!(parts.iter().all(|p| p.bucket == 4));
+        let total: usize = parts.iter().map(|p| p.indices.len()).sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn scatter_applies_gate() {
+        let dim = 2;
+        let mut routes = mk_routes(&[0, 0]);
+        routes[1].gate = 0.5;
+        let tokens = vec![0.0; 4];
+        let parts = partition(&tokens, dim, &routes, 1, &[2]);
+        let mut out = vec![0.0f32; 4];
+        scatter(&mut out, dim, &parts[0], &[1.0, 2.0, 3.0, 4.0], &routes);
+        assert_eq!(out, vec![1.0, 2.0, 1.5, 2.0]);
+    }
+
+    #[test]
+    fn waste_metric() {
+        let dim = 1;
+        let routes = mk_routes(&[0, 0, 0]);
+        let parts = partition(&vec![0.0; 3], dim, &routes, 1, &[4]);
+        assert!((padding_waste(&parts) - 0.25).abs() < 1e-12);
+    }
+}

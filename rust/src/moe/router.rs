@@ -1,0 +1,96 @@
+//! Top-1 router over softmax gates (the paper's G(x) = p_i · 1{p_i ≥ p_j}).
+//!
+//! At serving time the gate probabilities arrive from the `serve_*_premlp`
+//! HLO executables; this module turns them into a dispatch decision.
+
+/// Routing decision for one token.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Route {
+    /// winning expert index (0 = Mult, 1 = Shift)
+    pub expert: usize,
+    /// the winning gate value p_i (scales the expert output)
+    pub gate: f32,
+}
+
+pub const EXPERT_MULT: usize = 0;
+pub const EXPERT_SHIFT: usize = 1;
+
+/// Route a batch of tokens from (T, E) gate probabilities.
+pub fn route(gates: &[f32], experts: usize) -> Vec<Route> {
+    assert!(experts >= 1);
+    assert_eq!(gates.len() % experts, 0);
+    gates
+        .chunks(experts)
+        .map(|g| {
+            let (mut best, mut bv) = (0usize, f32::NEG_INFINITY);
+            for (i, &v) in g.iter().enumerate() {
+                if v > bv {
+                    best = i;
+                    bv = v;
+                }
+            }
+            Route {
+                expert: best,
+                gate: bv,
+            }
+        })
+        .collect()
+}
+
+/// Softmax a slice of logits in place (for host-side routing when the HLO
+/// emits raw logits).
+pub fn softmax(logits: &mut [f32]) {
+    let m = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut sum = 0.0;
+    for v in logits.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    for v in logits.iter_mut() {
+        *v /= sum;
+    }
+}
+
+/// Fraction of tokens routed to each expert.
+pub fn load_fractions(routes: &[Route], experts: usize) -> Vec<f64> {
+    let mut counts = vec![0usize; experts];
+    for r in routes {
+        counts[r.expert] += 1;
+    }
+    counts
+        .iter()
+        .map(|&c| c as f64 / routes.len().max(1) as f64)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_to_argmax() {
+        let gates = [0.7, 0.3, 0.2, 0.8];
+        let r = route(&gates, 2);
+        assert_eq!(r[0].expert, EXPERT_MULT);
+        assert!((r[0].gate - 0.7).abs() < 1e-6);
+        assert_eq!(r[1].expert, EXPERT_SHIFT);
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let mut l = [1.0f32, 2.0, 3.0];
+        softmax(&mut l);
+        let s: f32 = l.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(l[2] > l[1] && l[1] > l[0]);
+    }
+
+    #[test]
+    fn load_fractions_sum_to_one() {
+        let gates = [0.9, 0.1, 0.1, 0.9, 0.6, 0.4, 0.2, 0.8];
+        let r = route(&gates, 2);
+        let f = load_fractions(&r, 2);
+        assert!((f.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((f[0] - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,109 @@
+//! Image-quality metrics for the NVS task: PSNR, SSIM [63], and an
+//! LPIPS-proxy (gradient-structure distance — LPIPS itself needs a learned
+//! network; the proxy preserves the ordering for our analytic scenes and is
+//! documented as a substitution in DESIGN.md).
+
+/// PSNR (dB) between two RGB float images in [0,1].
+pub fn psnr(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mse: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        / a.len() as f64;
+    -10.0 * (mse + 1e-12).log10()
+}
+
+fn to_gray(rgb: &[f32]) -> Vec<f32> {
+    rgb.chunks(3)
+        .map(|p| 0.299 * p[0] + 0.587 * p[1] + 0.114 * p[2])
+        .collect()
+}
+
+/// Global SSIM over the luma channel (single-window variant of [63]).
+pub fn ssim(a_rgb: &[f32], b_rgb: &[f32]) -> f64 {
+    let a = to_gray(a_rgb);
+    let b = to_gray(b_rgb);
+    let n = a.len() as f64;
+    let mu_a = a.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let mu_b = b.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let var_a = a.iter().map(|&v| (v as f64 - mu_a).powi(2)).sum::<f64>() / n;
+    let var_b = b.iter().map(|&v| (v as f64 - mu_b).powi(2)).sum::<f64>() / n;
+    let cov = a
+        .iter()
+        .zip(&b)
+        .map(|(&x, &y)| (x as f64 - mu_a) * (y as f64 - mu_b))
+        .sum::<f64>()
+        / n;
+    let (c1, c2) = (0.01f64.powi(2), 0.03f64.powi(2));
+    ((2.0 * mu_a * mu_b + c1) * (2.0 * cov + c2))
+        / ((mu_a * mu_a + mu_b * mu_b + c1) * (var_a + var_b + c2))
+}
+
+/// LPIPS-proxy: normalized L2 distance between local gradient maps
+/// (edge-structure mismatch; lower = perceptually closer).
+pub fn lpips_proxy(a_rgb: &[f32], b_rgb: &[f32], w: usize, h: usize) -> f64 {
+    let ga = grad_mag(&to_gray(a_rgb), w, h);
+    let gb = grad_mag(&to_gray(b_rgb), w, h);
+    let num: f64 = ga
+        .iter()
+        .zip(&gb)
+        .map(|(x, y)| ((x - y) as f64).powi(2))
+        .sum();
+    let den: f64 = ga
+        .iter()
+        .chain(gb.iter())
+        .map(|x| (*x as f64).powi(2))
+        .sum::<f64>()
+        + 1e-9;
+    (num / den).sqrt()
+}
+
+fn grad_mag(gray: &[f32], w: usize, h: usize) -> Vec<f32> {
+    let mut g = vec![0.0f32; w * h];
+    for y in 0..h.saturating_sub(1) {
+        for x in 0..w.saturating_sub(1) {
+            let dx = gray[y * w + x + 1] - gray[y * w + x];
+            let dy = gray[(y + 1) * w + x] - gray[y * w + x];
+            g[y * w + x] = (dx * dx + dy * dy).sqrt();
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_images_perfect_scores() {
+        let img = vec![0.5f32; 16 * 16 * 3];
+        assert!(psnr(&img, &img) > 100.0);
+        assert!((ssim(&img, &img) - 1.0).abs() < 1e-9);
+        assert!(lpips_proxy(&img, &img, 16, 16) < 1e-9);
+    }
+
+    #[test]
+    fn noisier_is_worse() {
+        let a = vec![0.5f32; 8 * 8 * 3];
+        let mut b1 = a.clone();
+        let mut b2 = a.clone();
+        for (i, v) in b1.iter_mut().enumerate() {
+            *v += if i % 2 == 0 { 0.01 } else { -0.01 };
+        }
+        for (i, v) in b2.iter_mut().enumerate() {
+            *v += if i % 2 == 0 { 0.1 } else { -0.1 };
+        }
+        assert!(psnr(&a, &b1) > psnr(&a, &b2));
+        assert!(ssim(&a, &b1) > ssim(&a, &b2));
+    }
+
+    #[test]
+    fn psnr_known_value() {
+        // uniform error of 0.1 ⇒ MSE 0.01 ⇒ PSNR 20 dB
+        let a = vec![0.0f32; 300];
+        let b = vec![0.1f32; 300];
+        assert!((psnr(&a, &b) - 20.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,7 @@
+//! 3D novel-view-synthesis substrate (Table 5, Figs. 10): analytic
+//! light-field scenes, the ray-batched renderer over the GNT-style
+//! artifacts, and image quality metrics.
+
+pub mod metrics;
+pub mod render;
+pub mod scenes;

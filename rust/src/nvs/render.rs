@@ -1,0 +1,66 @@
+//! Ray-batched renderer: drives the `nvs_*` artifacts (GNT-style ray
+//! transformer) over camera rays, in fixed-size ray batches (the paper
+//! samples 2048 rays/iteration; our artifacts are compiled at 256).
+
+use anyhow::Result;
+
+use crate::nvs::scenes::{camera_rays, Scene};
+use crate::runtime::engine::Engine;
+use crate::runtime::tensor::Tensor;
+
+/// Render a full image with an NVS artifact. Returns HWC RGB floats.
+pub fn render(engine: &Engine, artifact: &str, img: usize, pose_angle: f32) -> Result<Vec<f32>> {
+    let meta = engine.manifest().get(artifact)?;
+    let rays_per_batch = meta.inputs[0].shape[0];
+    let (origins, dirs) = camera_rays(img, pose_angle);
+    let total = img * img;
+    let compiled = engine.load(artifact)?;
+    let mut out = vec![0.0f32; total * 3];
+    let mut start = 0;
+    while start < total {
+        let n = (total - start).min(rays_per_batch);
+        // pad the final batch
+        let mut o = vec![0.0f32; rays_per_batch * 3];
+        let mut d = vec![0.0f32; rays_per_batch * 3];
+        d.iter_mut().skip(2).step_by(3).for_each(|z| *z = 1.0); // unit pad dirs
+        o[..n * 3].copy_from_slice(&origins[start * 3..(start + n) * 3]);
+        d[..n * 3].copy_from_slice(&dirs[start * 3..(start + n) * 3]);
+        let rgb = engine.run(
+            &compiled,
+            &[
+                Tensor::f32(vec![rays_per_batch, 3], o),
+                Tensor::f32(vec![rays_per_batch, 3], d),
+            ],
+        )?;
+        out[start * 3..(start + n) * 3].copy_from_slice(&rgb[0].as_f32()?[..n * 3]);
+        start += n;
+    }
+    Ok(out)
+}
+
+/// Render ground truth + model prediction and score them.
+pub struct SceneEval {
+    pub psnr: f64,
+    pub ssim: f64,
+    pub lpips: f64,
+    pub pred: Vec<f32>,
+    pub gt: Vec<f32>,
+}
+
+pub fn eval_scene(
+    engine: &Engine,
+    scene: &Scene,
+    artifact: &str,
+    img: usize,
+    pose_angle: f32,
+) -> Result<SceneEval> {
+    let gt = scene.render_gt(img, pose_angle);
+    let pred = render(engine, artifact, img, pose_angle)?;
+    Ok(SceneEval {
+        psnr: crate::nvs::metrics::psnr(&pred, &gt),
+        ssim: crate::nvs::metrics::ssim(&pred, &gt),
+        lpips: crate::nvs::metrics::lpips_proxy(&pred, &gt, img, img),
+        pred,
+        gt,
+    })
+}

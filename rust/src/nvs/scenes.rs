@@ -1,0 +1,219 @@
+//! Analytic scenes (LLFF substitute) — definitions come from the manifest
+//! (exported by `python/compile/model_nvs.py`) so both sides ray-trace the
+//! same ground truth.
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Sphere {
+    pub c: [f32; 3],
+    pub r: f32,
+    pub rgb: [f32; 3],
+}
+
+#[derive(Clone, Debug)]
+pub struct Scene {
+    pub name: String,
+    pub spheres: Vec<Sphere>,
+    pub plane_col: [f32; 3],
+    pub sky: [f32; 3],
+}
+
+/// The eight LLFF-analogue scene names.
+pub const SCENE_NAMES: [&str; 8] = [
+    "room", "fern", "leaves", "fortress", "orchids", "flower", "trex", "horns",
+];
+
+fn vec3(j: &Json) -> Result<[f32; 3]> {
+    let a = j.as_arr().ok_or_else(|| anyhow!("expected array"))?;
+    Ok([
+        a[0].as_f64().unwrap() as f32,
+        a[1].as_f64().unwrap() as f32,
+        a[2].as_f64().unwrap() as f32,
+    ])
+}
+
+impl Scene {
+    /// Parse one scene from the manifest's `nvs_scenes` section.
+    pub fn from_manifest(root: &Json, name: &str) -> Result<Scene> {
+        let sc = root
+            .req("nvs_scenes")?
+            .get(name)
+            .ok_or_else(|| anyhow!("scene '{name}' not in manifest"))?;
+        let spheres = sc
+            .req("spheres")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("spheres not array"))?
+            .iter()
+            .map(|s| {
+                let a = s.as_arr().ok_or_else(|| anyhow!("sphere not array"))?;
+                Ok(Sphere {
+                    c: [
+                        a[0].as_f64().unwrap() as f32,
+                        a[1].as_f64().unwrap() as f32,
+                        a[2].as_f64().unwrap() as f32,
+                    ],
+                    r: a[3].as_f64().unwrap() as f32,
+                    rgb: [
+                        a[4].as_f64().unwrap() as f32,
+                        a[5].as_f64().unwrap() as f32,
+                        a[6].as_f64().unwrap() as f32,
+                    ],
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Scene {
+            name: name.to_string(),
+            spheres,
+            plane_col: vec3(sc.req("plane_col")?)?,
+            sky: vec3(sc.req("sky")?)?,
+        })
+    }
+
+    /// Exact reference render of one ray (mirror of model_nvs.ray_trace).
+    pub fn trace(&self, o: [f32; 3], d_in: [f32; 3]) -> [f32; 3] {
+        let norm = (d_in[0] * d_in[0] + d_in[1] * d_in[1] + d_in[2] * d_in[2]).sqrt();
+        let d = [d_in[0] / norm, d_in[1] / norm, d_in[2] / norm];
+        let mut tmin = f32::INFINITY;
+        // sky modulated by elevation
+        let elev = d[1].clamp(0.0, 1.0);
+        let mut col = [
+            self.sky[0] * (0.6 + 0.4 * elev),
+            self.sky[1] * (0.6 + 0.4 * elev),
+            self.sky[2] * (0.6 + 0.4 * elev),
+        ];
+        // ground plane y = -0.5
+        if d[1].abs() > 1e-6 {
+            let tp = (-0.5 - o[1]) / d[1];
+            if tp > 1e-3 && tp < tmin {
+                let px = o[0] + tp * d[0];
+                let pz = o[2] + tp * d[2];
+                let checker = if ((px.floor() + pz.floor()) as i64).rem_euclid(2) == 0 {
+                    1.0
+                } else {
+                    0.0
+                };
+                for c in 0..3 {
+                    col[c] = self.plane_col[c] * (0.7 + 0.3 * checker);
+                }
+                tmin = tp;
+            }
+        }
+        let light = {
+            let l = [0.5f32, 0.8, -0.3];
+            let n = (l[0] * l[0] + l[1] * l[1] + l[2] * l[2]).sqrt();
+            [l[0] / n, l[1] / n, l[2] / n]
+        };
+        for s in &self.spheres {
+            let oc = [o[0] - s.c[0], o[1] - s.c[1], o[2] - s.c[2]];
+            let b = oc[0] * d[0] + oc[1] * d[1] + oc[2] * d[2];
+            let cq = oc[0] * oc[0] + oc[1] * oc[1] + oc[2] * oc[2] - s.r * s.r;
+            let disc = b * b - cq;
+            if disc > 0.0 {
+                let ts = -b - disc.sqrt();
+                if ts > 1e-3 && ts < tmin {
+                    let p = [o[0] + ts * d[0], o[1] + ts * d[1], o[2] + ts * d[2]];
+                    let nrm = [
+                        (p[0] - s.c[0]) / s.r,
+                        (p[1] - s.c[1]) / s.r,
+                        (p[2] - s.c[2]) / s.r,
+                    ];
+                    let lam = (nrm[0] * light[0] + nrm[1] * light[1] + nrm[2] * light[2])
+                        .clamp(0.1, 1.0);
+                    col = [s.rgb[0] * lam, s.rgb[1] * lam, s.rgb[2] * lam];
+                    tmin = ts;
+                }
+            }
+        }
+        col
+    }
+
+    /// Render a full image (HWC) at the given pose.
+    pub fn render_gt(&self, img: usize, pose_angle: f32) -> Vec<f32> {
+        let (origins, dirs) = camera_rays(img, pose_angle);
+        let mut out = vec![0.0f32; img * img * 3];
+        for i in 0..img * img {
+            let c = self.trace(
+                [origins[i * 3], origins[i * 3 + 1], origins[i * 3 + 2]],
+                [dirs[i * 3], dirs[i * 3 + 1], dirs[i * 3 + 2]],
+            );
+            out[i * 3..i * 3 + 3].copy_from_slice(&c);
+        }
+        out
+    }
+}
+
+/// Pinhole camera rays (mirror of model_nvs.camera_rays): returns flat
+/// (img², 3) origins and directions.
+pub fn camera_rays(img: usize, pose_angle: f32) -> (Vec<f32>, Vec<f32>) {
+    let (ca, sa) = (pose_angle.cos(), pose_angle.sin());
+    let mut origins = vec![0.0f32; img * img * 3];
+    let mut dirs = Vec::with_capacity(img * img * 3);
+    for y in 0..img {
+        for x in 0..img {
+            let u = (x as f32 + 0.5) / img as f32 * 2.0 - 1.0;
+            let v = 1.0 - (y as f32 + 0.5) / img as f32 * 2.0;
+            // rotate [u, v, 1] around y: matches dirs @ rot.T in python
+            let d = [u * ca + sa, v, -u * sa + ca];
+            dirs.extend_from_slice(&d);
+        }
+    }
+    let _ = &mut origins;
+    (origins, dirs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_scene() -> Scene {
+        Scene {
+            name: "toy".into(),
+            spheres: vec![Sphere {
+                c: [0.0, 0.0, 3.0],
+                r: 0.5,
+                rgb: [1.0, 0.0, 0.0],
+            }],
+            plane_col: [0.3, 0.3, 0.3],
+            sky: [0.5, 0.6, 0.8],
+        }
+    }
+
+    #[test]
+    fn center_ray_hits_sphere() {
+        let s = toy_scene();
+        let c = s.trace([0.0, 0.0, 0.0], [0.0, 0.0, 1.0]);
+        assert!(c[0] > 0.05 && c[1] == 0.0 && c[2] == 0.0, "{c:?}");
+    }
+
+    #[test]
+    fn up_ray_hits_sky() {
+        let s = toy_scene();
+        let c = s.trace([0.0, 0.0, 0.0], [0.0, 1.0, 0.0]);
+        assert!((c[2] - 0.8).abs() < 1e-6, "{c:?}");
+    }
+
+    #[test]
+    fn down_ray_hits_plane() {
+        let s = toy_scene();
+        let c = s.trace([0.0, 0.0, 0.0], [0.0, -1.0, 0.1]);
+        assert!(c[0] == c[1] && c[1] == c[2], "{c:?}"); // gray checker
+    }
+
+    #[test]
+    fn camera_rays_shapes() {
+        let (o, d) = camera_rays(4, 0.0);
+        assert_eq!(o.len(), 48);
+        assert_eq!(d.len(), 48);
+        // central pixels look roughly +z
+        assert!(d[2] > 0.9);
+    }
+
+    #[test]
+    fn render_gt_in_unit_range() {
+        let img = toy_scene().render_gt(8, 0.1);
+        assert!(img.iter().all(|v| (0.0..=1.2).contains(v)));
+    }
+}

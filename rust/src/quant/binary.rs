@@ -1,0 +1,75 @@
+//! Vanilla binary quantization [27] of activations: msign(x) ∈ {-1,+1},
+//! plus a per-tensor scaling factor applied *after* accumulation (Appendix E
+//! "the scaling factor can be multiplied after add operations").
+
+/// Binarize to ±1 (0 maps to +1, matching `ref.binary_quantize`).
+pub fn binarize(x: &[f32]) -> Vec<i8> {
+    x.iter().map(|&v| if v >= 0.0 { 1 } else { -1 }).collect()
+}
+
+/// Mean-|x| scaling factor (layer-wise); multiply MatAdd outputs by this to
+/// approximate the full-precision product.
+pub fn scale(x: &[f32]) -> f32 {
+    if x.is_empty() {
+        return 1.0;
+    }
+    x.iter().map(|v| v.abs()).sum::<f32>() / x.len() as f32
+}
+
+/// Pack ±1 codes into u64 words (bit = 1 for +1) for popcount-based Hamming
+/// kernels: 64 codes per word — the deployment format.
+pub fn pack_bits(codes: &[i8]) -> Vec<u64> {
+    let mut out = vec![0u64; codes.len().div_ceil(64)];
+    for (i, &c) in codes.iter().enumerate() {
+        if c > 0 {
+            out[i / 64] |= 1 << (i % 64);
+        }
+    }
+    out
+}
+
+/// Hamming *similarity* (matching positions) between two packed rows of
+/// `bits` valid bits: matches = bits - popcount(a ^ b).
+pub fn hamming_sim(a: &[u64], b: &[u64], bits: usize) -> u32 {
+    let mut diff = 0u32;
+    for (x, y) in a.iter().zip(b) {
+        diff += (x ^ y).count_ones();
+    }
+    bits as u32 - diff
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binarize_signs() {
+        assert_eq!(binarize(&[0.5, -0.1, 0.0]), vec![1, -1, 1]);
+    }
+
+    #[test]
+    fn scale_is_mean_abs() {
+        assert!((scale(&[1.0, -3.0]) - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pack_roundtrip_via_hamming() {
+        let a = vec![1i8, -1, 1, 1, -1];
+        let pa = pack_bits(&a);
+        // identical rows → all 5 positions match
+        assert_eq!(hamming_sim(&pa, &pa, 5), 5);
+        let b = vec![1i8, 1, 1, 1, -1]; // one flip
+        let pb = pack_bits(&b);
+        assert_eq!(hamming_sim(&pa, &pb, 5), 4);
+    }
+
+    #[test]
+    fn hamming_matches_dot_product_identity() {
+        // For ±1 vectors: dot = 2·matches − d.
+        let a = vec![1i8, -1, -1, 1, 1, -1, 1, 1];
+        let b = vec![-1i8, -1, 1, 1, -1, -1, 1, -1];
+        let dot: i32 = a.iter().zip(&b).map(|(&x, &y)| (x as i32) * (y as i32)).sum();
+        let m = hamming_sim(&pack_bits(&a), &pack_bits(&b), 8) as i32;
+        assert_eq!(dot, 2 * m - 8);
+    }
+}

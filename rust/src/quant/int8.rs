@@ -1,0 +1,63 @@
+//! INT8 affine activation quantization [28] — used by the integer MatShift
+//! kernel (the paper's "INT32 and INT8 for inputs and shift signs/weights").
+
+/// Symmetric per-tensor INT8 quantization parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct Int8Quant {
+    pub scale: f32,
+}
+
+impl Int8Quant {
+    /// Calibrate from the absolute max of the data.
+    pub fn calibrate(x: &[f32]) -> Int8Quant {
+        let amax = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        Int8Quant {
+            scale: if amax > 0.0 { amax / 127.0 } else { 1.0 },
+        }
+    }
+
+    pub fn quantize(&self, x: &[f32]) -> Vec<i8> {
+        x.iter()
+            .map(|&v| (v / self.scale).round().clamp(-127.0, 127.0) as i8)
+            .collect()
+    }
+
+    pub fn dequantize(&self, q: &[i8]) -> Vec<f32> {
+        q.iter().map(|&v| v as f32 * self.scale).collect()
+    }
+
+    /// Dequantize an i32 accumulator (post-MatAdd/MatShift).
+    pub fn dequant_acc(&self, acc: i64) -> f32 {
+        acc as f32 * self.scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShift64;
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        let mut rng = XorShift64::new(1);
+        let x = rng.normals(512);
+        let q = Int8Quant::calibrate(&x);
+        let back = q.dequantize(&q.quantize(&x));
+        for (a, b) in x.iter().zip(&back) {
+            assert!((a - b).abs() <= q.scale * 0.5 + 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn zero_data_does_not_divide_by_zero() {
+        let q = Int8Quant::calibrate(&[0.0; 8]);
+        assert_eq!(q.quantize(&[0.0])[0], 0);
+    }
+
+    #[test]
+    fn saturates_at_127() {
+        let q = Int8Quant { scale: 1.0 };
+        assert_eq!(q.quantize(&[1e6])[0], 127);
+        assert_eq!(q.quantize(&[-1e6])[0], -127);
+    }
+}

@@ -1,0 +1,84 @@
+//! Kernelized-hashing binarization (Ecoformer [34] stand-in): hash codes are
+//! signs of a fixed random projection, `h(x) = sign(x R)`. Shared projection
+//! for Q and K (KSH requires Q ≡ K treatment — paper §5.4 observation (2)).
+
+use crate::quant::binary::binarize;
+use crate::util::rng::XorShift64;
+
+/// A KSH hash family: `bits` random hyperplanes in `dim` dimensions.
+#[derive(Clone, Debug)]
+pub struct KshHasher {
+    pub dim: usize,
+    pub bits: usize,
+    /// (dim × bits) row-major projection.
+    pub proj: Vec<f32>,
+}
+
+impl KshHasher {
+    pub fn new(dim: usize, bits: usize, seed: u64) -> KshHasher {
+        let mut rng = XorShift64::new(seed);
+        let scale = 1.0 / (dim as f32).sqrt();
+        let proj = (0..dim * bits).map(|_| rng.normal() * scale).collect();
+        KshHasher { dim, bits, proj }
+    }
+
+    /// Hash one vector to ±1 codes.
+    pub fn hash(&self, x: &[f32]) -> Vec<i8> {
+        assert_eq!(x.len(), self.dim);
+        let mut proj_out = vec![0.0f32; self.bits];
+        for (i, &xi) in x.iter().enumerate() {
+            let row = &self.proj[i * self.bits..(i + 1) * self.bits];
+            for (o, &p) in proj_out.iter_mut().zip(row) {
+                *o += xi * p;
+            }
+        }
+        binarize(&proj_out)
+    }
+
+    /// Hash a row-major (n × dim) matrix to (n × bits) codes.
+    pub fn hash_matrix(&self, xs: &[f32], n: usize) -> Vec<i8> {
+        let mut out = Vec::with_capacity(n * self.bits);
+        for r in 0..n {
+            out.extend(self.hash(&xs[r * self.dim..(r + 1) * self.dim]));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_is_deterministic() {
+        let h = KshHasher::new(8, 16, 1);
+        let x: Vec<f32> = (0..8).map(|i| i as f32 - 3.5).collect();
+        assert_eq!(h.hash(&x), h.hash(&x));
+    }
+
+    #[test]
+    fn similar_vectors_share_most_bits() {
+        // LSH property: nearby vectors collide on most hyperplanes.
+        let h = KshHasher::new(16, 64, 2);
+        let mut rng = XorShift64::new(3);
+        let x = rng.normals(16);
+        let mut y = x.clone();
+        y[0] += 0.01;
+        let hx = h.hash(&x);
+        let hy = h.hash(&y);
+        let matches = hx.iter().zip(&hy).filter(|(a, b)| a == b).count();
+        assert!(matches >= 60, "only {matches}/64 bits match");
+    }
+
+    #[test]
+    fn opposite_vectors_flip_all_bits() {
+        let h = KshHasher::new(8, 32, 4);
+        let mut rng = XorShift64::new(5);
+        let x = rng.normals(8);
+        let neg: Vec<f32> = x.iter().map(|v| -v).collect();
+        let hx = h.hash(&x);
+        let hn = h.hash(&neg);
+        // sign(-xR) = -sign(xR) except exact zeros (measure zero).
+        assert!(hx.iter().zip(&hn).all(|(a, b)| *a == -*b));
+    }
+}

@@ -1,0 +1,8 @@
+//! Quantization substrates: power-of-two (shift) reparameterization, binary
+//! quantization, kernelized-hashing binarization, and INT8 affine
+//! quantization — the host-side mirror of `python/compile/kernels/ref.py`.
+
+pub mod binary;
+pub mod int8;
+pub mod ksh;
+pub mod pow2;

@@ -1,0 +1,99 @@
+//! Power-of-two (shift) weight reparameterization: `W ≈ s · 2^P`
+//! (DeepShift-PS [17]; paper Eq. 3). Mirrors `ref.pow2_quantize`.
+
+/// A weight matrix stored as sign and exponent INT8 planes — the storage
+/// format the MatShift kernel consumes (4× smaller than f32; the paper's
+/// data-movement argument).
+#[derive(Clone, Debug)]
+pub struct Pow2Weights {
+    pub rows: usize,
+    pub cols: usize,
+    /// sign ∈ {-1, +1}
+    pub sign: Vec<i8>,
+    /// exponent ∈ [P_MIN, P_MAX]
+    pub exp: Vec<i8>,
+}
+
+pub const P_MIN: i8 = -8;
+pub const P_MAX: i8 = 7;
+
+/// Quantize a dense row-major matrix to (sign, exponent) planes.
+pub fn quantize(w: &[f32], rows: usize, cols: usize) -> Pow2Weights {
+    assert_eq!(w.len(), rows * cols);
+    let mut sign = Vec::with_capacity(w.len());
+    let mut exp = Vec::with_capacity(w.len());
+    for &v in w {
+        sign.push(if v < 0.0 { -1 } else { 1 });
+        let a = v.abs();
+        let p = if a > 0.0 {
+            a.log2().round().clamp(P_MIN as f32, P_MAX as f32) as i8
+        } else {
+            P_MIN
+        };
+        exp.push(p);
+    }
+    Pow2Weights {
+        rows,
+        cols,
+        sign,
+        exp,
+    }
+}
+
+/// Reconstruct float weights (for oracle comparisons).
+pub fn dequantize(q: &Pow2Weights) -> Vec<f32> {
+    q.sign
+        .iter()
+        .zip(&q.exp)
+        .map(|(&s, &p)| s as f32 * (p as f32).exp2())
+        .collect()
+}
+
+/// Quantization error (relative, per element) — bounded by the octave:
+/// `|wq/w| ∈ [2^-0.5, 2^0.5]` wherever `|w| ∈ [2^P_MIN, 2^P_MAX]`.
+pub fn max_relative_error(w: &[f32], q: &Pow2Weights) -> f32 {
+    let deq = dequantize(q);
+    w.iter()
+        .zip(&deq)
+        .filter(|(w, _)| w.abs() > (P_MIN as f32).exp2() && w.abs() < (P_MAX as f32).exp2())
+        .map(|(w, d)| ((w - d) / w).abs())
+        .fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShift64;
+
+    #[test]
+    fn exact_for_powers_of_two() {
+        let w = [1.0, 2.0, 0.5, -4.0, -0.25];
+        let q = quantize(&w, 1, 5);
+        let d = dequantize(&q);
+        assert_eq!(d, w.to_vec());
+    }
+
+    #[test]
+    fn sign_preserved() {
+        let w = [-0.3, 0.3, -1.7, 0.0];
+        let q = quantize(&w, 2, 2);
+        assert_eq!(q.sign, vec![-1, 1, -1, 1]);
+    }
+
+    #[test]
+    fn exponent_clipped() {
+        let q = quantize(&[1e9, 1e-9], 1, 2);
+        assert_eq!(q.exp[0], P_MAX);
+        assert_eq!(q.exp[1], P_MIN);
+    }
+
+    #[test]
+    fn relative_error_within_octave() {
+        let mut rng = XorShift64::new(5);
+        let w: Vec<f32> = rng.normals(256).iter().map(|x| x * 0.5).collect();
+        let q = quantize(&w, 16, 16);
+        // round(log2) ⇒ ratio within [2^-1/2, 2^1/2] ⇒ rel err ≤ 1 - 2^-1/2 ≈ 0.293...
+        // allow a little slack for boundary rounding.
+        assert!(max_relative_error(&w, &q) < 0.42);
+    }
+}

@@ -1,0 +1,181 @@
+//! `artifacts/manifest.json` parsing: artifact registry + serving topology.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape+dtype of one executable input.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One lowered HLO artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub kind: String,
+    /// raw manifest entry for kind-specific fields (block, expert, tokens…)
+    pub raw: Json,
+}
+
+impl ArtifactMeta {
+    pub fn field_usize(&self, key: &str) -> Option<usize> {
+        self.raw.get(key).and_then(|v| v.as_usize())
+    }
+
+    pub fn field_str(&self, key: &str) -> Option<&str> {
+        self.raw.get(key).and_then(|v| v.as_str())
+    }
+}
+
+/// Serving topology (the MoE pipeline the coordinator runs).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub model: String,
+    pub img: usize,
+    pub patch: usize,
+    pub tokens: usize,
+    pub dim: usize,
+    pub depth: usize,
+    pub num_classes: usize,
+    pub batch_buckets: Vec<usize>,
+    pub token_buckets: Vec<usize>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ArtifactMeta>,
+    pub serve: Option<ServeConfig>,
+    /// whole manifest document (scene definitions, meta, …)
+    pub root: Json,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = Json::parse(&text)?;
+        let mut models = BTreeMap::new();
+        for (name, entry) in root
+            .req("models")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest 'models' is not an object"))?
+        {
+            let inputs = entry
+                .req("inputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("inputs not array"))?
+                .iter()
+                .map(|i| {
+                    Ok(TensorSpec {
+                        shape: i.req("shape")?.usize_vec()?,
+                        dtype: i
+                            .req("dtype")?
+                            .as_str()
+                            .ok_or_else(|| anyhow!("dtype not string"))?
+                            .to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    path: dir.join(
+                        entry
+                            .req("path")?
+                            .as_str()
+                            .ok_or_else(|| anyhow!("path not string"))?,
+                    ),
+                    inputs,
+                    kind: entry
+                        .get("kind")
+                        .and_then(|k| k.as_str())
+                        .unwrap_or("unknown")
+                        .to_string(),
+                    raw: entry.clone(),
+                },
+            );
+        }
+        let serve = match root.get("serve") {
+            Some(s) if s.get("model").is_some() => Some(ServeConfig {
+                model: s.req("model")?.as_str().unwrap_or_default().to_string(),
+                img: s.req("img")?.as_usize().unwrap(),
+                patch: s.req("patch")?.as_usize().unwrap(),
+                tokens: s.req("tokens")?.as_usize().unwrap(),
+                dim: s.req("dim")?.as_usize().unwrap(),
+                depth: s.req("depth")?.as_usize().unwrap(),
+                num_classes: s.req("num_classes")?.as_usize().unwrap(),
+                batch_buckets: s.req("batch_buckets")?.usize_vec()?,
+                token_buckets: s.req("token_buckets")?.usize_vec()?,
+            }),
+            _ => None,
+        };
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            models,
+            serve,
+            root,
+        })
+    }
+
+    /// Default artifacts dir: `$SHIFTADDVIT_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("SHIFTADDVIT_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// All artifacts of a kind, name-sorted.
+    pub fn by_kind(&self, kind: &str) -> Vec<&ArtifactMeta> {
+        self.models.values().filter(|m| m.kind == kind).collect()
+    }
+
+    /// True if the artifacts directory exists with a manifest (used by tests
+    /// to skip gracefully when `make artifacts` has not run).
+    pub fn available() -> bool {
+        Self::default_dir().join("manifest.json").exists()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_synthetic_manifest() {
+        let dir = std::env::temp_dir().join("savit_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"models": {"m": {"path": "m.hlo.txt", "kind": "classifier",
+                "inputs": [{"shape": [1, 4], "dtype": "float32"}], "batch": 1}},
+                "serve": {}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("m").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![1, 4]);
+        assert_eq!(a.kind, "classifier");
+        assert_eq!(a.field_usize("batch"), Some(1));
+        assert!(m.serve.is_none());
+        assert!(m.get("missing").is_err());
+    }
+}

@@ -1,0 +1,147 @@
+//! Thread-local PJRT engine: HLO-text load → compile (cached) → execute.
+//!
+//! Follows /opt/xla-example/load_hlo: text is the interchange format (the
+//! crate's XLA 0.5.1 rejects jax≥0.5 protos with 64-bit instruction ids),
+//! and AOT functions are lowered with `return_tuple=True`, so every output
+//! is a tuple literal decomposed into [`Tensor`]s.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::artifact::Manifest;
+use crate::runtime::tensor::{Tensor, TensorData};
+
+/// A compiled executable plus bookkeeping.
+pub struct Compiled {
+    pub exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    pub compile_ms: f64,
+}
+
+/// Thread-local engine: one PJRT CPU client + a compile cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Compiled>>>,
+}
+
+impl Engine {
+    pub fn new(manifest: Manifest) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn from_default_dir() -> Result<Engine> {
+        Engine::new(Manifest::load(&Manifest::default_dir())?)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Load + compile an artifact by manifest name (cached).
+    pub fn load(&self, name: &str) -> Result<Rc<Compiled>> {
+        if let Some(c) = self.cache.borrow().get(name) {
+            return Ok(c.clone());
+        }
+        let meta = self.manifest.get(name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            meta.path
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {:?}", meta.path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling '{name}'"))?;
+        let compiled = Rc::new(Compiled {
+            exe,
+            name: name.to_string(),
+            compile_ms: t0.elapsed().as_secs_f64() * 1e3,
+        });
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), compiled.clone());
+        Ok(compiled)
+    }
+
+    /// Execute a loaded artifact with host tensors; returns the decomposed
+    /// output tuple as host tensors.
+    pub fn run(&self, compiled: &Compiled, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let result = compiled
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing '{}'", compiled.name))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = tuple.decompose_tuple().context("decomposing tuple")?;
+        parts.into_iter().map(from_literal).collect()
+    }
+
+    /// Convenience: load + run by name.
+    pub fn call(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let c = self.load(name)?;
+        self.run(&c, inputs)
+    }
+
+    /// Load + execute once with zero inputs — pulls PJRT's lazy first-run
+    /// initialization out of the measured hot path (§Perf L3-1).
+    pub fn warm(&self, name: &str) -> Result<()> {
+        let meta = self.manifest.get(name)?;
+        let inputs: Vec<Tensor> = meta
+            .inputs
+            .iter()
+            .map(|spec| {
+                let n: usize = spec.shape.iter().product();
+                if spec.dtype.contains("int") {
+                    Tensor::i32(spec.shape.clone(), vec![0; n])
+                } else {
+                    Tensor::f32(spec.shape.clone(), vec![0.0; n])
+                }
+            })
+            .collect();
+        let c = self.load(name)?;
+        self.run(&c, &inputs)?;
+        Ok(())
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    let lit = match &t.data {
+        TensorData::F32(v) => xla::Literal::vec1(v),
+        TensorData::I32(v) => xla::Literal::vec1(v),
+    };
+    Ok(lit.reshape(&dims)?)
+}
+
+fn from_literal(lit: xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => Ok(Tensor::f32(dims, lit.to_vec::<f32>()?)),
+        xla::ElementType::S32 => Ok(Tensor::i32(dims, lit.to_vec::<i32>()?)),
+        other => bail!("unsupported output element type {other:?}"),
+    }
+}

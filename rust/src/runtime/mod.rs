@@ -1,0 +1,13 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them from
+//! the serving hot path.
+//!
+//! Thread model: the `xla` crate's `PjRtClient` is `Rc`-backed (neither
+//! `Send` nor `Sync`), so an [`engine::Engine`] is strictly thread-local.
+//! Cross-thread parallelism (the MoE's "experts run concurrently") is
+//! provided by [`worker::EnginePool`]: each worker thread owns a private
+//! client + compile cache and exchanges plain [`tensor::Tensor`] messages.
+
+pub mod artifact;
+pub mod engine;
+pub mod tensor;
+pub mod worker;

@@ -1,0 +1,155 @@
+//! Engine worker threads: because PJRT handles are `!Send`, each worker
+//! thread constructs its *own* [`Engine`] (client + compile cache) and the
+//! coordinator talks to it over channels with plain [`Tensor`]s. This is the
+//! substrate for the paper's parallel-expert execution (FasterMoE/DeepSpeed
+//! play this role on GPU clusters).
+
+use std::sync::mpsc;
+use std::thread;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::artifact::Manifest;
+use crate::runtime::engine::Engine;
+use crate::runtime::tensor::Tensor;
+
+enum Msg {
+    Call {
+        name: String,
+        inputs: Vec<Tensor>,
+        reply: mpsc::Sender<Result<Vec<Tensor>>>,
+    },
+    /// Pre-compile a list of artifacts (warmup).
+    Preload {
+        names: Vec<String>,
+        reply: mpsc::Sender<Result<()>>,
+    },
+    Shutdown,
+}
+
+/// Handle to one engine worker thread.
+pub struct EngineWorker {
+    tx: mpsc::Sender<Msg>,
+    handle: Option<thread::JoinHandle<()>>,
+    pub id: usize,
+}
+
+/// Pending reply from a worker.
+pub struct Pending {
+    rx: mpsc::Receiver<Result<Vec<Tensor>>>,
+}
+
+impl Pending {
+    pub fn wait(self) -> Result<Vec<Tensor>> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("engine worker dropped reply"))?
+    }
+}
+
+impl EngineWorker {
+    pub fn spawn(id: usize, manifest: Manifest) -> EngineWorker {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let handle = thread::Builder::new()
+            .name(format!("engine-{id}"))
+            .spawn(move || {
+                let engine = match Engine::new(manifest) {
+                    Ok(e) => e,
+                    Err(e) => {
+                        eprintln!("engine-{id}: failed to init: {e:#}");
+                        return;
+                    }
+                };
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Msg::Call {
+                            name,
+                            inputs,
+                            reply,
+                        } => {
+                            let _ = reply.send(engine.call(&name, &inputs));
+                        }
+                        Msg::Preload { names, reply } => {
+                            // compile AND run once (zeros): PJRT's lazy
+                            // first-execution setup stays off the hot path
+                            let r = names.iter().try_for_each(|n| engine.warm(n));
+                            let _ = reply.send(r);
+                        }
+                        Msg::Shutdown => break,
+                    }
+                }
+            })
+            .expect("spawn engine worker");
+        EngineWorker {
+            tx,
+            handle: Some(handle),
+            id,
+        }
+    }
+
+    /// Asynchronously execute `name` on this worker.
+    pub fn call_async(&self, name: &str, inputs: Vec<Tensor>) -> Pending {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Call {
+                name: name.to_string(),
+                inputs,
+                reply,
+            })
+            .expect("engine worker gone");
+        Pending { rx }
+    }
+
+    /// Synchronous call.
+    pub fn call(&self, name: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        self.call_async(name, inputs).wait()
+    }
+
+    /// Pre-compile artifacts on this worker (blocks until done).
+    pub fn preload(&self, names: &[String]) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Preload {
+                names: names.to_vec(),
+                reply,
+            })
+            .expect("engine worker gone");
+        rx.recv().map_err(|_| anyhow!("worker dropped"))?
+    }
+}
+
+impl Drop for EngineWorker {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A set of engine workers — one per expert (plus one for the backbone).
+pub struct EnginePool {
+    pub workers: Vec<EngineWorker>,
+}
+
+impl EnginePool {
+    pub fn new(n: usize, manifest: &Manifest) -> EnginePool {
+        EnginePool {
+            workers: (0..n.max(1))
+                .map(|i| EngineWorker::spawn(i, manifest.clone()))
+                .collect(),
+        }
+    }
+
+    pub fn worker(&self, i: usize) -> &EngineWorker {
+        &self.workers[i % self.workers.len()]
+    }
+
+    pub fn len(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.workers.is_empty()
+    }
+}

@@ -1,0 +1,123 @@
+//! Tiny benchmark harness (criterion is unavailable offline; DESIGN.md §6).
+//!
+//! `cargo bench` drives `harness = false` binaries that call [`bench`] /
+//! [`Table`] to print the paper's table rows with warmup + repeated timed
+//! runs and mean/p50/p99.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Time `f` for `reps` iterations after `warmup` untimed ones.
+/// Returns per-iteration latencies in milliseconds.
+pub fn time_ms<F: FnMut()>(mut f: F, warmup: usize, reps: usize) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    out
+}
+
+/// One named measurement.
+pub fn bench<F: FnMut()>(name: &str, f: F) -> Summary {
+    let samples = time_ms(f, 3, 10);
+    let s = Summary::from(&samples);
+    println!(
+        "{name:48}  mean {:8.3} ms  p50 {:8.3}  p99 {:8.3}",
+        s.mean, s.p50, s.p99
+    );
+    s
+}
+
+/// Fixed-width table printer for reproducing the paper's tables.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            widths: headers.iter().map(|h| h.len().max(8)).collect(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        for (w, c) in self.widths.iter_mut().zip(cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n== {title} ==");
+        let line: Vec<String> = self
+            .headers
+            .iter()
+            .zip(&self.widths)
+            .map(|(h, w)| format!("{h:>w$}"))
+            .collect();
+        println!("{}", line.join("  "));
+        println!("{}", "-".repeat(line.join("  ").len()));
+        for r in &self.rows {
+            let line: Vec<String> = r
+                .iter()
+                .zip(&self.widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect();
+            println!("{}", line.join("  "));
+        }
+    }
+}
+
+/// Format helper: `12.34` → "12.34", keeping tables compact.
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn f1(x: f64) -> String {
+    format!("{x:.1}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_ms_returns_reps_samples() {
+        let samples = time_ms(
+            || {
+                std::hint::black_box(1 + 1);
+            },
+            1,
+            5,
+        );
+        assert_eq!(samples.len(), 5);
+        assert!(samples.iter().all(|s| *s >= 0.0));
+    }
+
+    #[test]
+    fn table_accepts_rows_and_prints() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.row(&["300000".into(), "4".into()]);
+        t.print("test"); // should not panic
+        assert_eq!(t.rows.len(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into()]);
+    }
+}

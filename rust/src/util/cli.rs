@@ -1,0 +1,119 @@
+//! Minimal CLI flag parser (clap is unavailable offline; DESIGN.md §6).
+//!
+//! Grammar: `binary <subcommand> [--flag value] [--switch] [positional...]`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // `--k=v`, `--k v`, or bare `--switch`.
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn parse() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = parse("serve --batch 8 --verbose --rate=100 input.txt");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("batch"), Some("8"));
+        assert_eq!(a.get("rate"), Some("100"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["input.txt"]);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse("x --n 5 --r 2.5");
+        assert_eq!(a.usize_or("n", 1).unwrap(), 5);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+        assert!((a.f64_or("r", 0.0).unwrap() - 2.5).abs() < 1e-12);
+        assert!(a.usize_or("r", 1).is_err());
+    }
+
+    #[test]
+    fn no_subcommand_when_first_is_flag() {
+        let a = parse("--x 1");
+        assert!(a.subcommand.is_none());
+        assert_eq!(a.get("x"), Some("1"));
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("run --fast");
+        assert!(a.has("fast"));
+        assert!(a.get("fast").is_none());
+    }
+}

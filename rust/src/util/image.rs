@@ -1,0 +1,90 @@
+//! PPM image writer + ASCII heatmaps — used by the Fig. 6/9 token-dispatch
+//! visualisation and the Fig. 10 qualitative NVS renders.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// Write an RGB float image (values in [0,1], row-major, HWC) as binary PPM.
+pub fn write_ppm(path: &Path, rgb: &[f32], w: usize, h: usize) -> Result<()> {
+    assert_eq!(rgb.len(), w * h * 3, "rgb buffer size mismatch");
+    let mut f = std::fs::File::create(path)?;
+    write!(f, "P6\n{w} {h}\n255\n")?;
+    let bytes: Vec<u8> = rgb
+        .iter()
+        .map(|v| (v.clamp(0.0, 1.0) * 255.0).round() as u8)
+        .collect();
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Render a boolean token grid (e.g. Mult-vs-Shift dispatch) as ASCII.
+/// `true` = Mult expert (█), `false` = Shift expert (·) — Fig. 6's
+/// yellow/blue convention.
+pub fn ascii_grid(mask: &[bool], grid: usize) -> String {
+    let mut out = String::new();
+    for y in 0..grid {
+        for x in 0..grid {
+            out.push(if mask[y * grid + x] { '█' } else { '·' });
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Overlay a token mask on an image: Mult tokens keep their color, Shift
+/// tokens are dimmed — PPM version of Fig. 6.
+pub fn overlay_dispatch(
+    img: &[f32],
+    w: usize,
+    h: usize,
+    mask: &[bool],
+    grid: usize,
+) -> Vec<f32> {
+    let patch = w / grid;
+    let mut out = img.to_vec();
+    for y in 0..h {
+        for x in 0..w {
+            let token = (y / patch).min(grid - 1) * grid + (x / patch).min(grid - 1);
+            if !mask[token] {
+                for c in 0..3 {
+                    out[(y * w + x) * 3 + c] *= 0.25;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ppm_roundtrip_header() {
+        let dir = std::env::temp_dir().join("savit_img_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.ppm");
+        let img = vec![0.5f32; 4 * 4 * 3];
+        write_ppm(&p, &img, 4, 4).unwrap();
+        let data = std::fs::read(&p).unwrap();
+        assert!(data.starts_with(b"P6\n4 4\n255\n"));
+        assert_eq!(data.len(), b"P6\n4 4\n255\n".len() + 48);
+    }
+
+    #[test]
+    fn ascii_grid_shape() {
+        let g = ascii_grid(&[true, false, false, true], 2);
+        assert_eq!(g.lines().count(), 2);
+        assert!(g.contains('█') && g.contains('·'));
+    }
+
+    #[test]
+    fn overlay_dims_shift_tokens() {
+        let img = vec![1.0f32; 8 * 8 * 3];
+        let mask = vec![false; 4]; // all Shift → all dimmed
+        let out = overlay_dispatch(&img, 8, 8, &mask, 2);
+        assert!(out.iter().all(|v| (*v - 0.25).abs() < 1e-6));
+    }
+}

@@ -1,0 +1,12 @@
+//! Infrastructure substrates built in-repo (the sandbox vendors only the
+//! `xla` crate's dependency closure — no tokio/clap/serde/criterion/proptest;
+//! see DESIGN.md §6).
+
+pub mod bench;
+pub mod cli;
+pub mod image;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,170 @@
+//! Worker-thread pool with persistent workers (tokio is unavailable offline;
+//! DESIGN.md §6). Used for expert-parallel MoE dispatch and the serving loop.
+//!
+//! Design: N persistent threads pulling boxed jobs from a shared queue
+//! (`Mutex<VecDeque>` + `Condvar`). Jobs signal completion through the
+//! returned [`JoinHandle`]'s channel. No allocation is amortized away — but
+//! workers are persistent, so the hot path never spawns threads (the paper's
+//! "experts run concurrently" requirement).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    ready: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Fixed-size persistent worker pool.
+pub struct Pool {
+    shared: Arc<Shared>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+/// Handle to a submitted job's result.
+pub struct JoinHandle<T> {
+    rx: mpsc::Receiver<T>,
+}
+
+impl<T> JoinHandle<T> {
+    /// Block until the job finishes.
+    pub fn join(self) -> T {
+        self.rx.recv().expect("worker dropped result")
+    }
+}
+
+impl Pool {
+    pub fn new(n: usize) -> Pool {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (0..n.max(1))
+            .map(|i| {
+                let sh = shared.clone();
+                thread::Builder::new()
+                    .name(format!("savit-worker-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Pool { shared, workers }
+    }
+
+    /// Submit a job; returns a handle to its result.
+    pub fn submit<T, F>(&self, f: F) -> JoinHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel();
+        let job: Job = Box::new(move || {
+            let _ = tx.send(f());
+        });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push_back(job);
+        }
+        self.shared.ready.notify_one();
+        JoinHandle { rx }
+    }
+
+    /// Run all closures concurrently and collect results in order.
+    pub fn scatter<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let handles: Vec<_> = jobs.into_iter().map(|f| self.submit(f)).collect();
+        handles.into_iter().map(|h| h.join()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.workers.is_empty()
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                if sh.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                q = sh.ready.wait(q).unwrap();
+            }
+        };
+        job();
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.ready.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn submit_returns_result() {
+        let pool = Pool::new(2);
+        let h = pool.submit(|| 21 * 2);
+        assert_eq!(h.join(), 42);
+    }
+
+    #[test]
+    fn scatter_preserves_order() {
+        let pool = Pool::new(4);
+        let jobs: Vec<_> = (0..16)
+            .map(|i| move || i * i)
+            .collect();
+        let out = pool.scatter(jobs);
+        assert_eq!(out, (0..16).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn all_jobs_run_exactly_once() {
+        let pool = Pool::new(3);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let jobs: Vec<_> = (0..50)
+            .map(|_| {
+                let c = counter.clone();
+                move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                }
+            })
+            .collect();
+        pool.scatter(jobs);
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn drop_shuts_down_cleanly() {
+        let pool = Pool::new(2);
+        let _ = pool.submit(|| 1).join();
+        drop(pool); // must not hang
+    }
+}

@@ -1,0 +1,93 @@
+//! Randomized property-test harness (proptest is unavailable offline;
+//! DESIGN.md §6).
+//!
+//! [`check`] runs a property over `cases` random inputs drawn by a generator
+//! closure; on failure it *shrinks* by asking the generator for "smaller"
+//! inputs (halved size parameter) until the property stops failing, then
+//! panics with the smallest failing seed/size so the case is reproducible.
+
+use crate::util::rng::XorShift64;
+
+/// Run `prop(rng, size)` for `cases` random cases with sizes cycling up to
+/// `max_size`. `prop` returns `Err(msg)` on violation.
+pub fn check<F>(name: &str, cases: usize, max_size: usize, mut prop: F)
+where
+    F: FnMut(&mut XorShift64, usize) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0x5EED_0000u64 + case as u64;
+        let size = 1 + (case % max_size);
+        let mut rng = XorShift64::new(seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // Shrink: halve the size until the property passes, keep the
+            // smallest size that still fails.
+            let mut failing = (size, msg);
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng = XorShift64::new(seed);
+                match prop(&mut rng, s) {
+                    Err(m) => {
+                        failing = (s, m);
+                        if s == 1 {
+                            break;
+                        }
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed={seed:#x}, shrunk size={}): {}",
+                failing.0, failing.1
+            );
+        }
+    }
+}
+
+/// Assert two slices are element-wise close.
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let denom = 1.0f32.max(x.abs()).max(y.abs());
+        if (x - y).abs() / denom > tol {
+            return Err(format!("elem {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("always-true", 20, 8, |_rng, _size| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 20);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails-big'")]
+    fn failing_property_panics_with_shrunk_size() {
+        check("fails-big", 20, 16, |_rng, size| {
+            if size >= 4 {
+                Err("too big".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn assert_close_tolerates_small_error() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0 + 1e-7, 2.0], 1e-5).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-5).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-5).is_err());
+    }
+}

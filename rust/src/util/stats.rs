@@ -1,0 +1,98 @@
+//! Latency/throughput statistics helpers (mean, percentiles, SCV).
+
+/// Summary statistics over a set of samples (e.g. per-request latencies).
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn from(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "no samples");
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: s[0],
+            p50: percentile(&s, 0.50),
+            p90: percentile(&s, 0.90),
+            p99: percentile(&s, 0.99),
+            max: s[n - 1],
+        }
+    }
+}
+
+/// Percentile of a pre-sorted slice (nearest-rank with linear interpolation).
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = pos - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Squared coefficient of variation — the paper's SCV in Eq. (4).
+pub fn scv(values: &[f64]) -> f64 {
+    let n = values.len() as f64;
+    let mean = values.iter().sum::<f64>() / n;
+    let var = values.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    var / (mean * mean + 1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constant() {
+        let s = Summary::from(&[5.0; 10]);
+        assert_eq!(s.mean, 5.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.p50, 5.0);
+        assert_eq!(s.p99, 5.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = [0.0, 1.0, 2.0, 3.0];
+        assert!((percentile(&s, 0.5) - 1.5).abs() < 1e-12);
+        assert_eq!(percentile(&s, 0.0), 0.0);
+        assert_eq!(percentile(&s, 1.0), 3.0);
+    }
+
+    #[test]
+    fn scv_zero_for_balanced() {
+        assert!(scv(&[2.0, 2.0, 2.0]) < 1e-12);
+    }
+
+    #[test]
+    fn scv_grows_with_imbalance() {
+        let balanced = scv(&[1.0, 1.0]);
+        let skewed = scv(&[1.9, 0.1]);
+        assert!(skewed > balanced + 0.5);
+    }
+
+    #[test]
+    fn summary_orders_percentiles() {
+        let xs: Vec<f64> = (0..1000).map(|i| (i as f64) * 0.1).collect();
+        let s = Summary::from(&xs);
+        assert!(s.min <= s.p50 && s.p50 <= s.p90 && s.p90 <= s.p99 && s.p99 <= s.max);
+    }
+}

@@ -1,0 +1,133 @@
+//! Coordinator integration: the full serving pipeline (stem → blocks with
+//! real sparse MoE dispatch → head) against the dense single-HLO model.
+
+use shiftaddvit::coordinator::config::{DispatchMode, ServerConfig};
+use shiftaddvit::coordinator::metrics::Metrics;
+use shiftaddvit::coordinator::scheduler::MoePipeline;
+use shiftaddvit::coordinator::server::serve;
+use shiftaddvit::data::synth_images;
+use shiftaddvit::runtime::artifact::Manifest;
+use shiftaddvit::runtime::engine::Engine;
+use shiftaddvit::runtime::tensor::Tensor;
+
+fn manifest_or_skip() -> Option<Manifest> {
+    if !Manifest::available() {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+        return None;
+    }
+    let m = Manifest::load(&Manifest::default_dir()).unwrap();
+    if m.serve.is_none() {
+        eprintln!("SKIP: no serving topology in manifest");
+        return None;
+    }
+    Some(m)
+}
+
+/// The decomposed pipeline with sparse dispatch must reproduce the dense
+/// single-HLO forward of the same variant (identical weights are baked into
+/// both at AOT time).
+#[test]
+fn pipeline_matches_dense_model() {
+    let Some(m) = manifest_or_skip() else { return };
+    let serve_cfg = m.serve.clone().unwrap();
+    let dense_name = format!(
+        "cls_{}_{}_bs1",
+        serve_cfg.model,
+        m.root
+            .get("serve")
+            .and_then(|s| s.get("variant"))
+            .and_then(|v| v.as_str())
+            .unwrap_or("add_quant_moe_both")
+    );
+    let engine = Engine::new(m.clone()).unwrap();
+    if engine.manifest().get(&dense_name).is_err() {
+        eprintln!("SKIP: {dense_name} not lowered");
+        return;
+    }
+    let pipeline = MoePipeline::new(&m, DispatchMode::Real).unwrap();
+    pipeline.warmup().unwrap();
+    let mut metrics = Metrics::default();
+    for seed in [11u32, 222, 3333] {
+        let s = synth_images::gen_image(seed);
+        let out = pipeline.run_batch(&s.pixels, 1, &mut metrics).unwrap();
+        let dense = engine
+            .call(
+                &dense_name,
+                &[Tensor::f32(vec![1, 32, 32, 3], s.pixels.clone())],
+            )
+            .unwrap();
+        let (a, b) = (
+            out.logits.as_f32().unwrap(),
+            dense[0].as_f32().unwrap(),
+        );
+        for (x, y) in a.iter().zip(b) {
+            assert!(
+                (x - y).abs() < 2e-3,
+                "seed {seed}: pipeline {x} vs dense {y}"
+            );
+        }
+    }
+}
+
+/// All three dispatch modes must agree numerically (they only differ in
+/// scheduling/timing).
+#[test]
+fn dispatch_modes_agree() {
+    let Some(m) = manifest_or_skip() else { return };
+    let s = synth_images::gen_image(42);
+    let mut logits = Vec::new();
+    for mode in [DispatchMode::Real, DispatchMode::Modularized, DispatchMode::Dense] {
+        let pipeline = MoePipeline::new(&m, mode).unwrap();
+        let mut metrics = Metrics::default();
+        let out = pipeline.run_batch(&s.pixels, 1, &mut metrics).unwrap();
+        logits.push(out.logits.as_f32().unwrap().to_vec());
+    }
+    for other in &logits[1..] {
+        for (x, y) in logits[0].iter().zip(other) {
+            assert!((x - y).abs() < 2e-3, "{x} vs {y}");
+        }
+    }
+}
+
+/// Batched execution must agree with per-image execution (padding rows must
+/// not leak into real outputs).
+#[test]
+fn batching_is_transparent() {
+    let Some(m) = manifest_or_skip() else { return };
+    let pipeline = MoePipeline::new(&m, DispatchMode::Real).unwrap();
+    pipeline.warmup().unwrap();
+    let mut metrics = Metrics::default();
+    let n = 3; // pads to bucket 4
+    let (xs, _) = synth_images::gen_batch(500, n);
+    let batched = pipeline.run_batch(&xs, n, &mut metrics).unwrap();
+    for i in 0..n {
+        let s = synth_images::gen_image(500 + i as u32);
+        let single = pipeline.run_batch(&s.pixels, 1, &mut metrics).unwrap();
+        let a = &batched.logits.as_f32().unwrap()[i * 8..(i + 1) * 8];
+        let b = single.logits.as_f32().unwrap();
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < 2e-3, "img {i}: batched {x} vs single {y}");
+        }
+    }
+}
+
+/// End-to-end serve() smoke: batching, routing, metrics, accuracy counter.
+#[test]
+fn serve_end_to_end() {
+    let Some(m) = manifest_or_skip() else { return };
+    let cfg = ServerConfig {
+        requests: 12,
+        max_batch: 4,
+        batch_deadline_ms: 1.0,
+        dispatch: DispatchMode::Real,
+        arrival_ms: 0.0,
+    };
+    let report = serve(&m, &cfg).unwrap();
+    assert_eq!(report.metrics.requests, 12);
+    assert!(report.metrics.batches >= 3); // max_batch 4
+    assert!(report.throughput_rps > 0.0);
+    assert!(report.latency.p99 >= report.latency.p50);
+    // routing happened
+    let total_routed: usize = report.metrics.expert_tokens.iter().sum();
+    assert!(total_routed > 0);
+}

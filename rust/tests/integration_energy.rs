@@ -1,0 +1,101 @@
+//! Energy/area model integration: paper-shape assertions across the whole
+//! model zoo (the qualitative claims of Tables 3/13 and Fig. 3 must hold).
+
+use shiftaddvit::energy::area::AreaModel;
+use shiftaddvit::energy::eyeriss::{energy, Hierarchy};
+use shiftaddvit::model::config::{classifier, gnt, lra, nerf};
+use shiftaddvit::model::ops::{count, Variant};
+
+const MODELS: [&str; 5] = ["pvtv2_b0", "pvtv1_t", "pvtv2_b1", "pvtv2_b2", "deit_t"];
+
+/// Table 3 shape: ShiftAddViT saves energy on every model.
+#[test]
+fn energy_savings_hold_across_zoo() {
+    let h = Hierarchy::default();
+    for m in MODELS {
+        let spec = classifier(m);
+        let base = energy(&count(&spec, Variant::ADD), &h).total_mj(); // Ecoformer-like
+        let ours = energy(&count(&spec, Variant::SHIFTADD_MOE), &h).total_mj();
+        let saving = 1.0 - ours / base;
+        assert!(
+            saving > 0.05 && saving < 0.9,
+            "{m}: saving {saving} out of band"
+        );
+    }
+}
+
+/// Table 13 shape: under equal chip area, each reparameterization step cuts
+/// latency, with orderings preserved on both reported models.
+#[test]
+fn area_latency_ladder() {
+    let a = AreaModel::default();
+    for m in ["pvtv2_b0", "pvtv2_b1"] {
+        let spec = classifier(m);
+        let msa = a.latency_ms(&count(&spec, Variant::MSA));
+        let add = a.latency_ms(&count(&spec, Variant::ADD));
+        let shift = a.latency_ms(&count(&spec, Variant::ADD_SHIFT_BOTH));
+        let moe = a.latency_ms(&count(&spec, Variant::SHIFTADD_MOE));
+        assert!(msa > add && add > moe && moe > shift, "{m}: {msa} {add} {moe} {shift}");
+        // paper's B0 ratios: 60.5/15.87 ≈ 3.8, 15.87/2.77 ≈ 5.7 — check the
+        // factors are at least 1.5× at each step.
+        assert!(msa / add > 1.5, "{m}");
+        assert!(add / shift > 1.5, "{m}");
+    }
+}
+
+/// Fig. 3 shape: GNT energy reduction ≈ 40.9% for the full ShiftAddViT.
+#[test]
+fn gnt_energy_reduction_band() {
+    let h = Hierarchy::default();
+    let base = energy(&count(&gnt(), Variant::MSA), &h).total_mj();
+    let ours = energy(&count(&gnt(), Variant::ADD_SHIFT_BOTH), &h).total_mj();
+    let saving = 1.0 - ours / base;
+    assert!(saving > 0.2 && saving < 0.9, "saving {saving}");
+}
+
+/// Table 5 shape: GNT costs more than NeRF (more layers — paper notes this).
+#[test]
+fn gnt_costs_more_than_nerf() {
+    let h = Hierarchy::default();
+    let g = energy(&count(&gnt(), Variant::MSA), &h).total_mj();
+    let n = energy(&count(&nerf(), Variant::MSA), &h).total_mj();
+    assert!(g > n, "GNT {g} vs NeRF {n}");
+}
+
+/// Table 11 shape: ShiftAdd-Transformer beats the quadratic Transformer on
+/// both latency and energy at every paper sequence length.
+#[test]
+fn lra_wins_at_all_lengths() {
+    let h = Hierarchy::default();
+    let a = AreaModel::default();
+    let shiftadd = Variant {
+        attn: shiftaddvit::model::ops::Attn::LinearAdd,
+        attn_linear: shiftaddvit::model::ops::Lin::Shift,
+        mlp: shiftaddvit::model::ops::Mlp::Shift,
+    };
+    for seq in [1024usize, 2048, 4096] {
+        let spec = lra(seq);
+        let base_ops = count(&spec, Variant::MSA);
+        let ours_ops = count(&spec, shiftadd);
+        assert!(
+            energy(&ours_ops, &h).total_mj() < energy(&base_ops, &h).total_mj(),
+            "seq {seq} energy"
+        );
+        assert!(
+            a.latency_ms(&ours_ops) < a.latency_ms(&base_ops),
+            "seq {seq} latency"
+        );
+    }
+    // and the advantage grows with sequence length (quadratic vs linear)
+    let r1 = {
+        let s = lra(1024);
+        energy(&count(&s, Variant::MSA), &h).total_mj()
+            / energy(&count(&s, shiftadd), &h).total_mj()
+    };
+    let r4 = {
+        let s = lra(4096);
+        energy(&count(&s, Variant::MSA), &h).total_mj()
+            / energy(&count(&s, shiftadd), &h).total_mj()
+    };
+    assert!(r4 > r1, "ratio should grow with seq: {r1} vs {r4}");
+}

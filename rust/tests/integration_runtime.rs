@@ -1,0 +1,124 @@
+//! Runtime integration: load real artifacts, execute, validate numerics.
+//! Tests skip (with a notice) when `make artifacts` has not been run.
+
+use shiftaddvit::data::synth_images;
+use shiftaddvit::runtime::artifact::Manifest;
+use shiftaddvit::runtime::engine::Engine;
+use shiftaddvit::runtime::tensor::Tensor;
+
+fn engine_or_skip() -> Option<Engine> {
+    if !Manifest::available() {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+        return None;
+    }
+    Some(Engine::from_default_dir().expect("engine"))
+}
+
+#[test]
+fn manifest_loads_and_lists_artifacts() {
+    let Some(engine) = engine_or_skip() else { return };
+    let m = engine.manifest();
+    assert!(!m.models.is_empty());
+    // every referenced HLO file exists on disk
+    for meta in m.models.values() {
+        assert!(meta.path.exists(), "missing {:?}", meta.path);
+    }
+}
+
+#[test]
+fn classifier_executes_and_shapes_match() {
+    let Some(engine) = engine_or_skip() else { return };
+    let names: Vec<String> = engine
+        .manifest()
+        .by_kind("classifier")
+        .iter()
+        .map(|m| m.name.clone())
+        .collect();
+    assert!(!names.is_empty(), "no classifier artifacts");
+    let name = &names[0];
+    let meta = engine.manifest().get(name).unwrap();
+    let bs = meta.inputs[0].shape[0];
+    let (xs, _) = synth_images::gen_batch(1, bs);
+    let out = engine
+        .call(name, &[Tensor::f32(vec![bs, 32, 32, 3], xs)])
+        .expect("execute");
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].shape, vec![bs, 8]);
+    assert!(out[0].as_f32().unwrap().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn pallas_lowered_model_matches_dense_lowering() {
+    // The three-layer composition proof: the pallas-kernel HLO and the dense
+    // HLO of the same variant+weights must produce (near-)identical logits.
+    let Some(engine) = engine_or_skip() else { return };
+    let pallas = "pallas_pvtv2_b0_add_quant_moe_both_bs1";
+    let dense = "cls_pvtv2_b0_add_quant_moe_both_bs1";
+    if engine.manifest().get(pallas).is_err() || engine.manifest().get(dense).is_err() {
+        eprintln!("SKIP: pallas/dense pair not in manifest");
+        return;
+    }
+    let (xs, _) = synth_images::gen_batch(77, 1);
+    let input = Tensor::f32(vec![1, 32, 32, 3], xs);
+    let a = engine.call(pallas, std::slice::from_ref(&input)).unwrap();
+    let b = engine.call(dense, std::slice::from_ref(&input)).unwrap();
+    let (av, bv) = (a[0].as_f32().unwrap(), b[0].as_f32().unwrap());
+    for (x, y) in av.iter().zip(bv) {
+        assert!((x - y).abs() < 1e-3, "pallas {x} vs dense {y}");
+    }
+}
+
+#[test]
+fn execution_is_deterministic() {
+    let Some(engine) = engine_or_skip() else { return };
+    let name = "cls_pvtv2_b0_msa_bs1";
+    if engine.manifest().get(name).is_err() {
+        eprintln!("SKIP: {name} not in manifest");
+        return;
+    }
+    let (xs, _) = synth_images::gen_batch(3, 1);
+    let input = Tensor::f32(vec![1, 32, 32, 3], xs);
+    let a = engine.call(name, std::slice::from_ref(&input)).unwrap();
+    let b = engine.call(name, std::slice::from_ref(&input)).unwrap();
+    assert_eq!(a[0], b[0]);
+}
+
+#[test]
+fn compile_cache_hits() {
+    let Some(engine) = engine_or_skip() else { return };
+    let name = engine.manifest().models.keys().next().unwrap().clone();
+    let before = engine.cached();
+    let _ = engine.load(&name).unwrap();
+    let after_first = engine.cached();
+    let _ = engine.load(&name).unwrap();
+    assert_eq!(engine.cached(), after_first);
+    assert!(after_first >= before);
+}
+
+#[test]
+fn engine_worker_round_trip() {
+    use shiftaddvit::runtime::worker::EngineWorker;
+    if !Manifest::available() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let manifest = Manifest::load(&Manifest::default_dir()).unwrap();
+    let names: Vec<String> = manifest
+        .by_kind("classifier")
+        .iter()
+        .map(|m| m.name.clone())
+        .collect();
+    if names.is_empty() {
+        return;
+    }
+    let meta = manifest.get(&names[0]).unwrap();
+    let bs = meta.inputs[0].shape[0];
+    let worker = EngineWorker::spawn(0, manifest.clone());
+    let (xs, _) = synth_images::gen_batch(10, bs);
+    // two concurrent calls through the same worker
+    let p1 = worker.call_async(&names[0], vec![Tensor::f32(vec![bs, 32, 32, 3], xs.clone())]);
+    let p2 = worker.call_async(&names[0], vec![Tensor::f32(vec![bs, 32, 32, 3], xs)]);
+    let r1 = p1.wait().unwrap();
+    let r2 = p2.wait().unwrap();
+    assert_eq!(r1[0], r2[0]);
+}

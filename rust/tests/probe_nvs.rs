@@ -1,0 +1,93 @@
+//! Input-sensitivity + cross-language numerics regression.
+//!
+//! Guards against the constant-elision failure mode: `as_hlo_text()`
+//! without `print_large_constants=True` elides baked weights as
+//! `constant({...})`, which the text parser fills with zeros — every model
+//! then produces input-INDEPENDENT outputs. These tests fail loudly if that
+//! ever regresses.
+
+use shiftaddvit::data::synth_images;
+use shiftaddvit::runtime::artifact::Manifest;
+use shiftaddvit::runtime::engine::Engine;
+use shiftaddvit::runtime::tensor::Tensor;
+
+fn engine_or_skip() -> Option<Engine> {
+    if !Manifest::available() {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+        return None;
+    }
+    Some(Engine::from_default_dir().expect("engine"))
+}
+
+#[test]
+fn classifier_outputs_depend_on_input() {
+    let Some(e) = engine_or_skip() else { return };
+    if e.manifest().get("cls_pvtv2_b0_msa_bs1").is_err() {
+        return;
+    }
+    let (x1, _) = synth_images::gen_batch(1, 1);
+    let (x2, _) = synth_images::gen_batch(99, 1);
+    let a = e
+        .call("cls_pvtv2_b0_msa_bs1", &[Tensor::f32(vec![1, 32, 32, 3], x1)])
+        .unwrap();
+    let b = e
+        .call("cls_pvtv2_b0_msa_bs1", &[Tensor::f32(vec![1, 32, 32, 3], x2)])
+        .unwrap();
+    assert_ne!(
+        a[0], b[0],
+        "logits identical for different images — baked weights were elided \
+         from the HLO text (see aot.py::to_hlo_text)"
+    );
+}
+
+#[test]
+fn artifact_has_no_elided_constants() {
+    let Some(e) = engine_or_skip() else { return };
+    for name in ["cls_pvtv2_b0_msa_bs1", "nvs_gnt_r256", "serve_head_bs1"] {
+        if let Ok(meta) = e.manifest().get(name) {
+            let text = std::fs::read_to_string(&meta.path).unwrap();
+            assert!(
+                !text.contains("{...}"),
+                "{name}: HLO text contains elided constants"
+            );
+        }
+    }
+}
+
+#[test]
+fn nvs_outputs_depend_on_rays() {
+    let Some(e) = engine_or_skip() else { return };
+    if e.manifest().get("nvs_gnt_r256").is_err() {
+        return;
+    }
+    let n = 256;
+    let o = vec![0.0f32; n * 3];
+    let mk = |dx: f32, dy: f32| {
+        let mut d = vec![0.0f32; n * 3];
+        for i in 0..n {
+            d[i * 3] = dx;
+            d[i * 3 + 1] = dy;
+            d[i * 3 + 2] = 1.0;
+        }
+        d
+    };
+    let r1 = e
+        .call(
+            "nvs_gnt_r256",
+            &[
+                Tensor::f32(vec![n, 3], o.clone()),
+                Tensor::f32(vec![n, 3], mk(0.5, 0.5)),
+            ],
+        )
+        .unwrap();
+    let r2 = e
+        .call(
+            "nvs_gnt_r256",
+            &[
+                Tensor::f32(vec![n, 3], o),
+                Tensor::f32(vec![n, 3], mk(-0.5, -0.2)),
+            ],
+        )
+        .unwrap();
+    assert_ne!(r1[0], r2[0], "NVS output ignores ray directions");
+}

@@ -1,0 +1,161 @@
+//! Property tests on coordinator/MoE/kernel invariants (randomized via the
+//! in-repo harness — DESIGN.md §6).
+
+use shiftaddvit::kernels::{matadd, matmul, matshift};
+use shiftaddvit::moe::balance::{alphas, ideal_split, sync_cost};
+use shiftaddvit::moe::dispatch::{partition, scatter};
+use shiftaddvit::moe::router::{route, softmax};
+use shiftaddvit::quant::{binary, pow2};
+use shiftaddvit::util::prop::{assert_close, check};
+use shiftaddvit::util::stats::scv;
+
+/// Every token appears in exactly one partition, regardless of routing.
+#[test]
+fn prop_partition_is_a_permutation() {
+    check("partition-permutation", 50, 64, |rng, size| {
+        let tokens = size * 3 + 1;
+        let dim = 1 + size % 7;
+        let feats = rng.normals(tokens * dim);
+        let mut gates = Vec::new();
+        for _ in 0..tokens {
+            let mut g = [rng.uniform(), rng.uniform()];
+            softmax(&mut g);
+            gates.extend_from_slice(&g);
+        }
+        let routes = route(&gates, 2);
+        let parts = partition(&feats, dim, &routes, 2, &[8, 32]);
+        let mut seen = vec![0usize; tokens];
+        for p in &parts {
+            if p.indices.len() > p.bucket {
+                return Err(format!("bucket overflow {} > {}", p.indices.len(), p.bucket));
+            }
+            for &i in &p.indices {
+                seen[i] += 1;
+            }
+        }
+        if seen.iter().any(|&c| c != 1) {
+            return Err("token not covered exactly once".into());
+        }
+        Ok(())
+    });
+}
+
+/// Gather→scatter with identity experts reconstructs gate-scaled input.
+#[test]
+fn prop_dispatch_round_trip() {
+    check("dispatch-round-trip", 30, 32, |rng, size| {
+        let tokens = size + 1;
+        let dim = 4;
+        let feats = rng.normals(tokens * dim);
+        let mut gates = Vec::new();
+        for _ in 0..tokens {
+            let mut g = [rng.uniform() + 1e-3, rng.uniform() + 1e-3];
+            softmax(&mut g);
+            gates.extend_from_slice(&g);
+        }
+        let routes = route(&gates, 2);
+        let parts = partition(&feats, dim, &routes, 2, &[4, 16, 64]);
+        let mut out = vec![0.0f32; tokens * dim];
+        for p in &parts {
+            scatter(&mut out, dim, p, &p.padded, &routes);
+        }
+        let want: Vec<f32> = (0..tokens * dim)
+            .map(|i| routes[i / dim].gate * feats[i])
+            .collect();
+        assert_close(&out, &want, 1e-5)
+    });
+}
+
+/// The ideal split always (weakly) beats the even split on makespan and
+/// zeroes the α-weighted SCV.
+#[test]
+fn prop_ideal_split_optimality() {
+    check("ideal-split", 40, 20, |rng, size| {
+        let l0 = 0.1 + 4.0 * rng.uniform() as f64;
+        let l1 = 0.1 + 4.0 * rng.uniform() as f64;
+        let total = 50 + size * 10;
+        let split = ideal_split(&[l0, l1], total);
+        if split.iter().sum::<usize>() != total {
+            return Err("split loses tokens".into());
+        }
+        let (mk_ideal, _) = sync_cost(&split, &[l0, l1]);
+        let (mk_even, _) = sync_cost(&[total / 2, total - total / 2], &[l0, l1]);
+        if mk_ideal > mk_even * 1.05 + 1e-9 {
+            return Err(format!("ideal {mk_ideal} worse than even {mk_even}"));
+        }
+        // α-weighted loads near-equal at the ideal split
+        let a = alphas(&[l0, l1]);
+        let w: Vec<f64> = split
+            .iter()
+            .zip(&a)
+            .map(|(&n, al)| n as f64 * al)
+            .collect();
+        if scv(&w) > 0.05 {
+            return Err(format!("scv {} at ideal split", scv(&w)));
+        }
+        Ok(())
+    });
+}
+
+/// MatShift ≍ dense matmul of dequantized weights within INT8 error.
+#[test]
+fn prop_matshift_semantics() {
+    check("matshift-semantics", 25, 16, |rng, size| {
+        let (m, k, n) = (size + 1, size + 2, size + 3);
+        let x = rng.normals(m * k);
+        let wf: Vec<f32> = rng.normals(k * n).iter().map(|v| v * 0.25).collect();
+        let w = pow2::quantize(&wf, k, n);
+        let got = matshift::matshift_f32(&x, &w, m);
+        let want = matmul::matmul_naive(&x, &pow2::dequantize(&w), m, k, n);
+        assert_close(&got, &want, 0.1)
+    });
+}
+
+/// MatAdd with a ±1 operand equals 2·Hamming-similarity − d accumulation
+/// (the packed-bits identity that makes binarized attention adds-only).
+#[test]
+fn prop_matadd_hamming_identity() {
+    check("matadd-hamming", 25, 16, |rng, size| {
+        let d = 8 * (1 + size % 4); // multiple of 8 for clean packing
+        let a: Vec<i8> = (0..d)
+            .map(|_| if rng.uniform() < 0.5 { -1 } else { 1 })
+            .collect();
+        let b: Vec<i8> = (0..d)
+            .map(|_| if rng.uniform() < 0.5 { -1 } else { 1 })
+            .collect();
+        let af: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+        let dot = matadd::matadd_f32(&af, &b, 1, d, 1)[0];
+        let m = binary::hamming_sim(&binary::pack_bits(&a), &binary::pack_bits(&b), d) as f32;
+        if (dot - (2.0 * m - d as f32)).abs() > 1e-5 {
+            return Err(format!("dot {dot} vs 2m-d {}", 2.0 * m - d as f32));
+        }
+        Ok(())
+    });
+}
+
+/// pow2 quantization: dequantized magnitude within one octave, signs exact.
+#[test]
+fn prop_pow2_octave_bound() {
+    check("pow2-octave", 30, 32, |rng, size| {
+        let n = size + 1;
+        let w: Vec<f32> = rng
+            .normals(n)
+            .iter()
+            .map(|v| v.clamp(-100.0, 100.0))
+            .collect();
+        let q = pow2::quantize(&w, 1, n);
+        let d = pow2::dequantize(&q);
+        for (x, y) in w.iter().zip(&d) {
+            if x.abs() > 0.004 && x.abs() < 100.0 {
+                let ratio = y.abs() / x.abs();
+                if !(0.7..=1.42).contains(&ratio) {
+                    return Err(format!("ratio {ratio} for {x} -> {y}"));
+                }
+                if x.signum() != y.signum() {
+                    return Err("sign flip".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
