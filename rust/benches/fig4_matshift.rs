@@ -1,7 +1,13 @@
-//! Fig. 4/7 — MatShift kernel speedups over MatMul/FakeShift (PVT shapes).
+//! Fig. 4/7 — MatShift backend sweep over the KernelRegistry: human table
+//! plus machine-readable per-backend JSON from the same measurements. New
+//! backends registered in `KernelRegistry::with_defaults()` are benchmarked
+//! without edits here.
 use shiftaddvit::harness::figures;
 
 fn main() {
-    figures::fig4_matshift(1); // Fig. 4 (batch 1)
-    figures::fig4_matshift(4); // Fig. 7 companion (batched; paper uses 32)
+    for batch in [1usize, 4] {
+        // Fig. 4 at batch 1; Fig. 7 companion batched (paper uses 32).
+        let j = figures::fig4_matshift(batch);
+        println!("{j}");
+    }
 }

@@ -1,7 +1,13 @@
-//! Fig. 5/8 — MatAdd kernel speedups over MatMul (PVT attention shapes).
+//! Fig. 5/8 — MatAdd backend sweep over the KernelRegistry: human table
+//! plus machine-readable per-backend JSON from the same measurements. New
+//! backends registered in `KernelRegistry::with_defaults()` are benchmarked
+//! without edits here.
 use shiftaddvit::harness::figures;
 
 fn main() {
-    figures::fig5_matadd(1); // Fig. 5
-    figures::fig5_matadd(4); // Fig. 8 companion
+    for batch in [1usize, 4] {
+        // Fig. 5 at batch 1; Fig. 8 companion batched.
+        let j = figures::fig5_matadd(batch);
+        println!("{j}");
+    }
 }

@@ -1,13 +1,22 @@
 //! Figures 3/4/5 (+7/8): the Eyeriss energy breakdown and the MatShift /
 //! MatAdd kernel speedup sweeps over the paper's PVT shapes.
+//!
+//! The kernel sweeps enumerate `KernelRegistry` backends instead of calling
+//! free functions: registering a new backend adds a column to the fig4/fig5
+//! tables (and an entry to the bench JSON) with no edits here. The planner's
+//! per-shape pick is reported alongside.
+
+use std::sync::Arc;
 
 use crate::energy::eyeriss::{energy, Hierarchy};
 use crate::energy::ops::MacStyle;
-use crate::kernels::{fakeshift, matadd, matmul, matshift};
+use crate::kernels::api::{LinearKernel, Primitive, RawWeights};
+use crate::kernels::planner::{Planner, Shape};
+use crate::kernels::registry::KernelRegistry;
 use crate::model::config::{classifier, gnt};
 use crate::model::ops::{count, Variant};
-use crate::quant::pow2;
 use crate::util::bench::{f2, time_ms, Table};
+use crate::util::json::Json;
 use crate::util::rng::XorShift64;
 use crate::util::stats::Summary;
 
@@ -53,52 +62,118 @@ fn median_ms<F: FnMut()>(f: F) -> f64 {
     Summary::from(&time_ms(f, 2, 7)).p50
 }
 
-/// Fig. 4/7 — MatShift vs MatMul / FakeShift across PVT MLP shapes.
-pub fn fig4_matshift(batch: usize) {
-    let mut t = Table::new(&[
-        "MxKxN", "MatMul (ms)", "FakeShift (ms)", "MatShift (ms)", "vs MatMul", "vs FakeShift",
-    ]);
-    let mut rng = XorShift64::new(11);
-    let mut speedups = (0.0, 0.0);
-    for (m0, k, n) in FIG4_SHAPES {
+/// Median run time of one registry backend on `(m×k) @ (k×n)`. Preparation
+/// (weight packing + activation quantization) happens once outside the
+/// timed region — deployment formats are produced at model-conversion time,
+/// mirroring the paper's INT8-weight-plane TVM kernels.
+fn time_kernel(kernel: &dyn LinearKernel, raw: &RawWeights, x: &[f32], m: usize) -> f64 {
+    let w = kernel.prepare(raw);
+    let op = kernel.prepare_operand(x, m, raw.k);
+    let mut out = vec![0.0f32; m * raw.n];
+    median_ms(|| {
+        kernel.run(&w, &op, &mut out);
+        std::hint::black_box(&out);
+    })
+}
+
+/// Registry-driven kernel sweep behind Figs. 4/5: time two baseline
+/// backends and every backend of `contender`, plus the planner's pick.
+/// Prints the human table and returns the same measurements as JSON, so
+/// callers never measure twice (table and JSON stay consistent).
+fn kernel_sweep(
+    title: &str,
+    shapes: &[(usize, usize, usize)],
+    batch: usize,
+    baselines: [&str; 2],
+    contender: Primitive,
+    seed: u64,
+) -> Json {
+    let registry = Arc::new(KernelRegistry::with_defaults());
+    let planner = Planner::new(registry.clone());
+    let contenders = registry.for_primitive(contender);
+    let mut headers: Vec<String> = vec!["MxKxN".into()];
+    for b in baselines {
+        headers.push(format!("{b} (ms)"));
+    }
+    for c in &contenders {
+        headers.push(format!("{} (ms)", c.id()));
+    }
+    headers.push("planner pick".into());
+    headers.push("best speedup".into());
+    let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&header_refs);
+
+    let mut rng = XorShift64::new(seed);
+    let mut speedup_sum = 0.0;
+    let mut shape_objs = Vec::new();
+    for &(m0, k, n) in shapes {
         let m = m0 * batch;
         let x = rng.normals(m * k);
-        let wf = rng.normals(k * n);
-        let w = pow2::quantize(&wf, k, n);
-        // Deployment formats are prepared once (binarization/quantization is
-        // part of model conversion, not the kernel) — mirroring the paper's
-        // INT8-weight-plane TVM kernels.
-        let planes = matshift::ShiftPlanes::from_pow2(&w);
-        let xq: Vec<i32> = crate::quant::int8::Int8Quant::calibrate(&x)
-            .quantize(&x)
-            .iter()
-            .map(|&v| v as i32)
-            .collect();
-        let t_mm = median_ms(|| {
-            std::hint::black_box(matmul::matmul_f32(&x, &wf, m, k, n));
-        });
-        let t_fake = median_ms(|| {
-            std::hint::black_box(fakeshift::fakeshift_rematerialize(&x, &w, m));
-        });
-        let t_shift = median_ms(|| {
-            std::hint::black_box(matshift::matshift_fast(&xq, &planes, m));
-        });
-        speedups.0 += t_mm / t_shift;
-        speedups.1 += t_fake / t_shift;
-        t.row(&[
-            format!("{m}x{k}x{n}"),
-            f2(t_mm),
-            f2(t_fake),
-            f2(t_shift),
-            format!("{:.2}x", t_mm / t_shift),
-            format!("{:.2}x", t_fake / t_shift),
-        ]);
+        let raw = RawWeights::new(rng.normals(k * n), k, n);
+        let mut row = vec![format!("{m}x{k}x{n}")];
+        let mut base_ms = f64::INFINITY;
+        let mut baseline_pairs = Vec::new();
+        for b in baselines {
+            let kernel = registry.lookup(b).unwrap_or_else(|| panic!("no {b}"));
+            let ms = time_kernel(&*kernel, &raw, &x, m);
+            base_ms = base_ms.min(ms);
+            baseline_pairs.push((b.to_string(), Json::num(ms)));
+            row.push(f2(ms));
+        }
+        let mut best_ms = f64::INFINITY;
+        let mut best_backend = "";
+        let mut backend_pairs = Vec::new();
+        for c in &contenders {
+            let ms = time_kernel(&**c, &raw, &x, m);
+            if ms < best_ms {
+                best_ms = ms;
+                best_backend = c.backend();
+            }
+            // full "primitive/backend" ids, consistent with `chosen`
+            backend_pairs.push((c.id(), Json::num(ms)));
+            row.push(f2(ms));
+        }
+        // Seed the planner with the measurement just taken (instead of
+        // letting choose() re-benchmark the same shape on fresh data, which
+        // wastes bench wall-clock and can contradict the printed column).
+        planner.pin(contender, Shape::new(m, k, n), best_backend);
+        let pick = planner.choose(contender, Shape::new(m, k, n));
+        row.push(pick.id());
+        row.push(format!("{:.2}x", base_ms / best_ms));
+        speedup_sum += base_ms / best_ms;
+        t.row(&row);
+        shape_objs.push(Json::obj(vec![
+            ("m", Json::num(m as f64)),
+            ("k", Json::num(k as f64)),
+            ("n", Json::num(n as f64)),
+            ("baseline_ms", Json::Obj(baseline_pairs.into_iter().collect())),
+            ("backend_ms", Json::Obj(backend_pairs.into_iter().collect())),
+            ("chosen", Json::str(pick.id())),
+        ]));
     }
     t.print(&format!(
-        "Fig. 4/7 — MatShift speedups (batch {batch}); avg {:.2}x vs MatMul, {:.2}x vs FakeShift",
-        speedups.0 / FIG4_SHAPES.len() as f64,
-        speedups.1 / FIG4_SHAPES.len() as f64
+        "{title}; avg best-backend speedup {:.2}x vs best baseline",
+        speedup_sum / shapes.len() as f64
     ));
+    Json::obj(vec![
+        ("primitive", Json::str(contender.name())),
+        ("batch", Json::num(batch as f64)),
+        ("shapes", Json::Arr(shape_objs)),
+    ])
+}
+
+/// Fig. 4/7 — every registered MatShift backend vs the MatMul / FakeShift
+/// baselines across PVT MLP shapes. Prints the table; the returned JSON
+/// carries the same measurements (the benches dump it to stdout).
+pub fn fig4_matshift(batch: usize) -> Json {
+    kernel_sweep(
+        &format!("Fig. 4/7 — MatShift backends (batch {batch})"),
+        &FIG4_SHAPES,
+        batch,
+        ["matmul/blocked", "fakeshift/ref"],
+        Primitive::MatShift,
+        11,
+    )
 }
 
 /// The attention shapes of Fig. 5 (B×H×K×M inputs).
@@ -110,56 +185,19 @@ pub const FIG5_SHAPES: [(usize, usize, usize); 5] = [
     (784, 64, 256),
 ];
 
-/// Fig. 5/8 — MatAdd vs MatMul across PVT attention shapes.
-///
-/// Two baselines, mirroring the paper: "PyTorch MatMul" (the default einsum
-/// operator — our unblocked naive kernel plays that role) and "TVM MatMul"
-/// (a tuned kernel — our cache-blocked `matmul_f32`).
-pub fn fig5_matadd(batch: usize) {
-    let mut t = Table::new(&[
-        "MxKxN",
-        "naiveMM (ms)",
-        "tunedMM (ms)",
-        "MatAdd (ms)",
-        "vs naive",
-        "vs tuned",
-    ]);
-    let mut rng = XorShift64::new(13);
-    let mut speedups = (0.0, 0.0);
-    for (m0, k, n) in FIG5_SHAPES {
-        let m = m0 * batch;
-        let x = rng.normals(m * k);
-        let b: Vec<i8> = (0..k * n)
-            .map(|_| if rng.uniform() < 0.5 { -1 } else { 1 })
-            .collect();
-        let bf: Vec<f32> = b.iter().map(|&v| v as f32).collect();
-        // Binary codes arrive pre-packed (the binarizer's output format).
-        let packed = matadd::PackedPm1::pack(&b, k, n);
-        let t_naive = median_ms(|| {
-            std::hint::black_box(matmul::matmul_naive(&x, &bf, m, k, n));
-        });
-        let t_mm = median_ms(|| {
-            std::hint::black_box(matmul::matmul_f32(&x, &bf, m, k, n));
-        });
-        let t_add = median_ms(|| {
-            std::hint::black_box(matadd::matadd_pm1(&x, &packed, m));
-        });
-        speedups.0 += t_naive / t_add;
-        speedups.1 += t_mm / t_add;
-        t.row(&[
-            format!("{m}x{k}x{n}"),
-            f2(t_naive),
-            f2(t_mm),
-            f2(t_add),
-            format!("{:.2}x", t_naive / t_add),
-            format!("{:.2}x", t_mm / t_add),
-        ]);
-    }
-    t.print(&format!(
-        "Fig. 5/8 — MatAdd speedups (batch {batch}); avg {:.2}x vs naive (PyTorch-like), {:.2}x vs tuned (TVM-like) MatMul",
-        speedups.0 / FIG5_SHAPES.len() as f64,
-        speedups.1 / FIG5_SHAPES.len() as f64
-    ));
+/// Fig. 5/8 — every registered MatAdd backend vs the MatMul baselines
+/// across PVT attention shapes: "PyTorch MatMul" (`matmul/naive`) and
+/// "TVM MatMul" (`matmul/blocked`). Prints the table; the returned JSON
+/// carries the same measurements (the benches dump it to stdout).
+pub fn fig5_matadd(batch: usize) -> Json {
+    kernel_sweep(
+        &format!("Fig. 5/8 — MatAdd backends (batch {batch})"),
+        &FIG5_SHAPES,
+        batch,
+        ["matmul/naive", "matmul/blocked"],
+        Primitive::MatAdd,
+        13,
+    )
 }
 
 /// Energy-per-op summary (Table 1 reprint with MAC-style aggregates).

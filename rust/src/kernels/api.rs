@@ -1,0 +1,318 @@
+//! The unified kernel API: one trait for every multiplication primitive.
+//!
+//! A [`LinearKernel`] is a named implementation ("backend") of one
+//! [`Primitive`] under a uniform `(m, k, n)` shape contract:
+//!
+//! - [`LinearKernel::prepare`] — one-time conversion of raw f32 weights into
+//!   the backend's deployment format (f32 copy, pow2 shift planes, ±1
+//!   bitplanes, …). This is model-conversion work, never on the hot path.
+//! - [`LinearKernel::prepare_operand`] — per-call activation layout (and the
+//!   place INT8 activation quantization happens, outside any timed region).
+//! - [`LinearKernel::run`] — `out (m×n) = x (m×k) @ W (k×n)` against the
+//!   prepared formats.
+//!
+//! Backends self-describe their Eyeriss [`MacStyle`] and their numeric
+//! [`LinearKernel::tolerance`] vs the dense oracle, so energy accounting and
+//! the property suite derive from the registry instead of hardcoded tags.
+//! Payloads are `Arc`-shared: row-parallel backends hand them to pool
+//! workers without copying.
+
+use std::sync::Arc;
+
+use crate::energy::ops::MacStyle;
+use crate::kernels::matadd::{PackedB, PackedPm1};
+use crate::kernels::matshift::{PREC, ShiftPlanes};
+use crate::quant::int8::Int8Quant;
+use crate::quant::pow2::{self, Pow2Weights};
+
+/// The paper's multiplication-primitive families.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Primitive {
+    MatMul,
+    MatAdd,
+    MatShift,
+    FakeShift,
+}
+
+impl Primitive {
+    pub const ALL: [Primitive; 4] = [
+        Primitive::MatMul,
+        Primitive::MatAdd,
+        Primitive::MatShift,
+        Primitive::FakeShift,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Primitive::MatMul => "matmul",
+            Primitive::MatAdd => "matadd",
+            Primitive::MatShift => "matshift",
+            Primitive::FakeShift => "fakeshift",
+        }
+    }
+
+    /// Inverse of [`Primitive::name`] (used by `"primitive/backend"` ids).
+    pub fn parse(s: &str) -> Option<Primitive> {
+        Primitive::ALL.iter().copied().find(|p| p.name() == s)
+    }
+}
+
+/// Raw dense f32 weights (k×n row-major) — the conversion-time input every
+/// backend's [`LinearKernel::prepare`] consumes.
+#[derive(Clone, Debug)]
+pub struct RawWeights {
+    pub k: usize,
+    pub n: usize,
+    pub data: Vec<f32>,
+}
+
+impl RawWeights {
+    pub fn new(data: Vec<f32>, k: usize, n: usize) -> RawWeights {
+        assert_eq!(data.len(), k * n, "weight buffer is not k*n");
+        RawWeights { k, n, data }
+    }
+}
+
+/// Deployment weight formats a backend's `prepare` can produce.
+#[derive(Clone, Debug)]
+pub enum PreparedWeights {
+    /// Plain f32 (MatMul baselines, cached FakeShift).
+    Dense {
+        k: usize,
+        n: usize,
+        w: Arc<Vec<f32>>,
+    },
+    /// (sign, exponent) INT8 planes — MatShift reference format.
+    Pow2(Arc<Pow2Weights>),
+    /// Branchless shift/negate planes — MatShift deployment format.
+    Planes(Arc<ShiftPlanes>),
+    /// {-1, 0, +1} codes — MatAdd reference format.
+    Ternary {
+        k: usize,
+        n: usize,
+        b: Arc<Vec<i8>>,
+    },
+    /// Sign/nonzero bit-masks — ternary MatAdd deployment format.
+    Packed(Arc<PackedB>),
+    /// ±1 sign bytes — binary MatAdd deployment format.
+    Pm1(Arc<PackedPm1>),
+}
+
+impl PreparedWeights {
+    pub fn k(&self) -> usize {
+        match self {
+            PreparedWeights::Dense { k, .. } | PreparedWeights::Ternary { k, .. } => *k,
+            PreparedWeights::Pow2(w) => w.rows,
+            PreparedWeights::Planes(p) => p.rows,
+            PreparedWeights::Packed(p) => p.k,
+            PreparedWeights::Pm1(p) => p.k,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        match self {
+            PreparedWeights::Dense { n, .. } | PreparedWeights::Ternary { n, .. } => *n,
+            PreparedWeights::Pow2(w) => w.cols,
+            PreparedWeights::Planes(p) => p.cols,
+            PreparedWeights::Packed(p) => p.n,
+            PreparedWeights::Pm1(p) => p.n,
+        }
+    }
+
+    /// Short format tag for diagnostics (panic messages, JSON dumps).
+    pub fn variant_name(&self) -> &'static str {
+        match self {
+            PreparedWeights::Dense { .. } => "dense",
+            PreparedWeights::Pow2(_) => "pow2",
+            PreparedWeights::Planes(_) => "planes",
+            PreparedWeights::Ternary { .. } => "ternary",
+            PreparedWeights::Packed(_) => "packed",
+            PreparedWeights::Pm1(_) => "pm1",
+        }
+    }
+
+    /// The effective dense weights this prepared form encodes — the oracle
+    /// operand: every backend must satisfy `run(w, x) ≈ x @ w.dense()`
+    /// within its declared [`LinearKernel::tolerance`].
+    pub fn dense(&self) -> Vec<f32> {
+        match self {
+            PreparedWeights::Dense { w, .. } => w.as_ref().clone(),
+            PreparedWeights::Pow2(w) => pow2::dequantize(w),
+            PreparedWeights::Planes(p) => p
+                .sh
+                .iter()
+                .zip(&p.neg)
+                .map(|(&sh, &neg)| {
+                    let mag = ((sh - PREC as i32) as f32).exp2();
+                    if neg != 0 {
+                        -mag
+                    } else {
+                        mag
+                    }
+                })
+                .collect(),
+            PreparedWeights::Ternary { b, .. } => b.iter().map(|&v| v as f32).collect(),
+            PreparedWeights::Packed(p) => p
+                .sign
+                .iter()
+                .zip(&p.nz)
+                .map(|(&s, &nz)| {
+                    if nz == 0 {
+                        0.0
+                    } else if s != 0 {
+                        -1.0
+                    } else {
+                        1.0
+                    }
+                })
+                .collect(),
+            PreparedWeights::Pm1(p) => p
+                .sign
+                .iter()
+                .map(|&s| if s != 0 { -1.0 } else { 1.0 })
+                .collect(),
+        }
+    }
+}
+
+/// Activations in the layout a backend's `run` consumes.
+#[derive(Clone, Debug)]
+pub enum Operand {
+    F32 {
+        m: usize,
+        k: usize,
+        x: Arc<Vec<f32>>,
+    },
+    /// INT8-quantized activations widened to i32, plus the dequant scale.
+    Int8 {
+        m: usize,
+        k: usize,
+        xq: Arc<Vec<i32>>,
+        scale: f32,
+    },
+}
+
+impl Operand {
+    pub fn from_f32(x: &[f32], m: usize, k: usize) -> Operand {
+        assert_eq!(x.len(), m * k, "operand buffer is not m*k");
+        Operand::F32 {
+            m,
+            k,
+            x: Arc::new(x.to_vec()),
+        }
+    }
+
+    /// INT8-quantize (per-tensor symmetric) — the shift backends' layout.
+    pub fn quantized(x: &[f32], m: usize, k: usize) -> Operand {
+        assert_eq!(x.len(), m * k, "operand buffer is not m*k");
+        let q = Int8Quant::calibrate(x);
+        let xq: Vec<i32> = q.quantize(x).iter().map(|&v| v as i32).collect();
+        Operand::Int8 {
+            m,
+            k,
+            xq: Arc::new(xq),
+            scale: q.scale,
+        }
+    }
+
+    pub fn m(&self) -> usize {
+        match self {
+            Operand::F32 { m, .. } | Operand::Int8 { m, .. } => *m,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        match self {
+            Operand::F32 { k, .. } | Operand::Int8 { k, .. } => *k,
+        }
+    }
+}
+
+/// One backend of one primitive, under the uniform `(m, k, n)` contract.
+///
+/// Implementations are stateless values registered in a
+/// [`crate::kernels::registry::KernelRegistry`]; callers select them by
+/// `"primitive/backend"` id or let the
+/// [`crate::kernels::planner::Planner`] pick the fastest for a shape.
+pub trait LinearKernel: Send + Sync {
+    fn primitive(&self) -> Primitive;
+
+    /// Backend name within the primitive, e.g. `"blocked"`, `"rowpar"`.
+    fn backend(&self) -> &'static str;
+
+    /// Registry id: `"primitive/backend"`.
+    fn id(&self) -> String {
+        format!("{}/{}", self.primitive().name(), self.backend())
+    }
+
+    /// Hardware MAC style of this backend's deployment target — feeds the
+    /// Eyeriss op counting (`model::ops::PrimitiveStyles`).
+    fn mac_style(&self) -> MacStyle;
+
+    /// Max elementwise relative error of `run` vs `x @ prepare(w).dense()`
+    /// (the property-suite bound). Backends that quantize activations
+    /// override this with their INT8 error budget.
+    fn tolerance(&self) -> f32 {
+        1e-4
+    }
+
+    /// One-time weight conversion into this backend's deployment format.
+    fn prepare(&self, w: &RawWeights) -> PreparedWeights;
+
+    /// Per-call activation layout; default is a plain f32 copy.
+    fn prepare_operand(&self, x: &[f32], m: usize, k: usize) -> Operand {
+        Operand::from_f32(x, m, k)
+    }
+
+    /// `out (m×n) = x (m×k) @ w (k×n)`. Panics if handed weight/operand
+    /// variants this backend's `prepare`/`prepare_operand` does not produce.
+    fn run(&self, w: &PreparedWeights, x: &Operand, out: &mut [f32]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitive_names_roundtrip() {
+        for p in Primitive::ALL {
+            assert_eq!(Primitive::parse(p.name()), Some(p));
+        }
+        assert_eq!(Primitive::parse("conv"), None);
+    }
+
+    #[test]
+    fn dense_of_planes_matches_pow2_dequant() {
+        let wf = vec![1.0f32, -2.0, 0.25, -0.5];
+        let q = pow2::quantize(&wf, 2, 2);
+        let planes = PreparedWeights::Planes(Arc::new(ShiftPlanes::from_pow2(&q)));
+        assert_eq!(planes.dense(), pow2::dequantize(&q));
+        assert_eq!(planes.k(), 2);
+        assert_eq!(planes.n(), 2);
+    }
+
+    #[test]
+    fn dense_of_packed_forms() {
+        let b = vec![1i8, -1, 0, 1];
+        let packed = PreparedWeights::Packed(Arc::new(PackedB::pack(&b, 2, 2)));
+        assert_eq!(packed.dense(), vec![1.0, -1.0, 0.0, 1.0]);
+        let pm1 = vec![1i8, -1, -1, 1];
+        let p = PreparedWeights::Pm1(Arc::new(PackedPm1::pack(&pm1, 2, 2)));
+        assert_eq!(p.dense(), vec![1.0, -1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn quantized_operand_carries_scale() {
+        let x = vec![0.0f32, 63.5, -127.0, 12.0];
+        let op = Operand::quantized(&x, 2, 2);
+        match op {
+            Operand::Int8 { m, k, xq, scale } => {
+                assert_eq!((m, k), (2, 2));
+                assert_eq!(xq.len(), 4);
+                assert!((scale - 1.0).abs() < 1e-6);
+                assert_eq!(xq[2], -127);
+            }
+            _ => panic!("expected Int8 operand"),
+        }
+    }
+}

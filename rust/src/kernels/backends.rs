@@ -1,0 +1,467 @@
+//! Built-in serial backends for each primitive (the row-parallel ones live
+//! in [`crate::kernels::parallel`]). Each struct wraps one of the legacy
+//! free-function kernels behind the [`LinearKernel`] contract; the free
+//! functions remain callable for one release but new code should resolve
+//! backends through [`crate::kernels::registry::KernelRegistry`].
+
+use std::sync::Arc;
+
+use crate::energy::ops::MacStyle;
+use crate::kernels::api::{LinearKernel, Operand, PreparedWeights, Primitive, RawWeights};
+use crate::kernels::matshift::PREC;
+use crate::kernels::{fakeshift, matadd, matmul, matshift};
+use crate::quant::binary;
+use crate::quant::pow2;
+
+/// INT8-activation error budget shared by the MatShift backends: per-element
+/// activation quantization error is ≤ scale/2 ≈ amax/254, which accumulated
+/// over k terms against O(1) weights stays inside this relative bound for
+/// the shapes the property suite draws.
+pub const SHIFT_TOL: f32 = 0.25;
+
+// ---- shared helpers -------------------------------------------------------
+
+fn expect_dense<'a>(w: &'a PreparedWeights, who: &str) -> (&'a [f32], usize, usize) {
+    match w {
+        PreparedWeights::Dense { k, n, w } => (w.as_slice(), *k, *n),
+        other => panic!("{who}: expected dense weights, got {}", other.variant_name()),
+    }
+}
+
+fn expect_f32<'a>(x: &'a Operand, who: &str) -> (&'a [f32], usize) {
+    match x {
+        Operand::F32 { m, x, .. } => (x.as_slice(), *m),
+        Operand::Int8 { .. } => panic!("{who}: expected f32 operand"),
+    }
+}
+
+/// {-1, 0, +1} codes: exact zeros stay zero (the packed nz-mask path).
+fn ternarize(w: &[f32]) -> Vec<i8> {
+    w.iter()
+        .map(|&v| {
+            if v > 0.0 {
+                1
+            } else if v < 0.0 {
+                -1
+            } else {
+                0
+            }
+        })
+        .collect()
+}
+
+fn check_run_shapes(x_len: usize, out_len: usize, m: usize, k: usize, n: usize, who: &str) {
+    assert_eq!(x_len, m * k, "{who}: operand is not m*k");
+    assert_eq!(out_len, m * n, "{who}: output is not m*n");
+}
+
+/// Shared MatShift execution: accept either operand form, quantizing f32
+/// on the fly (the prepared-operand path keeps quantization off hot loops).
+pub(crate) fn run_matshift_planes(
+    planes: &matshift::ShiftPlanes,
+    x: &Operand,
+    out: &mut [f32],
+    who: &str,
+) {
+    let (k, n) = (planes.rows, planes.cols);
+    match x {
+        Operand::Int8 { m, k: xk, xq, scale } => {
+            assert_eq!(*xk, k, "{who}: operand k mismatch");
+            check_run_shapes(xq.len(), out.len(), *m, k, n, who);
+            let acc = matshift::matshift_fast(xq, planes, *m);
+            let s = scale / (PREC as f32).exp2();
+            for (o, &a) in out.iter_mut().zip(&acc) {
+                *o = a as f32 * s;
+            }
+        }
+        Operand::F32 { m, k: xk, x } => {
+            assert_eq!(*xk, k, "{who}: operand k mismatch");
+            check_run_shapes(x.len(), out.len(), *m, k, n, who);
+            out.copy_from_slice(&matshift::matshift_f32_fast(x, planes, *m));
+        }
+    }
+}
+
+// ---- MatMul ---------------------------------------------------------------
+
+/// `matmul/naive` — unblocked reference ("PyTorch einsum" stand-in).
+pub struct MatMulNaive;
+
+impl LinearKernel for MatMulNaive {
+    fn primitive(&self) -> Primitive {
+        Primitive::MatMul
+    }
+
+    fn backend(&self) -> &'static str {
+        "naive"
+    }
+
+    fn mac_style(&self) -> MacStyle {
+        MacStyle::MultFp32
+    }
+
+    fn prepare(&self, w: &RawWeights) -> PreparedWeights {
+        PreparedWeights::Dense {
+            k: w.k,
+            n: w.n,
+            w: Arc::new(w.data.clone()),
+        }
+    }
+
+    fn run(&self, w: &PreparedWeights, x: &Operand, out: &mut [f32]) {
+        let (wf, k, n) = expect_dense(w, "matmul/naive");
+        let (xf, m) = expect_f32(x, "matmul/naive");
+        check_run_shapes(xf.len(), out.len(), m, k, n, "matmul/naive");
+        out.copy_from_slice(&matmul::matmul_naive(xf, wf, m, k, n));
+    }
+}
+
+/// `matmul/blocked` — cache-blocked dense kernel ("TVM MatMul" stand-in).
+pub struct MatMulBlocked;
+
+impl LinearKernel for MatMulBlocked {
+    fn primitive(&self) -> Primitive {
+        Primitive::MatMul
+    }
+
+    fn backend(&self) -> &'static str {
+        "blocked"
+    }
+
+    fn mac_style(&self) -> MacStyle {
+        MacStyle::MultFp32
+    }
+
+    fn prepare(&self, w: &RawWeights) -> PreparedWeights {
+        PreparedWeights::Dense {
+            k: w.k,
+            n: w.n,
+            w: Arc::new(w.data.clone()),
+        }
+    }
+
+    fn run(&self, w: &PreparedWeights, x: &Operand, out: &mut [f32]) {
+        let (wf, k, n) = expect_dense(w, "matmul/blocked");
+        let (xf, m) = expect_f32(x, "matmul/blocked");
+        check_run_shapes(xf.len(), out.len(), m, k, n, "matmul/blocked");
+        out.copy_from_slice(&matmul::matmul_f32(xf, wf, m, k, n));
+    }
+}
+
+// ---- MatAdd ---------------------------------------------------------------
+
+/// `matadd/ref` — branchy {-1,0,+1} reference (the oracle kernel).
+pub struct MatAddRef;
+
+impl LinearKernel for MatAddRef {
+    fn primitive(&self) -> Primitive {
+        Primitive::MatAdd
+    }
+
+    fn backend(&self) -> &'static str {
+        "ref"
+    }
+
+    fn mac_style(&self) -> MacStyle {
+        MacStyle::AddFp32
+    }
+
+    fn prepare(&self, w: &RawWeights) -> PreparedWeights {
+        PreparedWeights::Ternary {
+            k: w.k,
+            n: w.n,
+            b: Arc::new(ternarize(&w.data)),
+        }
+    }
+
+    fn run(&self, w: &PreparedWeights, x: &Operand, out: &mut [f32]) {
+        let (b, k, n) = match w {
+            PreparedWeights::Ternary { k, n, b } => (b.as_slice(), *k, *n),
+            other => panic!("matadd/ref: expected ternary weights, got {}", other.variant_name()),
+        };
+        let (xf, m) = expect_f32(x, "matadd/ref");
+        check_run_shapes(xf.len(), out.len(), m, k, n, "matadd/ref");
+        out.copy_from_slice(&matadd::matadd_f32(xf, b, m, k, n));
+    }
+}
+
+/// `matadd/packed` — branchless sign/nonzero bit-mask kernel (ternary
+/// deployment format; INT32-accumulate on the Eyeriss target).
+pub struct MatAddPacked;
+
+impl LinearKernel for MatAddPacked {
+    fn primitive(&self) -> Primitive {
+        Primitive::MatAdd
+    }
+
+    fn backend(&self) -> &'static str {
+        "packed"
+    }
+
+    fn mac_style(&self) -> MacStyle {
+        MacStyle::AddInt32
+    }
+
+    fn prepare(&self, w: &RawWeights) -> PreparedWeights {
+        PreparedWeights::Packed(Arc::new(matadd::PackedB::pack(
+            &ternarize(&w.data),
+            w.k,
+            w.n,
+        )))
+    }
+
+    fn run(&self, w: &PreparedWeights, x: &Operand, out: &mut [f32]) {
+        let packed = match w {
+            PreparedWeights::Packed(p) => p,
+            other => panic!("matadd/packed: expected packed weights, got {}", other.variant_name()),
+        };
+        let (xf, m) = expect_f32(x, "matadd/packed");
+        check_run_shapes(xf.len(), out.len(), m, packed.k, packed.n, "matadd/packed");
+        out.copy_from_slice(&matadd::matadd_packed(xf, packed, m));
+    }
+}
+
+/// `matadd/bitplane` — ±1 sign-byte kernel (binary deployment format: one
+/// byte per weight, the paper's data-movement argument).
+pub struct MatAddBitplane;
+
+impl LinearKernel for MatAddBitplane {
+    fn primitive(&self) -> Primitive {
+        Primitive::MatAdd
+    }
+
+    fn backend(&self) -> &'static str {
+        "bitplane"
+    }
+
+    fn mac_style(&self) -> MacStyle {
+        MacStyle::AddInt32
+    }
+
+    fn prepare(&self, w: &RawWeights) -> PreparedWeights {
+        PreparedWeights::Pm1(Arc::new(matadd::PackedPm1::pack(
+            &binary::binarize(&w.data),
+            w.k,
+            w.n,
+        )))
+    }
+
+    fn run(&self, w: &PreparedWeights, x: &Operand, out: &mut [f32]) {
+        let packed = match w {
+            PreparedWeights::Pm1(p) => p,
+            other => panic!("matadd/bitplane: expected pm1 weights, got {}", other.variant_name()),
+        };
+        let (xf, m) = expect_f32(x, "matadd/bitplane");
+        check_run_shapes(xf.len(), out.len(), m, packed.k, packed.n, "matadd/bitplane");
+        out.copy_from_slice(&matadd::matadd_pm1(xf, packed, m));
+    }
+}
+
+// ---- MatShift -------------------------------------------------------------
+
+/// `matshift/ref` — (sign, exponent) plane reference kernel.
+pub struct MatShiftRef;
+
+impl LinearKernel for MatShiftRef {
+    fn primitive(&self) -> Primitive {
+        Primitive::MatShift
+    }
+
+    fn backend(&self) -> &'static str {
+        "ref"
+    }
+
+    fn mac_style(&self) -> MacStyle {
+        MacStyle::ShiftInt32
+    }
+
+    fn tolerance(&self) -> f32 {
+        SHIFT_TOL
+    }
+
+    fn prepare(&self, w: &RawWeights) -> PreparedWeights {
+        PreparedWeights::Pow2(Arc::new(pow2::quantize(&w.data, w.k, w.n)))
+    }
+
+    fn prepare_operand(&self, x: &[f32], m: usize, k: usize) -> Operand {
+        Operand::quantized(x, m, k)
+    }
+
+    fn run(&self, w: &PreparedWeights, x: &Operand, out: &mut [f32]) {
+        let pw = match w {
+            PreparedWeights::Pow2(p) => p,
+            other => panic!("matshift/ref: expected pow2 weights, got {}", other.variant_name()),
+        };
+        let (k, n) = (pw.rows, pw.cols);
+        match x {
+            Operand::Int8 { m, k: xk, xq, scale } => {
+                assert_eq!(*xk, k, "matshift/ref: operand k mismatch");
+                check_run_shapes(xq.len(), out.len(), *m, k, n, "matshift/ref");
+                let acc = matshift::matshift_i64(xq, pw, *m);
+                let s = scale / (PREC as f32).exp2();
+                for (o, &a) in out.iter_mut().zip(&acc) {
+                    *o = a as f32 * s;
+                }
+            }
+            Operand::F32 { m, k: xk, x } => {
+                assert_eq!(*xk, k, "matshift/ref: operand k mismatch");
+                check_run_shapes(x.len(), out.len(), *m, k, n, "matshift/ref");
+                out.copy_from_slice(&matshift::matshift_f32(x, pw, *m));
+            }
+        }
+    }
+}
+
+/// `matshift/planes` — branchless blocked shift/negate kernel (deployment).
+pub struct MatShiftPlanes;
+
+impl LinearKernel for MatShiftPlanes {
+    fn primitive(&self) -> Primitive {
+        Primitive::MatShift
+    }
+
+    fn backend(&self) -> &'static str {
+        "planes"
+    }
+
+    fn mac_style(&self) -> MacStyle {
+        MacStyle::ShiftInt32
+    }
+
+    fn tolerance(&self) -> f32 {
+        SHIFT_TOL
+    }
+
+    fn prepare(&self, w: &RawWeights) -> PreparedWeights {
+        let q = pow2::quantize(&w.data, w.k, w.n);
+        PreparedWeights::Planes(Arc::new(matshift::ShiftPlanes::from_pow2(&q)))
+    }
+
+    fn prepare_operand(&self, x: &[f32], m: usize, k: usize) -> Operand {
+        Operand::quantized(x, m, k)
+    }
+
+    fn run(&self, w: &PreparedWeights, x: &Operand, out: &mut [f32]) {
+        let planes = match w {
+            PreparedWeights::Planes(p) => p,
+            other => panic!("matshift/planes: expected planes weights, got {}", other.variant_name()),
+        };
+        run_matshift_planes(planes, x, out, "matshift/planes");
+    }
+}
+
+// ---- FakeShift ------------------------------------------------------------
+
+/// `fakeshift/ref` — float multiply with in-loop pow2 rematerialization
+/// (the naive "PyTorch FakeShift" graph).
+pub struct FakeShiftRef;
+
+impl LinearKernel for FakeShiftRef {
+    fn primitive(&self) -> Primitive {
+        Primitive::FakeShift
+    }
+
+    fn backend(&self) -> &'static str {
+        "ref"
+    }
+
+    fn mac_style(&self) -> MacStyle {
+        MacStyle::MultFp32
+    }
+
+    fn prepare(&self, w: &RawWeights) -> PreparedWeights {
+        PreparedWeights::Pow2(Arc::new(pow2::quantize(&w.data, w.k, w.n)))
+    }
+
+    fn run(&self, w: &PreparedWeights, x: &Operand, out: &mut [f32]) {
+        let pw = match w {
+            PreparedWeights::Pow2(p) => p,
+            other => panic!("fakeshift/ref: expected pow2 weights, got {}", other.variant_name()),
+        };
+        let (xf, m) = expect_f32(x, "fakeshift/ref");
+        check_run_shapes(xf.len(), out.len(), m, pw.rows, pw.cols, "fakeshift/ref");
+        out.copy_from_slice(&fakeshift::fakeshift_rematerialize(xf, pw, m));
+    }
+}
+
+/// `fakeshift/cached` — pow2 weights expanded to f32 once at prepare time,
+/// then a blocked dense matmul (the tuned-graph FakeShift comparator).
+pub struct FakeShiftCached;
+
+impl LinearKernel for FakeShiftCached {
+    fn primitive(&self) -> Primitive {
+        Primitive::FakeShift
+    }
+
+    fn backend(&self) -> &'static str {
+        "cached"
+    }
+
+    fn mac_style(&self) -> MacStyle {
+        MacStyle::MultFp32
+    }
+
+    fn prepare(&self, w: &RawWeights) -> PreparedWeights {
+        let q = pow2::quantize(&w.data, w.k, w.n);
+        PreparedWeights::Dense {
+            k: w.k,
+            n: w.n,
+            w: Arc::new(pow2::dequantize(&q)),
+        }
+    }
+
+    fn run(&self, w: &PreparedWeights, x: &Operand, out: &mut [f32]) {
+        let (wf, k, n) = expect_dense(w, "fakeshift/cached");
+        let (xf, m) = expect_f32(x, "fakeshift/cached");
+        check_run_shapes(xf.len(), out.len(), m, k, n, "fakeshift/cached");
+        out.copy_from_slice(&matmul::matmul_f32(xf, wf, m, k, n));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::assert_close;
+    use crate::util::rng::XorShift64;
+
+    #[test]
+    fn prepare_preserves_shape_metadata() {
+        let raw = RawWeights::new(vec![0.5; 6], 2, 3);
+        for kernel in [
+            &MatMulBlocked as &dyn LinearKernel,
+            &MatAddPacked,
+            &MatAddBitplane,
+            &MatShiftPlanes,
+            &FakeShiftCached,
+        ] {
+            let w = kernel.prepare(&raw);
+            assert_eq!((w.k(), w.n()), (2, 3), "{}", kernel.id());
+            assert_eq!(w.dense().len(), 6, "{}", kernel.id());
+        }
+    }
+
+    #[test]
+    fn fakeshift_variants_agree_through_the_trait() {
+        let mut rng = XorShift64::new(21);
+        let (m, k, n) = (5, 7, 4);
+        let raw = RawWeights::new(rng.normals(k * n), k, n);
+        let x = rng.normals(m * k);
+        let mut a = vec![0.0f32; m * n];
+        let mut b = vec![0.0f32; m * n];
+        let kr = FakeShiftRef;
+        let kc = FakeShiftCached;
+        kr.run(&kr.prepare(&raw), &kr.prepare_operand(&x, m, k), &mut a);
+        kc.run(&kc.prepare(&raw), &kc.prepare_operand(&x, m, k), &mut b);
+        assert_close(&a, &b, 1e-4).unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "expected dense weights")]
+    fn wrong_weight_variant_panics() {
+        let raw = RawWeights::new(vec![1.0; 4], 2, 2);
+        let w = MatShiftPlanes.prepare(&raw);
+        let op = Operand::from_f32(&[1.0; 4], 2, 2);
+        let mut out = vec![0.0; 4];
+        MatMulBlocked.run(&w, &op, &mut out);
+    }
+}

@@ -62,12 +62,21 @@ impl PackedPm1 {
 
 /// Branchless ±1 kernel: one byte-load + widen + xor + add per MAC.
 pub fn matadd_pm1(x: &[f32], b: &PackedPm1, m: usize) -> Vec<f32> {
+    assert_eq!(x.len(), m * b.k);
+    matadd_pm1_rows(x, b, 0, m)
+}
+
+/// Row-range core of [`matadd_pm1`]: rows `r0..r1` of the full operand only,
+/// returning a `(r1-r0)×n` buffer — the unit of work the row-parallel
+/// `matadd/rowpar` backend schedules on the worker pool. Per-row accumulation
+/// order is unchanged, so chunked execution is bit-identical.
+pub fn matadd_pm1_rows(x: &[f32], b: &PackedPm1, r0: usize, r1: usize) -> Vec<f32> {
     let (k, n) = (b.k, b.n);
-    assert_eq!(x.len(), m * k);
-    let mut o = vec![0.0f32; m * n];
-    for r in 0..m {
+    assert!(r0 <= r1 && r1 * k <= x.len());
+    let mut o = vec![0.0f32; (r1 - r0) * n];
+    for r in r0..r1 {
         let xrow = &x[r * k..(r + 1) * k];
-        let orow = &mut o[r * n..(r + 1) * n];
+        let orow = &mut o[(r - r0) * n..(r - r0 + 1) * n];
         for kk in 0..k {
             let xb = xrow[kk].to_bits();
             let srow = &b.sign[kk * n..(kk + 1) * n];

@@ -82,14 +82,24 @@ impl ShiftPlanes {
 /// (|x·2^sh| ≤ 2^22, 32 accumulations ⇒ < 2^27) stays exact, then flushed
 /// into the i64 output. No multiply, no branch in the inner loop.
 pub fn matshift_fast(xq: &[i32], w: &ShiftPlanes, m: usize) -> Vec<i64> {
+    assert_eq!(xq.len(), m * w.rows);
+    matshift_fast_rows(xq, w, 0, m)
+}
+
+/// Row-range core of [`matshift_fast`]: rows `r0..r1` of the full operand
+/// only, returning a `(r1-r0)×n` buffer — the unit of work the row-parallel
+/// `matshift/rowpar` backend schedules on the worker pool. Row results are
+/// bit-identical to the full kernel's (same tiling, same accumulation
+/// order), so chunked execution is exact.
+pub fn matshift_fast_rows(xq: &[i32], w: &ShiftPlanes, r0: usize, r1: usize) -> Vec<i64> {
     let (k, n) = (w.rows, w.cols);
-    assert_eq!(xq.len(), m * k);
+    assert!(r0 <= r1 && r1 * k <= xq.len());
     const BK: usize = 32;
-    let mut acc = vec![0i64; m * n];
+    let mut acc = vec![0i64; (r1 - r0) * n];
     let mut tile = vec![0i32; n];
-    for r in 0..m {
+    for r in r0..r1 {
         let xrow = &xq[r * k..(r + 1) * k];
-        let orow = &mut acc[r * n..(r + 1) * n];
+        let orow = &mut acc[(r - r0) * n..(r - r0 + 1) * n];
         for k0 in (0..k).step_by(BK) {
             let kend = (k0 + BK).min(k);
             tile.iter_mut().for_each(|t| *t = 0);

@@ -1,19 +1,60 @@
-//! Pure-Rust CPU kernels for the paper's multiplication primitives.
+//! Pure-Rust CPU kernels for the paper's multiplication primitives, behind a
+//! unified trait/registry/planner API.
+//!
+//! # Architecture
+//!
+//! - [`api::LinearKernel`] — the one trait every backend implements:
+//!   `prepare` (one-time weight pack/quantize into a deployment format),
+//!   `prepare_operand` (per-call activation layout, where INT8 quantization
+//!   happens), and `run` under a uniform `(m, k, n)` shape contract. Each
+//!   backend self-describes its Eyeriss `MacStyle` and its numeric
+//!   tolerance vs the dense oracle.
+//! - [`registry::KernelRegistry`] — named backends per [`api::Primitive`],
+//!   addressed as `"primitive/backend"`. Defaults: `matmul/{naive,blocked}`,
+//!   `matadd/{ref,packed,bitplane,rowpar}`, `matshift/{ref,planes,rowpar}`,
+//!   `fakeshift/{ref,cached}`. Registering a new backend automatically
+//!   enrolls it in the fig4/fig5 sweeps and the property suite.
+//! - [`planner::Planner`] — benchmarks-or-looks-up the fastest backend per
+//!   (primitive, shape), memoizes the choice, and records measurements;
+//!   `pin` installs offline-autotuned choices without measuring.
+//! - [`parallel`] — the row-parallel `*/rowpar` backends executing on the
+//!   persistent `util::Pool` (bit-exact vs their serial counterparts).
 //!
 //! These are the *true-arithmetic* counterparts of the L1 Pallas kernels:
 //! MatShift really executes integer `<<`/`>>` on INT8/INT32 operands, MatAdd
 //! really executes sign-masked accumulation with no multiply in the inner
-//! loop. They serve two purposes:
+//! loop. They serve three purposes: the Fig. 4/5 (and 7/8) micro-benchmarks,
+//! oracles/property tests for the quantization semantics shared with the
+//! Pallas kernels, and the kernel-level MoE expert execution in
+//! `moe::experts`.
 //!
-//! 1. the Fig. 4/5 (and 7/8) micro-benchmarks — speedups of MatShift/MatAdd
-//!    over MatMul and FakeShift baselines across the paper's PVT shapes,
-//! 2. oracles/property tests for the quantization semantics shared with the
-//!    Pallas kernels.
+//! # Legacy free functions (deprecated)
+//!
+//! The per-module free functions (`matmul::matmul_f32`, `matadd::matadd_pm1`,
+//! `matshift::matshift_fast`, …) are the implementation layer the backends
+//! wrap. They remain public for one release as thin compatibility shims, but
+//! all in-repo call sites (harness figures, MoE experts, fig4/fig5 benches,
+//! Eyeriss op counting) now resolve kernels through the registry — new code
+//! must do the same so planner dispatch and the property suite see it.
+//! Deprecation is doc-level for this release rather than `#[deprecated]`:
+//! the oracle property suite and the backends themselves legitimately call
+//! the free functions, and the attribute would trip CI's `-D warnings` gate
+//! on those internal uses. The attribute lands when the shims are dropped
+//! next release.
 
+pub mod api;
+pub mod backends;
 pub mod fakeshift;
 pub mod matadd;
 pub mod matmul;
 pub mod matshift;
+pub mod parallel;
+pub mod planner;
+pub mod registry;
+
+pub use api::{LinearKernel, Operand, PreparedWeights, Primitive, RawWeights};
+pub use planner::{Planner, Shape};
+pub use registry::KernelRegistry;
 
 /// Row-major matrix view helpers shared by the kernels.
 pub fn idx(r: usize, c: usize, cols: usize) -> usize {

@@ -1,0 +1,226 @@
+//! Row-parallel blocked backends executing on the persistent
+//! [`crate::util::pool::Pool`] — the perf headline of the registry redesign:
+//! the MoE Shift expert (and any large-`m` caller) finally exploits the
+//! worker pool instead of running single-threaded.
+//!
+//! Parallelization is by contiguous row ranges: each pool job computes
+//! `matshift_fast_rows` / `matadd_pm1_rows` over its chunk against the
+//! `Arc`-shared prepared weights, and the results are stitched back in
+//! order. Per-row accumulation order is identical to the serial kernels, so
+//! the parallel backends are *bit-exact* vs `matshift/planes` and
+//! `matadd/bitplane` (asserted by the property suite).
+//!
+//! Do not call these backends from inside pool jobs themselves: a job that
+//! blocks on `Pool::scatter` can deadlock once every worker is blocked the
+//! same way.
+
+use std::sync::OnceLock;
+
+use crate::energy::ops::MacStyle;
+use crate::kernels::api::{LinearKernel, Operand, PreparedWeights, Primitive, RawWeights};
+use crate::kernels::backends::{MatAddBitplane, MatShiftPlanes, SHIFT_TOL};
+use crate::kernels::matshift::PREC;
+use crate::kernels::{matadd, matshift};
+use crate::util::pool::Pool;
+
+/// Below this many rows the pool dispatch overhead dominates and the
+/// backends fall back to the serial row core inline.
+pub const MIN_PAR_ROWS: usize = 32;
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+/// The process-wide kernel worker pool, spawned on first use and sized to
+/// the available hardware parallelism.
+pub fn shared_pool() -> &'static Pool {
+    POOL.get_or_init(|| {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        Pool::new(n)
+    })
+}
+
+/// Split `m` rows into at most `chunks` contiguous `(r0, r1)` ranges of
+/// near-equal size (the last may be short).
+pub fn row_chunks(m: usize, chunks: usize) -> Vec<(usize, usize)> {
+    if m == 0 {
+        return Vec::new();
+    }
+    let per = m.div_ceil(chunks.clamp(1, m));
+    (0..m)
+        .step_by(per)
+        .map(|r0| (r0, (r0 + per).min(m)))
+        .collect()
+}
+
+/// `matshift/rowpar` — row-parallel blocked MatShift on the shared pool.
+pub struct MatShiftRowPar;
+
+impl LinearKernel for MatShiftRowPar {
+    fn primitive(&self) -> Primitive {
+        Primitive::MatShift
+    }
+
+    fn backend(&self) -> &'static str {
+        "rowpar"
+    }
+
+    fn mac_style(&self) -> MacStyle {
+        MacStyle::ShiftInt32
+    }
+
+    fn tolerance(&self) -> f32 {
+        SHIFT_TOL
+    }
+
+    /// Same deployment format as the serial `matshift/planes` backend —
+    /// delegated so the bit-exactness contract cannot drift.
+    fn prepare(&self, w: &RawWeights) -> PreparedWeights {
+        MatShiftPlanes.prepare(w)
+    }
+
+    fn prepare_operand(&self, x: &[f32], m: usize, k: usize) -> Operand {
+        MatShiftPlanes.prepare_operand(x, m, k)
+    }
+
+    fn run(&self, w: &PreparedWeights, x: &Operand, out: &mut [f32]) {
+        let planes = match w {
+            PreparedWeights::Planes(p) => p.clone(),
+            other => panic!(
+                "matshift/rowpar: expected planes weights, got {}",
+                other.variant_name()
+            ),
+        };
+        let (xq, m, scale) = match x {
+            Operand::Int8 { m, k, xq, scale } => {
+                assert_eq!(*k, planes.rows, "matshift/rowpar: operand k mismatch");
+                (xq.clone(), *m, *scale)
+            }
+            Operand::F32 { m, k, x } => {
+                // Route through the one quantization path every shift
+                // backend shares, so calibration changes stay in sync.
+                assert_eq!(*k, planes.rows, "matshift/rowpar: operand k mismatch");
+                match Operand::quantized(x, *m, *k) {
+                    Operand::Int8 { xq, scale, .. } => (xq, *m, scale),
+                    Operand::F32 { .. } => unreachable!("quantized() yields Int8"),
+                }
+            }
+        };
+        let n = planes.cols;
+        assert_eq!(out.len(), m * n, "matshift/rowpar: output is not m*n");
+        let s = scale / (PREC as f32).exp2();
+        let pool = shared_pool();
+        if m < MIN_PAR_ROWS || pool.len() == 1 {
+            let acc = matshift::matshift_fast_rows(&xq, &planes, 0, m);
+            for (o, &a) in out.iter_mut().zip(&acc) {
+                *o = a as f32 * s;
+            }
+            return;
+        }
+        let ranges = row_chunks(m, pool.len() * 2);
+        let jobs: Vec<_> = ranges
+            .iter()
+            .map(|&(r0, r1)| {
+                let planes = planes.clone();
+                let xq = xq.clone();
+                move || matshift::matshift_fast_rows(&xq, &planes, r0, r1)
+            })
+            .collect();
+        let results = pool.scatter(jobs);
+        for ((r0, _), acc) in ranges.into_iter().zip(results) {
+            let dst = &mut out[r0 * n..r0 * n + acc.len()];
+            for (o, &a) in dst.iter_mut().zip(&acc) {
+                *o = a as f32 * s;
+            }
+        }
+    }
+}
+
+/// `matadd/rowpar` — row-parallel ±1 MatAdd on the shared pool.
+pub struct MatAddRowPar;
+
+impl LinearKernel for MatAddRowPar {
+    fn primitive(&self) -> Primitive {
+        Primitive::MatAdd
+    }
+
+    fn backend(&self) -> &'static str {
+        "rowpar"
+    }
+
+    fn mac_style(&self) -> MacStyle {
+        MacStyle::AddInt32
+    }
+
+    /// Same deployment format as the serial `matadd/bitplane` backend —
+    /// delegated so the bit-exactness contract cannot drift.
+    fn prepare(&self, w: &RawWeights) -> PreparedWeights {
+        MatAddBitplane.prepare(w)
+    }
+
+    fn run(&self, w: &PreparedWeights, x: &Operand, out: &mut [f32]) {
+        let packed = match w {
+            PreparedWeights::Pm1(p) => p.clone(),
+            other => panic!(
+                "matadd/rowpar: expected pm1 weights, got {}",
+                other.variant_name()
+            ),
+        };
+        let (xv, m) = match x {
+            Operand::F32 { m, k, x } => {
+                assert_eq!(*k, packed.k, "matadd/rowpar: operand k mismatch");
+                (x.clone(), *m)
+            }
+            Operand::Int8 { .. } => panic!("matadd/rowpar: expected f32 operand"),
+        };
+        let n = packed.n;
+        assert_eq!(out.len(), m * n, "matadd/rowpar: output is not m*n");
+        let pool = shared_pool();
+        if m < MIN_PAR_ROWS || pool.len() == 1 {
+            out.copy_from_slice(&matadd::matadd_pm1_rows(&xv, &packed, 0, m));
+            return;
+        }
+        let ranges = row_chunks(m, pool.len() * 2);
+        let jobs: Vec<_> = ranges
+            .iter()
+            .map(|&(r0, r1)| {
+                let packed = packed.clone();
+                let xv = xv.clone();
+                move || matadd::matadd_pm1_rows(&xv, &packed, r0, r1)
+            })
+            .collect();
+        let results = pool.scatter(jobs);
+        for ((r0, _), chunk) in ranges.into_iter().zip(results) {
+            out[r0 * n..r0 * n + chunk.len()].copy_from_slice(&chunk);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_chunks_cover_exactly() {
+        for (m, c) in [(10usize, 3usize), (1, 8), (32, 32), (100, 7), (0, 4)] {
+            let r = row_chunks(m, c);
+            let total: usize = r.iter().map(|(a, b)| b - a).sum();
+            assert_eq!(total, m, "m={m} c={c}");
+            let mut prev = 0;
+            for &(a, b) in &r {
+                assert_eq!(a, prev);
+                assert!(b > a);
+                prev = b;
+            }
+            assert!(r.len() <= c.max(1));
+        }
+    }
+
+    #[test]
+    fn shared_pool_is_reused() {
+        let a = shared_pool() as *const Pool;
+        let b = shared_pool() as *const Pool;
+        assert_eq!(a, b);
+        assert!(shared_pool().len() >= 1);
+    }
+}

@@ -1,0 +1,201 @@
+//! The planner: benchmark-or-look-up the fastest backend per
+//! (primitive, shape) and record every decision.
+//!
+//! `choose` memoizes per shape: the first call for a (primitive, m×k×n)
+//! triple times every registered backend on synthetic data (prepared
+//! formats built outside the timed region, exactly like deployment) and
+//! caches the winner; later calls are a map lookup. `pin` installs a choice
+//! without measuring — the hook for offline-autotuned lookup tables, the
+//! ROADMAP's per-shape dispatch direction.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::kernels::api::{LinearKernel, Primitive, RawWeights};
+use crate::kernels::registry::KernelRegistry;
+use crate::util::rng::XorShift64;
+
+/// An `(m, k, n)` problem shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Shape {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl Shape {
+    pub fn new(m: usize, k: usize, n: usize) -> Shape {
+        Shape { m, k, n }
+    }
+}
+
+/// One planning decision, kept for reporting and the bench JSON dumps.
+#[derive(Clone, Debug)]
+pub struct Choice {
+    pub primitive: Primitive,
+    pub shape: Shape,
+    /// winning backend name (within the primitive)
+    pub backend: String,
+    /// (backend id, best-of-reps ms) per candidate; empty for pinned entries
+    pub measured_ms: Vec<(String, f64)>,
+}
+
+/// Fastest-backend selector over a shared [`KernelRegistry`].
+pub struct Planner {
+    registry: Arc<KernelRegistry>,
+    cache: Mutex<HashMap<(Primitive, Shape), Arc<dyn LinearKernel>>>,
+    log: Mutex<Vec<Choice>>,
+    reps: usize,
+}
+
+impl Planner {
+    pub fn new(registry: Arc<KernelRegistry>) -> Planner {
+        Planner {
+            registry,
+            cache: Mutex::new(HashMap::new()),
+            log: Mutex::new(Vec::new()),
+            reps: 3,
+        }
+    }
+
+    pub fn registry(&self) -> &KernelRegistry {
+        &self.registry
+    }
+
+    /// The fastest backend for `(primitive, shape)`: cached lookup, or a
+    /// one-shot benchmark over every registered backend of the primitive.
+    ///
+    /// Concurrent callers racing on the same uncached shape may benchmark
+    /// redundantly, but exactly one decision wins: the first insert is kept
+    /// (losers adopt it) and only the winning measurement is logged, so
+    /// [`Planner::choices`] holds at most one entry per decided shape.
+    pub fn choose(&self, primitive: Primitive, shape: Shape) -> Arc<dyn LinearKernel> {
+        if let Some(k) = self.cache.lock().unwrap().get(&(primitive, shape)) {
+            return k.clone();
+        }
+        let (chosen, choice) = self.benchmark(primitive, shape);
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(winner) = cache.get(&(primitive, shape)) {
+            return winner.clone(); // lost the race: keep the first decision
+        }
+        cache.insert((primitive, shape), chosen.clone());
+        drop(cache);
+        self.log.lock().unwrap().push(choice);
+        chosen
+    }
+
+    /// Install a backend for a shape without measuring (lookup tables,
+    /// reproducible runs). Panics if the backend is not registered.
+    pub fn pin(&self, primitive: Primitive, shape: Shape, backend: &str) {
+        let k = self
+            .registry
+            .get(primitive, backend)
+            .unwrap_or_else(|| panic!("no backend {}/{backend}", primitive.name()));
+        self.cache
+            .lock()
+            .unwrap()
+            .insert((primitive, shape), k.clone());
+        self.log.lock().unwrap().push(Choice {
+            primitive,
+            shape,
+            backend: backend.to_string(),
+            measured_ms: Vec::new(),
+        });
+    }
+
+    /// Every decision made so far (benchmarked and pinned), in order.
+    pub fn choices(&self) -> Vec<Choice> {
+        self.log.lock().unwrap().clone()
+    }
+
+    fn benchmark(&self, primitive: Primitive, shape: Shape) -> (Arc<dyn LinearKernel>, Choice) {
+        let candidates = self.registry.for_primitive(primitive);
+        assert!(
+            !candidates.is_empty(),
+            "no backends registered for {}",
+            primitive.name()
+        );
+        let mut rng = XorShift64::new(0xBE7C4);
+        let x = rng.normals(shape.m * shape.k);
+        let raw = RawWeights::new(rng.normals(shape.k * shape.n), shape.k, shape.n);
+        let mut out = vec![0.0f32; shape.m * shape.n];
+        let mut best: Option<(f64, Arc<dyn LinearKernel>)> = None;
+        let mut measured = Vec::new();
+        for kernel in candidates {
+            let w = kernel.prepare(&raw);
+            let op = kernel.prepare_operand(&x, shape.m, shape.k);
+            kernel.run(&w, &op, &mut out); // warmup (pool spawn, caches)
+            let mut best_ms = f64::INFINITY;
+            for _ in 0..self.reps {
+                let t0 = Instant::now();
+                kernel.run(&w, &op, &mut out);
+                best_ms = best_ms.min(t0.elapsed().as_secs_f64() * 1e3);
+            }
+            measured.push((kernel.id(), best_ms));
+            let improves = match &best {
+                None => true,
+                Some((current, _)) => best_ms < *current,
+            };
+            if improves {
+                best = Some((best_ms, kernel.clone()));
+            }
+        }
+        let (_, chosen) = best.expect("at least one candidate");
+        let choice = Choice {
+            primitive,
+            shape,
+            backend: chosen.backend().to_string(),
+            measured_ms: measured,
+        };
+        (chosen, choice)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn choose_caches_per_shape() {
+        let planner = Planner::new(Arc::new(KernelRegistry::with_defaults()));
+        let shape = Shape::new(6, 5, 4);
+        let a = planner.choose(Primitive::MatAdd, shape);
+        let b = planner.choose(Primitive::MatAdd, shape);
+        assert_eq!(a.id(), b.id());
+        assert_eq!(
+            planner.choices().len(),
+            1,
+            "second choose must hit the cache"
+        );
+        assert_eq!(planner.choices()[0].measured_ms.len(), 4);
+    }
+
+    #[test]
+    fn pin_overrides_benchmarking() {
+        let planner = Planner::new(Arc::new(KernelRegistry::with_defaults()));
+        let shape = Shape::new(8, 8, 8);
+        planner.pin(Primitive::MatShift, shape, "rowpar");
+        assert_eq!(
+            planner.choose(Primitive::MatShift, shape).id(),
+            "matshift/rowpar"
+        );
+        assert!(planner.choices()[0].measured_ms.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "no backend")]
+    fn pin_unknown_backend_panics() {
+        let planner = Planner::new(Arc::new(KernelRegistry::with_defaults()));
+        planner.pin(Primitive::MatMul, Shape::new(1, 1, 1), "gpu");
+    }
+
+    #[test]
+    fn choices_record_the_winner() {
+        let planner = Planner::new(Arc::new(KernelRegistry::with_defaults()));
+        let chosen = planner.choose(Primitive::MatMul, Shape::new(4, 4, 4));
+        let log = planner.choices();
+        assert_eq!(log[0].backend, chosen.backend());
+        assert!(log[0].measured_ms.iter().all(|(_, ms)| *ms >= 0.0));
+    }
+}

@@ -1,0 +1,146 @@
+//! The backend registry: named [`LinearKernel`] implementations per
+//! primitive, addressable as `"primitive/backend"` (e.g. `"matshift/rowpar"`).
+//!
+//! Call sites resolve kernels here instead of hard-wiring free functions, so
+//! a new backend registered in [`KernelRegistry::with_defaults`] is picked
+//! up by the fig4/fig5 sweeps, the property suite, and the
+//! [`crate::kernels::planner::Planner`] without any call-site edits.
+
+use std::sync::Arc;
+
+use crate::kernels::api::{LinearKernel, Primitive};
+use crate::kernels::backends::{
+    FakeShiftCached, FakeShiftRef, MatAddBitplane, MatAddPacked, MatAddRef, MatMulBlocked,
+    MatMulNaive, MatShiftPlanes, MatShiftRef,
+};
+use crate::kernels::parallel::{MatAddRowPar, MatShiftRowPar};
+
+/// An ordered collection of backends (registration order is enumeration
+/// order, so defaults list reference kernels before deployment ones).
+pub struct KernelRegistry {
+    backends: Vec<Arc<dyn LinearKernel>>,
+}
+
+impl KernelRegistry {
+    /// An empty registry (embedders compose their own backend set).
+    pub fn new() -> KernelRegistry {
+        KernelRegistry {
+            backends: Vec::new(),
+        }
+    }
+
+    /// Every built-in backend: matmul/{naive,blocked}, matadd/{ref,packed,
+    /// bitplane,rowpar}, matshift/{ref,planes,rowpar}, fakeshift/{ref,cached}.
+    pub fn with_defaults() -> KernelRegistry {
+        let mut r = KernelRegistry::new();
+        r.register(Arc::new(MatMulNaive));
+        r.register(Arc::new(MatMulBlocked));
+        r.register(Arc::new(MatAddRef));
+        r.register(Arc::new(MatAddPacked));
+        r.register(Arc::new(MatAddBitplane));
+        r.register(Arc::new(MatAddRowPar));
+        r.register(Arc::new(MatShiftRef));
+        r.register(Arc::new(MatShiftPlanes));
+        r.register(Arc::new(MatShiftRowPar));
+        r.register(Arc::new(FakeShiftRef));
+        r.register(Arc::new(FakeShiftCached));
+        r
+    }
+
+    /// Register a backend; an existing backend with the same id is replaced
+    /// in place (so embedders can override a default).
+    pub fn register(&mut self, backend: Arc<dyn LinearKernel>) {
+        let id = backend.id();
+        if let Some(slot) = self.backends.iter_mut().find(|b| b.id() == id) {
+            *slot = backend;
+        } else {
+            self.backends.push(backend);
+        }
+    }
+
+    pub fn get(&self, primitive: Primitive, backend: &str) -> Option<Arc<dyn LinearKernel>> {
+        self.backends
+            .iter()
+            .find(|b| b.primitive() == primitive && b.backend() == backend)
+            .cloned()
+    }
+
+    /// Lookup by `"primitive/backend"` id.
+    pub fn lookup(&self, id: &str) -> Option<Arc<dyn LinearKernel>> {
+        let (p, b) = id.split_once('/')?;
+        self.get(Primitive::parse(p)?, b)
+    }
+
+    /// All backends registered for one primitive, in registration order.
+    pub fn for_primitive(&self, primitive: Primitive) -> Vec<Arc<dyn LinearKernel>> {
+        self.backends
+            .iter()
+            .filter(|b| b.primitive() == primitive)
+            .cloned()
+            .collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Arc<dyn LinearKernel>> {
+        self.backends.iter()
+    }
+
+    pub fn ids(&self) -> Vec<String> {
+        self.backends.iter().map(|b| b.id()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.backends.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.backends.is_empty()
+    }
+}
+
+impl Default for KernelRegistry {
+    fn default() -> Self {
+        KernelRegistry::with_defaults()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_cover_every_primitive() {
+        let r = KernelRegistry::with_defaults();
+        assert!(r.len() >= 11);
+        for p in Primitive::ALL {
+            assert!(!r.for_primitive(p).is_empty(), "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn lookup_by_id() {
+        let r = KernelRegistry::with_defaults();
+        assert_eq!(r.lookup("matshift/rowpar").unwrap().id(), "matshift/rowpar");
+        assert_eq!(r.lookup("matadd/packed").unwrap().backend(), "packed");
+        assert!(r.lookup("matmul/does-not-exist").is_none());
+        assert!(r.lookup("conv/naive").is_none());
+        assert!(r.lookup("garbage").is_none());
+    }
+
+    #[test]
+    fn register_replaces_same_id() {
+        let mut r = KernelRegistry::with_defaults();
+        let before = r.len();
+        r.register(Arc::new(MatMulNaive));
+        assert_eq!(r.len(), before, "same-id registration must replace");
+    }
+
+    #[test]
+    fn ids_are_primitive_slash_backend() {
+        let r = KernelRegistry::with_defaults();
+        for id in r.ids() {
+            let (p, b) = id.split_once('/').expect("id shape");
+            assert!(Primitive::parse(p).is_some(), "{id}");
+            assert!(!b.is_empty(), "{id}");
+        }
+    }
+}

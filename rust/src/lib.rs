@@ -8,6 +8,17 @@
 //!   batcher, MoE token dispatcher with latency-aware load balancing, the
 //!   Eyeriss-like energy/latency model, and the PJRT runtime that executes
 //!   AOT-compiled model artifacts.
+//!
+//!   Inside L3, the kernel layer is organized around a backend registry
+//!   (`kernels::api::LinearKernel` + `kernels::registry::KernelRegistry` +
+//!   `kernels::planner::Planner`): every multiplication primitive (MatMul,
+//!   MatAdd, MatShift, FakeShift) is a set of named backends behind one
+//!   `prepare`/`prepare_operand`/`run` contract, including row-parallel
+//!   backends on the persistent `util::pool::Pool`. The harness figures,
+//!   the kernel-level MoE experts (`moe::experts`), the fig4/fig5 benches,
+//!   and the Eyeriss op counting (`model::ops::PrimitiveStyles`) all
+//!   resolve kernels through the registry; the planner memoizes the fastest
+//!   backend per (primitive, shape).
 //! - **L2 (`python/compile/model.py`)** — the ShiftAddViT model family in JAX
 //!   (PVT-style pyramid ViTs, DeiT, a GNT-style ray transformer), lowered once
 //!   to HLO text by `python/compile/aot.py`.

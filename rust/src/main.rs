@@ -100,8 +100,12 @@ fn cmd_fig(args: &Args) -> Result<()> {
     let batch = args.usize_or("batch", 1)?;
     match id {
         "3" => figures::fig3_energy_breakdown(),
-        "4" => figures::fig4_matshift(batch),
-        "5" => figures::fig5_matadd(batch),
+        "4" => {
+            figures::fig4_matshift(batch);
+        }
+        "5" => {
+            figures::fig5_matadd(batch);
+        }
         other => bail!("unknown fig id '{other}' (3|4|5)"),
     }
     Ok(())

@@ -1,7 +1,11 @@
 //! Per-layer operation counting under each ShiftAddViT variant — the input
 //! to the Eyeriss energy/latency model.
 
+use std::sync::OnceLock;
+
 use crate::energy::ops::MacStyle;
+use crate::kernels::api::Primitive;
+use crate::kernels::registry::KernelRegistry;
 use crate::model::config::ModelSpec;
 
 /// Which primitives implement each layer family (mirrors
@@ -98,15 +102,57 @@ impl OpsBreakdown {
     }
 }
 
-fn lin_style(l: Lin) -> MacStyle {
-    match l {
-        Lin::Mult => MacStyle::MultFp32,
-        Lin::Shift => MacStyle::ShiftInt32,
+/// MAC styles contributed by the *deployment* kernel backends, resolved
+/// from a [`KernelRegistry`] so the Eyeriss op counting always reflects what
+/// the kernel layer actually executes rather than hardcoded tags: register a
+/// backend with a different `mac_style()` and every energy/latency table
+/// follows.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PrimitiveStyles {
+    pub matmul: MacStyle,
+    pub matadd: MacStyle,
+    pub matshift: MacStyle,
+}
+
+impl PrimitiveStyles {
+    /// Resolve from the deployment backend of each primitive (the format
+    /// model conversion produces); a missing backend keeps the paper tag.
+    pub fn from_registry(registry: &KernelRegistry) -> PrimitiveStyles {
+        let style = |p: Primitive, backend: &str, fallback: MacStyle| {
+            registry
+                .get(p, backend)
+                .map(|k| k.mac_style())
+                .unwrap_or(fallback)
+        };
+        PrimitiveStyles {
+            matmul: style(Primitive::MatMul, "blocked", MacStyle::MultFp32),
+            matadd: style(Primitive::MatAdd, "packed", MacStyle::AddInt32),
+            matshift: style(Primitive::MatShift, "planes", MacStyle::ShiftInt32),
+        }
     }
 }
 
-/// Count one inference (batch 1) of `spec` under `var`.
+impl Default for PrimitiveStyles {
+    /// Styles of the default registry, resolved once: `count()` runs in
+    /// tight harness loops, and the default backends are static.
+    fn default() -> Self {
+        static DEFAULT: OnceLock<PrimitiveStyles> = OnceLock::new();
+        *DEFAULT.get_or_init(|| PrimitiveStyles::from_registry(&KernelRegistry::with_defaults()))
+    }
+}
+
+/// Count one inference (batch 1) of `spec` under `var`, with MAC styles
+/// taken from the default registry's deployment backends.
 pub fn count(spec: &ModelSpec, var: Variant) -> OpsBreakdown {
+    count_with(spec, var, &PrimitiveStyles::default())
+}
+
+/// [`count`] against an explicit style mapping (custom registries).
+pub fn count_with(spec: &ModelSpec, var: Variant, styles: &PrimitiveStyles) -> OpsBreakdown {
+    let lin_style = |l: Lin| match l {
+        Lin::Mult => styles.matmul,
+        Lin::Shift => styles.matshift,
+    };
     let mut b = OpsBreakdown::default();
     for st in &spec.stages {
         let n = st.tokens as f64;
@@ -119,17 +165,17 @@ pub fn count(spec: &ModelSpec, var: Variant) -> OpsBreakdown {
             match var.attn {
                 Attn::Msa => {
                     // QKᵀ + AV: 2·N²·d (softmax itself not MAC-counted)
-                    b.attn_matmul.push((MacStyle::MultFp32, 2.0 * n * n * d));
+                    b.attn_matmul.push((styles.matmul, 2.0 * n * n * d));
                 }
                 Attn::Linear => {
                     // KV + Q(KV): 2·N·d·dk, full precision
-                    b.attn_matmul.push((MacStyle::MultFp32, 2.0 * n * d * dk));
-                    b.other.push((MacStyle::MultFp32, 9.0 * n * d)); // DWConv
+                    b.attn_matmul.push((styles.matmul, 2.0 * n * d * dk));
+                    b.other.push((styles.matmul, 9.0 * n * d)); // DWConv
                 }
                 Attn::LinearAdd => {
                     // binarized operand ⇒ accumulation-only MACs
-                    b.attn_matmul.push((MacStyle::AddInt32, 2.0 * n * d * dk));
-                    b.other.push((MacStyle::MultFp32, 9.0 * n * d)); // DWConv
+                    b.attn_matmul.push((styles.matadd, 2.0 * n * d * dk));
+                    b.other.push((styles.matmul, 9.0 * n * d)); // DWConv
                 }
             }
             // --- the four attention Linears -----------------------------
@@ -137,14 +183,14 @@ pub fn count(spec: &ModelSpec, var: Variant) -> OpsBreakdown {
             // --- MLP ----------------------------------------------------
             let mlp_macs = 2.0 * n * d * h;
             match var.mlp {
-                Mlp::Mult => b.mlp.push((MacStyle::MultFp32, mlp_macs)),
-                Mlp::Shift => b.mlp.push((MacStyle::ShiftInt32, mlp_macs)),
+                Mlp::Mult => b.mlp.push((styles.matmul, mlp_macs)),
+                Mlp::Shift => b.mlp.push((styles.matshift, mlp_macs)),
                 Mlp::Moe { mult_frac_pct } => {
                     let f = mult_frac_pct as f64 / 100.0;
-                    b.mlp.push((MacStyle::MultFp32, mlp_macs * f));
-                    b.mlp.push((MacStyle::ShiftInt32, mlp_macs * (1.0 - f)));
+                    b.mlp.push((styles.matmul, mlp_macs * f));
+                    b.mlp.push((styles.matshift, mlp_macs * (1.0 - f)));
                     // router: N·d·2
-                    b.other.push((MacStyle::MultFp32, 2.0 * n * d));
+                    b.other.push((styles.matmul, 2.0 * n * d));
                 }
             }
             // --- bytes ---------------------------------------------------
@@ -153,11 +199,11 @@ pub fn count(spec: &ModelSpec, var: Variant) -> OpsBreakdown {
             // weights: attention linears + MLP, bytes per weight by style
             b.weight_bytes += 4.0 * d * d * lstyle.weight_bytes();
             let mlp_wbytes = match var.mlp {
-                Mlp::Mult => MacStyle::MultFp32.weight_bytes(),
-                Mlp::Shift => MacStyle::ShiftInt32.weight_bytes(),
+                Mlp::Mult => styles.matmul.weight_bytes(),
+                Mlp::Shift => styles.matshift.weight_bytes(),
                 // MoE stores both experts
                 Mlp::Moe { .. } => {
-                    MacStyle::MultFp32.weight_bytes() + MacStyle::ShiftInt32.weight_bytes()
+                    styles.matmul.weight_bytes() + styles.matshift.weight_bytes()
                 }
             };
             b.weight_bytes += 2.0 * d * h * mlp_wbytes;
@@ -206,6 +252,32 @@ mod tests {
         let mult = count(&spec, Variant::LINEAR);
         let shift = count(&spec, Variant::ADD_SHIFT_BOTH);
         assert!(shift.weight_bytes < 0.6 * mult.weight_bytes);
+    }
+
+    #[test]
+    fn styles_resolve_from_registry_backends() {
+        // The default mapping must match the paper's deployment tags…
+        let styles = PrimitiveStyles::default();
+        assert_eq!(styles.matmul, MacStyle::MultFp32);
+        assert_eq!(styles.matadd, MacStyle::AddInt32);
+        assert_eq!(styles.matshift, MacStyle::ShiftInt32);
+        // …and an empty registry falls back rather than panicking.
+        let empty = KernelRegistry::new();
+        assert_eq!(PrimitiveStyles::from_registry(&empty), styles);
+    }
+
+    #[test]
+    fn count_with_custom_styles_changes_energy_tags() {
+        // An embedder swapping the shift deployment backend for an INT8-mult
+        // one must see the tag flow through the breakdown.
+        let spec = classifier("pvtv2_b0");
+        let styles = PrimitiveStyles {
+            matshift: MacStyle::MultInt8,
+            ..PrimitiveStyles::default()
+        };
+        let b = count_with(&spec, Variant::ADD_SHIFT_BOTH, &styles);
+        assert!(b.mlp.iter().all(|(s, _)| *s == MacStyle::MultInt8));
+        assert!(b.attn_linear.iter().all(|(s, _)| *s == MacStyle::MultInt8));
     }
 
     #[test]

@@ -19,15 +19,28 @@ pub struct Partition {
 }
 
 /// Pick the smallest compiled bucket ≥ n (buckets must be sorted ascending).
-/// Falls back to the largest bucket if n exceeds it (callers must then
-/// split — see [`partition`] which enforces n ≤ max bucket).
+///
+/// # Overflow contract
+///
+/// `n` must not exceed the largest bucket: there is no compiled executable
+/// bigger than that, so oversized partitions must be split into
+/// largest-bucket chunks *before* bucket selection — [`partition`] does
+/// exactly that. Debug builds assert the contract; release builds keep the
+/// legacy clamp-to-largest fallback, which any caller that skipped
+/// splitting will then trip over when it gathers `n` rows into a
+/// `bucket < n` buffer.
 pub fn pick_bucket(buckets: &[usize], n: usize) -> usize {
+    let largest = *buckets.last().expect("no buckets");
+    debug_assert!(
+        n <= largest,
+        "token count {n} exceeds largest bucket {largest}: split into chunks first (see partition())"
+    );
     for &b in buckets {
         if b >= n {
             return b;
         }
     }
-    *buckets.last().expect("no buckets")
+    largest
 }
 
 /// Partition `tokens` (T × dim, row-major) by routing decision into one
@@ -121,7 +134,34 @@ mod tests {
         assert_eq!(pick_bucket(&b, 1), 16);
         assert_eq!(pick_bucket(&b, 16), 16);
         assert_eq!(pick_bucket(&b, 17), 32);
-        assert_eq!(pick_bucket(&b, 100), 64);
+        assert_eq!(pick_bucket(&b, 64), 64);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "exceeds largest bucket")]
+    fn pick_bucket_rejects_oversize_in_debug() {
+        pick_bucket(&[16, 32, 64], 100);
+    }
+
+    /// Regression for the chunk-split path: counts beyond the largest bucket
+    /// split into largest-bucket chunks, and the remainder chunk picks the
+    /// *smallest* fitting bucket, not the largest.
+    #[test]
+    fn chunk_split_picks_smallest_bucket_per_chunk() {
+        let dim = 1;
+        let routes = mk_routes(&vec![0; 11]);
+        let tokens = vec![2.0; 11];
+        let parts = partition(&tokens, dim, &routes, 1, &[4, 8]);
+        assert_eq!(parts.len(), 2); // 8 + 3
+        assert_eq!(parts[0].indices.len(), 8);
+        assert_eq!(parts[0].bucket, 8);
+        assert_eq!(parts[1].indices.len(), 3);
+        assert_eq!(parts[1].bucket, 4, "remainder must downshift to bucket 4");
+        // every token exactly once, in order, and padding rows stay zero
+        let seen: Vec<usize> = parts.iter().flat_map(|p| p.indices.clone()).collect();
+        assert_eq!(seen, (0..11).collect::<Vec<_>>());
+        assert_eq!(&parts[1].padded[3..], &[0.0f32][..]); // bucket 4 - 3 rows
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! The paper's MoE machinery on the serving side: token→expert routing,
-//! bucket-padded dispatch, and the latency-aware load-balancing math
-//! (Eq. 4) evaluated over live traffic.
+//! bucket-padded dispatch, kernel-level expert execution through the
+//! `KernelRegistry`, and the latency-aware load-balancing math (Eq. 4)
+//! evaluated over live traffic.
 
 pub mod balance;
 pub mod dispatch;
+pub mod experts;
 pub mod router;

@@ -1,0 +1,108 @@
+//! Property suite over the kernel registry: every registered backend must
+//! agree with the dense matmul oracle *on its own prepared weights* across
+//! randomized PVT-ish shapes. The suite iterates the registry, so a future
+//! backend registered in `KernelRegistry::with_defaults()` is covered
+//! automatically — no test edits.
+
+use std::sync::Arc;
+
+use shiftaddvit::kernels::api::{Primitive, RawWeights};
+use shiftaddvit::kernels::matmul::matmul_naive;
+use shiftaddvit::kernels::planner::{Planner, Shape};
+use shiftaddvit::kernels::registry::KernelRegistry;
+use shiftaddvit::util::prop::{assert_close, check};
+
+/// out = run(prepare(w), prepare_operand(x)) ≈ x @ prepare(w).dense(),
+/// within each backend's self-declared tolerance.
+#[test]
+fn every_backend_matches_the_dense_oracle() {
+    let registry = KernelRegistry::with_defaults();
+    assert!(registry.len() >= 11, "registry unexpectedly small");
+    for kernel in registry.iter() {
+        check(&format!("oracle-{}", kernel.id()), 10, 10, |rng, size| {
+            let (m, k, n) = (size + 2, size + 3, size + 1);
+            // Halved weights keep pow2 exponents small so the INT8
+            // activation error budget holds with margin (seed-test idiom).
+            let wf: Vec<f32> = rng.normals(k * n).iter().map(|v| v * 0.5).collect();
+            let raw = RawWeights::new(wf, k, n);
+            let x = rng.normals(m * k);
+            let w = kernel.prepare(&raw);
+            let op = kernel.prepare_operand(&x, m, k);
+            let mut out = vec![0.0f32; m * n];
+            kernel.run(&w, &op, &mut out);
+            let want = matmul_naive(&x, &w.dense(), m, k, n);
+            assert_close(&out, &want, kernel.tolerance())
+        });
+    }
+}
+
+/// The row-parallel backends chunk by rows without changing per-row
+/// accumulation order, so they must be *bit-identical* to their serial
+/// counterparts — including at sizes large enough to actually fan out.
+#[test]
+fn rowpar_backends_match_serial_bit_exactly() {
+    let registry = KernelRegistry::with_defaults();
+    for (par_id, serial_id) in [
+        ("matshift/rowpar", "matshift/planes"),
+        ("matadd/rowpar", "matadd/bitplane"),
+    ] {
+        let par = registry.lookup(par_id).expect(par_id);
+        let serial = registry.lookup(serial_id).expect(serial_id);
+        check(&format!("exact-{par_id}"), 8, 8, |rng, size| {
+            // m spans both the serial fallback (< 32 rows) and the pool path
+            let (m, k, n) = (size * 24 + 7, size + 4, size + 2);
+            let raw = RawWeights::new(rng.normals(k * n), k, n);
+            let x = rng.normals(m * k);
+            let (wp, ws) = (par.prepare(&raw), serial.prepare(&raw));
+            let (op, os) = (par.prepare_operand(&x, m, k), serial.prepare_operand(&x, m, k));
+            let mut yp = vec![0.0f32; m * n];
+            let mut ys = vec![0.0f32; m * n];
+            par.run(&wp, &op, &mut yp);
+            serial.run(&ws, &os, &mut ys);
+            if yp != ys {
+                return Err(format!("{par_id} diverged from {serial_id} at m={m}"));
+            }
+            Ok(())
+        });
+    }
+}
+
+/// Planner end-to-end over the registry: it must return a registered
+/// backend of the right primitive for every primitive, cache per shape, and
+/// honour pins.
+#[test]
+fn planner_returns_registered_backends_for_every_primitive() {
+    let registry = Arc::new(KernelRegistry::with_defaults());
+    let planner = Planner::new(registry.clone());
+    let shape = Shape::new(12, 10, 8);
+    for p in Primitive::ALL {
+        let chosen = planner.choose(p, shape);
+        assert_eq!(chosen.primitive(), p);
+        assert!(
+            registry.lookup(&chosen.id()).is_some(),
+            "{} not registered",
+            chosen.id()
+        );
+    }
+    assert_eq!(planner.choices().len(), Primitive::ALL.len());
+    // pins survive alongside benchmarked choices
+    planner.pin(Primitive::MatShift, shape, "rowpar");
+    assert_eq!(
+        planner.choose(Primitive::MatShift, shape).id(),
+        "matshift/rowpar"
+    );
+}
+
+/// `tolerance()` must be an honest bound: backends that quantize
+/// activations declare a wider budget than exact ones.
+#[test]
+fn shift_backends_declare_quantization_tolerance() {
+    let registry = KernelRegistry::with_defaults();
+    for kernel in registry.iter() {
+        if kernel.primitive() == Primitive::MatShift {
+            assert!(kernel.tolerance() > 1e-3, "{}", kernel.id());
+        } else {
+            assert!(kernel.tolerance() <= 1e-3, "{}", kernel.id());
+        }
+    }
+}

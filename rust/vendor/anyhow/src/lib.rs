@@ -1,0 +1,141 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The sandbox has no crates.io access (DESIGN.md §6), so this vendored shim
+//! provides the subset of the real crate's API that the workspace uses:
+//! [`Error`], [`Result`], the [`anyhow!`]/[`bail!`] macros, and the
+//! [`Context`] extension trait for `Result` and `Option`. Error chains are
+//! flattened into a single message string at conversion time — good enough
+//! for CLI diagnostics, not a general-purpose replacement.
+
+use std::fmt;
+
+/// A flattened error: message plus any source-chain text, pre-joined.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+
+    fn wrap<C: fmt::Display>(self, context: C) -> Error {
+        Error {
+            msg: format!("{context}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error, mirroring the real crate's trait.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($t)*).into())
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/file")?;
+        Ok(())
+    }
+
+    #[test]
+    fn from_std_error_and_context() {
+        let e = io_fail().context("reading config").unwrap_err();
+        assert!(e.to_string().starts_with("reading config: "));
+    }
+
+    #[test]
+    fn macros_format() {
+        let name = "x";
+        let e = anyhow!("missing key '{name}'");
+        assert_eq!(e.to_string(), "missing key 'x'");
+        let e2 = anyhow!("{} + {}", 1, 2);
+        assert_eq!(e2.to_string(), "1 + 2");
+        fn f() -> Result<()> {
+            bail!("boom {}", 7)
+        }
+        assert_eq!(f().unwrap_err().to_string(), "boom 7");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert_eq!(v.context("empty").unwrap_err().to_string(), "empty");
+    }
+}
