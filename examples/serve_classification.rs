@@ -1,21 +1,62 @@
 //! END-TO-END DRIVER (DESIGN.md §5): the full serving system on a real
 //! workload — synthetic clients issue image requests; the coordinator
-//! batches them, runs the pipeline-decomposed ShiftAddViT with REAL sparse
-//! MoE dispatch (Mult/Shift experts on parallel engine workers), and reports
-//! latency, throughput, accuracy, expert load split, and LL-loss
-//! diagnostics. Compares all three dispatch modes.
+//! batches them, runs the decomposed ShiftAddViT with REAL sparse MoE
+//! dispatch, and reports latency, throughput, accuracy, expert load split,
+//! and LL-loss diagnostics.
+//!
+//! Defaults to the native pure-Rust engine, so it runs with zero setup:
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example serve_classification
+//! cargo run --release --example serve_classification                  # native
+//! make artifacts && \
+//! cargo run --release --example serve_classification -- --backend xla # artifacts
 //! ```
+//!
+//! The xla path compares all three dispatch modes (paper '†'/'*'/dense).
 
 use anyhow::Result;
-use shiftaddvit::coordinator::config::{DispatchMode, ServerConfig};
-use shiftaddvit::coordinator::server::serve;
+use shiftaddvit::coordinator::backend::{InferenceBackend, NativeBackend};
+use shiftaddvit::coordinator::config::{BackendKind, DispatchMode, ServerConfig};
+use shiftaddvit::coordinator::server::{serve, serve_backend};
+use shiftaddvit::model::ops::Variant;
 use shiftaddvit::runtime::artifact::Manifest;
+use shiftaddvit::util::cli::Args;
 use shiftaddvit::util::image::ascii_grid;
 
 fn main() -> Result<()> {
+    let args = Args::parse();
+    match BackendKind::parse(&args.get_or("backend", "native"))? {
+        BackendKind::Native => serve_native(),
+        BackendKind::Xla => serve_xla(),
+    }
+}
+
+fn serve_native() -> Result<()> {
+    let backend = NativeBackend::tiny(Variant::SHIFTADD_MOE);
+    println!(
+        "serving {} ({} tokens/img, {} classes) — no artifacts needed\n",
+        backend.name(),
+        backend.tokens(),
+        backend.num_classes()
+    );
+    let cfg = ServerConfig {
+        requests: 64,
+        max_batch: 8,
+        batch_deadline_ms: 2.0,
+        arrival_ms: 0.0,
+        ..ServerConfig::default()
+    };
+    let report = serve_backend(&backend, &cfg)?;
+    report.print();
+    if let Some(mask) = report.sample_masks.first() {
+        let grid = (backend.tokens() as f64).sqrt() as usize;
+        println!("\nsample router dispatch (█=Mult expert, ·=Shift expert):");
+        println!("{}", ascii_grid(mask, grid));
+    }
+    Ok(())
+}
+
+fn serve_xla() -> Result<()> {
     let manifest = Manifest::load(&Manifest::default_dir())?;
     let serve_cfg = manifest.serve.as_ref().expect("serving topology");
     println!(
@@ -35,6 +76,7 @@ fn main() -> Result<()> {
             batch_deadline_ms: 2.0,
             dispatch: mode,
             arrival_ms: 0.0,
+            ..ServerConfig::default()
         };
         let report = serve(&manifest, &cfg)?;
         report.print();

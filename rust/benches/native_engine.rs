@@ -1,0 +1,42 @@
+//! Native-engine latency: the pure-Rust `infer` forward pass per variant
+//! and batch size, plus an end-to-end native serving throughput run — the
+//! measured (not analytic) counterpart of the reparameterization ladder,
+//! runnable with zero artifacts.
+
+use shiftaddvit::coordinator::backend::NativeBackend;
+use shiftaddvit::coordinator::config::ServerConfig;
+use shiftaddvit::coordinator::server::serve_backend;
+use shiftaddvit::infer::model::tiny_latencies_ms;
+use shiftaddvit::model::ops::Variant;
+use shiftaddvit::util::bench::{f2, Table};
+
+fn main() {
+    let mut t = Table::new(&["Variant", "bs1 (ms)", "bs8 (ms)", "bs32 (ms)"]);
+    for (label, variant) in [
+        ("MSA", Variant::MSA),
+        ("Linear", Variant::LINEAR),
+        ("LinearAdd", Variant::ADD),
+        ("Add+ShiftBoth", Variant::ADD_SHIFT_BOTH),
+        ("ShiftAdd+MoE", Variant::SHIFTADD_MOE),
+    ] {
+        let lat = tiny_latencies_ms(variant, &[1, 8, 32]);
+        t.row(&[
+            label.to_string(),
+            f2(lat[0]),
+            f2(lat[1]),
+            f2(lat[2]),
+        ]);
+    }
+    t.print("Native engine — tiny-analogue forward latency per variant");
+
+    let cfg = ServerConfig {
+        requests: 48,
+        ..ServerConfig::default()
+    };
+    let backend = NativeBackend::tiny(Variant::SHIFTADD_MOE);
+    let report = serve_backend(&backend, &cfg).expect("native serve");
+    println!(
+        "\nnative serving: {} requests  {:.1} img/s  p50 {:.2} ms  p99 {:.2} ms",
+        report.metrics.requests, report.throughput_rps, report.latency.p50, report.latency.p99
+    );
+}

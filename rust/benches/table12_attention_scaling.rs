@@ -1,11 +1,10 @@
 //! Table 12 — attention-type latency vs batch size and resolution.
+//! Measured rows: XLA artifacts when present, native engine always.
 use shiftaddvit::harness::scaling;
 use shiftaddvit::runtime::engine::Engine;
 
 fn main() {
     scaling::table12_analytic();
-    match Engine::from_default_dir() {
-        Ok(engine) => scaling::table12_measured(&engine).expect("measured"),
-        Err(e) => eprintln!("measured rows skipped: {e}"),
-    }
+    let engine = Engine::from_default_dir().ok();
+    scaling::table12_measured(engine.as_ref()).expect("measured");
 }

@@ -1,10 +1,12 @@
 //! Table 3 — overall accuracy/latency/energy across the model zoo.
+//! Latency cells fall back to the native engine when artifacts are absent.
 use shiftaddvit::harness::overall;
 use shiftaddvit::runtime::engine::Engine;
 
 fn main() {
-    match Engine::from_default_dir() {
-        Ok(engine) => overall::table3(&engine).expect("table3"),
-        Err(e) => eprintln!("SKIP (run `make artifacts`): {e}"),
+    let engine = Engine::from_default_dir().ok();
+    if engine.is_none() {
+        eprintln!("no artifacts — latency columns use the native engine");
     }
+    overall::table3(engine.as_ref()).expect("table3");
 }

@@ -30,6 +30,32 @@ impl DispatchMode {
     }
 }
 
+/// Which inference engine serves the traffic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// pure-Rust `infer` engine — zero artifacts, runs out of the box
+    Native,
+    /// AOT-compiled HLO artifacts on the PJRT engine pool
+    Xla,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "xla" => Ok(BackendKind::Xla),
+            other => anyhow::bail!("unknown backend '{other}' (native|xla)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Xla => "xla",
+        }
+    }
+}
+
 /// Coordinator settings.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
@@ -38,6 +64,8 @@ pub struct ServerConfig {
     /// how long the batcher waits to fill a batch (ms)
     pub batch_deadline_ms: f64,
     pub dispatch: DispatchMode,
+    /// which engine executes batches
+    pub backend: BackendKind,
     /// number of requests the synthetic client issues
     pub requests: usize,
     /// mean request inter-arrival (ms); 0 = closed-loop
@@ -50,6 +78,7 @@ impl Default for ServerConfig {
             max_batch: 8,
             batch_deadline_ms: 2.0,
             dispatch: DispatchMode::Real,
+            backend: BackendKind::Native,
             requests: 128,
             arrival_ms: 0.0,
         }
@@ -70,6 +99,9 @@ impl ServerConfig {
         }
         if let Some(v) = j.get("dispatch").and_then(|v| v.as_str()) {
             c.dispatch = DispatchMode::parse(v)?;
+        }
+        if let Some(v) = j.get("backend").and_then(|v| v.as_str()) {
+            c.backend = BackendKind::parse(v)?;
         }
         if let Some(v) = j.get("requests").and_then(|v| v.as_usize()) {
             c.requests = v;
@@ -101,5 +133,26 @@ mod tests {
     fn dispatch_mode_parse() {
         assert!(DispatchMode::parse("real").is_ok());
         assert!(DispatchMode::parse("nope").is_err());
+    }
+
+    #[test]
+    fn backend_kind_parse_and_default() {
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("xla").unwrap(), BackendKind::Xla);
+        assert!(BackendKind::parse("tpu").is_err());
+        assert_eq!(ServerConfig::default().backend, BackendKind::Native);
+        assert_eq!(BackendKind::Xla.name(), "xla");
+    }
+
+    #[test]
+    fn backend_parsed_from_config_file() {
+        let dir = std::env::temp_dir().join("savit_cfg_backend_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"backend": "xla"}"#).unwrap();
+        assert_eq!(
+            ServerConfig::from_file(&p).unwrap().backend,
+            BackendKind::Xla
+        );
     }
 }

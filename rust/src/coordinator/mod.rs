@@ -1,8 +1,11 @@
 //! L3 — the serving coordinator (the paper's system contribution, serving
-//! shape): dynamic batching, the pipeline scheduler over the decomposed
-//! model artifacts, real sparse MoE token dispatch with parallel experts and
-//! latency-aware balancing, and serving metrics.
+//! shape): dynamic batching, real sparse MoE token dispatch with parallel
+//! experts and latency-aware balancing, and serving metrics — all behind
+//! the engine-agnostic [`backend::InferenceBackend`] trait, with the XLA
+//! artifact pipeline (`scheduler`) and the native pure-Rust engine
+//! (`backend::NativeBackend`) as interchangeable engines.
 
+pub mod backend;
 pub mod batcher;
 pub mod config;
 pub mod metrics;

@@ -26,16 +26,10 @@ use crate::runtime::artifact::{Manifest, ServeConfig};
 use crate::runtime::tensor::Tensor;
 use crate::runtime::worker::{EnginePool, Pending};
 
-/// Result of one batch.
-pub struct BatchOutput {
-    pub logits: Tensor,
-    /// per-image routed-to-Mult token masks of the FIRST MoE block (for the
-    /// Fig. 6/9 visualisation)
-    pub dispatch_mask_blk0: Vec<Vec<bool>>,
-    pub batch_ms: f64,
-    /// makespan the batch *would* have under ideal parallelism (paper "*")
-    pub modularized_ms: f64,
-}
+// `BatchOutput` moved to the engine-agnostic backend module; re-exported
+// here so existing `scheduler::BatchOutput` imports keep compiling.
+pub use crate::coordinator::backend::BatchOutput;
+use crate::coordinator::backend::InferenceBackend;
 
 /// The pipeline over `serve_*` artifacts.
 pub struct MoePipeline {
@@ -290,6 +284,32 @@ impl MoePipeline {
     fn expert_name(&self, blk: usize, expert: usize, bucket: usize) -> String {
         let e = if expert == EXPERT_MULT { "mult" } else { "shift" };
         format!("serve_expert_{e}_blk{blk}_n{bucket}")
+    }
+}
+
+impl InferenceBackend for MoePipeline {
+    fn name(&self) -> String {
+        format!("xla ({}, {:?})", self.serve.model, self.mode)
+    }
+
+    fn img(&self) -> usize {
+        self.serve.img
+    }
+
+    fn tokens(&self) -> usize {
+        self.serve.tokens
+    }
+
+    fn num_classes(&self) -> usize {
+        self.serve.num_classes
+    }
+
+    fn warmup(&self) -> Result<()> {
+        MoePipeline::warmup(self)
+    }
+
+    fn run_batch(&self, images: &[f32], n: usize, metrics: &mut Metrics) -> Result<BatchOutput> {
+        MoePipeline::run_batch(self, images, n, metrics)
     }
 }
 

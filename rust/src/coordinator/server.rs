@@ -1,7 +1,8 @@
 //! The serving loop: a synthetic client thread issues image requests
 //! (open-loop Poisson-ish or closed-loop), the coordinator batches them,
-//! runs the MoE pipeline, and reports latency/throughput/accuracy — the
-//! end-to-end driver behind `shiftaddvit serve` and
+//! runs them through an [`InferenceBackend`] (native engine or XLA artifact
+//! pipeline), and reports latency/throughput/accuracy — the end-to-end
+//! driver behind `shiftaddvit serve` and
 //! `examples/serve_classification.rs`.
 
 use std::sync::mpsc;
@@ -10,6 +11,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::coordinator::backend::{create_backend, InferenceBackend};
 use crate::coordinator::batcher::{Batcher, Request};
 use crate::coordinator::config::ServerConfig;
 use crate::coordinator::metrics::Metrics;
@@ -30,10 +32,23 @@ pub struct ServeReport {
     pub sample_masks: Vec<Vec<bool>>,
 }
 
-/// Run the serving benchmark described by `cfg` against the manifest.
+/// Run the serving benchmark against the XLA artifact pipeline (the
+/// pre-refactor entry point, kept for artifact-driven callers).
 pub fn serve(manifest: &Manifest, cfg: &ServerConfig) -> Result<ServeReport> {
     let pipeline = MoePipeline::new(manifest, cfg.dispatch)?;
-    pipeline.warmup()?;
+    serve_backend(&pipeline, cfg)
+}
+
+/// Resolve `cfg.backend` ([`create_backend`]) and serve on it — the
+/// engine-agnostic entry point behind `shiftaddvit serve`.
+pub fn serve_auto(cfg: &ServerConfig) -> Result<ServeReport> {
+    let backend = create_backend(cfg)?;
+    serve_backend(backend.as_ref(), cfg)
+}
+
+/// Run the serving benchmark described by `cfg` on any engine.
+pub fn serve_backend(backend: &dyn InferenceBackend, cfg: &ServerConfig) -> Result<ServeReport> {
+    backend.warmup()?;
 
     let (tx, rx) = mpsc::channel::<Request>();
     let n_req = cfg.requests;
@@ -72,7 +87,7 @@ pub fn serve(manifest: &Manifest, cfg: &ServerConfig) -> Result<ServeReport> {
 
     while let Some(batch) = batcher.next_batch(&rx) {
         let pixels = batch.pixels();
-        let out = pipeline.run_batch(&pixels, batch.len(), &mut metrics)?;
+        let out = backend.run_batch(&pixels, batch.len(), &mut metrics)?;
         let preds = out.logits.argmax_last()?;
         let done = Instant::now();
         for (r, p) in batch.requests.iter().zip(&preds) {
@@ -86,7 +101,8 @@ pub fn serve(manifest: &Manifest, cfg: &ServerConfig) -> Result<ServeReport> {
         }
         modularized.push(out.modularized_ms);
         if sample_masks.len() < 8 {
-            sample_masks.extend(out.dispatch_mask_blk0.into_iter().take(8));
+            let room = 8 - sample_masks.len();
+            sample_masks.extend(out.dispatch_mask_blk0.into_iter().take(room));
         }
     }
     let wall_s = t0.elapsed().as_secs_f64();

@@ -1,0 +1,336 @@
+//! Native attention kernels — the executable counterparts of the analytic
+//! `model::ops::Attn` variants (mirrors `python/compile/kernels/ref.py` and
+//! the pure-jnp paths of `python/compile/model.py`).
+//!
+//! All three attention families operate per head on one image's tokens:
+//!
+//! - [`softmax_attn`] — quadratic MSA, `softmax(QKᵀ/√d)V`;
+//! - [`relu_linear_attn`] — full-precision linear attention in Q(KᵀV) order
+//!   with ReLU feature maps (the paper's "Linear" row);
+//! - [`hamming_linear_attn_kernel`] — the LinearAdd row: Q/K are ±1 codes in
+//!   Hamming space (KSH binarization from `quant::ksh`), every matmul
+//!   against a code matrix is an accumulation-only MatAdd executed through a
+//!   registry [`LinearKernel`], and the attention weight is the Hamming
+//!   *similarity* `(bits + qcᵢ·kcⱼ)/2 ∈ [0, bits]` — non-negative by
+//!   construction, so the normalizer never crosses zero.
+//!
+//! [`hamming_linear_attn_ref`] is the readable oracle: identical per-element
+//! accumulation order (ascending contraction index), so the kernel path is
+//! *bit-exact* against it — asserted by `rust/tests/native_infer.rs`.
+
+use std::sync::Arc;
+
+use crate::kernels::api::{LinearKernel, RawWeights};
+
+/// Numerical floor shared with `python/compile/kernels/ref.py::linattn_ref`.
+const EPS: f32 = 1e-6;
+
+/// Standard MSA per head: `softmax(q kᵀ / √d) v`; q, k, v are (n × d).
+pub fn softmax_attn(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize) -> Vec<f32> {
+    assert_eq!(q.len(), n * d);
+    assert_eq!(k.len(), n * d);
+    assert_eq!(v.len(), n * d);
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = vec![0.0f32; n * d];
+    let mut row = vec![0.0f32; n];
+    for i in 0..n {
+        for (j, r) in row.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for e in 0..d {
+                acc += q[i * d + e] * k[j * d + e];
+            }
+            *r = acc * scale;
+        }
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0f32;
+        for r in row.iter_mut() {
+            *r = (*r - m).exp();
+            sum += *r;
+        }
+        for r in row.iter_mut() {
+            *r /= sum;
+        }
+        let orow = &mut out[i * d..(i + 1) * d];
+        for (j, &a) in row.iter().enumerate() {
+            let vrow = &v[j * d..(j + 1) * d];
+            for (o, &vv) in orow.iter_mut().zip(vrow) {
+                *o += a * vv;
+            }
+        }
+    }
+    out
+}
+
+/// Full-precision linear attention per head, Q(KᵀV) order with ReLU feature
+/// maps (`model.py`: `fq = relu(q)+1e-3`, `kv = fkᵀv`, `out = fq·kv /
+/// (fq·Σfk + eps)`). Linear in n.
+pub fn relu_linear_attn(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize) -> Vec<f32> {
+    assert_eq!(q.len(), n * d);
+    assert_eq!(k.len(), n * d);
+    assert_eq!(v.len(), n * d);
+    let feat = |x: f32| x.max(0.0) + 1e-3;
+    // kv (d × d) and z (d) accumulated over tokens.
+    let mut kv = vec![0.0f32; d * d];
+    let mut z = vec![0.0f32; d];
+    for j in 0..n {
+        for e in 0..d {
+            let fk = feat(k[j * d + e]);
+            z[e] += fk;
+            let kvrow = &mut kv[e * d..(e + 1) * d];
+            let vrow = &v[j * d..(j + 1) * d];
+            for (kk, &vv) in kvrow.iter_mut().zip(vrow) {
+                *kk += fk * vv;
+            }
+        }
+    }
+    let mut out = vec![0.0f32; n * d];
+    for i in 0..n {
+        let orow = &mut out[i * d..(i + 1) * d];
+        let mut den = 0.0f32;
+        for e in 0..d {
+            let fq = feat(q[i * d + e]);
+            den += fq * z[e];
+            let kvrow = &kv[e * d..(e + 1) * d];
+            for (o, &kk) in orow.iter_mut().zip(kvrow) {
+                *o += fq * kk;
+            }
+        }
+        for o in orow.iter_mut() {
+            *o /= den + EPS;
+        }
+    }
+    out
+}
+
+/// Binarized linear attention through a registry MatAdd backend.
+///
+/// `qc`, `kc`: (n × bits) ±1 codes; `v`: (n × d) float tokens. Computed in
+/// Q(KᵀV) order; the 1/2 factors of the Hamming similarity cancel between
+/// numerator and denominator (ref.py derivation):
+///
+/// ```text
+///   numᵢ = bits·Σⱼvⱼ + qcᵢ @ (kcᵀ v)
+///   denᵢ = n·bits     + qcᵢ @ (kcᵀ 1)
+///   outᵢ = numᵢ / (denᵢ + eps)
+/// ```
+///
+/// Every product against a code matrix runs as `x @ codes` through
+/// `kernel`, with transposes so the binary operand always sits on the
+/// weight side of the [`LinearKernel`] contract.
+pub fn hamming_linear_attn_kernel(
+    kernel: &Arc<dyn LinearKernel>,
+    qc: &[i8],
+    kc: &[i8],
+    v: &[f32],
+    n: usize,
+    bits: usize,
+    d: usize,
+) -> Vec<f32> {
+    assert_eq!(qc.len(), n * bits);
+    assert_eq!(kc.len(), n * bits);
+    assert_eq!(v.len(), n * d);
+
+    // vᵀ (d × n): contraction over tokens puts codes on the weight side.
+    let mut vt = vec![0.0f32; d * n];
+    for j in 0..n {
+        for e in 0..d {
+            vt[e * n + j] = v[j * d + e];
+        }
+    }
+    let kc_w = kernel.prepare(&RawWeights::new(
+        kc.iter().map(|&c| c as f32).collect(),
+        n,
+        bits,
+    ));
+    // kvᵀ (d × bits) = vᵀ @ kc  — MatAdd over tokens.
+    let mut kvt = vec![0.0f32; d * bits];
+    kernel.run(&kc_w, &kernel.prepare_operand(&vt, d, n), &mut kvt);
+    // z (1 × bits) = 1ᵀ @ kc — per-bit code sums.
+    let ones = vec![1.0f32; n];
+    let mut z = vec![0.0f32; bits];
+    kernel.run(&kc_w, &kernel.prepare_operand(&ones, 1, n), &mut z);
+
+    // qcᵀ (bits × n) as weights: numᵀ = kvᵀ @ qcᵀ, den = z @ qcᵀ.
+    let mut qct = vec![0.0f32; bits * n];
+    for i in 0..n {
+        for b in 0..bits {
+            qct[b * n + i] = qc[i * bits + b] as f32;
+        }
+    }
+    let qc_w = kernel.prepare(&RawWeights::new(qct, bits, n));
+    let mut numt = vec![0.0f32; d * n];
+    kernel.run(&qc_w, &kernel.prepare_operand(&kvt, d, bits), &mut numt);
+    let mut den = vec![0.0f32; n];
+    kernel.run(&qc_w, &kernel.prepare_operand(&z, 1, bits), &mut den);
+
+    // Σⱼ vⱼ (ascending j — same order as the oracle).
+    let mut sv = vec![0.0f32; d];
+    for j in 0..n {
+        for (s, &vv) in sv.iter_mut().zip(&v[j * d..(j + 1) * d]) {
+            *s += vv;
+        }
+    }
+    let bias = (n * bits) as f32;
+    let bf = bits as f32;
+    let mut out = vec![0.0f32; n * d];
+    for i in 0..n {
+        let denom = bias + den[i] + EPS;
+        for e in 0..d {
+            out[i * d + e] = (bf * sv[e] + numt[e * n + i]) / denom;
+        }
+    }
+    out
+}
+
+/// Readable oracle for [`hamming_linear_attn_kernel`]: plain ± accumulation
+/// loops, same contraction order per output element — bit-exact.
+pub fn hamming_linear_attn_ref(
+    qc: &[i8],
+    kc: &[i8],
+    v: &[f32],
+    n: usize,
+    bits: usize,
+    d: usize,
+) -> Vec<f32> {
+    assert_eq!(qc.len(), n * bits);
+    assert_eq!(kc.len(), n * bits);
+    assert_eq!(v.len(), n * d);
+    // kv (bits × d) = kcᵀ v and z (bits) = kcᵀ 1, accumulation only.
+    let mut kv = vec![0.0f32; bits * d];
+    let mut z = vec![0.0f32; bits];
+    for b in 0..bits {
+        for j in 0..n {
+            let c = kc[j * bits + b];
+            if c > 0 {
+                z[b] += 1.0;
+            } else {
+                z[b] -= 1.0;
+            }
+            let kvrow = &mut kv[b * d..(b + 1) * d];
+            let vrow = &v[j * d..(j + 1) * d];
+            for (kk, &vv) in kvrow.iter_mut().zip(vrow) {
+                if c > 0 {
+                    *kk += vv;
+                } else {
+                    *kk -= vv;
+                }
+            }
+        }
+    }
+    let mut sv = vec![0.0f32; d];
+    for j in 0..n {
+        for (s, &vv) in sv.iter_mut().zip(&v[j * d..(j + 1) * d]) {
+            *s += vv;
+        }
+    }
+    let bias = (n * bits) as f32;
+    let bf = bits as f32;
+    let mut out = vec![0.0f32; n * d];
+    for i in 0..n {
+        let mut den = 0.0f32;
+        let mut num = vec![0.0f32; d];
+        for b in 0..bits {
+            let c = qc[i * bits + b];
+            let kvrow = &kv[b * d..(b + 1) * d];
+            if c > 0 {
+                den += z[b];
+                for (nn, &kk) in num.iter_mut().zip(kvrow) {
+                    *nn += kk;
+                }
+            } else {
+                den -= z[b];
+                for (nn, &kk) in num.iter_mut().zip(kvrow) {
+                    *nn -= kk;
+                }
+            }
+        }
+        let denom = bias + den + EPS;
+        for e in 0..d {
+            out[i * d + e] = (bf * sv[e] + num[e]) / denom;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::registry::KernelRegistry;
+    use crate::quant::ksh::KshHasher;
+    use crate::util::rng::XorShift64;
+
+    #[test]
+    fn softmax_attn_rows_average_v() {
+        // With identical scores, out_i = mean of v rows.
+        let n = 3;
+        let d = 2;
+        let q = vec![0.0f32; n * d];
+        let k = vec![0.0f32; n * d];
+        let v: Vec<f32> = (0..n * d).map(|i| i as f32).collect();
+        let out = softmax_attn(&q, &k, &v, n, d);
+        for i in 0..n {
+            assert!((out[i * d] - 2.0).abs() < 1e-5);
+            assert!((out[i * d + 1] - 3.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn relu_linear_attn_is_convex_combination_ish() {
+        // Non-negative weights ⇒ outputs stay within [min, max] of v per dim.
+        let mut rng = XorShift64::new(11);
+        let (n, d) = (6, 4);
+        let q = rng.normals(n * d);
+        let k = rng.normals(n * d);
+        let v = rng.normals(n * d);
+        let out = relu_linear_attn(&q, &k, &v, n, d);
+        for e in 0..d {
+            let lo = (0..n).map(|j| v[j * d + e]).fold(f32::INFINITY, f32::min);
+            let hi = (0..n)
+                .map(|j| v[j * d + e])
+                .fold(f32::NEG_INFINITY, f32::max);
+            for i in 0..n {
+                let o = out[i * d + e];
+                assert!(o >= lo - 1e-3 && o <= hi + 1e-3, "{o} not in [{lo},{hi}]");
+            }
+        }
+    }
+
+    #[test]
+    fn hamming_kernel_matches_ref_bit_exactly() {
+        let registry = KernelRegistry::with_defaults();
+        let mut rng = XorShift64::new(77);
+        let (n, d, bits) = (10, 6, 16);
+        let h = KshHasher::new(d, bits, 5);
+        let q = rng.normals(n * d);
+        let k = rng.normals(n * d);
+        let v = rng.normals(n * d);
+        let qc = h.hash_matrix(&q, n);
+        let kc = h.hash_matrix(&k, n);
+        let want = hamming_linear_attn_ref(&qc, &kc, &v, n, bits, d);
+        for kernel in registry.for_primitive(crate::kernels::api::Primitive::MatAdd) {
+            let got = hamming_linear_attn_kernel(&kernel, &qc, &kc, &v, n, bits, d);
+            assert_eq!(got, want, "{} diverged from the oracle", kernel.id());
+        }
+    }
+
+    #[test]
+    fn identical_codes_give_self_peak() {
+        // If qc == kc, token i matches itself on every bit, so the weight on
+        // v_i is maximal (bits matches) — the output leans toward v_i.
+        let (n, d, bits) = (4, 3, 32);
+        let h = KshHasher::new(d, bits, 9);
+        let mut rng = XorShift64::new(13);
+        let x = rng.normals(n * d);
+        let codes = h.hash_matrix(&x, n);
+        let mut v = vec![0.0f32; n * d];
+        for i in 0..n {
+            v[i * d + i % d] = 1.0; // near-one-hot rows
+        }
+        let out = hamming_linear_attn_ref(&codes, &codes, &v, n, bits, d);
+        for i in 0..n {
+            // the self column must carry the largest output weight
+            let self_val = out[i * d + i % d];
+            assert!(self_val > 0.0, "row {i} lost its own value");
+        }
+    }
+}

@@ -1,0 +1,496 @@
+//! The native pre-norm ShiftAddViT block — mirror of
+//! `python/compile/model.py`'s per-block forward, with every linear on a
+//! registry [`LinearKernel`] backend:
+//!
+//! ```text
+//!   x += Wo( attn(LN1(x)) [+ DWConv(V)] )     attention sublayer
+//!   x += MLP(LN2(x))                          Mult | Shift | MoE sublayer
+//! ```
+//!
+//! The attention family and the primitive behind each linear follow the
+//! [`Variant`] (the same enum the analytic op counting uses), so
+//! `Variant::SHIFTADD_MOE` executes exactly the mixture the paper deploys:
+//! KSH-binarized LinearAdd attention (MatAdd), shift-reparameterized
+//! attention linears (MatShift), and the Mult/Shift MoE MLP
+//! ([`crate::moe::experts::MoeMlp`]). Raw weights are retained on the block
+//! (`raw`) so oracle tests can re-derive every deployment format.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::infer::attn::{hamming_linear_attn_kernel, relu_linear_attn, softmax_attn};
+use crate::kernels::api::{LinearKernel, PreparedWeights, Primitive, RawWeights};
+use crate::kernels::planner::{Planner, Shape};
+use crate::model::ops::{Attn, Lin, Mlp, Variant};
+use crate::moe::experts::{MlpExpert, MoeMlp, MoeTrace};
+use crate::quant::ksh::KshHasher;
+use crate::util::rng::XorShift64;
+
+/// LayerNorm epsilon (mirrors `model.py::layer_norm`).
+pub const LN_EPS: f32 = 1e-6;
+
+/// Row-wise LayerNorm over the last dim: `(x-μ)/√(σ²+ε)·g + b`.
+pub fn layer_norm(x: &[f32], g: &[f32], b: &[f32], d: usize) -> Vec<f32> {
+    assert_eq!(x.len() % d, 0);
+    let mut out = vec![0.0f32; x.len()];
+    for (row, orow) in x.chunks(d).zip(out.chunks_mut(d)) {
+        let mut mu = 0.0f32;
+        for &v in row {
+            mu += v;
+        }
+        mu /= d as f32;
+        let mut var = 0.0f32;
+        for &v in row {
+            var += (v - mu) * (v - mu);
+        }
+        var /= d as f32;
+        let denom = (var + LN_EPS).sqrt();
+        for ((o, &v), (&gg, &bb)) in orow.iter_mut().zip(row).zip(g.iter().zip(b)) {
+            *o = (v - mu) / denom * gg + bb;
+        }
+    }
+    out
+}
+
+/// Depthwise 3×3 convolution over one image's token grid, SAME padding
+/// (mirrors `model.py::dwconv_tokens`). `x`: (grid² × d); `dw`: (3·3·d).
+pub fn dwconv3x3(x: &[f32], dw: &[f32], grid: usize, d: usize) -> Vec<f32> {
+    assert_eq!(x.len(), grid * grid * d);
+    assert_eq!(dw.len(), 9 * d);
+    let mut out = vec![0.0f32; grid * grid * d];
+    for y in 0..grid {
+        for xx in 0..grid {
+            for c in 0..d {
+                let mut acc = 0.0f32;
+                for dy in 0..3usize {
+                    for dx in 0..3usize {
+                        let sy = y + dy;
+                        let sx = xx + dx;
+                        if sy >= 1 && sy <= grid && sx >= 1 && sx <= grid {
+                            acc += x[((sy - 1) * grid + (sx - 1)) * d + c]
+                                * dw[(dy * 3 + dx) * d + c];
+                        }
+                    }
+                }
+                out[(y * grid + xx) * d + c] = acc;
+            }
+        }
+    }
+    out
+}
+
+/// Xavier-ish dense init used by every native weight matrix (mirror of
+/// `model.py::_dense_init`).
+pub fn dense_init(rng: &mut XorShift64, k: usize, n: usize) -> RawWeights {
+    let scale = (2.0 / (k + n) as f32).sqrt();
+    RawWeights::new(rng.normals(k * n).iter().map(|v| v * scale).collect(), k, n)
+}
+
+/// One linear layer on a planner-chosen registry backend, weights prepared
+/// once at construction into the backend's deployment format.
+pub struct LinearLayer {
+    pub kernel: Arc<dyn LinearKernel>,
+    pub weights: PreparedWeights,
+    pub bias: Vec<f32>,
+}
+
+impl LinearLayer {
+    /// `plan_m` is the representative row count the planner benchmarks at
+    /// (the per-image token count; kernels accept any m at run time).
+    pub fn new(
+        planner: &Planner,
+        primitive: Primitive,
+        raw: &RawWeights,
+        bias: Vec<f32>,
+        plan_m: usize,
+    ) -> LinearLayer {
+        assert_eq!(bias.len(), raw.n);
+        let kernel = planner.choose(primitive, Shape::new(plan_m, raw.k, raw.n));
+        LinearLayer {
+            weights: kernel.prepare(raw),
+            kernel,
+            bias,
+        }
+    }
+
+    /// `y (m×n) = x (m×k) @ W + bias`.
+    pub fn forward(&self, x: &[f32], m: usize) -> Vec<f32> {
+        let op = self.kernel.prepare_operand(x, m, self.weights.k());
+        let mut out = vec![0.0f32; m * self.weights.n()];
+        self.kernel.run(&self.weights, &op, &mut out);
+        for row in out.chunks_mut(self.bias.len()) {
+            for (v, &b) in row.iter_mut().zip(&self.bias) {
+                *v += b;
+            }
+        }
+        out
+    }
+}
+
+/// Raw (conversion-time) weights of one block — the oracle-visible source
+/// of truth every deployment format is prepared from.
+pub struct BlockRaw {
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    pub wq: RawWeights,
+    pub bq: Vec<f32>,
+    pub wk: RawWeights,
+    pub bk: Vec<f32>,
+    pub wv: RawWeights,
+    pub bv: Vec<f32>,
+    pub wo: RawWeights,
+    pub bo: Vec<f32>,
+    /// depthwise 3×3 kernel on the V branch, (3·3·dim)
+    pub dw: Vec<f32>,
+    /// Mult expert / dense-MLP weights
+    pub w1: RawWeights,
+    pub b1: Vec<f32>,
+    pub w2: RawWeights,
+    pub b2: Vec<f32>,
+    /// Shift expert weights (separate, as in `model.py`)
+    pub w1s: RawWeights,
+    pub b1s: Vec<f32>,
+    pub w2s: RawWeights,
+    pub b2s: Vec<f32>,
+    /// router gate (dim × 2)
+    pub gate_w: RawWeights,
+}
+
+impl BlockRaw {
+    pub fn random(rng: &mut XorShift64, dim: usize, hidden: usize) -> BlockRaw {
+        BlockRaw {
+            ln1_g: vec![1.0; dim],
+            ln1_b: vec![0.0; dim],
+            ln2_g: vec![1.0; dim],
+            ln2_b: vec![0.0; dim],
+            wq: dense_init(rng, dim, dim),
+            bq: vec![0.0; dim],
+            wk: dense_init(rng, dim, dim),
+            bk: vec![0.0; dim],
+            wv: dense_init(rng, dim, dim),
+            bv: vec![0.0; dim],
+            wo: dense_init(rng, dim, dim),
+            bo: vec![0.0; dim],
+            dw: rng.normals(9 * dim).iter().map(|v| v * 0.1).collect(),
+            w1: dense_init(rng, dim, hidden),
+            b1: vec![0.0; hidden],
+            w2: dense_init(rng, hidden, dim),
+            b2: vec![0.0; dim],
+            w1s: dense_init(rng, dim, hidden),
+            b1s: vec![0.0; hidden],
+            w2s: dense_init(rng, hidden, dim),
+            b2s: vec![0.0; dim],
+            gate_w: RawWeights::new(
+                rng.normals(dim * 2).iter().map(|v| v * 0.02).collect(),
+                dim,
+                2,
+            ),
+        }
+    }
+}
+
+/// The MLP sublayer's execution form.
+pub enum MlpKind {
+    /// one dense path (Mult or Shift primitive behind both linears)
+    Dense { l1: LinearLayer, l2: LinearLayer },
+    /// sparse Mult/Shift mixture with a router
+    Moe(MoeMlp),
+}
+
+/// Per-block diagnostics from one forward.
+pub struct BlockTrace {
+    pub attn_ms: f64,
+    pub mlp_ms: f64,
+    /// present iff the block's MLP is a MoE
+    pub moe: Option<MoeTrace>,
+}
+
+/// One native transformer block.
+pub struct NativeBlock {
+    pub dim: usize,
+    pub heads: usize,
+    pub tokens: usize,
+    pub grid: usize,
+    pub variant: Variant,
+    pub raw: BlockRaw,
+    wq: LinearLayer,
+    wk: LinearLayer,
+    wv: LinearLayer,
+    wo: LinearLayer,
+    pub mlp: MlpKind,
+    /// KSH hash family (LinearAdd only); seeded per stage so every block of
+    /// a stage shares one family, as Ecoformer prescribes.
+    pub hasher: Option<KshHasher>,
+    /// MatAdd backend the Hamming attention runs on (LinearAdd only)
+    matadd: Option<Arc<dyn LinearKernel>>,
+    /// code width (= head_dim, `model.py`'s hash_bits default)
+    pub bits: usize,
+}
+
+impl NativeBlock {
+    pub fn from_raw(
+        raw: BlockRaw,
+        tokens: usize,
+        heads: usize,
+        variant: Variant,
+        planner: &Planner,
+        buckets: &[usize],
+        hash_seed: u64,
+    ) -> NativeBlock {
+        let dim = raw.wq.k;
+        assert_eq!(dim % heads.max(1), 0, "dim must split into heads");
+        let grid = (tokens as f64).sqrt().round() as usize;
+        assert!(
+            grid * grid == tokens || variant.attn == Attn::Msa,
+            "linear variants need a square token grid (got {tokens} tokens)"
+        );
+        let lin_prim = match variant.attn_linear {
+            Lin::Mult => Primitive::MatMul,
+            Lin::Shift => Primitive::MatShift,
+        };
+        let wq = LinearLayer::new(planner, lin_prim, &raw.wq, raw.bq.clone(), tokens);
+        let wk = LinearLayer::new(planner, lin_prim, &raw.wk, raw.bk.clone(), tokens);
+        let wv = LinearLayer::new(planner, lin_prim, &raw.wv, raw.bv.clone(), tokens);
+        let wo = LinearLayer::new(planner, lin_prim, &raw.wo, raw.bo.clone(), tokens);
+        let mlp = match variant.mlp {
+            Mlp::Mult => MlpKind::Dense {
+                l1: LinearLayer::new(planner, Primitive::MatMul, &raw.w1, raw.b1.clone(), tokens),
+                l2: LinearLayer::new(planner, Primitive::MatMul, &raw.w2, raw.b2.clone(), tokens),
+            },
+            Mlp::Shift => MlpKind::Dense {
+                l1: LinearLayer::new(
+                    planner,
+                    Primitive::MatShift,
+                    &raw.w1s,
+                    raw.b1s.clone(),
+                    tokens,
+                ),
+                l2: LinearLayer::new(
+                    planner,
+                    Primitive::MatShift,
+                    &raw.w2s,
+                    raw.b2s.clone(),
+                    tokens,
+                ),
+            },
+            Mlp::Moe { .. } => {
+                let max_m = *buckets.last().expect("no buckets");
+                let mult = MlpExpert::new(
+                    planner,
+                    Primitive::MatMul,
+                    &raw.w1,
+                    raw.b1.clone(),
+                    &raw.w2,
+                    raw.b2.clone(),
+                    max_m,
+                );
+                let shift = MlpExpert::new(
+                    planner,
+                    Primitive::MatShift,
+                    &raw.w1s,
+                    raw.b1s.clone(),
+                    &raw.w2s,
+                    raw.b2s.clone(),
+                    max_m,
+                );
+                MlpKind::Moe(MoeMlp::mult_shift(
+                    planner,
+                    &raw.gate_w,
+                    mult,
+                    shift,
+                    buckets.to_vec(),
+                ))
+            }
+        };
+        let hd = dim / heads;
+        let bits = hd;
+        let (hasher, matadd) = if variant.attn == Attn::LinearAdd {
+            (
+                Some(KshHasher::new(hd, bits, hash_seed)),
+                Some(planner.choose(Primitive::MatAdd, Shape::new(hd, tokens, bits))),
+            )
+        } else {
+            (None, None)
+        };
+        NativeBlock {
+            dim,
+            heads,
+            tokens,
+            grid,
+            variant,
+            raw,
+            wq,
+            wk,
+            wv,
+            wo,
+            mlp,
+            hasher,
+            matadd,
+            bits,
+        }
+    }
+
+    /// In-place block forward over `b` images' tokens (`x`: b·tokens×dim).
+    pub fn forward(&self, x: &mut [f32], b: usize) -> BlockTrace {
+        let d = self.dim;
+        let n = self.tokens;
+        let t = b * n;
+        assert_eq!(x.len(), t * d);
+        let hd = d / self.heads;
+
+        // --- attention sublayer -------------------------------------------
+        let t_attn = Instant::now();
+        let u = layer_norm(x, &self.raw.ln1_g, &self.raw.ln1_b, d);
+        let q = self.wq.forward(&u, t);
+        let k = self.wk.forward(&u, t);
+        let v = self.wv.forward(&u, t);
+        let mut o = vec![0.0f32; t * d];
+        let mut qh = vec![0.0f32; n * hd];
+        let mut kh = vec![0.0f32; n * hd];
+        let mut vh = vec![0.0f32; n * hd];
+        for img in 0..b {
+            let base = img * n * d;
+            for h in 0..self.heads {
+                for i in 0..n {
+                    let src = base + i * d + h * hd;
+                    qh[i * hd..(i + 1) * hd].copy_from_slice(&q[src..src + hd]);
+                    kh[i * hd..(i + 1) * hd].copy_from_slice(&k[src..src + hd]);
+                    vh[i * hd..(i + 1) * hd].copy_from_slice(&v[src..src + hd]);
+                }
+                let oh = match self.variant.attn {
+                    Attn::Msa => softmax_attn(&qh, &kh, &vh, n, hd),
+                    Attn::Linear => relu_linear_attn(&qh, &kh, &vh, n, hd),
+                    Attn::LinearAdd => {
+                        let hasher = self.hasher.as_ref().expect("LinearAdd needs a hasher");
+                        let kernel = self.matadd.as_ref().expect("LinearAdd needs MatAdd");
+                        let qc = hasher.hash_matrix(&qh, n);
+                        let kc = hasher.hash_matrix(&kh, n);
+                        hamming_linear_attn_kernel(kernel, &qc, &kc, &vh, n, self.bits, hd)
+                    }
+                };
+                for i in 0..n {
+                    let dst = base + i * d + h * hd;
+                    o[dst..dst + hd].copy_from_slice(&oh[i * hd..(i + 1) * hd]);
+                }
+            }
+            if self.variant.attn != Attn::Msa {
+                // Parallel DWConv on the V branch (local features).
+                let conv = dwconv3x3(&v[base..base + n * d], &self.raw.dw, self.grid, d);
+                for (ov, cv) in o[base..base + n * d].iter_mut().zip(&conv) {
+                    *ov += cv;
+                }
+            }
+        }
+        let a = self.wo.forward(&o, t);
+        for (xv, av) in x.iter_mut().zip(&a) {
+            *xv += av;
+        }
+        let attn_ms = t_attn.elapsed().as_secs_f64() * 1e3;
+
+        // --- MLP sublayer -------------------------------------------------
+        let t_mlp = Instant::now();
+        let u2 = layer_norm(x, &self.raw.ln2_g, &self.raw.ln2_b, d);
+        let (y, moe) = match &self.mlp {
+            MlpKind::Dense { l1, l2 } => {
+                let mut h = l1.forward(&u2, t);
+                for v in h.iter_mut() {
+                    *v = v.max(0.0);
+                }
+                (l2.forward(&h, t), None)
+            }
+            MlpKind::Moe(m) => {
+                let (y, trace) = m.forward(&u2, t);
+                (y, Some(trace))
+            }
+        };
+        for (xv, yv) in x.iter_mut().zip(&y) {
+            *xv += yv;
+        }
+        BlockTrace {
+            attn_ms,
+            mlp_ms: t_mlp.elapsed().as_secs_f64() * 1e3,
+            moe,
+        }
+    }
+
+    /// Registry ids of the four attention linears (diagnostics).
+    pub fn linear_backend_id(&self) -> String {
+        self.wq.kernel.id()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::registry::KernelRegistry;
+
+    fn planner() -> Planner {
+        Planner::new(Arc::new(KernelRegistry::with_defaults()))
+    }
+
+    #[test]
+    fn layer_norm_normalizes_rows() {
+        let d = 4;
+        let g = vec![1.0; d];
+        let b = vec![0.0; d];
+        let x = vec![1.0f32, 2.0, 3.0, 4.0];
+        let y = layer_norm(&x, &g, &b, d);
+        let mean: f32 = y.iter().sum::<f32>() / d as f32;
+        assert!(mean.abs() < 1e-5);
+        let var: f32 = y.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        assert!((var - 1.0).abs() < 1e-3, "{var}");
+    }
+
+    #[test]
+    fn dwconv_identity_kernel_recovers_input() {
+        // A kernel with 1 at the center tap and 0 elsewhere is identity.
+        let (grid, d) = (4, 3);
+        let mut dw = vec![0.0f32; 9 * d];
+        for c in 0..d {
+            dw[4 * d + c] = 1.0; // center tap (dy=1, dx=1)
+        }
+        let mut rng = XorShift64::new(3);
+        let x = rng.normals(grid * grid * d);
+        assert_eq!(dwconv3x3(&x, &dw, grid, d), x);
+    }
+
+    #[test]
+    fn block_forward_all_variants_finite_and_shaped() {
+        let (tokens, dim, heads) = (16, 8, 2);
+        let mut rng = XorShift64::new(17);
+        for variant in [
+            Variant::MSA,
+            Variant::LINEAR,
+            Variant::ADD,
+            Variant::ADD_SHIFT_BOTH,
+            Variant::SHIFTADD_MOE,
+        ] {
+            let p = planner();
+            let raw = BlockRaw::random(&mut rng, dim, dim * 2);
+            let blk = NativeBlock::from_raw(raw, tokens, heads, variant, &p, &[16, 64], 7);
+            let mut x = rng.normals(2 * tokens * dim);
+            let trace = blk.forward(&mut x, 2);
+            assert!(x.iter().all(|v| v.is_finite()), "{variant:?}");
+            assert_eq!(trace.moe.is_some(), matches!(variant.mlp, Mlp::Moe { .. }));
+        }
+    }
+
+    #[test]
+    fn residual_path_preserves_scale() {
+        // Pre-norm + residual: output must not be wildly larger than input.
+        let (tokens, dim, heads) = (16, 8, 2);
+        let mut rng = XorShift64::new(23);
+        let p = planner();
+        let raw = BlockRaw::random(&mut rng, dim, dim * 2);
+        let blk = NativeBlock::from_raw(raw, tokens, heads, Variant::SHIFTADD_MOE, &p, &[16, 64], 7);
+        let x0 = rng.normals(tokens * dim);
+        let mut x = x0.clone();
+        blk.forward(&mut x, 1);
+        let norm0: f32 = x0.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let norm1: f32 = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+        assert!(norm1 < 20.0 * norm0, "{norm1} vs {norm0}");
+        assert!(norm1 > 0.0);
+    }
+}

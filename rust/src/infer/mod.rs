@@ -1,0 +1,17 @@
+//! The native pure-Rust ShiftAddViT inference engine.
+//!
+//! Executes the paper's reparameterized forward pass end-to-end on the
+//! kernel registry — no XLA artifacts, no Python: [`attn`] implements the
+//! three attention families (softmax MSA, full-precision linear Q(KᵀV),
+//! and KSH-binarized LinearAdd on packed MatAdd backends), [`block`] the
+//! pre-norm transformer block (shift-reparameterized linears, DWConv V
+//! branch, Mult/Shift MoE MLP), and [`model`] the multi-stage
+//! `ModelSpec`-driven classifier with planner-chosen backends per shape.
+//!
+//! The serving stack consumes this engine through
+//! `coordinator::backend::NativeBackend`; the XLA artifact pipeline remains
+//! available behind the same `InferenceBackend` trait.
+
+pub mod attn;
+pub mod block;
+pub mod model;

@@ -1,0 +1,443 @@
+//! The native ShiftAddViT model: a full [`ModelSpec`]-driven multi-stage
+//! forward pass executed entirely through registry kernels — patch
+//! embedding, pyramid stages of [`NativeBlock`]s with 2×2 patch-merging
+//! downsamples between them, final LayerNorm, mean pool, and the
+//! classification head. This is the executable counterpart of the analytic
+//! `model::ops::count` path and the engine behind the native serving
+//! backend (`coordinator::backend::NativeBackend`).
+//!
+//! Weights are deterministic from `seed` (the repo has no Rust-side trained
+//! checkpoints; the XLA path bakes trained weights into artifacts). The
+//! planner picks the fastest registered backend per (primitive, shape) at
+//! construction; all backends of a primitive are numerically identical
+//! (the registry's bit-exactness contracts), so outputs depend only on the
+//! seed, never on which backend won.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::data::synth_images;
+use crate::infer::block::{dense_init, layer_norm, BlockRaw, LinearLayer, NativeBlock};
+use crate::kernels::api::Primitive;
+use crate::kernels::planner::Planner;
+use crate::kernels::registry::KernelRegistry;
+use crate::model::config::{ModelSpec, Stage};
+use crate::model::ops::Variant;
+use crate::moe::router::EXPERT_MULT;
+use crate::util::bench::time_ms;
+use crate::util::rng::XorShift64;
+use crate::util::stats::Summary;
+
+/// Construction parameters of a native model.
+#[derive(Clone, Debug)]
+pub struct NativeModelConfig {
+    pub spec: ModelSpec,
+    pub img: usize,
+    pub patch: usize,
+    pub num_classes: usize,
+    pub variant: Variant,
+    pub seed: u64,
+    /// MoE dispatch bucket ladder (token counts)
+    pub token_buckets: Vec<usize>,
+}
+
+impl NativeModelConfig {
+    /// The tiny two-stage serving analogue (32² synthetic-shapes images,
+    /// same data distribution as the AOT-compiled artifacts).
+    pub fn tiny(variant: Variant) -> NativeModelConfig {
+        NativeModelConfig {
+            spec: ModelSpec {
+                name: "native-tiny",
+                input: 32,
+                stages: vec![
+                    Stage {
+                        tokens: 64,
+                        dim: 32,
+                        depth: 1,
+                        heads: 2,
+                        mlp_ratio: 4,
+                    },
+                    Stage {
+                        tokens: 16,
+                        dim: 64,
+                        depth: 1,
+                        heads: 4,
+                        mlp_ratio: 2,
+                    },
+                ],
+            },
+            img: synth_images::IMG,
+            patch: 4,
+            num_classes: synth_images::NUM_CLASSES,
+            variant,
+            seed: 0xA11CE,
+            token_buckets: vec![16, 64, 256, 1024],
+        }
+    }
+}
+
+struct NativeStage {
+    /// 2×2 avg-pool + projection entering this stage (None for stage 0)
+    downsample: Option<LinearLayer>,
+    blocks: Vec<NativeBlock>,
+    grid: usize,
+    dim: usize,
+    tokens: usize,
+}
+
+/// Diagnostics from one [`NativeModel::forward`].
+#[derive(Default)]
+pub struct ForwardTrace {
+    /// named stage wall-clock, in execution order
+    pub stage_ms: Vec<(String, f64)>,
+    /// per-image Mult-expert token masks of the first MoE block
+    pub mask_blk0: Vec<Vec<bool>>,
+    pub expert_tokens: [usize; 2],
+    pub gate_sums: [f64; 2],
+    /// per-MoE-block (mult_ms, shift_ms) pairs
+    pub expert_ms: Vec<[f64; 2]>,
+    pub padding_waste: Vec<f64>,
+}
+
+/// The native multi-stage model.
+pub struct NativeModel {
+    pub cfg: NativeModelConfig,
+    pub planner: Arc<Planner>,
+    embed: LinearLayer,
+    pos: Vec<f32>,
+    stages: Vec<NativeStage>,
+    norm_g: Vec<f32>,
+    norm_b: Vec<f32>,
+    head: LinearLayer,
+}
+
+impl NativeModel {
+    pub fn new(cfg: NativeModelConfig, planner: Arc<Planner>) -> NativeModel {
+        assert!(!cfg.spec.stages.is_empty(), "spec has no stages");
+        let grid0 = cfg.img / cfg.patch;
+        assert_eq!(
+            grid0 * grid0,
+            cfg.spec.stages[0].tokens,
+            "stage-0 tokens must equal the patch grid"
+        );
+        let mut rng = XorShift64::new(cfg.seed);
+        let patch_dim = cfg.patch * cfg.patch * 3;
+        let d0 = cfg.spec.stages[0].dim;
+        let embed = LinearLayer::new(
+            &planner,
+            Primitive::MatMul,
+            &dense_init(&mut rng, patch_dim, d0),
+            vec![0.0; d0],
+            cfg.spec.stages[0].tokens,
+        );
+        let pos: Vec<f32> = rng
+            .normals(cfg.spec.stages[0].tokens * d0)
+            .iter()
+            .map(|v| v * 0.02)
+            .collect();
+        let mut stages = Vec::new();
+        for (si, st) in cfg.spec.stages.iter().enumerate() {
+            let grid = (st.tokens as f64).sqrt().round() as usize;
+            assert_eq!(grid * grid, st.tokens, "stage {si} tokens must be square");
+            let downsample = if si == 0 {
+                None
+            } else {
+                let prev = &cfg.spec.stages[si - 1];
+                assert_eq!(
+                    st.tokens * 4,
+                    prev.tokens,
+                    "stage {si} must be a 2×2 downsample of stage {}",
+                    si - 1
+                );
+                Some(LinearLayer::new(
+                    &planner,
+                    Primitive::MatMul,
+                    &dense_init(&mut rng, prev.dim, st.dim),
+                    vec![0.0; st.dim],
+                    st.tokens,
+                ))
+            };
+            // One hash family per stage, shared by the stage's blocks.
+            let hash_seed = cfg.seed ^ (0x5A5A_0000 + si as u64);
+            let blocks = (0..st.depth)
+                .map(|_| {
+                    NativeBlock::from_raw(
+                        BlockRaw::random(&mut rng, st.dim, st.dim * st.mlp_ratio),
+                        st.tokens,
+                        st.heads,
+                        cfg.variant,
+                        &planner,
+                        &cfg.token_buckets,
+                        hash_seed,
+                    )
+                })
+                .collect();
+            stages.push(NativeStage {
+                downsample,
+                blocks,
+                grid,
+                dim: st.dim,
+                tokens: st.tokens,
+            });
+        }
+        let dl = cfg.spec.stages.last().unwrap().dim;
+        let head = LinearLayer::new(
+            &planner,
+            Primitive::MatMul,
+            &dense_init(&mut rng, dl, cfg.num_classes),
+            vec![0.0; cfg.num_classes],
+            8,
+        );
+        NativeModel {
+            norm_g: vec![1.0; dl],
+            norm_b: vec![0.0; dl],
+            cfg,
+            planner,
+            embed,
+            pos,
+            stages,
+            head,
+        }
+    }
+
+    /// A tiny serving-shaped model with its own planner over the default
+    /// registry — the zero-setup entry point examples and harnesses use.
+    pub fn tiny(variant: Variant) -> NativeModel {
+        let planner = Arc::new(Planner::new(Arc::new(KernelRegistry::with_defaults())));
+        NativeModel::new(NativeModelConfig::tiny(variant), planner)
+    }
+
+    pub fn tokens(&self) -> usize {
+        self.stages[0].tokens
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.stages.iter().map(|s| s.blocks.len()).sum()
+    }
+
+    /// Classify `b` flattened HWC images → (logits (b×classes), trace).
+    pub fn forward(&self, images: &[f32], b: usize) -> (Vec<f32>, ForwardTrace) {
+        let img = self.cfg.img;
+        let patch = self.cfg.patch;
+        let grid0 = img / patch;
+        let px = img * img * 3;
+        assert_eq!(images.len(), b * px, "image buffer is not b·img²·3");
+        let mut trace = ForwardTrace::default();
+
+        // --- stem: patch embed + positional ------------------------------
+        let t0 = Instant::now();
+        let s0 = &self.stages[0];
+        let d0 = s0.dim;
+        let patch_dim = patch * patch * 3;
+        let mut patches = vec![0.0f32; b * s0.tokens * patch_dim];
+        for bi in 0..b {
+            for gy in 0..grid0 {
+                for gx in 0..grid0 {
+                    let tok = gy * grid0 + gx;
+                    let dst = (bi * s0.tokens + tok) * patch_dim;
+                    let mut w = 0;
+                    for py in 0..patch {
+                        for pxx in 0..patch {
+                            let src = bi * px + ((gy * patch + py) * img + gx * patch + pxx) * 3;
+                            patches[dst + w] = images[src];
+                            patches[dst + w + 1] = images[src + 1];
+                            patches[dst + w + 2] = images[src + 2];
+                            w += 3;
+                        }
+                    }
+                }
+            }
+        }
+        let mut t = self.embed.forward(&patches, b * s0.tokens);
+        for bi in 0..b {
+            let base = bi * s0.tokens * d0;
+            for (tv, pv) in t[base..base + s0.tokens * d0].iter_mut().zip(&self.pos) {
+                *tv += pv;
+            }
+        }
+        trace
+            .stage_ms
+            .push(("stem".to_string(), t0.elapsed().as_secs_f64() * 1e3));
+
+        // --- stages -------------------------------------------------------
+        let mut gi = 0usize;
+        for (si, stage) in self.stages.iter().enumerate() {
+            if let Some(ds) = &stage.downsample {
+                let t0 = Instant::now();
+                let prev = &self.stages[si - 1];
+                let pooled = pool2x2(&t, b, prev.grid, prev.dim);
+                t = ds.forward(&pooled, b * stage.tokens);
+                trace.stage_ms.push((
+                    format!("stage{si}_down"),
+                    t0.elapsed().as_secs_f64() * 1e3,
+                ));
+            }
+            for blk in &stage.blocks {
+                let btr = blk.forward(&mut t, b);
+                trace.stage_ms.push((format!("blk{gi}_attn"), btr.attn_ms));
+                let mlp_name = if btr.moe.is_some() {
+                    format!("blk{gi}_moe")
+                } else {
+                    format!("blk{gi}_mlp")
+                };
+                trace.stage_ms.push((mlp_name, btr.mlp_ms));
+                if let Some(moe) = btr.moe {
+                    for r in &moe.routes {
+                        trace.expert_tokens[r.expert] += 1;
+                    }
+                    trace.gate_sums[0] += moe.gate_sums[0];
+                    trace.gate_sums[1] += moe.gate_sums[1];
+                    trace.expert_ms.push(moe.expert_ms);
+                    trace.padding_waste.push(moe.padding_waste);
+                    if trace.mask_blk0.is_empty() {
+                        for bi in 0..b {
+                            trace.mask_blk0.push(
+                                moe.routes[bi * stage.tokens..(bi + 1) * stage.tokens]
+                                    .iter()
+                                    .map(|r| r.expert == EXPERT_MULT)
+                                    .collect(),
+                            );
+                        }
+                    }
+                }
+                gi += 1;
+            }
+        }
+
+        // --- head: LN → mean pool → classifier ---------------------------
+        let t0 = Instant::now();
+        let last = self.stages.last().unwrap();
+        let (dl, nl) = (last.dim, last.tokens);
+        let u = layer_norm(&t, &self.norm_g, &self.norm_b, dl);
+        let mut pooled = vec![0.0f32; b * dl];
+        for bi in 0..b {
+            for i in 0..nl {
+                let row = &u[(bi * nl + i) * dl..(bi * nl + i + 1) * dl];
+                let dst = &mut pooled[bi * dl..(bi + 1) * dl];
+                for (p, &v) in dst.iter_mut().zip(row) {
+                    *p += v;
+                }
+            }
+        }
+        for v in pooled.iter_mut() {
+            *v /= nl as f32;
+        }
+        let logits = self.head.forward(&pooled, b);
+        trace
+            .stage_ms
+            .push(("head".to_string(), t0.elapsed().as_secs_f64() * 1e3));
+        (logits, trace)
+    }
+}
+
+/// 2×2 average pool over each image's token grid (patch merging).
+fn pool2x2(x: &[f32], b: usize, grid: usize, d: usize) -> Vec<f32> {
+    assert_eq!(x.len(), b * grid * grid * d);
+    let g2 = grid / 2;
+    let mut out = vec![0.0f32; b * g2 * g2 * d];
+    for bi in 0..b {
+        for y in 0..g2 {
+            for xx in 0..g2 {
+                for c in 0..d {
+                    let mut acc = 0.0f32;
+                    for dy in 0..2usize {
+                        for dx in 0..2usize {
+                            acc += x[(bi * grid * grid + (2 * y + dy) * grid + 2 * xx + dx) * d + c];
+                        }
+                    }
+                    out[(bi * g2 * g2 + y * g2 + xx) * d + c] = acc * 0.25;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// p50 wall-clock (ms) of one batch forward on an already-built model —
+/// the native counterpart of `harness::overall::cls_latency_ms`.
+pub fn latency_ms(model: &NativeModel, bs: usize) -> f64 {
+    let (xs, _) = synth_images::gen_batch(42_000, bs);
+    let samples = time_ms(
+        || {
+            model.forward(&xs, bs);
+        },
+        2,
+        5,
+    );
+    Summary::from(&samples).p50
+}
+
+/// Convenience: build the tiny model once and measure it at every batch
+/// size (model construction — planner benchmarking + weight packing — is
+/// far more expensive than one tiny forward, so callers wanting several
+/// batch sizes should use this instead of repeated single measurements).
+pub fn tiny_latencies_ms(variant: Variant, batch_sizes: &[usize]) -> Vec<f64> {
+    let model = NativeModel::tiny(variant);
+    batch_sizes.iter().map(|&bs| latency_ms(&model, bs)).collect()
+}
+
+/// Single (variant, bs) measurement; builds the tiny model for this call —
+/// prefer [`tiny_latencies_ms`] when measuring several batch sizes.
+pub fn tiny_latency_ms(variant: Variant, bs: usize) -> f64 {
+    tiny_latencies_ms(variant, &[bs])[0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_forward_shapes_and_finiteness() {
+        let model = NativeModel::tiny(Variant::SHIFTADD_MOE);
+        assert_eq!(model.num_blocks(), 2);
+        let (xs, _) = synth_images::gen_batch(7, 3);
+        let (logits, trace) = model.forward(&xs, 3);
+        assert_eq!(logits.len(), 3 * synth_images::NUM_CLASSES);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        // both blocks are MoE ⇒ routed tokens cover 2 blocks × 3 images
+        let routed: usize = trace.expert_tokens.iter().sum();
+        assert_eq!(routed, 3 * (64 + 16));
+        assert_eq!(trace.mask_blk0.len(), 3);
+        assert_eq!(trace.mask_blk0[0].len(), 64);
+        assert!(trace.stage_ms.iter().any(|(n, _)| n == "stem"));
+        assert!(trace.stage_ms.iter().any(|(n, _)| n == "head"));
+        assert!(trace.stage_ms.iter().any(|(n, _)| n == "stage1_down"));
+    }
+
+    #[test]
+    fn same_seed_same_logits() {
+        // Planner choices may differ between builds, but every backend of a
+        // primitive is numerically identical — logits depend only on seed.
+        let a = NativeModel::tiny(Variant::SHIFTADD_MOE);
+        let b = NativeModel::tiny(Variant::SHIFTADD_MOE);
+        let (xs, _) = synth_images::gen_batch(11, 2);
+        let (la, _) = a.forward(&xs, 2);
+        let (lb, _) = b.forward(&xs, 2);
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn variants_change_the_forward() {
+        let (xs, _) = synth_images::gen_batch(5, 1);
+        let (l_msa, _) = NativeModel::tiny(Variant::MSA).forward(&xs, 1);
+        let (l_add, _) = NativeModel::tiny(Variant::ADD).forward(&xs, 1);
+        assert_ne!(l_msa, l_add);
+    }
+
+    #[test]
+    fn pool2x2_averages_quads() {
+        // 2×2 grid, 1 channel: single output = mean of 4.
+        let x = vec![1.0f32, 2.0, 3.0, 6.0];
+        let out = pool2x2(&x, 1, 2, 1);
+        assert_eq!(out, vec![3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "downsample")]
+    fn non_pyramid_spec_rejected() {
+        let mut cfg = NativeModelConfig::tiny(Variant::LINEAR);
+        cfg.spec.stages[1].tokens = 25; // square, but not stage-0 tokens / 4
+        let planner = Arc::new(Planner::new(Arc::new(KernelRegistry::with_defaults())));
+        NativeModel::new(cfg, planner);
+    }
+}

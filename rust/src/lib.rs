@@ -19,6 +19,13 @@
 //!   and the Eyeriss op counting (`model::ops::PrimitiveStyles`) all
 //!   resolve kernels through the registry; the planner memoizes the fastest
 //!   backend per (primitive, shape).
+//!
+//!   The `infer` subsystem is a native pure-Rust forward-pass engine over
+//!   those kernels (KSH-binarized LinearAdd attention, shift linears,
+//!   Mult/Shift MoE MLPs), and the coordinator is engine-agnostic: the XLA
+//!   artifact pipeline and the native engine both serve behind one
+//!   `coordinator::backend::InferenceBackend` trait, so the full serving
+//!   loop runs with zero artifacts present.
 //! - **L2 (`python/compile/model.py`)** — the ShiftAddViT model family in JAX
 //!   (PVT-style pyramid ViTs, DeiT, a GNT-style ray transformer), lowered once
 //!   to HLO text by `python/compile/aot.py`.
@@ -36,6 +43,7 @@ pub mod energy;
 pub mod model;
 pub mod moe;
 pub mod data;
+pub mod infer;
 pub mod runtime;
 pub mod coordinator;
 pub mod nvs;

@@ -1,7 +1,8 @@
 //! `shiftaddvit` — the L3 launcher.
 //!
 //! ```text
-//! shiftaddvit serve   [--requests N] [--max-batch B] [--dispatch real|modularized|dense]
+//! shiftaddvit serve   [--backend native|xla] [--requests N] [--max-batch B]
+//!                     [--dispatch real|modularized|dense]
 //!                     [--arrival-ms X] [--config cfg.json]
 //! shiftaddvit table   --id 1|3|4|6|11|12   [--model pvtv2_b0]
 //! shiftaddvit fig     --id 3|4|5           [--batch 1]
@@ -12,8 +13,8 @@
 
 use anyhow::{bail, Result};
 
-use shiftaddvit::coordinator::config::{DispatchMode, ServerConfig};
-use shiftaddvit::coordinator::server::serve;
+use shiftaddvit::coordinator::config::{BackendKind, DispatchMode, ServerConfig};
+use shiftaddvit::coordinator::server::serve_auto;
 use shiftaddvit::energy::eyeriss::{energy, Hierarchy};
 use shiftaddvit::harness::{breakdown, figures, lra, nvs, overall, scaling};
 use shiftaddvit::model::config::classifier;
@@ -39,7 +40,9 @@ fn main() -> Result<()> {
 }
 
 const HELP: &str = "usage: shiftaddvit <serve|table|fig|energy-report|dispatch-viz|nvs-render> [flags]
-run `make artifacts` first; see README.md for details";
+`serve` defaults to the native engine (no artifacts needed); the xla
+backend and the nvs/dispatch-viz commands need `make artifacts` first.
+See README.md for details";
 
 fn manifest() -> Result<Manifest> {
     Manifest::load(&Manifest::default_dir())
@@ -56,8 +59,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(d) = args.get("dispatch") {
         cfg.dispatch = DispatchMode::parse(d)?;
     }
-    let m = manifest()?;
-    let report = serve(&m, &cfg)?;
+    if let Some(b) = args.get("backend") {
+        cfg.backend = BackendKind::parse(b)?;
+    }
+    println!("serving on the {} backend", cfg.backend.name());
+    let report = serve_auto(&cfg)?;
     report.print();
     Ok(())
 }
@@ -67,8 +73,10 @@ fn cmd_table(args: &Args) -> Result<()> {
     match id {
         "1" => figures::table1(),
         "3" => {
-            let engine = Engine::from_default_dir()?;
-            overall::table3(&engine)?;
+            // Artifact engine optional: missing latency cells fall back to
+            // the native engine.
+            let engine = Engine::from_default_dir().ok();
+            overall::table3(engine.as_ref())?;
         }
         "4" | "6" => {
             let engine = Engine::from_default_dir()?;
@@ -87,8 +95,9 @@ fn cmd_table(args: &Args) -> Result<()> {
         }
         "12" => {
             scaling::table12_analytic();
-            let engine = Engine::from_default_dir()?;
-            scaling::table12_measured(&engine)?;
+            // Wall-clock rows: XLA artifacts when present, native always.
+            let engine = Engine::from_default_dir().ok();
+            scaling::table12_measured(engine.as_ref())?;
         }
         other => bail!("unknown table id '{other}' (1|3|4|5|6|11|12; 7 and 13 are cargo benches)"),
     }

@@ -121,6 +121,7 @@ fn serve_end_to_end() {
         batch_deadline_ms: 1.0,
         dispatch: DispatchMode::Real,
         arrival_ms: 0.0,
+        ..ServerConfig::default()
     };
     let report = serve(&m, &cfg).unwrap();
     assert_eq!(report.metrics.requests, 12);
