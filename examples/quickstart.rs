@@ -12,17 +12,50 @@ use anyhow::Result;
 use shiftaddvit::coordinator::config::BackendKind;
 use shiftaddvit::data::synth_images;
 use shiftaddvit::infer::model::NativeModel;
-use shiftaddvit::model::ops::Variant;
+use shiftaddvit::infer::session::{StreamAttn, StreamModel};
+use shiftaddvit::model::ops::{Lin, Variant};
 use shiftaddvit::runtime::engine::Engine;
 use shiftaddvit::runtime::tensor::Tensor;
 use shiftaddvit::util::cli::Args;
+use shiftaddvit::util::rng::XorShift64;
 
 fn main() -> Result<()> {
     let args = Args::parse();
     match BackendKind::parse(&args.get_or("backend", "native"))? {
-        BackendKind::Native => quickstart_native(),
+        BackendKind::Native => {
+            quickstart_native()?;
+            quickstart_sessions()
+        }
         BackendKind::Xla => quickstart_xla(),
     }
+}
+
+/// The session-based streaming API in a nutshell: tokens stream through the
+/// O(d·bits) linear-attention state chunk by chunk — no prefix re-runs —
+/// and the chunked result is bit-exact against one-shot recompute.
+fn quickstart_sessions() -> Result<()> {
+    let model = StreamModel::tiny(StreamAttn::LinearAdd, Lin::Shift);
+    let d = model.spec.dim;
+    println!(
+        "\nstreaming sessions: {} layers, dim {}, {} f32s of state per session \
+         (constant — no KV cache)",
+        model.spec.depth,
+        d,
+        model.spec.state_floats()
+    );
+    let tokens = XorShift64::new(7).normals(12 * d);
+    let mut session = model.begin();
+    for chunk in tokens.chunks(4 * d) {
+        model.extend(&mut session, chunk); // stream 4 tokens at a time
+    }
+    let streamed = model.finish(&session);
+    let oneshot = model.forward_full(&tokens);
+    assert_eq!(streamed, oneshot, "chunked streaming must be bit-exact");
+    println!(
+        "streamed 12 tokens in 3 chunks; logits[0..3] = {:?} (bit-exact vs one-shot)",
+        &streamed[..3]
+    );
+    Ok(())
 }
 
 fn quickstart_native() -> Result<()> {

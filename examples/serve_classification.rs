@@ -15,10 +15,9 @@
 //! The xla path compares all three dispatch modes (paper '†'/'*'/dense).
 
 use anyhow::Result;
-use shiftaddvit::coordinator::backend::{InferenceBackend, NativeBackend};
+use shiftaddvit::coordinator::backend::{create_backend, InferenceBackend};
 use shiftaddvit::coordinator::config::{BackendKind, DispatchMode, ServerConfig};
 use shiftaddvit::coordinator::server::{serve, serve_backend};
-use shiftaddvit::model::ops::Variant;
 use shiftaddvit::runtime::artifact::Manifest;
 use shiftaddvit::util::cli::Args;
 use shiftaddvit::util::image::ascii_grid;
@@ -26,27 +25,31 @@ use shiftaddvit::util::image::ascii_grid;
 fn main() -> Result<()> {
     let args = Args::parse();
     match BackendKind::parse(&args.get_or("backend", "native"))? {
-        BackendKind::Native => serve_native(),
+        BackendKind::Native => serve_native(args.get("planner-table")),
         BackendKind::Xla => serve_xla(),
     }
 }
 
-fn serve_native() -> Result<()> {
-    let backend = NativeBackend::tiny(Variant::SHIFTADD_MOE);
+fn serve_native(planner_table: Option<&str>) -> Result<()> {
+    // All backend construction goes through `create_backend`, so the
+    // `--backend` and `--planner-table` flags apply uniformly here, in the
+    // CLI, and in the benches.
+    let cfg = ServerConfig {
+        requests: 64,
+        max_batch: 8,
+        batch_deadline_ms: 2.0,
+        arrival_ms: 0.0,
+        planner_table: planner_table.map(|s| s.to_string()),
+        ..ServerConfig::default()
+    };
+    let backend = create_backend(&cfg)?;
     println!(
         "serving {} ({} tokens/img, {} classes) — no artifacts needed\n",
         backend.name(),
         backend.tokens(),
         backend.num_classes()
     );
-    let cfg = ServerConfig {
-        requests: 64,
-        max_batch: 8,
-        batch_deadline_ms: 2.0,
-        arrival_ms: 0.0,
-        ..ServerConfig::default()
-    };
-    let report = serve_backend(&backend, &cfg)?;
+    let report = serve_backend(backend.as_ref(), &cfg)?;
     report.print();
     if let Some(mask) = report.sample_masks.first() {
         let grid = (backend.tokens() as f64).sqrt() as usize;

@@ -1,23 +1,38 @@
-//! The engine-agnostic serving contract: `serve()`, the batcher, and the
-//! e2e tests talk to an [`InferenceBackend`] instead of the XLA artifact
-//! pipeline directly. Two implementations ship:
+//! The engine-agnostic serving contract, redesigned around **requests**:
+//! callers `submit(Request) -> Ticket`, drive execution with `step`
+//! (which packs up to `max_batch` queued requests into ONE fused engine
+//! batch), and collect results with `poll(Ticket)`. Two engines ship:
 //!
 //! - [`crate::coordinator::scheduler::MoePipeline`] — the AOT-compiled HLO
 //!   artifact pipeline on the PJRT engine pool (requires `make artifacts`);
 //! - [`NativeBackend`] — the pure-Rust [`crate::infer`] engine (zero
 //!   artifacts, runs out of the box).
 //!
+//! The old one-shot [`InferenceBackend::run_batch`] survives as a default
+//! trait method — a thin adapter that submits every image as a request,
+//! steps the queue dry, and reassembles the batch output — so existing
+//! callers and tests keep working on top of the request path.
+//!
 //! [`create_backend`] resolves a [`ServerConfig`]'s `backend` field to a
-//! boxed implementation.
+//! boxed implementation; it is the single construction path, so planner
+//! lookup tables (`planner_table`) and backend flags apply uniformly.
+//! Token-*streaming* requests take the session route instead
+//! ([`crate::coordinator::sessions::SessionEngine`]).
 
+use std::collections::{HashMap, VecDeque};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
+use crate::coordinator::batcher::Request;
 use crate::coordinator::config::{BackendKind, DispatchMode, ServerConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::MoePipeline;
 use crate::infer::model::{NativeModel, NativeModelConfig};
+use crate::kernels::planner::{Choice, Planner};
+use crate::kernels::registry::KernelRegistry;
 use crate::model::ops::Variant;
 use crate::runtime::artifact::Manifest;
 use crate::runtime::tensor::Tensor;
@@ -33,9 +48,129 @@ pub struct BatchOutput {
     pub modularized_ms: f64,
 }
 
-/// One inference engine behind the coordinator: warm it once, then feed it
-/// image batches. Implementations record per-stage latency and expert-load
-/// diagnostics into the shared [`Metrics`].
+/// Handle to a submitted request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Ticket {
+    pub id: usize,
+}
+
+/// Completed result of one request.
+#[derive(Clone, Debug)]
+pub struct RequestOutput {
+    /// ticket id (engine-assigned)
+    pub id: usize,
+    /// caller-supplied request id
+    pub request_id: usize,
+    pub logits: Vec<f32>,
+    /// routed-to-Mult token mask of the first MoE block (may be empty)
+    pub dispatch_mask_blk0: Vec<bool>,
+    /// wall-clock of the fused batch that served this request
+    pub batch_ms: f64,
+    pub modularized_ms: f64,
+    /// how many requests shared that batch (occupancy)
+    pub batch_size: usize,
+    pub arrived: Instant,
+    /// when the serving step completed this request (latency = finished − arrived)
+    pub finished: Instant,
+    pub label: Option<usize>,
+}
+
+impl RequestOutput {
+    pub fn latency_ms(&self) -> f64 {
+        self.finished.duration_since(self.arrived).as_secs_f64() * 1e3
+    }
+}
+
+/// Outcome of one [`InferenceBackend::step`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepReport {
+    /// requests served this step (0 = queue was empty)
+    pub served: usize,
+    pub batch_ms: f64,
+    pub modularized_ms: f64,
+}
+
+/// Shared submit/poll bookkeeping every backend embeds: a pending queue and
+/// a done map behind one mutex, so the trait methods stay `&self`.
+#[derive(Default)]
+pub struct RequestQueue {
+    inner: Mutex<QueueInner>,
+}
+
+#[derive(Default)]
+struct QueueInner {
+    pending: VecDeque<(usize, Request)>,
+    done: HashMap<usize, RequestOutput>,
+    next_id: usize,
+}
+
+impl RequestQueue {
+    pub fn new() -> RequestQueue {
+        RequestQueue::default()
+    }
+
+    pub fn submit(&self, request: Request) -> Ticket {
+        let mut q = self.inner.lock().unwrap();
+        let id = q.next_id;
+        q.next_id += 1;
+        q.pending.push_back((id, request));
+        Ticket { id }
+    }
+
+    pub fn queued(&self) -> usize {
+        self.inner.lock().unwrap().pending.len()
+    }
+
+    /// Dequeue up to `max` requests (FIFO) for one fused batch.
+    pub fn take(&self, max: usize) -> Vec<(usize, Request)> {
+        let mut q = self.inner.lock().unwrap();
+        let n = q.pending.len().min(max);
+        q.pending.drain(..n).collect()
+    }
+
+    /// File per-request outputs sliced out of one batch result, stamping
+    /// each with the step's completion time.
+    pub fn complete(&self, batch: Vec<(usize, Request)>, out: &BatchOutput) -> Result<()> {
+        let n = batch.len();
+        let logits = out.logits.as_f32()?;
+        let nc = logits.len() / n.max(1);
+        let finished = Instant::now();
+        let mut q = self.inner.lock().unwrap();
+        for (i, (id, req)) in batch.into_iter().enumerate() {
+            q.done.insert(
+                id,
+                RequestOutput {
+                    id,
+                    request_id: req.id,
+                    logits: logits[i * nc..(i + 1) * nc].to_vec(),
+                    dispatch_mask_blk0: out
+                        .dispatch_mask_blk0
+                        .get(i)
+                        .cloned()
+                        .unwrap_or_default(),
+                    batch_ms: out.batch_ms,
+                    modularized_ms: out.modularized_ms,
+                    batch_size: n,
+                    arrived: req.arrived,
+                    finished,
+                    label: req.label,
+                },
+            );
+        }
+        Ok(())
+    }
+
+    /// Remove and return a finished request's output, if ready.
+    pub fn poll(&self, ticket: &Ticket) -> Option<RequestOutput> {
+        self.inner.lock().unwrap().done.remove(&ticket.id)
+    }
+}
+
+/// One inference engine behind the coordinator, under the request-level
+/// contract: `submit` enqueues, `step` executes one fused batch over queued
+/// requests, `poll` collects. Implementations record per-stage latency,
+/// expert-load, and batch-occupancy diagnostics into the shared
+/// [`Metrics`].
 pub trait InferenceBackend {
     /// Short engine label for reports ("native", "xla").
     fn name(&self) -> String;
@@ -53,13 +188,76 @@ pub trait InferenceBackend {
     /// first-request latency out of the measured path.
     fn warmup(&self) -> Result<()>;
 
-    /// Run `n` flattened HWC images through the model.
-    fn run_batch(&self, images: &[f32], n: usize, metrics: &mut Metrics) -> Result<BatchOutput>;
+    /// Enqueue one request.
+    fn submit(&self, request: Request) -> Ticket;
+
+    /// Requests waiting for a step.
+    fn queued(&self) -> usize;
+
+    /// Execute ONE fused batch over up to `max_batch` queued requests.
+    /// Returns `served == 0` when the queue was empty.
+    fn step(&self, max_batch: usize, metrics: &mut Metrics) -> Result<StepReport>;
+
+    /// Remove and return a finished request's output, if ready.
+    fn poll(&self, ticket: &Ticket) -> Option<RequestOutput>;
+
+    /// Planner decisions made so far (native engines only) — the source of
+    /// offline-autotuned lookup tables. Default: none.
+    fn planner_choices(&self) -> Vec<Choice> {
+        Vec::new()
+    }
+
+    /// One-shot batch API, kept as a thin adapter over submit/step/poll so
+    /// pre-redesign callers and tests keep working.
+    fn run_batch(&self, images: &[f32], n: usize, metrics: &mut Metrics) -> Result<BatchOutput> {
+        assert!(n > 0, "run_batch needs at least one image");
+        let px = self.img() * self.img() * 3;
+        assert_eq!(images.len(), n * px, "image buffer is not n·img²·3");
+        let tickets: Vec<Ticket> = (0..n)
+            .map(|i| {
+                self.submit(Request {
+                    id: i,
+                    pixels: images[i * px..(i + 1) * px].to_vec(),
+                    label: None,
+                    arrived: Instant::now(),
+                })
+            })
+            .collect();
+        let mut batch_ms = 0.0f64;
+        let mut modularized_ms = 0.0f64;
+        while self.queued() > 0 {
+            let rep = self.step(n, metrics)?;
+            if rep.served == 0 {
+                anyhow::bail!("step() made no progress with {} queued", self.queued());
+            }
+            batch_ms += rep.batch_ms;
+            modularized_ms += rep.modularized_ms;
+        }
+        let nc = self.num_classes();
+        let mut logits = vec![0.0f32; n * nc];
+        let mut masks = Vec::new();
+        for (i, t) in tickets.iter().enumerate() {
+            let out = self
+                .poll(t)
+                .ok_or_else(|| anyhow!("request {i} not completed by step()"))?;
+            logits[i * nc..(i + 1) * nc].copy_from_slice(&out.logits);
+            if !out.dispatch_mask_blk0.is_empty() {
+                masks.push(out.dispatch_mask_blk0);
+            }
+        }
+        Ok(BatchOutput {
+            logits: Tensor::f32(vec![n, nc], logits),
+            dispatch_mask_blk0: masks,
+            batch_ms,
+            modularized_ms,
+        })
+    }
 }
 
 /// The native pure-Rust engine behind the [`InferenceBackend`] contract.
 pub struct NativeBackend {
     pub model: NativeModel,
+    queue: RequestQueue,
 }
 
 impl NativeBackend {
@@ -68,16 +266,21 @@ impl NativeBackend {
     pub fn tiny(variant: Variant) -> NativeBackend {
         NativeBackend {
             model: NativeModel::tiny(variant),
+            queue: RequestQueue::new(),
         }
     }
 
     pub fn from_config(cfg: NativeModelConfig) -> NativeBackend {
-        use crate::kernels::planner::Planner;
-        use crate::kernels::registry::KernelRegistry;
-        use std::sync::Arc;
         let planner = Arc::new(Planner::new(Arc::new(KernelRegistry::with_defaults())));
+        NativeBackend::with_planner(cfg, planner)
+    }
+
+    /// Build on an externally prepared planner (e.g. one pre-pinned from an
+    /// offline-autotuned lookup table).
+    pub fn with_planner(cfg: NativeModelConfig, planner: Arc<Planner>) -> NativeBackend {
         NativeBackend {
             model: NativeModel::new(cfg, planner),
+            queue: RequestQueue::new(),
         }
     }
 }
@@ -107,9 +310,28 @@ impl InferenceBackend for NativeBackend {
         Ok(())
     }
 
-    fn run_batch(&self, images: &[f32], n: usize, metrics: &mut Metrics) -> Result<BatchOutput> {
+    fn submit(&self, request: Request) -> Ticket {
+        self.queue.submit(request)
+    }
+
+    fn queued(&self) -> usize {
+        self.queue.queued()
+    }
+
+    fn step(&self, max_batch: usize, metrics: &mut Metrics) -> Result<StepReport> {
+        let batch = self.queue.take(max_batch.max(1));
+        if batch.is_empty() {
+            return Ok(StepReport::default());
+        }
+        let n = batch.len();
+        let px = self.img() * self.img() * 3;
+        let mut pixels = Vec::with_capacity(n * px);
+        for (_, r) in &batch {
+            pixels.extend_from_slice(&r.pixels);
+        }
+
         let t0 = Instant::now();
-        let (logits, trace) = self.model.forward(images, n);
+        let (logits, trace) = self.model.forward(&pixels, n);
         let batch_ms = t0.elapsed().as_secs_f64() * 1e3;
         for (name, ms) in &trace.stage_ms {
             metrics.record(name, *ms);
@@ -130,16 +352,34 @@ impl InferenceBackend for NativeBackend {
         metrics.padding_waste.extend(trace.padding_waste.iter());
         metrics.batches += 1;
         metrics.requests += n;
-        Ok(BatchOutput {
+        metrics.record_step_occupancy(n, max_batch.max(1), n * self.tokens());
+
+        let out = BatchOutput {
             logits: Tensor::f32(vec![n, self.num_classes()], logits),
             dispatch_mask_blk0: trace.mask_blk0,
             batch_ms,
             modularized_ms,
+        };
+        self.queue.complete(batch, &out)?;
+        Ok(StepReport {
+            served: n,
+            batch_ms,
+            modularized_ms,
         })
+    }
+
+    fn poll(&self, ticket: &Ticket) -> Option<RequestOutput> {
+        self.queue.poll(ticket)
+    }
+
+    fn planner_choices(&self) -> Vec<Choice> {
+        self.model.planner.choices()
     }
 }
 
-/// Resolve the configured backend. `Native` needs nothing on disk; `Xla`
+/// Resolve the configured backend — the single construction path for every
+/// caller (`serve_auto`, examples, benches), so `--backend` and planner
+/// lookup tables apply uniformly. `Native` needs nothing on disk; `Xla`
 /// loads the artifact manifest (fails fast with the usual
 /// "run `make artifacts`" context when absent).
 pub fn create_backend(cfg: &ServerConfig) -> Result<Box<dyn InferenceBackend>> {
@@ -156,13 +396,29 @@ pub fn create_backend(cfg: &ServerConfig) -> Result<Box<dyn InferenceBackend>> {
                     cfg.dispatch
                 );
             }
-            Ok(Box::new(NativeBackend::tiny(Variant::SHIFTADD_MOE)))
+            let planner = create_planner(cfg)?;
+            Ok(Box::new(NativeBackend::with_planner(
+                NativeModelConfig::tiny(Variant::SHIFTADD_MOE),
+                planner,
+            )))
         }
         BackendKind::Xla => {
             let manifest = Manifest::load(&Manifest::default_dir())?;
             Ok(Box::new(MoePipeline::new(&manifest, cfg.dispatch)?))
         }
     }
+}
+
+/// Build the planner every native engine (image or streaming) shares:
+/// default registry, plus pinned choices from the configured offline
+/// lookup table so no first-request benchmarking happens.
+pub fn create_planner(cfg: &ServerConfig) -> Result<Arc<Planner>> {
+    let planner = Arc::new(Planner::new(Arc::new(KernelRegistry::with_defaults())));
+    if let Some(path) = &cfg.planner_table {
+        let pinned = planner.load_table(Path::new(path))?;
+        println!("planner: pinned {pinned} choices from {path} (no startup benchmarking)");
+    }
+    Ok(planner)
 }
 
 #[cfg(test)]
@@ -182,6 +438,57 @@ mod tests {
         assert!(out.modularized_ms <= out.batch_ms + 1e-9);
         assert_eq!(metrics.requests, 2);
         assert!(metrics.expert_tokens.iter().sum::<usize>() > 0);
+        // the adapter went through the request path, so occupancy gauges
+        // must be populated
+        assert_eq!(metrics.batch_occupancy.len(), 1);
+        assert!((metrics.batch_occupancy[0] - 1.0).abs() < 1e-12);
+        assert_eq!(metrics.step_tokens[0], (2 * backend.tokens()) as f64);
+    }
+
+    #[test]
+    fn submit_step_poll_matches_run_batch() {
+        let backend = NativeBackend::tiny(Variant::SHIFTADD_MOE);
+        let (xs, _) = crate::data::synth_images::gen_batch(77, 3);
+        let px = backend.img() * backend.img() * 3;
+        let mut m = Metrics::default();
+        let whole = backend.run_batch(&xs, 3, &mut m).unwrap();
+
+        let tickets: Vec<Ticket> = (0..3)
+            .map(|i| {
+                backend.submit(Request {
+                    id: 100 + i,
+                    pixels: xs[i * px..(i + 1) * px].to_vec(),
+                    label: Some(i),
+                    arrived: Instant::now(),
+                })
+            })
+            .collect();
+        assert_eq!(backend.queued(), 3);
+        let rep = backend.step(8, &mut m).unwrap();
+        assert_eq!(rep.served, 3);
+        assert_eq!(backend.queued(), 0);
+        let nc = backend.num_classes();
+        for (i, t) in tickets.iter().enumerate() {
+            let out = backend.poll(t).expect("completed");
+            assert_eq!(out.request_id, 100 + i);
+            assert_eq!(out.label, Some(i));
+            assert_eq!(out.batch_size, 3);
+            assert_eq!(
+                out.logits,
+                &whole.logits.as_f32().unwrap()[i * nc..(i + 1) * nc],
+                "request path diverged from one-shot batch at image {i}"
+            );
+            assert!(backend.poll(t).is_none(), "poll must consume the result");
+        }
+    }
+
+    #[test]
+    fn step_on_empty_queue_is_a_no_op() {
+        let backend = NativeBackend::tiny(Variant::SHIFTADD_MOE);
+        let mut m = Metrics::default();
+        let rep = backend.step(4, &mut m).unwrap();
+        assert_eq!(rep.served, 0);
+        assert!(m.batch_occupancy.is_empty());
     }
 
     #[test]
@@ -204,5 +511,14 @@ mod tests {
                 assert!((x - y).abs() < 0.5, "batched {x} vs single {y}");
             }
         }
+    }
+
+    #[test]
+    fn native_backend_exposes_planner_choices() {
+        let backend = NativeBackend::tiny(Variant::SHIFTADD_MOE);
+        assert!(
+            !backend.planner_choices().is_empty(),
+            "model construction must log planner decisions"
+        );
     }
 }

@@ -75,6 +75,23 @@ impl Batcher {
         }
         Some(Batch { requests })
     }
+
+    /// Non-blocking intake for continuous stepping: take whatever is
+    /// already waiting, up to `max_batch`, without honoring the fill
+    /// deadline. Returns an empty batch when nothing is pending — callers
+    /// driving a request-level engine submit these between `step()`s so
+    /// late arrivals join the next fused batch instead of waiting out a
+    /// full batching window.
+    pub fn drain_ready(&self, rx: &mpsc::Receiver<Request>) -> Batch {
+        let mut requests = Vec::new();
+        while requests.len() < self.max_batch {
+            match rx.try_recv() {
+                Ok(r) => requests.push(r),
+                Err(_) => break,
+            }
+        }
+        Batch { requests }
+    }
 }
 
 #[cfg(test)]
@@ -119,6 +136,21 @@ mod tests {
         let batcher = Batcher::new(2, 1.0);
         assert_eq!(batcher.next_batch(&rx).unwrap().len(), 1);
         assert!(batcher.next_batch(&rx).is_none());
+    }
+
+    #[test]
+    fn drain_ready_never_blocks() {
+        let (tx, rx) = mpsc::channel();
+        let b = Batcher::new(4, 1000.0);
+        assert!(b.drain_ready(&rx).is_empty(), "empty channel, empty batch");
+        for i in 0..6 {
+            tx.send(req(i)).unwrap();
+        }
+        let t0 = Instant::now();
+        let first = b.drain_ready(&rx);
+        assert_eq!(first.len(), 4, "caps at max_batch");
+        assert_eq!(b.drain_ready(&rx).len(), 2);
+        assert!(t0.elapsed() < Duration::from_millis(500), "must ignore the fill deadline");
     }
 
     #[test]

@@ -56,6 +56,32 @@ impl BackendKind {
     }
 }
 
+/// Which request shape the server drives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Workload {
+    /// one-shot image classification requests
+    Classify,
+    /// token-streaming sessions through `SessionEngine`
+    Stream,
+}
+
+impl Workload {
+    pub fn parse(s: &str) -> Result<Workload> {
+        match s {
+            "classify" => Ok(Workload::Classify),
+            "stream" => Ok(Workload::Stream),
+            other => anyhow::bail!("unknown workload '{other}' (classify|stream)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Workload::Classify => "classify",
+            Workload::Stream => "stream",
+        }
+    }
+}
+
 /// Coordinator settings.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
@@ -66,10 +92,23 @@ pub struct ServerConfig {
     pub dispatch: DispatchMode,
     /// which engine executes batches
     pub backend: BackendKind,
-    /// number of requests the synthetic client issues
+    /// number of requests the synthetic client issues (sessions, for the
+    /// stream workload)
     pub requests: usize,
     /// mean request inter-arrival (ms); 0 = closed-loop
     pub arrival_ms: f64,
+    /// request shape (`classify` | `stream`)
+    pub workload: Workload,
+    /// stream workload: mean tokens per session
+    pub stream_tokens: usize,
+    /// stream workload: tokens each live session contributes per step
+    pub stream_chunk: usize,
+    /// stream workload: live-session cap (continuous-batching slots)
+    pub max_live: usize,
+    /// offline-autotuned planner table to pin on startup (JSON path)
+    pub planner_table: Option<String>,
+    /// where to dump the planner's decisions after the run (JSON path)
+    pub planner_table_save: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -81,6 +120,12 @@ impl Default for ServerConfig {
             backend: BackendKind::Native,
             requests: 128,
             arrival_ms: 0.0,
+            workload: Workload::Classify,
+            stream_tokens: 64,
+            stream_chunk: 8,
+            max_live: 8,
+            planner_table: None,
+            planner_table_save: None,
         }
     }
 }
@@ -108,6 +153,24 @@ impl ServerConfig {
         }
         if let Some(v) = j.get("arrival_ms").and_then(|v| v.as_f64()) {
             c.arrival_ms = v;
+        }
+        if let Some(v) = j.get("workload").and_then(|v| v.as_str()) {
+            c.workload = Workload::parse(v)?;
+        }
+        if let Some(v) = j.get("stream_tokens").and_then(|v| v.as_usize()) {
+            c.stream_tokens = v;
+        }
+        if let Some(v) = j.get("stream_chunk").and_then(|v| v.as_usize()) {
+            c.stream_chunk = v;
+        }
+        if let Some(v) = j.get("max_live").and_then(|v| v.as_usize()) {
+            c.max_live = v;
+        }
+        if let Some(v) = j.get("planner_table").and_then(|v| v.as_str()) {
+            c.planner_table = Some(v.to_string());
+        }
+        if let Some(v) = j.get("planner_table_save").and_then(|v| v.as_str()) {
+            c.planner_table_save = Some(v.to_string());
         }
         Ok(c)
     }
@@ -142,6 +205,31 @@ mod tests {
         assert!(BackendKind::parse("tpu").is_err());
         assert_eq!(ServerConfig::default().backend, BackendKind::Native);
         assert_eq!(BackendKind::Xla.name(), "xla");
+    }
+
+    #[test]
+    fn stream_and_planner_fields_parse() {
+        let dir = std::env::temp_dir().join("savit_cfg_stream_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(
+            &p,
+            r#"{"workload": "stream", "stream_tokens": 32, "stream_chunk": 4,
+                "max_live": 3, "planner_table": "t.json"}"#,
+        )
+        .unwrap();
+        let c = ServerConfig::from_file(&p).unwrap();
+        assert_eq!(c.workload, Workload::Stream);
+        assert_eq!(c.stream_tokens, 32);
+        assert_eq!(c.stream_chunk, 4);
+        assert_eq!(c.max_live, 3);
+        assert_eq!(c.planner_table.as_deref(), Some("t.json"));
+        assert!(c.planner_table_save.is_none());
+        // defaults
+        let d = ServerConfig::default();
+        assert_eq!(d.workload, Workload::Classify);
+        assert!(Workload::parse("nope").is_err());
+        assert_eq!(Workload::Stream.name(), "stream");
     }
 
     #[test]

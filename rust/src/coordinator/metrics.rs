@@ -20,11 +20,42 @@ pub struct Metrics {
     pub batches: usize,
     pub requests: usize,
     pub padding_waste: Vec<f64>,
+    /// per-step batch occupancy: requests served / `max_batch` (image path)
+    /// or live sessions / `max_live` (streaming path) ∈ (0, 1]
+    pub batch_occupancy: Vec<f64>,
+    /// per-step token rows packed into the fused dispatches
+    pub step_tokens: Vec<f64>,
+    /// per-step live session count (streaming path only)
+    pub live_sessions: Vec<f64>,
 }
 
 impl Metrics {
     pub fn record(&mut self, stage: &str, ms: f64) {
         self.stages.entry(stage.to_string()).or_default().push(ms);
+    }
+
+    /// Record one engine step's occupancy gauges (shared by the image
+    /// request path and the streaming session path).
+    pub fn record_step_occupancy(&mut self, served: usize, capacity: usize, tokens: usize) {
+        self.batch_occupancy
+            .push(served as f64 / capacity.max(1) as f64);
+        self.step_tokens.push(tokens as f64);
+    }
+
+    pub fn occupancy_summary(&self) -> Option<Summary> {
+        if self.batch_occupancy.is_empty() {
+            None
+        } else {
+            Some(Summary::from(&self.batch_occupancy))
+        }
+    }
+
+    pub fn step_tokens_summary(&self) -> Option<Summary> {
+        if self.step_tokens.is_empty() {
+            None
+        } else {
+            Some(Summary::from(&self.step_tokens))
+        }
     }
 
     pub fn stage_summary(&self, stage: &str) -> Option<Summary> {
@@ -80,6 +111,37 @@ impl Metrics {
             ));
         }
         pairs.push(("stages", Json::obj(stage_obj)));
+        if let Some(s) = self.occupancy_summary() {
+            pairs.push((
+                "batch_occupancy",
+                Json::obj(vec![
+                    ("mean", Json::num(s.mean)),
+                    ("p50", Json::num(s.p50)),
+                    ("n", Json::num(s.n as f64)),
+                ]),
+            ));
+        }
+        if let Some(s) = self.step_tokens_summary() {
+            pairs.push((
+                "step_tokens",
+                Json::obj(vec![
+                    ("mean", Json::num(s.mean)),
+                    ("p50", Json::num(s.p50)),
+                    ("n", Json::num(s.n as f64)),
+                ]),
+            ));
+        }
+        if !self.live_sessions.is_empty() {
+            let s = Summary::from(&self.live_sessions);
+            pairs.push((
+                "live_sessions",
+                Json::obj(vec![
+                    ("mean", Json::num(s.mean)),
+                    ("max", Json::num(s.max)),
+                    ("n", Json::num(s.n as f64)),
+                ]),
+            ));
+        }
         Json::obj(pairs)
     }
 
@@ -105,6 +167,27 @@ impl Metrics {
             println!(
                 "  bucket padding waste: {:.1}%",
                 100.0 * mean(&self.padding_waste)
+            );
+        }
+        if let Some(s) = self.occupancy_summary() {
+            println!(
+                "  batch occupancy: mean {:.1}%  p50 {:.1}%  (n={})",
+                100.0 * s.mean,
+                100.0 * s.p50,
+                s.n
+            );
+        }
+        if let Some(s) = self.step_tokens_summary() {
+            println!(
+                "  tokens per step: mean {:.1}  p50 {:.1}  (n={})",
+                s.mean, s.p50, s.n
+            );
+        }
+        if !self.live_sessions.is_empty() {
+            println!(
+                "  live sessions per step: mean {:.1}  max {:.0}",
+                mean(&self.live_sessions),
+                self.live_sessions.iter().cloned().fold(0.0, f64::max)
             );
         }
     }
@@ -156,5 +239,25 @@ mod tests {
         m.batches = 1;
         let j = m.to_json();
         assert_eq!(j.get("batches").unwrap().as_usize(), Some(1));
+        assert!(j.get("batch_occupancy").is_none(), "no steps, no gauge");
+    }
+
+    #[test]
+    fn occupancy_gauges_accumulate_and_serialize() {
+        let mut m = Metrics::default();
+        assert!(m.occupancy_summary().is_none());
+        m.record_step_occupancy(2, 8, 128);
+        m.record_step_occupancy(8, 8, 512);
+        let occ = m.occupancy_summary().unwrap();
+        assert_eq!(occ.n, 2);
+        assert!((occ.mean - 0.625).abs() < 1e-12);
+        let tok = m.step_tokens_summary().unwrap();
+        assert!((tok.mean - 320.0).abs() < 1e-12);
+        m.live_sessions.push(2.0);
+        let j = m.to_json();
+        assert!(j.get("batch_occupancy").is_some());
+        assert!(j.get("step_tokens").is_some());
+        assert!(j.get("live_sessions").is_some());
+        m.print(); // should not panic
     }
 }

@@ -4,6 +4,15 @@
 //! the engine-agnostic [`backend::InferenceBackend`] trait, with the XLA
 //! artifact pipeline (`scheduler`) and the native pure-Rust engine
 //! (`backend::NativeBackend`) as interchangeable engines.
+//!
+//! Two request shapes are served:
+//!
+//! - **image classification** — `submit(Request) -> Ticket`, `step()`
+//!   fuses queued requests into one engine batch, `poll(Ticket)` collects
+//!   (the old one-shot `run_batch` remains as an adapter);
+//! - **token streaming** — [`sessions::SessionEngine`] continuously
+//!   batches live `infer::session` sessions, packing each one's next chunk
+//!   into one fused kernel dispatch per layer per step.
 
 pub mod backend;
 pub mod batcher;
@@ -11,3 +20,4 @@ pub mod config;
 pub mod metrics;
 pub mod scheduler;
 pub mod server;
+pub mod sessions;

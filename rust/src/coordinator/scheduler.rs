@@ -29,13 +29,18 @@ use crate::runtime::worker::{EnginePool, Pending};
 // `BatchOutput` moved to the engine-agnostic backend module; re-exported
 // here so existing `scheduler::BatchOutput` imports keep compiling.
 pub use crate::coordinator::backend::BatchOutput;
-use crate::coordinator::backend::InferenceBackend;
+use crate::coordinator::backend::{
+    InferenceBackend, RequestOutput, RequestQueue, StepReport, Ticket,
+};
+use crate::coordinator::batcher::Request;
 
 /// The pipeline over `serve_*` artifacts.
 pub struct MoePipeline {
     pub serve: ServeConfig,
     pool: EnginePool,
     pub mode: DispatchMode,
+    /// request-level bookkeeping for the submit/step/poll contract
+    queue: RequestQueue,
 }
 
 /// worker 0: backbone; worker 1: Mult expert; worker 2: Shift expert.
@@ -50,7 +55,12 @@ impl MoePipeline {
             .clone()
             .ok_or_else(|| anyhow!("manifest has no serving topology — rebuild artifacts"))?;
         let pool = EnginePool::new(3, manifest);
-        Ok(MoePipeline { serve, pool, mode })
+        Ok(MoePipeline {
+            serve,
+            pool,
+            mode,
+            queue: RequestQueue::new(),
+        })
     }
 
     /// Pre-compile every pipeline artifact on its worker (keeps compile time
@@ -308,8 +318,38 @@ impl InferenceBackend for MoePipeline {
         MoePipeline::warmup(self)
     }
 
-    fn run_batch(&self, images: &[f32], n: usize, metrics: &mut Metrics) -> Result<BatchOutput> {
-        MoePipeline::run_batch(self, images, n, metrics)
+    fn submit(&self, request: Request) -> Ticket {
+        self.queue.submit(request)
+    }
+
+    fn queued(&self) -> usize {
+        self.queue.queued()
+    }
+
+    fn step(&self, max_batch: usize, metrics: &mut Metrics) -> Result<StepReport> {
+        let batch = self.queue.take(max_batch.max(1));
+        if batch.is_empty() {
+            return Ok(StepReport::default());
+        }
+        let n = batch.len();
+        let px = self.serve.img * self.serve.img * 3;
+        let mut pixels = Vec::with_capacity(n * px);
+        for (_, r) in &batch {
+            pixels.extend_from_slice(&r.pixels);
+        }
+        let out = MoePipeline::run_batch(self, &pixels, n, metrics)?;
+        metrics.record_step_occupancy(n, max_batch.max(1), n * self.serve.tokens);
+        let rep = StepReport {
+            served: n,
+            batch_ms: out.batch_ms,
+            modularized_ms: out.modularized_ms,
+        };
+        self.queue.complete(batch, &out)?;
+        Ok(rep)
+    }
+
+    fn poll(&self, ticket: &Ticket) -> Option<RequestOutput> {
+        self.queue.poll(ticket)
     }
 }
 

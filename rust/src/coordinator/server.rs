@@ -1,9 +1,20 @@
-//! The serving loop: a synthetic client thread issues image requests
-//! (open-loop Poisson-ish or closed-loop), the coordinator batches them,
-//! runs them through an [`InferenceBackend`] (native engine or XLA artifact
-//! pipeline), and reports latency/throughput/accuracy — the end-to-end
-//! driver behind `shiftaddvit serve` and
-//! `examples/serve_classification.rs`.
+//! The serving loops behind `shiftaddvit serve`:
+//!
+//! - [`serve_backend`] — image classification on the request-level
+//!   [`InferenceBackend`] contract: a synthetic client thread issues image
+//!   requests (open-loop Poisson-ish or closed-loop), the coordinator
+//!   `submit`s them, `step`s the backend (each step fuses the queued
+//!   requests into one engine batch), and `poll`s results for
+//!   latency/throughput/accuracy/occupancy reporting;
+//! - [`serve_stream`] — token-streaming sessions on
+//!   [`SessionEngine`]: N sessions of varying lengths continuously batched,
+//!   each step packing one chunk per live session into fused kernel
+//!   dispatches.
+//!
+//! [`serve_auto`] resolves the configured backend through
+//! [`create_backend`] (the single construction path — planner lookup
+//! tables and `--backend` apply uniformly) and dispatches on
+//! `cfg.workload`.
 
 use std::sync::mpsc;
 use std::thread;
@@ -11,17 +22,21 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::backend::{create_backend, InferenceBackend};
+use crate::coordinator::backend::{create_backend, create_planner, InferenceBackend, Ticket};
 use crate::coordinator::batcher::{Batcher, Request};
-use crate::coordinator::config::ServerConfig;
+use crate::coordinator::config::{BackendKind, ServerConfig, Workload};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::MoePipeline;
+use crate::coordinator::sessions::SessionEngine;
 use crate::data::synth_images;
+use crate::infer::session::{SessionSpec, StreamAttn, StreamModel};
+use crate::kernels::planner::{table_json, Choice};
+use crate::model::ops::Lin;
 use crate::runtime::artifact::Manifest;
 use crate::util::rng::XorShift64;
 use crate::util::stats::Summary;
 
-/// Outcome of a serving run.
+/// Outcome of a classification serving run.
 pub struct ServeReport {
     pub metrics: Metrics,
     pub latency: Summary,
@@ -30,6 +45,10 @@ pub struct ServeReport {
     pub accuracy: f64,
     /// first few dispatch masks for visualisation
     pub sample_masks: Vec<Vec<bool>>,
+    /// per-step batch occupancy (served / max_batch)
+    pub occupancy: Option<Summary>,
+    /// per-step fused token rows
+    pub step_tokens: Option<Summary>,
 }
 
 /// Run the serving benchmark against the XLA artifact pipeline (the
@@ -39,14 +58,43 @@ pub fn serve(manifest: &Manifest, cfg: &ServerConfig) -> Result<ServeReport> {
     serve_backend(&pipeline, cfg)
 }
 
-/// Resolve `cfg.backend` ([`create_backend`]) and serve on it — the
-/// engine-agnostic entry point behind `shiftaddvit serve`.
+/// Resolve `cfg.backend` ([`create_backend`]) and serve `cfg.workload` on
+/// it — the engine-agnostic entry point behind `shiftaddvit serve`.
+/// (The stream workload is native-only; it reports through
+/// [`StreamReport`], so callers wanting it use [`serve_stream`] directly.)
 pub fn serve_auto(cfg: &ServerConfig) -> Result<ServeReport> {
     let backend = create_backend(cfg)?;
-    serve_backend(backend.as_ref(), cfg)
+    let report = serve_backend(backend.as_ref(), cfg)?;
+    save_planner_table(cfg, &backend.planner_choices())?;
+    Ok(report)
 }
 
-/// Run the serving benchmark described by `cfg` on any engine.
+/// Dump planner decisions to `cfg.planner_table_save` (no-op when unset or
+/// when the backend made no decisions, e.g. xla).
+fn save_planner_table(cfg: &ServerConfig, choices: &[Choice]) -> Result<()> {
+    if let Some(path) = &cfg.planner_table_save {
+        if choices.is_empty() {
+            println!("planner table not saved: backend logged no decisions");
+        } else {
+            std::fs::write(path, table_json(choices).to_string())?;
+            println!("planner: saved {} choices to {path}", choices.len());
+        }
+    }
+    Ok(())
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Run the classification serving benchmark described by `cfg` on any
+/// engine, through the request-level submit/step/poll contract.
 pub fn serve_backend(backend: &dyn InferenceBackend, cfg: &ServerConfig) -> Result<ServeReport> {
     backend.warmup()?;
 
@@ -86,23 +134,40 @@ pub fn serve_backend(backend: &dyn InferenceBackend, cfg: &ServerConfig) -> Resu
     let t0 = Instant::now();
 
     while let Some(batch) = batcher.next_batch(&rx) {
-        let pixels = batch.pixels();
-        let out = backend.run_batch(&pixels, batch.len(), &mut metrics)?;
-        let preds = out.logits.argmax_last()?;
-        let done = Instant::now();
-        for (r, p) in batch.requests.iter().zip(&preds) {
-            latencies.push(done.duration_since(r.arrived).as_secs_f64() * 1e3);
-            if let Some(label) = r.label {
+        let mut tickets: Vec<Ticket> = batch
+            .requests
+            .into_iter()
+            .map(|r| backend.submit(r))
+            .collect();
+        while backend.queued() > 0 {
+            let rep = backend.step(cfg.max_batch, &mut metrics)?;
+            if rep.served == 0 {
+                anyhow::bail!("backend step made no progress");
+            }
+            modularized.push(rep.modularized_ms);
+            // Continuous intake: requests that arrived while the step ran
+            // join the next fused batch instead of waiting out a fresh
+            // batching window.
+            for r in batcher.drain_ready(&rx).requests {
+                tickets.push(backend.submit(r));
+            }
+        }
+        for t in &tickets {
+            let out = backend
+                .poll(t)
+                .expect("stepped to completion, result must be ready");
+            // per-request latency uses the serving step's completion stamp,
+            // not the end of the whole drain loop
+            latencies.push(out.latency_ms());
+            if let Some(label) = out.label {
                 total += 1;
-                if *p == label {
+                if argmax(&out.logits) == label {
                     correct += 1;
                 }
             }
-        }
-        modularized.push(out.modularized_ms);
-        if sample_masks.len() < 8 {
-            let room = 8 - sample_masks.len();
-            sample_masks.extend(out.dispatch_mask_blk0.into_iter().take(room));
+            if sample_masks.len() < 8 && !out.dispatch_mask_blk0.is_empty() {
+                sample_masks.push(out.dispatch_mask_blk0);
+            }
         }
     }
     let wall_s = t0.elapsed().as_secs_f64();
@@ -117,6 +182,8 @@ pub fn serve_backend(backend: &dyn InferenceBackend, cfg: &ServerConfig) -> Resu
         } else {
             0.0
         },
+        occupancy: metrics.occupancy_summary(),
+        step_tokens: metrics.step_tokens_summary(),
         metrics,
         sample_masks,
     })
@@ -141,4 +208,115 @@ impl ServeReport {
         );
         self.metrics.print();
     }
+}
+
+// ---------------------------------------------------------------------------
+// Token-streaming serving (sessions through the continuous batcher)
+// ---------------------------------------------------------------------------
+
+/// Outcome of a streaming serving run.
+pub struct StreamReport {
+    pub sessions: usize,
+    pub total_tokens: usize,
+    pub steps: usize,
+    pub wall_ms: f64,
+    pub tokens_per_sec: f64,
+    /// per-session end-to-end latency (submit → logits)
+    pub latency: Summary,
+    pub occupancy: Option<Summary>,
+    pub step_tokens: Option<Summary>,
+    pub metrics: Metrics,
+}
+
+impl StreamReport {
+    pub fn print(&self) {
+        println!("== streaming report ==");
+        println!(
+            "sessions {}  tokens {}  steps {}  wall {:.1} ms  throughput {:.0} tok/s",
+            self.sessions, self.total_tokens, self.steps, self.wall_ms, self.tokens_per_sec
+        );
+        println!(
+            "session latency  mean {:.2} ms  p50 {:.2}  p99 {:.2}",
+            self.latency.mean, self.latency.p50, self.latency.p99
+        );
+        self.metrics.print();
+    }
+}
+
+/// Deterministic synthetic token sequence lengths for the stream workload:
+/// spread over [mean/2, mean/2 + mean) so sessions join and leave the
+/// continuous batch at different times.
+pub fn stream_workload_lens(sessions: usize, mean_tokens: usize) -> Vec<usize> {
+    let mean = mean_tokens.max(2);
+    (0..sessions)
+        .map(|i| mean / 2 + (i * 7 + 3) % mean)
+        .collect()
+}
+
+/// Serve `cfg.requests` token-streaming sessions on the native streaming
+/// engine (the paper's deployed mixture: Hamming LinearAdd attention +
+/// shift linears), continuously batched `cfg.max_live` at a time in
+/// `cfg.stream_chunk`-token steps.
+pub fn serve_stream(cfg: &ServerConfig) -> Result<StreamReport> {
+    if cfg.backend != BackendKind::Native {
+        anyhow::bail!(
+            "the stream workload runs on the native streaming engine only \
+             (got --backend {}); the XLA artifacts have no token-level entry point",
+            cfg.backend.name()
+        );
+    }
+    let planner = create_planner(cfg)?;
+    let model = StreamModel::new(SessionSpec::tiny(StreamAttn::LinearAdd, Lin::Shift), planner);
+    let dim = model.spec.dim;
+    let mut engine = SessionEngine::new(model, cfg.stream_chunk.max(1), cfg.max_live.max(1));
+
+    let lens = stream_workload_lens(cfg.requests, cfg.stream_tokens);
+    let mut tickets = Vec::with_capacity(lens.len());
+    let mut total_tokens = 0usize;
+    for (i, &n) in lens.iter().enumerate() {
+        let toks = XorShift64::new(0x70C0 + i as u64).normals(n * dim);
+        total_tokens += n;
+        tickets.push(engine.submit(toks));
+    }
+
+    let mut metrics = Metrics::default();
+    let t0 = Instant::now();
+    let steps = engine.run_to_completion(&mut metrics);
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let mut latencies = Vec::with_capacity(tickets.len());
+    for t in &tickets {
+        let out = engine.poll(t).expect("run_to_completion finished all");
+        latencies.push(out.latency_ms());
+    }
+    save_planner_table(cfg, &engine.model.planner.choices())?;
+
+    Ok(StreamReport {
+        sessions: lens.len(),
+        total_tokens,
+        steps,
+        wall_ms,
+        tokens_per_sec: total_tokens as f64 / (wall_ms / 1e3).max(1e-12),
+        latency: Summary::from(&latencies),
+        occupancy: metrics.occupancy_summary(),
+        step_tokens: metrics.step_tokens_summary(),
+        metrics,
+    })
+}
+
+/// Dispatch `cfg.workload`: classification through [`serve_auto`], or
+/// streaming through [`serve_stream`] (printing its own report). Used by
+/// the `serve` subcommand so one flag switches request shapes.
+pub fn serve_workload(cfg: &ServerConfig) -> Result<()> {
+    match cfg.workload {
+        Workload::Classify => {
+            let report = serve_auto(cfg)?;
+            report.print();
+        }
+        Workload::Stream => {
+            let report = serve_stream(cfg)?;
+            report.print();
+        }
+    }
+    Ok(())
 }

@@ -1,0 +1,337 @@
+//! Cross-request continuous batching of streaming sessions (sglang-style
+//! router, shrunk to this repo's shape): every [`SessionEngine::step`]
+//! packs the next token chunk of EVERY live session into one fused
+//! [`StreamModel::extend_batch`] — a single MatMul/MatShift dispatch per
+//! linear per layer shared by all live requests — then retires finished
+//! sessions and admits queued ones, so requests of different lengths join
+//! and leave the batch without ever stalling each other.
+//!
+//! The engine is deliberately synchronous and deterministic: callers own
+//! the step loop (a serving thread, a bench, or a test driving it to
+//! completion), and because the fused step is bit-exact against solo
+//! stepping (see `infer::session`), every result equals the one-shot
+//! full-prefix recompute of that request alone.
+
+use std::collections::{HashMap, VecDeque};
+use std::time::Instant;
+
+use crate::coordinator::metrics::Metrics;
+use crate::infer::session::{SessionState, StreamModel};
+
+/// Handle to a submitted streaming request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StreamTicket {
+    pub id: usize,
+}
+
+/// Where a streaming request currently is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StreamStatus {
+    /// waiting for a live slot
+    Queued,
+    /// live: `fed` of `total` tokens streamed so far
+    Streaming { fed: usize, total: usize },
+    /// finished — result waiting in [`SessionEngine::poll`]
+    Done,
+    /// unknown ticket (never submitted, or already polled)
+    Unknown,
+}
+
+/// Finished request: logits plus latency/stepping diagnostics.
+#[derive(Clone, Debug)]
+pub struct StreamOutput {
+    pub logits: Vec<f32>,
+    /// tokens the session streamed end to end
+    pub tokens: usize,
+    /// engine steps the session was live in
+    pub steps: usize,
+    pub arrived: Instant,
+    pub finished: Instant,
+}
+
+impl StreamOutput {
+    pub fn latency_ms(&self) -> f64 {
+        self.finished.duration_since(self.arrived).as_secs_f64() * 1e3
+    }
+}
+
+/// Diagnostics from one [`SessionEngine::step`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepStats {
+    /// sessions live during the step
+    pub live: usize,
+    /// token rows packed into the fused dispatches
+    pub tokens: usize,
+    /// sessions retired by the step
+    pub finished: usize,
+    pub step_ms: f64,
+}
+
+struct LiveSession {
+    id: usize,
+    state: SessionState,
+    tokens: Vec<f32>,
+    /// tokens already streamed
+    fed: usize,
+    steps: usize,
+    arrived: Instant,
+}
+
+/// The continuous-batching scheduler over one [`StreamModel`].
+pub struct SessionEngine {
+    pub model: StreamModel,
+    /// tokens each live session contributes per step
+    chunk: usize,
+    /// live-session cap (admission control)
+    max_live: usize,
+    queue: VecDeque<(usize, Vec<f32>, Instant)>,
+    live: Vec<LiveSession>,
+    done: HashMap<usize, StreamOutput>,
+    next_id: usize,
+}
+
+impl SessionEngine {
+    pub fn new(model: StreamModel, chunk: usize, max_live: usize) -> SessionEngine {
+        assert!(chunk > 0, "chunk must be positive");
+        assert!(max_live > 0, "max_live must be positive");
+        SessionEngine {
+            model,
+            chunk,
+            max_live,
+            queue: VecDeque::new(),
+            live: Vec::new(),
+            done: HashMap::new(),
+            next_id: 0,
+        }
+    }
+
+    /// Enqueue one request: a flattened (n × dim) token sequence.
+    pub fn submit(&mut self, tokens: Vec<f32>) -> StreamTicket {
+        let d = self.model.spec.dim;
+        assert!(
+            !tokens.is_empty() && tokens.len() % d == 0,
+            "request must be a non-empty multiple of dim={d} floats"
+        );
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back((id, tokens, Instant::now()));
+        StreamTicket { id }
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.live.len()
+    }
+
+    /// True when no request is queued, live, or waiting to be polled... the
+    /// engine has nothing left to do.
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty() && self.live.is_empty()
+    }
+
+    pub fn status(&self, ticket: &StreamTicket) -> StreamStatus {
+        if self.queue.iter().any(|(id, _, _)| *id == ticket.id) {
+            return StreamStatus::Queued;
+        }
+        if let Some(s) = self.live.iter().find(|s| s.id == ticket.id) {
+            return StreamStatus::Streaming {
+                fed: s.fed,
+                total: s.tokens.len() / self.model.spec.dim,
+            };
+        }
+        if self.done.contains_key(&ticket.id) {
+            return StreamStatus::Done;
+        }
+        StreamStatus::Unknown
+    }
+
+    /// One continuous-batching step: admit queued requests into free live
+    /// slots, stream each live session's next chunk through ONE fused
+    /// [`StreamModel::extend_batch`], retire finished sessions.
+    pub fn step(&mut self, metrics: &mut Metrics) -> StepStats {
+        // --- admission ---------------------------------------------------
+        while self.live.len() < self.max_live {
+            match self.queue.pop_front() {
+                Some((id, tokens, arrived)) => self.live.push(LiveSession {
+                    id,
+                    state: self.model.begin(),
+                    tokens,
+                    fed: 0,
+                    steps: 0,
+                    arrived,
+                }),
+                None => break,
+            }
+        }
+        if self.live.is_empty() {
+            return StepStats::default();
+        }
+
+        // --- one fused multi-session step --------------------------------
+        let t0 = Instant::now();
+        let d = self.model.spec.dim;
+        let chunk = self.chunk;
+        let chunks: Vec<Vec<f32>> = self
+            .live
+            .iter()
+            .map(|s| {
+                let total = s.tokens.len() / d;
+                let hi = (s.fed + chunk).min(total);
+                s.tokens[s.fed * d..hi * d].to_vec()
+            })
+            .collect();
+        let refs: Vec<&[f32]> = chunks.iter().map(|c| c.as_slice()).collect();
+        let mut states: Vec<&mut SessionState> =
+            self.live.iter_mut().map(|s| &mut s.state).collect();
+        let trace = self.model.extend_batch(&mut states, &refs);
+
+        // --- bookkeeping + retirement ------------------------------------
+        let live = self.live.len();
+        for (s, c) in self.live.iter_mut().zip(&chunks) {
+            s.fed += c.len() / d;
+            s.steps += 1;
+        }
+        let mut finished = 0usize;
+        let model = &self.model;
+        let done = &mut self.done;
+        self.live.retain(|s| {
+            if s.fed * d < s.tokens.len() {
+                return true;
+            }
+            finished += 1;
+            done.insert(
+                s.id,
+                StreamOutput {
+                    logits: model.finish(&s.state),
+                    tokens: s.fed,
+                    steps: s.steps,
+                    arrived: s.arrived,
+                    finished: Instant::now(),
+                },
+            );
+            false
+        });
+
+        let step_ms = t0.elapsed().as_secs_f64() * 1e3;
+        metrics.record("stream_step", step_ms);
+        metrics.record_step_occupancy(live, self.max_live, trace.total_tokens);
+        metrics.live_sessions.push(live as f64);
+        metrics.batches += 1;
+        metrics.requests += finished;
+        StepStats {
+            live,
+            tokens: trace.total_tokens,
+            finished,
+            step_ms,
+        }
+    }
+
+    /// Remove and return a finished request's output, if ready.
+    pub fn poll(&mut self, ticket: &StreamTicket) -> Option<StreamOutput> {
+        self.done.remove(&ticket.id)
+    }
+
+    /// Step until every submitted request is done. Returns steps taken.
+    pub fn run_to_completion(&mut self, metrics: &mut Metrics) -> usize {
+        let mut steps = 0usize;
+        while !self.idle() {
+            self.step(metrics);
+            steps += 1;
+        }
+        steps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::session::{StreamAttn, StreamModel};
+    use crate::model::ops::Lin;
+    use crate::util::rng::XorShift64;
+
+    fn engine(chunk: usize, max_live: usize) -> SessionEngine {
+        SessionEngine::new(StreamModel::tiny(StreamAttn::LinearAdd, Lin::Mult), chunk, max_live)
+    }
+
+    #[test]
+    fn mixed_length_requests_complete_and_match_solo() {
+        let mut eng = engine(3, 2);
+        let d = eng.model.spec.dim;
+        let lens = [2usize, 7, 5, 1];
+        let seqs: Vec<Vec<f32>> = lens
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| XorShift64::new(100 + i as u64).normals(n * d))
+            .collect();
+        let tickets: Vec<StreamTicket> =
+            seqs.iter().map(|s| eng.submit(s.clone())).collect();
+        assert_eq!(eng.queued(), 4);
+        let mut m = Metrics::default();
+        let steps = eng.run_to_completion(&mut m);
+        assert!(steps >= 3, "7-token session at chunk 3 needs ≥3 steps");
+        assert!(eng.idle());
+        for (t, s) in tickets.iter().zip(&seqs) {
+            let out = eng.poll(t).expect("completed");
+            assert_eq!(out.tokens, s.len() / d);
+            assert_eq!(
+                out.logits,
+                eng.model.forward_full(s),
+                "fused interleaved stepping diverged from solo full-prefix"
+            );
+        }
+        // occupancy gauges populated, live cap respected
+        assert_eq!(m.live_sessions.len(), steps);
+        assert!(m.live_sessions.iter().all(|&l| l <= 2.0));
+        assert!(m.batch_occupancy.iter().any(|&o| o == 1.0));
+        assert_eq!(m.requests, 4);
+    }
+
+    #[test]
+    fn status_tracks_the_request_lifecycle() {
+        let mut eng = engine(2, 1);
+        let d = eng.model.spec.dim;
+        let ta = eng.submit(XorShift64::new(1).normals(4 * d));
+        let tb = eng.submit(XorShift64::new(2).normals(2 * d));
+        assert_eq!(eng.status(&ta), StreamStatus::Queued);
+        let mut m = Metrics::default();
+        eng.step(&mut m); // admits only A (max_live 1)
+        assert_eq!(eng.status(&ta), StreamStatus::Streaming { fed: 2, total: 4 });
+        assert_eq!(eng.status(&tb), StreamStatus::Queued);
+        eng.step(&mut m); // A finishes
+        assert_eq!(eng.status(&ta), StreamStatus::Done);
+        eng.run_to_completion(&mut m);
+        assert_eq!(eng.status(&tb), StreamStatus::Done);
+        let out = eng.poll(&ta).unwrap();
+        assert_eq!(out.steps, 2);
+        assert!(out.latency_ms() >= 0.0);
+        assert_eq!(eng.status(&ta), StreamStatus::Unknown, "poll consumes");
+    }
+
+    #[test]
+    fn continuous_admission_refills_free_slots() {
+        let mut eng = engine(4, 2);
+        let d = eng.model.spec.dim;
+        // A is long, B short: when B retires, C must join A's batch.
+        let ta = eng.submit(XorShift64::new(3).normals(12 * d));
+        let _tb = eng.submit(XorShift64::new(4).normals(4 * d));
+        let tc = eng.submit(XorShift64::new(5).normals(4 * d));
+        let mut m = Metrics::default();
+        let s1 = eng.step(&mut m);
+        assert_eq!((s1.live, s1.finished), (2, 1)); // B done
+        let s2 = eng.step(&mut m);
+        assert_eq!(s2.live, 2, "C admitted into the slot B freed");
+        assert_eq!(eng.status(&tc), StreamStatus::Done);
+        eng.run_to_completion(&mut m);
+        assert_eq!(eng.status(&ta), StreamStatus::Done);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of dim")]
+    fn submit_rejects_ragged_buffers() {
+        let mut eng = engine(2, 2);
+        eng.submit(vec![0.0; 5]);
+    }
+}

@@ -23,7 +23,15 @@ use std::sync::Arc;
 use crate::kernels::api::{LinearKernel, RawWeights};
 
 /// Numerical floor shared with `python/compile/kernels/ref.py::linattn_ref`.
-const EPS: f32 = 1e-6;
+pub const EPS: f32 = 1e-6;
+
+/// ReLU feature map of the full-precision linear attention
+/// (`model.py`: `relu(x) + 1e-3`) — shared by the one-shot and the
+/// streaming paths so they stay bit-identical.
+#[inline]
+pub fn relu_feat(x: f32) -> f32 {
+    x.max(0.0) + 1e-3
+}
 
 /// Standard MSA per head: `softmax(q kᵀ / √d) v`; q, k, v are (n × d).
 pub fn softmax_attn(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize) -> Vec<f32> {
@@ -68,7 +76,7 @@ pub fn relu_linear_attn(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize) -> 
     assert_eq!(q.len(), n * d);
     assert_eq!(k.len(), n * d);
     assert_eq!(v.len(), n * d);
-    let feat = |x: f32| x.max(0.0) + 1e-3;
+    let feat = relu_feat;
     // kv (d × d) and z (d) accumulated over tokens.
     let mut kv = vec![0.0f32; d * d];
     let mut z = vec![0.0f32; d];
@@ -252,6 +260,212 @@ pub fn hamming_linear_attn_ref(
     out
 }
 
+// ---------------------------------------------------------------------------
+// Streaming (causal) attention state — the O(d·bits) per-head session state
+// ---------------------------------------------------------------------------
+
+/// Streaming per-head state of the Hamming LinearAdd attention: the kᵀv
+/// accumulator (`kv`, bits × d), the per-bit code sums (`z`, bits), the
+/// value sum (`sv`, d), and the token count. This is everything linear
+/// attention needs — O(d·bits) floats per head, independent of the prefix
+/// length — and it is exactly the state `infer::session` exposes as a
+/// first-class session object.
+///
+/// Semantics are **causal**: [`HammingAttnState::push`] absorbs one token's
+/// key code and value, [`HammingAttnState::query`] answers attention over
+/// every token pushed so far. Pushing tokens in ascending order and
+/// querying after each push reproduces [`hamming_causal_attn_ref`]
+/// *bit-exactly* (identical per-element accumulation order), which is what
+/// makes chunked streaming equal to full-prefix recompute.
+#[derive(Clone, Debug)]
+pub struct HammingAttnState {
+    pub bits: usize,
+    pub d: usize,
+    /// kᵀv accumulator (bits × d), token-ascending accumulation
+    kv: Vec<f32>,
+    /// per-bit ±1 code sums (bits)
+    z: Vec<f32>,
+    /// Σⱼ vⱼ (d)
+    sv: Vec<f32>,
+    /// tokens absorbed so far
+    pub count: usize,
+}
+
+impl HammingAttnState {
+    pub fn new(bits: usize, d: usize) -> HammingAttnState {
+        HammingAttnState {
+            bits,
+            d,
+            kv: vec![0.0; bits * d],
+            z: vec![0.0; bits],
+            sv: vec![0.0; d],
+            count: 0,
+        }
+    }
+
+    /// Number of f32s this state holds — the constant per-head memory cost
+    /// of a live session (`bits·d + bits + d`).
+    pub fn state_floats(&self) -> usize {
+        self.kv.len() + self.z.len() + self.sv.len()
+    }
+
+    /// Absorb one token: `kc` (bits) ±1 key code, `v` (d) value row.
+    pub fn push(&mut self, kc: &[i8], v: &[f32]) {
+        assert_eq!(kc.len(), self.bits);
+        assert_eq!(v.len(), self.d);
+        for (b, &c) in kc.iter().enumerate() {
+            if c > 0 {
+                self.z[b] += 1.0;
+            } else {
+                self.z[b] -= 1.0;
+            }
+            let kvrow = &mut self.kv[b * self.d..(b + 1) * self.d];
+            for (kk, &vv) in kvrow.iter_mut().zip(v) {
+                if c > 0 {
+                    *kk += vv;
+                } else {
+                    *kk -= vv;
+                }
+            }
+        }
+        for (s, &vv) in self.sv.iter_mut().zip(v) {
+            *s += vv;
+        }
+        self.count += 1;
+    }
+
+    /// Attention output (d) of query code `qc` over every pushed token.
+    pub fn query(&self, qc: &[i8]) -> Vec<f32> {
+        assert_eq!(qc.len(), self.bits);
+        let mut den = 0.0f32;
+        let mut num = vec![0.0f32; self.d];
+        for (b, &c) in qc.iter().enumerate() {
+            let kvrow = &self.kv[b * self.d..(b + 1) * self.d];
+            if c > 0 {
+                den += self.z[b];
+                for (nn, &kk) in num.iter_mut().zip(kvrow) {
+                    *nn += kk;
+                }
+            } else {
+                den -= self.z[b];
+                for (nn, &kk) in num.iter_mut().zip(kvrow) {
+                    *nn -= kk;
+                }
+            }
+        }
+        let bias = (self.count * self.bits) as f32;
+        let bf = self.bits as f32;
+        let denom = bias + den + EPS;
+        num.iter()
+            .zip(&self.sv)
+            .map(|(&nn, &sv)| (bf * sv + nn) / denom)
+            .collect()
+    }
+}
+
+/// Streaming per-head state of the full-precision ReLU linear attention:
+/// `kv` (d × d) feature-weighted value accumulator and `z` (d) feature
+/// sums. Same causal push/query contract as [`HammingAttnState`].
+#[derive(Clone, Debug)]
+pub struct ReluAttnState {
+    pub d: usize,
+    kv: Vec<f32>,
+    z: Vec<f32>,
+    pub count: usize,
+}
+
+impl ReluAttnState {
+    pub fn new(d: usize) -> ReluAttnState {
+        ReluAttnState {
+            d,
+            kv: vec![0.0; d * d],
+            z: vec![0.0; d],
+            count: 0,
+        }
+    }
+
+    pub fn state_floats(&self) -> usize {
+        self.kv.len() + self.z.len()
+    }
+
+    /// Absorb one token's key and value rows (each d).
+    pub fn push(&mut self, k: &[f32], v: &[f32]) {
+        assert_eq!(k.len(), self.d);
+        assert_eq!(v.len(), self.d);
+        for (e, &ke) in k.iter().enumerate() {
+            let fk = relu_feat(ke);
+            self.z[e] += fk;
+            let kvrow = &mut self.kv[e * self.d..(e + 1) * self.d];
+            for (kk, &vv) in kvrow.iter_mut().zip(v) {
+                *kk += fk * vv;
+            }
+        }
+        self.count += 1;
+    }
+
+    /// Attention output (d) of query row `q` over every pushed token.
+    pub fn query(&self, q: &[f32]) -> Vec<f32> {
+        assert_eq!(q.len(), self.d);
+        let mut den = 0.0f32;
+        let mut out = vec![0.0f32; self.d];
+        for (e, &qe) in q.iter().enumerate() {
+            let fq = relu_feat(qe);
+            den += fq * self.z[e];
+            let kvrow = &self.kv[e * self.d..(e + 1) * self.d];
+            for (o, &kk) in out.iter_mut().zip(kvrow) {
+                *o += fq * kk;
+            }
+        }
+        for o in out.iter_mut() {
+            *o /= den + EPS;
+        }
+        out
+    }
+}
+
+/// Readable causal oracle for [`HammingAttnState`]: output `i` attends over
+/// tokens `0..=i` only, each prefix recomputed from scratch (O(n²·bits·d))
+/// with the same per-element accumulation order as the streaming state —
+/// bit-exact against push-then-query streaming.
+pub fn hamming_causal_attn_ref(
+    qc: &[i8],
+    kc: &[i8],
+    v: &[f32],
+    n: usize,
+    bits: usize,
+    d: usize,
+) -> Vec<f32> {
+    assert_eq!(qc.len(), n * bits);
+    assert_eq!(kc.len(), n * bits);
+    assert_eq!(v.len(), n * d);
+    let mut out = vec![0.0f32; n * d];
+    for i in 0..n {
+        let mut st = HammingAttnState::new(bits, d);
+        for j in 0..=i {
+            st.push(&kc[j * bits..(j + 1) * bits], &v[j * d..(j + 1) * d]);
+        }
+        out[i * d..(i + 1) * d].copy_from_slice(&st.query(&qc[i * bits..(i + 1) * bits]));
+    }
+    out
+}
+
+/// Readable causal oracle for [`ReluAttnState`] (full prefix recompute per
+/// output token).
+pub fn relu_causal_attn_ref(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize) -> Vec<f32> {
+    assert_eq!(q.len(), n * d);
+    assert_eq!(k.len(), n * d);
+    assert_eq!(v.len(), n * d);
+    let mut out = vec![0.0f32; n * d];
+    for i in 0..n {
+        let mut st = ReluAttnState::new(d);
+        for j in 0..=i {
+            st.push(&k[j * d..(j + 1) * d], &v[j * d..(j + 1) * d]);
+        }
+        out[i * d..(i + 1) * d].copy_from_slice(&st.query(&q[i * d..(i + 1) * d]));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -310,6 +524,64 @@ mod tests {
         for kernel in registry.for_primitive(crate::kernels::api::Primitive::MatAdd) {
             let got = hamming_linear_attn_kernel(&kernel, &qc, &kc, &v, n, bits, d);
             assert_eq!(got, want, "{} diverged from the oracle", kernel.id());
+        }
+    }
+
+    #[test]
+    fn streaming_hamming_state_matches_causal_oracle_bit_exactly() {
+        let (n, d, bits) = (12, 5, 16);
+        let h = KshHasher::new(d, bits, 21);
+        let mut rng = XorShift64::new(91);
+        let q = rng.normals(n * d);
+        let k = rng.normals(n * d);
+        let v = rng.normals(n * d);
+        let qc = h.hash_matrix(&q, n);
+        let kc = h.hash_matrix(&k, n);
+        let want = hamming_causal_attn_ref(&qc, &kc, &v, n, bits, d);
+        let mut st = HammingAttnState::new(bits, d);
+        assert_eq!(st.state_floats(), bits * d + bits + d);
+        for i in 0..n {
+            st.push(&kc[i * bits..(i + 1) * bits], &v[i * d..(i + 1) * d]);
+            let got = st.query(&qc[i * bits..(i + 1) * bits]);
+            assert_eq!(got, &want[i * d..(i + 1) * d], "token {i}");
+        }
+        assert_eq!(st.count, n);
+    }
+
+    #[test]
+    fn streaming_relu_state_matches_causal_oracle_bit_exactly() {
+        let (n, d) = (9, 6);
+        let mut rng = XorShift64::new(37);
+        let q = rng.normals(n * d);
+        let k = rng.normals(n * d);
+        let v = rng.normals(n * d);
+        let want = relu_causal_attn_ref(&q, &k, &v, n, d);
+        let mut st = ReluAttnState::new(d);
+        for i in 0..n {
+            st.push(&k[i * d..(i + 1) * d], &v[i * d..(i + 1) * d]);
+            let got = st.query(&q[i * d..(i + 1) * d]);
+            assert_eq!(got, &want[i * d..(i + 1) * d], "token {i}");
+        }
+    }
+
+    #[test]
+    fn causal_last_token_equals_full_attention_row() {
+        // The final causal output row attends over the whole sequence, so it
+        // must equal the last row of the existing (non-causal) reference.
+        let (n, d, bits) = (8, 4, 32);
+        let h = KshHasher::new(d, bits, 5);
+        let mut rng = XorShift64::new(11);
+        let q = rng.normals(n * d);
+        let k = rng.normals(n * d);
+        let v = rng.normals(n * d);
+        let qc = h.hash_matrix(&q, n);
+        let kc = h.hash_matrix(&k, n);
+        let full = hamming_linear_attn_ref(&qc, &kc, &v, n, bits, d);
+        let causal = hamming_causal_attn_ref(&qc, &kc, &v, n, bits, d);
+        for e in 0..d {
+            let a = full[(n - 1) * d + e];
+            let b = causal[(n - 1) * d + e];
+            assert!((a - b).abs() < 1e-5, "elem {e}: {a} vs {b}");
         }
     }
 

@@ -19,7 +19,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::infer::attn::{hamming_linear_attn_kernel, relu_linear_attn, softmax_attn};
-use crate::kernels::api::{LinearKernel, PreparedWeights, Primitive, RawWeights};
+use crate::kernels::api::{LinearKernel, Operand, PreparedWeights, Primitive, RawWeights};
 use crate::kernels::planner::{Planner, Shape};
 use crate::model::ops::{Attn, Lin, Mlp, Variant};
 use crate::moe::experts::{MlpExpert, MoeMlp, MoeTrace};
@@ -92,6 +92,14 @@ pub struct LinearLayer {
     pub kernel: Arc<dyn LinearKernel>,
     pub weights: PreparedWeights,
     pub bias: Vec<f32>,
+    /// Frozen symmetric INT8 activation scale. When set, operands are
+    /// quantized with this fixed scale instead of the backend's per-tensor
+    /// calibration, making `forward` **row-independent**: the output of a
+    /// row does not depend on which other rows share the operand. The
+    /// streaming session path (`infer::session`) relies on this for its
+    /// chunk-split and cross-session batching bit-exactness guarantees.
+    /// `None` (the default) keeps the backend's own operand preparation.
+    pub act_scale: Option<f32>,
 }
 
 impl LinearLayer {
@@ -110,12 +118,36 @@ impl LinearLayer {
             weights: kernel.prepare(raw),
             kernel,
             bias,
+            act_scale: None,
         }
+    }
+
+    /// Like [`LinearLayer::new`], but freezes the INT8 activation scale for
+    /// quantizing primitives so the layer becomes row-independent. Only
+    /// MatShift consumes INT8 operands; for other primitives the scale is
+    /// ignored (their operand prep is already row-independent f32).
+    pub fn new_frozen(
+        planner: &Planner,
+        primitive: Primitive,
+        raw: &RawWeights,
+        bias: Vec<f32>,
+        plan_m: usize,
+        act_scale: f32,
+    ) -> LinearLayer {
+        let mut layer = LinearLayer::new(planner, primitive, raw, bias, plan_m);
+        if primitive == Primitive::MatShift {
+            layer.act_scale = Some(act_scale);
+        }
+        layer
     }
 
     /// `y (m×n) = x (m×k) @ W + bias`.
     pub fn forward(&self, x: &[f32], m: usize) -> Vec<f32> {
-        let op = self.kernel.prepare_operand(x, m, self.weights.k());
+        let k = self.weights.k();
+        let op = match self.act_scale {
+            Some(scale) => Operand::quantized_with_scale(x, m, k, scale),
+            None => self.kernel.prepare_operand(x, m, k),
+        };
         let mut out = vec![0.0f32; m * self.weights.n()];
         self.kernel.run(&self.weights, &op, &mut out);
         for row in out.chunks_mut(self.bias.len()) {
@@ -475,6 +507,27 @@ mod tests {
             assert!(x.iter().all(|v| v.is_finite()), "{variant:?}");
             assert_eq!(trace.moe.is_some(), matches!(variant.mlp, Mlp::Moe { .. }));
         }
+    }
+
+    #[test]
+    fn frozen_scale_shift_layer_is_row_independent() {
+        // Per-tensor INT8 calibration makes a MatShift layer's output depend
+        // on which rows share the operand; a frozen scale must not.
+        let p = planner();
+        let mut rng = XorShift64::new(41);
+        let raw = dense_init(&mut rng, 8, 8);
+        let layer =
+            LinearLayer::new_frozen(&p, Primitive::MatShift, &raw, vec![0.1; 8], 16, 6.0 / 127.0);
+        assert!(layer.act_scale.is_some());
+        let x = rng.normals(4 * 8);
+        let all = layer.forward(&x, 4);
+        for i in 0..4 {
+            let one = layer.forward(&x[i * 8..(i + 1) * 8], 1);
+            assert_eq!(one, &all[i * 8..(i + 1) * 8], "row {i} depends on batch");
+        }
+        // Non-quantizing primitives ignore the frozen scale.
+        let dense = LinearLayer::new_frozen(&p, Primitive::MatMul, &raw, vec![0.0; 8], 16, 1.0);
+        assert!(dense.act_scale.is_none());
     }
 
     #[test]

@@ -3,15 +3,23 @@
 //! Executes the paper's reparameterized forward pass end-to-end on the
 //! kernel registry — no XLA artifacts, no Python: [`attn`] implements the
 //! three attention families (softmax MSA, full-precision linear Q(KᵀV),
-//! and KSH-binarized LinearAdd on packed MatAdd backends), [`block`] the
-//! pre-norm transformer block (shift-reparameterized linears, DWConv V
-//! branch, Mult/Shift MoE MLP), and [`model`] the multi-stage
-//! `ModelSpec`-driven classifier with planner-chosen backends per shape.
+//! and KSH-binarized LinearAdd on packed MatAdd backends) plus the
+//! streaming per-head attention states, [`block`] the pre-norm transformer
+//! block (shift-reparameterized linears, DWConv V branch, Mult/Shift MoE
+//! MLP), [`model`] the multi-stage `ModelSpec`-driven classifier with
+//! planner-chosen backends per shape, and [`session`] the KV-free
+//! streaming API: first-class `SessionState` with `begin / extend /
+//! finish` and a fused `extend_batch` that packs token chunks from many
+//! live sessions into one kernel dispatch per layer.
 //!
 //! The serving stack consumes this engine through
-//! `coordinator::backend::NativeBackend`; the XLA artifact pipeline remains
-//! available behind the same `InferenceBackend` trait.
+//! `coordinator::backend::NativeBackend` (one-shot image batches, now a
+//! thin adapter over the request-level submit/step/poll contract) and
+//! `coordinator::sessions::SessionEngine` (continuous batching of
+//! streaming sessions); the XLA artifact pipeline remains available behind
+//! the same `InferenceBackend` trait.
 
 pub mod attn;
 pub mod block;
 pub mod model;
+pub mod session;

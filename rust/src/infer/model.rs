@@ -4,7 +4,13 @@
 //! downsamples between them, final LayerNorm, mean pool, and the
 //! classification head. This is the executable counterpart of the analytic
 //! `model::ops::count` path and the engine behind the native serving
-//! backend (`coordinator::backend::NativeBackend`).
+//! backend (`coordinator::backend::NativeBackend`, which now serves it
+//! through the request-level submit/step/poll contract). Its token-level
+//! streaming sibling — causal, KV-free, chunked — is
+//! [`crate::infer::session::StreamModel`]; the image pyramid itself cannot
+//! stream (patch-merging downsamples and the DWConv branch are spatial,
+//! and image attention is bidirectional), which is why the two entry
+//! points coexist.
 //!
 //! Weights are deterministic from `seed` (the repo has no Rust-side trained
 //! checkpoints; the XLA path bakes trained weights into artifacts). The

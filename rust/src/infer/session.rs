@@ -1,0 +1,486 @@
+//! Session-based streaming inference — the KV-free incremental API over
+//! the linear-attention state (ROADMAP "KV-free streaming").
+//!
+//! ShiftAddViT's linear/LinearAdd attention keeps only an O(d·bits)
+//! accumulator per head (the kᵀv matrix plus code sums —
+//! [`crate::infer::attn::HammingAttnState`] / [`ReluAttnState`]), so a
+//! token sequence can stream through the model without ever re-running its
+//! prefix. This module makes that state first-class:
+//!
+//! ```text
+//!   let model = StreamModel::tiny(StreamAttn::LinearAdd, Lin::Shift);
+//!   let mut s = model.begin();
+//!   model.extend(&mut s, &chunk_a);     // any chunking — token granularity
+//!   model.extend(&mut s, &chunk_b);
+//!   let logits = model.finish(&s);      // == model.forward_full(all_tokens)
+//! ```
+//!
+//! **Bit-exactness contract.** `extend`-ing a session in *any* chunk split
+//! (token-by-token, random splits, one shot) yields bit-identical state and
+//! logits, because every per-token operation is row-independent:
+//! LayerNorm is row-wise, the attention state absorbs tokens strictly in
+//! ascending order, and every linear either consumes f32 operands (MatMul)
+//! or uses a **frozen** INT8 activation scale
+//! ([`crate::infer::block::LinearLayer::new_frozen`]) instead of per-tensor
+//! calibration. Attention is **causal** (token i attends over tokens 0..=i),
+//! the semantics under which prefix-free streaming is well-defined.
+//!
+//! **Cross-session fused stepping.** [`StreamModel::extend_batch`] packs
+//! token chunks from several live sessions into ONE operand per linear per
+//! layer — a single fused MatMul/MatShift dispatch amortized across
+//! requests, continuous-batching style (the attention-state updates and
+//! KSH hashing are O(d·bits) scalar loops per token, not kernel
+//! dispatches). Row independence makes the packed step bit-exact against
+//! stepping each session alone; `coordinator::sessions::SessionEngine`
+//! drives this loop across live requests.
+
+use std::sync::Arc;
+
+use crate::infer::attn::{HammingAttnState, ReluAttnState};
+use crate::infer::block::{dense_init, layer_norm, LinearLayer};
+use crate::kernels::api::Primitive;
+use crate::kernels::planner::Planner;
+use crate::kernels::registry::KernelRegistry;
+use crate::model::ops::Lin;
+use crate::quant::ksh::KshHasher;
+use crate::util::rng::XorShift64;
+
+/// Frozen symmetric INT8 activation scale used by every quantizing linear
+/// on the session path (≈ ±6.0 full-scale; LayerNormed activations are
+/// O(1), so saturation is rare). A *fixed* scale is what makes shift
+/// linears chunk- and batch-invariant — see the module docs.
+pub const STREAM_ACT_SCALE: f32 = 6.0 / 127.0;
+
+/// Attention families a session can stream (MSA is excluded: its state is
+/// the full K/V history, which defeats KV-free streaming).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StreamAttn {
+    /// full-precision ReLU linear attention (paper "Linear" row)
+    Linear,
+    /// KSH-binarized Hamming attention (paper "LinearAdd" row)
+    LinearAdd,
+}
+
+/// Construction parameters of a [`StreamModel`].
+#[derive(Clone, Debug)]
+pub struct SessionSpec {
+    pub dim: usize,
+    pub depth: usize,
+    pub heads: usize,
+    pub hidden: usize,
+    pub num_classes: usize,
+    pub attn: StreamAttn,
+    /// primitive behind the q/k/v/o and MLP linears (Mult → MatMul,
+    /// Shift → MatShift with a frozen activation scale)
+    pub linear: Lin,
+    pub seed: u64,
+    /// representative chunk row count the planner benchmarks at
+    pub plan_m: usize,
+}
+
+impl SessionSpec {
+    /// The tiny streaming analogue (same scale as `NativeModelConfig::tiny`).
+    pub fn tiny(attn: StreamAttn, linear: Lin) -> SessionSpec {
+        SessionSpec {
+            dim: 32,
+            depth: 2,
+            heads: 2,
+            hidden: 64,
+            num_classes: 8,
+            attn,
+            linear,
+            seed: 0x5E55_10,
+            plan_m: 32,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.heads
+    }
+
+    /// Hash-code width (= head_dim, as in the image model).
+    pub fn bits(&self) -> usize {
+        self.head_dim()
+    }
+
+    /// f32s of attention state one live session holds across all layers and
+    /// heads — the constant memory cost that replaces a KV cache.
+    pub fn state_floats(&self) -> usize {
+        let hd = self.head_dim();
+        let per_head = match self.attn {
+            StreamAttn::Linear => hd * hd + hd,
+            StreamAttn::LinearAdd => self.bits() * hd + self.bits() + hd,
+        };
+        self.depth * self.heads * per_head + self.dim
+    }
+}
+
+/// One pre-norm streaming block: causal linear attention + dense MLP, every
+/// linear on a planner-chosen registry backend. (No DWConv branch — that is
+/// a spatial-grid operation; token streams have no 2-D geometry.)
+struct StreamBlock {
+    ln1_g: Vec<f32>,
+    ln1_b: Vec<f32>,
+    ln2_g: Vec<f32>,
+    ln2_b: Vec<f32>,
+    wq: LinearLayer,
+    wk: LinearLayer,
+    wv: LinearLayer,
+    wo: LinearLayer,
+    l1: LinearLayer,
+    l2: LinearLayer,
+    /// KSH family shared by the block's heads (LinearAdd only)
+    hasher: Option<KshHasher>,
+}
+
+/// Per-head attention state of one block of one session.
+#[derive(Clone, Debug)]
+pub enum HeadState {
+    Linear(ReluAttnState),
+    Hamming(HammingAttnState),
+}
+
+/// The whole per-session state: one [`HeadState`] per (layer, head) plus
+/// the running mean-pool accumulator — O(depth·heads·d·bits) floats total,
+/// independent of how many tokens have streamed through.
+#[derive(Clone, Debug)]
+pub struct SessionState {
+    /// depth × heads attention states
+    blocks: Vec<Vec<HeadState>>,
+    /// Σ over tokens of the final-layer normalized outputs (dim)
+    pooled: Vec<f32>,
+    pub tokens_seen: usize,
+}
+
+/// Diagnostics from one fused [`StreamModel::extend_batch`] step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepTrace {
+    /// live sessions packed into the step
+    pub sessions: usize,
+    /// total token rows fused into each per-layer dispatch
+    pub total_tokens: usize,
+}
+
+/// The token-streaming causal model behind sessions.
+pub struct StreamModel {
+    pub spec: SessionSpec,
+    pub planner: Arc<Planner>,
+    blocks: Vec<StreamBlock>,
+    norm_g: Vec<f32>,
+    norm_b: Vec<f32>,
+    head: LinearLayer,
+}
+
+impl StreamModel {
+    pub fn new(spec: SessionSpec, planner: Arc<Planner>) -> StreamModel {
+        assert!(spec.depth > 0, "spec has no blocks");
+        assert_eq!(spec.dim % spec.heads, 0, "dim must split into heads");
+        let mut rng = XorShift64::new(spec.seed);
+        let prim = match spec.linear {
+            Lin::Mult => Primitive::MatMul,
+            Lin::Shift => Primitive::MatShift,
+        };
+        let lin = |planner: &Planner, rng: &mut XorShift64, k: usize, n: usize| {
+            LinearLayer::new_frozen(
+                planner,
+                prim,
+                &dense_init(rng, k, n),
+                vec![0.0; n],
+                spec.plan_m,
+                STREAM_ACT_SCALE,
+            )
+        };
+        let d = spec.dim;
+        let blocks = (0..spec.depth)
+            .map(|bi| StreamBlock {
+                ln1_g: vec![1.0; d],
+                ln1_b: vec![0.0; d],
+                ln2_g: vec![1.0; d],
+                ln2_b: vec![0.0; d],
+                wq: lin(&planner, &mut rng, d, d),
+                wk: lin(&planner, &mut rng, d, d),
+                wv: lin(&planner, &mut rng, d, d),
+                wo: lin(&planner, &mut rng, d, d),
+                l1: lin(&planner, &mut rng, d, spec.hidden),
+                l2: lin(&planner, &mut rng, spec.hidden, d),
+                hasher: match spec.attn {
+                    StreamAttn::LinearAdd => Some(KshHasher::new(
+                        spec.head_dim(),
+                        spec.bits(),
+                        spec.seed ^ (0x5E55_0000 + bi as u64),
+                    )),
+                    StreamAttn::Linear => None,
+                },
+            })
+            .collect();
+        // Classifier head stays full-precision MatMul (one row per finish).
+        let head = LinearLayer::new(
+            &planner,
+            Primitive::MatMul,
+            &dense_init(&mut rng, d, spec.num_classes),
+            vec![0.0; spec.num_classes],
+            1,
+        );
+        StreamModel {
+            norm_g: vec![1.0; d],
+            norm_b: vec![0.0; d],
+            spec,
+            planner,
+            blocks,
+            head,
+        }
+    }
+
+    /// Zero-setup constructor with its own planner over the default registry.
+    pub fn tiny(attn: StreamAttn, linear: Lin) -> StreamModel {
+        let planner = Arc::new(Planner::new(Arc::new(KernelRegistry::with_defaults())));
+        StreamModel::new(SessionSpec::tiny(attn, linear), planner)
+    }
+
+    /// Open a session: fresh per-(layer, head) attention state.
+    pub fn begin(&self) -> SessionState {
+        let hd = self.spec.head_dim();
+        SessionState {
+            blocks: (0..self.spec.depth)
+                .map(|_| {
+                    (0..self.spec.heads)
+                        .map(|_| match self.spec.attn {
+                            StreamAttn::Linear => HeadState::Linear(ReluAttnState::new(hd)),
+                            StreamAttn::LinearAdd => {
+                                HeadState::Hamming(HammingAttnState::new(self.spec.bits(), hd))
+                            }
+                        })
+                        .collect()
+                })
+                .collect(),
+            pooled: vec![0.0; self.spec.dim],
+            tokens_seen: 0,
+        }
+    }
+
+    /// Stream a chunk of tokens (`tokens`: m × dim, any m ≥ 0) through one
+    /// session. Equivalent to `extend_batch` with a single session.
+    pub fn extend(&self, session: &mut SessionState, tokens: &[f32]) -> StepTrace {
+        self.extend_batch(&mut [session], &[tokens])
+    }
+
+    /// Fused continuous-batching step: pack each session's chunk into ONE
+    /// operand per linear per layer, so kernel dispatch and planner lookups
+    /// amortize across every live session. Bit-exact against extending each
+    /// session alone (see module docs).
+    ///
+    /// `chunks[i]` is session `i`'s next tokens (mᵢ × dim; mᵢ may be 0).
+    pub fn extend_batch(&self, sessions: &mut [&mut SessionState], chunks: &[&[f32]]) -> StepTrace {
+        assert_eq!(sessions.len(), chunks.len(), "one chunk per session");
+        let d = self.spec.dim;
+        let hd = self.spec.head_dim();
+        let ms: Vec<usize> = chunks
+            .iter()
+            .map(|c| {
+                assert_eq!(c.len() % d, 0, "chunk is not a multiple of dim");
+                c.len() / d
+            })
+            .collect();
+        let total: usize = ms.iter().sum();
+        if total == 0 {
+            return StepTrace {
+                sessions: sessions.len(),
+                total_tokens: 0,
+            };
+        }
+        let mut x = Vec::with_capacity(total * d);
+        for c in chunks {
+            x.extend_from_slice(c);
+        }
+
+        for (bi, blk) in self.blocks.iter().enumerate() {
+            // --- attention sublayer: fused projections, per-session state --
+            let u = layer_norm(&x, &blk.ln1_g, &blk.ln1_b, d);
+            let q = blk.wq.forward(&u, total);
+            let k = blk.wk.forward(&u, total);
+            let v = blk.wv.forward(&u, total);
+            let mut o = vec![0.0f32; total * d];
+            let mut row0 = 0usize;
+            for (si, sess) in sessions.iter_mut().enumerate() {
+                for t in 0..ms[si] {
+                    let r = row0 + t;
+                    for (h, head) in sess.blocks[bi].iter_mut().enumerate() {
+                        let qrow = &q[r * d + h * hd..r * d + (h + 1) * hd];
+                        let krow = &k[r * d + h * hd..r * d + (h + 1) * hd];
+                        let vrow = &v[r * d + h * hd..r * d + (h + 1) * hd];
+                        let oh = match head {
+                            HeadState::Linear(st) => {
+                                st.push(krow, vrow);
+                                st.query(qrow)
+                            }
+                            HeadState::Hamming(st) => {
+                                let hasher = blk.hasher.as_ref().expect("LinearAdd needs hasher");
+                                let kc = hasher.hash(krow);
+                                st.push(&kc, vrow);
+                                st.query(&hasher.hash(qrow))
+                            }
+                        };
+                        o[r * d + h * hd..r * d + (h + 1) * hd].copy_from_slice(&oh);
+                    }
+                }
+                row0 += ms[si];
+            }
+            let a = blk.wo.forward(&o, total);
+            for (xv, av) in x.iter_mut().zip(&a) {
+                *xv += av;
+            }
+
+            // --- MLP sublayer: fused two-layer dense ----------------------
+            let u2 = layer_norm(&x, &blk.ln2_g, &blk.ln2_b, d);
+            let mut hbuf = blk.l1.forward(&u2, total);
+            for v in hbuf.iter_mut() {
+                *v = v.max(0.0);
+            }
+            let y = blk.l2.forward(&hbuf, total);
+            for (xv, yv) in x.iter_mut().zip(&y) {
+                *xv += yv;
+            }
+        }
+
+        // --- final LN + running mean-pool accumulation --------------------
+        let u = layer_norm(&x, &self.norm_g, &self.norm_b, d);
+        let mut row0 = 0usize;
+        for (si, sess) in sessions.iter_mut().enumerate() {
+            for t in 0..ms[si] {
+                let row = &u[(row0 + t) * d..(row0 + t + 1) * d];
+                for (p, &v) in sess.pooled.iter_mut().zip(row) {
+                    *p += v;
+                }
+            }
+            sess.tokens_seen += ms[si];
+            row0 += ms[si];
+        }
+        StepTrace {
+            sessions: sessions.len(),
+            total_tokens: total,
+        }
+    }
+
+    /// Close a session: mean-pool the accumulated final-layer outputs and
+    /// classify. Does not consume the state — callers may keep streaming
+    /// and finish again later (anytime inference).
+    pub fn finish(&self, session: &SessionState) -> Vec<f32> {
+        assert!(session.tokens_seen > 0, "finish() on an empty session");
+        let inv = 1.0 / session.tokens_seen as f32;
+        let mean: Vec<f32> = session.pooled.iter().map(|&p| p * inv).collect();
+        self.head.forward(&mean, 1)
+    }
+
+    /// One-shot full-prefix recompute — the reference the streaming path is
+    /// tested bit-exact against: a fresh session extended with the whole
+    /// sequence at once.
+    pub fn forward_full(&self, tokens: &[f32]) -> Vec<f32> {
+        let mut s = self.begin();
+        self.extend(&mut s, tokens);
+        self.finish(&s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen_tokens(seed: u64, n: usize, d: usize) -> Vec<f32> {
+        XorShift64::new(seed).normals(n * d)
+    }
+
+    #[test]
+    fn token_by_token_extend_is_bit_exact_vs_one_shot() {
+        for (attn, lin) in [
+            (StreamAttn::Linear, Lin::Mult),
+            (StreamAttn::LinearAdd, Lin::Mult),
+            (StreamAttn::LinearAdd, Lin::Shift),
+        ] {
+            let model = StreamModel::tiny(attn, lin);
+            let d = model.spec.dim;
+            let n = 10;
+            let toks = gen_tokens(7, n, d);
+            let want = model.forward_full(&toks);
+            let mut s = model.begin();
+            for i in 0..n {
+                model.extend(&mut s, &toks[i * d..(i + 1) * d]);
+            }
+            assert_eq!(s.tokens_seen, n);
+            assert_eq!(model.finish(&s), want, "{attn:?}/{lin:?} diverged");
+        }
+    }
+
+    #[test]
+    fn empty_chunk_is_a_no_op() {
+        let model = StreamModel::tiny(StreamAttn::LinearAdd, Lin::Mult);
+        let d = model.spec.dim;
+        let toks = gen_tokens(9, 4, d);
+        let mut a = model.begin();
+        model.extend(&mut a, &toks);
+        let mut b = model.begin();
+        model.extend(&mut b, &[]);
+        let tr = model.extend(&mut b, &toks);
+        assert_eq!(tr.total_tokens, 4);
+        model.extend(&mut b, &[]);
+        assert_eq!(model.finish(&a), model.finish(&b));
+    }
+
+    #[test]
+    fn fused_two_session_step_matches_solo() {
+        let model = StreamModel::tiny(StreamAttn::LinearAdd, Lin::Shift);
+        let d = model.spec.dim;
+        let ta = gen_tokens(21, 6, d);
+        let tb = gen_tokens(22, 6, d);
+        // solo
+        let mut sa = model.begin();
+        model.extend(&mut sa, &ta);
+        let mut sb = model.begin();
+        model.extend(&mut sb, &tb);
+        // fused: both sessions' chunks in every step
+        let mut fa = model.begin();
+        let mut fb = model.begin();
+        for step in 0..2 {
+            let ca = &ta[step * 3 * d..(step + 1) * 3 * d];
+            let cb = &tb[step * 3 * d..(step + 1) * 3 * d];
+            let tr = model.extend_batch(&mut [&mut fa, &mut fb], &[ca, cb]);
+            assert_eq!(tr.total_tokens, 6);
+            assert_eq!(tr.sessions, 2);
+        }
+        assert_eq!(model.finish(&fa), model.finish(&sa));
+        assert_eq!(model.finish(&fb), model.finish(&sb));
+    }
+
+    #[test]
+    fn finish_is_repeatable_and_anytime() {
+        let model = StreamModel::tiny(StreamAttn::Linear, Lin::Mult);
+        let d = model.spec.dim;
+        let toks = gen_tokens(33, 8, d);
+        let mut s = model.begin();
+        model.extend(&mut s, &toks[..4 * d]);
+        let early = model.finish(&s);
+        assert_eq!(model.finish(&s), early, "finish must not consume state");
+        model.extend(&mut s, &toks[4 * d..]);
+        let late = model.finish(&s);
+        assert_eq!(late, model.forward_full(&toks));
+        assert_ne!(early, late);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty session")]
+    fn finish_on_empty_session_panics() {
+        let model = StreamModel::tiny(StreamAttn::Linear, Lin::Mult);
+        model.finish(&model.begin());
+    }
+
+    #[test]
+    fn state_floats_matches_actual_state() {
+        let spec = SessionSpec::tiny(StreamAttn::LinearAdd, Lin::Mult);
+        let model = StreamModel::tiny(StreamAttn::LinearAdd, Lin::Mult);
+        let s = model.begin();
+        let per_head: usize = match &s.blocks[0][0] {
+            HeadState::Hamming(st) => st.state_floats(),
+            HeadState::Linear(st) => st.state_floats(),
+        };
+        assert_eq!(spec.state_floats(), spec.depth * spec.heads * per_head + spec.dim);
+    }
+}

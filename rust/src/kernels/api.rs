@@ -204,14 +204,21 @@ impl Operand {
 
     /// INT8-quantize (per-tensor symmetric) — the shift backends' layout.
     pub fn quantized(x: &[f32], m: usize, k: usize) -> Operand {
+        Operand::quantized_with_scale(x, m, k, Int8Quant::calibrate(x).scale)
+    }
+
+    /// INT8-quantize with a caller-fixed scale instead of per-tensor
+    /// calibration — row-independent, so outputs do not depend on which
+    /// rows share the operand (the streaming session path's requirement).
+    pub fn quantized_with_scale(x: &[f32], m: usize, k: usize, scale: f32) -> Operand {
         assert_eq!(x.len(), m * k, "operand buffer is not m*k");
-        let q = Int8Quant::calibrate(x);
+        let q = Int8Quant { scale };
         let xq: Vec<i32> = q.quantize(x).iter().map(|&v| v as i32).collect();
         Operand::Int8 {
             m,
             k,
             xq: Arc::new(xq),
-            scale: q.scale,
+            scale,
         }
     }
 

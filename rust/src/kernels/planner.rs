@@ -9,11 +9,15 @@
 //! ROADMAP's per-shape dispatch direction.
 
 use std::collections::HashMap;
+use std::path::Path;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use anyhow::{anyhow, Result};
+
 use crate::kernels::api::{LinearKernel, Primitive, RawWeights};
 use crate::kernels::registry::KernelRegistry;
+use crate::util::json::Json;
 use crate::util::rng::XorShift64;
 
 /// An `(m, k, n)` problem shape.
@@ -109,6 +113,66 @@ impl Planner {
         self.log.lock().unwrap().clone()
     }
 
+    // ---- offline-autotuned lookup tables ---------------------------------
+
+    /// Serialize every decision to a lookup-table JSON (`{"choices":
+    /// [{"primitive", "m", "k", "n", "backend"}, ...]}`) — the offline
+    /// artifact [`Planner::load_table`] pins on startup, removing
+    /// first-request benchmarking entirely.
+    pub fn to_table_json(&self) -> Json {
+        table_json(&self.choices())
+    }
+
+    /// Pin every entry of a lookup-table JSON. Returns the number of pinned
+    /// choices; fails (without panicking) on malformed entries or backends
+    /// missing from this registry.
+    pub fn pin_table_json(&self, table: &Json) -> Result<usize> {
+        let rows = table
+            .req("choices")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("'choices' is not an array"))?;
+        let mut pinned = 0usize;
+        for row in rows {
+            let prim_name = row
+                .req("primitive")?
+                .as_str()
+                .ok_or_else(|| anyhow!("'primitive' is not a string"))?;
+            let primitive = Primitive::parse(prim_name)
+                .ok_or_else(|| anyhow!("unknown primitive '{prim_name}'"))?;
+            let backend = row
+                .req("backend")?
+                .as_str()
+                .ok_or_else(|| anyhow!("'backend' is not a string"))?;
+            let shape = Shape::new(
+                row.req("m")?.as_usize().ok_or_else(|| anyhow!("bad m"))?,
+                row.req("k")?.as_usize().ok_or_else(|| anyhow!("bad k"))?,
+                row.req("n")?.as_usize().ok_or_else(|| anyhow!("bad n"))?,
+            );
+            if self.registry.get(primitive, backend).is_none() {
+                anyhow::bail!(
+                    "planner table names unregistered backend {}/{backend}",
+                    primitive.name()
+                );
+            }
+            self.pin(primitive, shape, backend);
+            pinned += 1;
+        }
+        Ok(pinned)
+    }
+
+    /// Write the current decisions to `path` as a lookup table.
+    pub fn save_table(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_table_json().to_string())?;
+        Ok(())
+    }
+
+    /// Load a lookup table written by [`Planner::save_table`] and pin every
+    /// entry. Returns the number of pinned choices.
+    pub fn load_table(&self, path: &Path) -> Result<usize> {
+        let text = std::fs::read_to_string(path)?;
+        self.pin_table_json(&Json::parse(&text)?)
+    }
+
     fn benchmark(&self, primitive: Primitive, shape: Shape) -> (Arc<dyn LinearKernel>, Choice) {
         let candidates = self.registry.for_primitive(primitive);
         assert!(
@@ -152,6 +216,24 @@ impl Planner {
     }
 }
 
+/// Lookup-table JSON for an arbitrary decision list (lets serving code dump
+/// a backend's choices without holding the [`Planner`] itself).
+pub fn table_json(choices: &[Choice]) -> Json {
+    let rows = choices
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("primitive", Json::str(c.primitive.name())),
+                ("m", Json::num(c.shape.m as f64)),
+                ("k", Json::num(c.shape.k as f64)),
+                ("n", Json::num(c.shape.n as f64)),
+                ("backend", Json::str(c.backend.as_str())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("choices", Json::Arr(rows))])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -188,6 +270,53 @@ mod tests {
     fn pin_unknown_backend_panics() {
         let planner = Planner::new(Arc::new(KernelRegistry::with_defaults()));
         planner.pin(Primitive::MatMul, Shape::new(1, 1, 1), "gpu");
+    }
+
+    #[test]
+    fn table_roundtrip_pins_choices_without_benchmarking() {
+        let a = Planner::new(Arc::new(KernelRegistry::with_defaults()));
+        a.choose(Primitive::MatMul, Shape::new(8, 4, 4));
+        a.choose(Primitive::MatAdd, Shape::new(3, 5, 7));
+        let table = a.to_table_json();
+
+        let b = Planner::new(Arc::new(KernelRegistry::with_defaults()));
+        assert_eq!(b.pin_table_json(&table).unwrap(), 2);
+        let log = b.choices();
+        assert_eq!(log.len(), 2);
+        assert!(
+            log.iter().all(|c| c.measured_ms.is_empty()),
+            "pinned entries must not re-benchmark"
+        );
+        // pinned decisions answer choose() without measuring
+        let k = b.choose(Primitive::MatMul, Shape::new(8, 4, 4));
+        assert_eq!(k.backend(), log[0].backend);
+        assert_eq!(b.choices().len(), 2, "choose() after pin must hit cache");
+    }
+
+    #[test]
+    fn table_file_roundtrip() {
+        let dir = std::env::temp_dir().join("savit_planner_table_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("table.json");
+        let a = Planner::new(Arc::new(KernelRegistry::with_defaults()));
+        a.choose(Primitive::MatShift, Shape::new(16, 8, 8));
+        a.save_table(&path).unwrap();
+        let b = Planner::new(Arc::new(KernelRegistry::with_defaults()));
+        assert_eq!(b.load_table(&path).unwrap(), 1);
+        assert_eq!(
+            b.choose(Primitive::MatShift, Shape::new(16, 8, 8)).id(),
+            a.choose(Primitive::MatShift, Shape::new(16, 8, 8)).id()
+        );
+    }
+
+    #[test]
+    fn table_with_unknown_backend_fails_cleanly() {
+        let p = Planner::new(Arc::new(KernelRegistry::with_defaults()));
+        let table = Json::parse(
+            r#"{"choices": [{"primitive": "matmul", "m": 1, "k": 1, "n": 1, "backend": "gpu"}]}"#,
+        )
+        .unwrap();
+        assert!(p.pin_table_json(&table).is_err());
     }
 
     #[test]

@@ -24,8 +24,14 @@
 //!   those kernels (KSH-binarized LinearAdd attention, shift linears,
 //!   Mult/Shift MoE MLPs), and the coordinator is engine-agnostic: the XLA
 //!   artifact pipeline and the native engine both serve behind one
-//!   `coordinator::backend::InferenceBackend` trait, so the full serving
-//!   loop runs with zero artifacts present.
+//!   `coordinator::backend::InferenceBackend` trait — a request-level
+//!   `submit(Request) -> Ticket` / `step` / `poll` contract (the one-shot
+//!   `run_batch` survives as a thin adapter) — so the full serving loop
+//!   runs with zero artifacts present. `infer::session` adds KV-free
+//!   streaming on the linear-attention state (`begin`/`extend`/`finish`,
+//!   bit-exact under any chunking), and
+//!   `coordinator::sessions::SessionEngine` continuously batches live
+//!   sessions into one fused kernel dispatch per layer per step.
 //! - **L2 (`python/compile/model.py`)** — the ShiftAddViT model family in JAX
 //!   (PVT-style pyramid ViTs, DeiT, a GNT-style ray transformer), lowered once
 //!   to HLO text by `python/compile/aot.py`.

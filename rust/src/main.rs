@@ -4,6 +4,9 @@
 //! shiftaddvit serve   [--backend native|xla] [--requests N] [--max-batch B]
 //!                     [--dispatch real|modularized|dense]
 //!                     [--arrival-ms X] [--config cfg.json]
+//!                     [--workload classify|stream] [--stream-tokens T]
+//!                     [--chunk C] [--max-live L]
+//!                     [--planner-table t.json] [--save-planner-table t.json]
 //! shiftaddvit table   --id 1|3|4|6|11|12   [--model pvtv2_b0]
 //! shiftaddvit fig     --id 3|4|5           [--batch 1]
 //! shiftaddvit energy-report [--model pvtv2_b0]
@@ -13,8 +16,8 @@
 
 use anyhow::{bail, Result};
 
-use shiftaddvit::coordinator::config::{BackendKind, DispatchMode, ServerConfig};
-use shiftaddvit::coordinator::server::serve_auto;
+use shiftaddvit::coordinator::config::{BackendKind, DispatchMode, ServerConfig, Workload};
+use shiftaddvit::coordinator::server::serve_workload;
 use shiftaddvit::energy::eyeriss::{energy, Hierarchy};
 use shiftaddvit::harness::{breakdown, figures, lra, nvs, overall, scaling};
 use shiftaddvit::model::config::classifier;
@@ -56,16 +59,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.requests = args.usize_or("requests", cfg.requests)?;
     cfg.max_batch = args.usize_or("max-batch", cfg.max_batch)?;
     cfg.arrival_ms = args.f64_or("arrival-ms", cfg.arrival_ms)?;
+    cfg.stream_tokens = args.usize_or("stream-tokens", cfg.stream_tokens)?;
+    cfg.stream_chunk = args.usize_or("chunk", cfg.stream_chunk)?;
+    cfg.max_live = args.usize_or("max-live", cfg.max_live)?;
     if let Some(d) = args.get("dispatch") {
         cfg.dispatch = DispatchMode::parse(d)?;
     }
     if let Some(b) = args.get("backend") {
         cfg.backend = BackendKind::parse(b)?;
     }
-    println!("serving on the {} backend", cfg.backend.name());
-    let report = serve_auto(&cfg)?;
-    report.print();
-    Ok(())
+    if let Some(w) = args.get("workload") {
+        cfg.workload = Workload::parse(w)?;
+    }
+    if let Some(p) = args.get("planner-table") {
+        cfg.planner_table = Some(p.to_string());
+    }
+    if let Some(p) = args.get("save-planner-table") {
+        cfg.planner_table_save = Some(p.to_string());
+    }
+    println!("serving the {} workload on the {} backend", cfg.workload.name(), cfg.backend.name());
+    serve_workload(&cfg)
 }
 
 fn cmd_table(args: &Args) -> Result<()> {

@@ -385,6 +385,10 @@ fn serve_completes_end_to_end_on_native_backend() {
     // dispatch masks surfaced for the Fig. 6/9 visualisation
     assert!(!report.sample_masks.is_empty());
     assert_eq!(report.sample_masks[0].len(), 64);
+    // the request path records per-step occupancy into the report
+    let occ = report.occupancy.as_ref().expect("steps ran");
+    assert!(occ.mean > 0.0 && occ.mean <= 1.0);
+    assert!(report.step_tokens.is_some());
 }
 
 #[test]

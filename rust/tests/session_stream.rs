@@ -1,0 +1,218 @@
+//! Streaming-equivalence suite for the session API:
+//!
+//! 1. PROPERTY: `extend()`-ing a session token-by-token and in random chunk
+//!    splits is *bit-exact* vs one-shot full-prefix inference, for every
+//!    streamable (attention, linear) combination;
+//! 2. multi-session interleaving through the continuous batcher
+//!    (`SessionEngine`) is bit-exact vs solo streaming;
+//! 3. the request-level backend contract (`submit/step/poll`) and its
+//!    `run_batch` adapter agree, and the end-to-end serve loops (classify
+//!    and stream) populate the new occupancy gauges;
+//! 4. offline planner tables round-trip through `ServerConfig` and skip
+//!    startup benchmarking.
+
+use std::sync::Arc;
+
+use shiftaddvit::coordinator::backend::{create_backend, NativeBackend};
+use shiftaddvit::coordinator::config::{ServerConfig, Workload};
+use shiftaddvit::coordinator::metrics::Metrics;
+use shiftaddvit::coordinator::server::{serve_backend, serve_stream, stream_workload_lens};
+use shiftaddvit::coordinator::sessions::SessionEngine;
+use shiftaddvit::infer::session::{SessionSpec, StreamAttn, StreamModel};
+use shiftaddvit::kernels::planner::Planner;
+use shiftaddvit::kernels::registry::KernelRegistry;
+use shiftaddvit::model::ops::{Lin, Variant};
+use shiftaddvit::util::prop::check;
+use shiftaddvit::util::rng::XorShift64;
+
+// ---------------------------------------------------------------------------
+// 1. Streaming equivalence property (bit-exact)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn property_chunked_streaming_is_bit_exact_vs_full_prefix() {
+    for (attn, lin) in [
+        (StreamAttn::Linear, Lin::Mult),
+        (StreamAttn::LinearAdd, Lin::Mult),
+        (StreamAttn::LinearAdd, Lin::Shift),
+    ] {
+        // one model per combination, reused across property cases (planner
+        // benchmarking is the expensive part)
+        let model = StreamModel::tiny(attn, lin);
+        let d = model.spec.dim;
+        check(
+            &format!("stream-equivalence-{attn:?}-{lin:?}"),
+            10,
+            8,
+            |rng, size| {
+                let n = size + 2;
+                let toks = rng.normals(n * d);
+                let want = model.forward_full(&toks);
+
+                // token-by-token
+                let mut s1 = model.begin();
+                for i in 0..n {
+                    model.extend(&mut s1, &toks[i * d..(i + 1) * d]);
+                }
+                if model.finish(&s1) != want {
+                    return Err(format!("token-by-token diverged (n={n})"));
+                }
+
+                // random chunk split
+                let mut s2 = model.begin();
+                let mut fed = 0usize;
+                while fed < n {
+                    let take = 1 + rng.range(0, (n - fed).min(4));
+                    model.extend(&mut s2, &toks[fed * d..(fed + take) * d]);
+                    fed += take;
+                }
+                if model.finish(&s2) != want {
+                    return Err(format!("random chunk split diverged (n={n})"));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn streamed_state_size_is_constant_in_sequence_length() {
+    let spec = SessionSpec::tiny(StreamAttn::LinearAdd, Lin::Shift);
+    let model = StreamModel::tiny(StreamAttn::LinearAdd, Lin::Shift);
+    let d = model.spec.dim;
+    let mut s = model.begin();
+    let floats = spec.state_floats();
+    for i in 0..5 {
+        model.extend(&mut s, &XorShift64::new(i).normals(16 * d));
+        assert_eq!(spec.state_floats(), floats, "state must not grow with tokens");
+    }
+    assert_eq!(s.tokens_seen, 80);
+}
+
+// ---------------------------------------------------------------------------
+// 2. Multi-session interleaving through the continuous batcher
+// ---------------------------------------------------------------------------
+
+#[test]
+fn interleaved_sessions_through_batcher_match_solo_bit_exactly() {
+    let model = StreamModel::tiny(StreamAttn::LinearAdd, Lin::Shift);
+    let d = model.spec.dim;
+    // Mixed lengths force sessions to join/leave the fused batch mid-flight.
+    let lens = [9usize, 4, 13, 6, 2];
+    let seqs: Vec<Vec<f32>> = lens
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| XorShift64::new(0xAB + i as u64).normals(n * d))
+        .collect();
+    let solo: Vec<Vec<f32>> = seqs.iter().map(|s| model.forward_full(s)).collect();
+
+    let mut engine = SessionEngine::new(model, 3, 3);
+    let tickets: Vec<_> = seqs.iter().map(|s| engine.submit(s.clone())).collect();
+    let mut metrics = Metrics::default();
+    let steps = engine.run_to_completion(&mut metrics);
+    assert!(steps > 2, "workload must take several fused steps");
+    for (i, t) in tickets.iter().enumerate() {
+        let out = engine.poll(t).expect("all sessions completed");
+        assert_eq!(out.tokens, lens[i]);
+        assert_eq!(
+            out.logits, solo[i],
+            "session {i}: interleaved fused stepping diverged from solo"
+        );
+    }
+    // occupancy + per-step token gauges populated by the engine
+    assert_eq!(metrics.batch_occupancy.len(), steps);
+    assert_eq!(metrics.step_tokens.len(), steps);
+    assert!(metrics.live_sessions.iter().all(|&l| l <= 3.0));
+}
+
+// ---------------------------------------------------------------------------
+// 3. Request-level backend contract + serve loops
+// ---------------------------------------------------------------------------
+
+#[test]
+fn classify_serve_populates_occupancy_gauges() {
+    let cfg = ServerConfig {
+        requests: 10,
+        max_batch: 4,
+        batch_deadline_ms: 1.0,
+        arrival_ms: 0.0,
+        ..ServerConfig::default()
+    };
+    let backend = create_backend(&cfg).expect("native backend needs no artifacts");
+    let report = serve_backend(backend.as_ref(), &cfg).unwrap();
+    assert_eq!(report.metrics.requests, 10);
+    let occ = report.occupancy.as_ref().expect("steps ran");
+    assert!(occ.mean > 0.0 && occ.mean <= 1.0);
+    let tok = report.step_tokens.as_ref().expect("steps ran");
+    assert!(tok.mean > 0.0);
+    assert!(report.latency.p99 >= report.latency.p50);
+}
+
+#[test]
+fn stream_serve_end_to_end() {
+    let cfg = ServerConfig {
+        requests: 5,
+        stream_tokens: 12,
+        stream_chunk: 4,
+        max_live: 2,
+        workload: Workload::Stream,
+        ..ServerConfig::default()
+    };
+    let report = serve_stream(&cfg).unwrap();
+    assert_eq!(report.sessions, 5);
+    let expected: usize = stream_workload_lens(5, 12).iter().sum();
+    assert_eq!(report.total_tokens, expected);
+    assert!(report.tokens_per_sec > 0.0);
+    assert!(report.steps > 0);
+    let occ = report.occupancy.as_ref().expect("engine stepped");
+    assert!(occ.mean > 0.0 && occ.mean <= 1.0);
+    assert_eq!(report.metrics.requests, 5);
+}
+
+// ---------------------------------------------------------------------------
+// 4. Offline planner tables via ServerConfig
+// ---------------------------------------------------------------------------
+
+#[test]
+fn planner_table_roundtrip_skips_startup_benchmarking() {
+    let dir = std::env::temp_dir().join("savit_session_stream_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("planner_table.json");
+
+    // 1. autotune online (model construction benchmarks every shape), dump
+    let tuned = NativeBackend::tiny(Variant::SHIFTADD_MOE);
+    let choices = tuned.model.planner.choices();
+    assert!(!choices.is_empty());
+    assert!(choices.iter().any(|c| !c.measured_ms.is_empty()));
+    tuned.model.planner.save_table(&path).unwrap();
+
+    // 2. cold-start through ServerConfig with the table pinned
+    let cfg = ServerConfig {
+        planner_table: Some(path.to_string_lossy().into_owned()),
+        ..ServerConfig::default()
+    };
+    let cold = create_backend(&cfg).unwrap();
+    let pinned = cold.planner_choices();
+    assert_eq!(pinned.len(), choices.len());
+    assert!(
+        pinned.iter().all(|c| c.measured_ms.is_empty()),
+        "pinned startup must not re-benchmark any shape"
+    );
+
+    // 3. same decisions -> same logits as the tuned backend
+    let (xs, _) = shiftaddvit::data::synth_images::gen_batch(12, 2);
+    let mut m = Metrics::default();
+    use shiftaddvit::coordinator::backend::InferenceBackend;
+    let a = tuned.run_batch(&xs, 2, &mut m).unwrap();
+    let b = cold.run_batch(&xs, 2, &mut m).unwrap();
+    assert_eq!(
+        a.logits.as_f32().unwrap(),
+        b.logits.as_f32().unwrap(),
+        "pinned backend must be numerically identical"
+    );
+
+    // 4. a broken table fails loudly, not silently
+    std::fs::write(dir.join("bad.json"), "{\"choices\": [{}]}").unwrap();
+    let planner = Planner::new(Arc::new(KernelRegistry::with_defaults()));
+    assert!(planner.load_table(&dir.join("bad.json")).is_err());
+}
