@@ -1,14 +1,21 @@
 //! Native-engine latency: the pure-Rust `infer` forward pass per variant
-//! and batch size, plus an end-to-end native serving throughput run — the
-//! measured (not analytic) counterpart of the reparameterization ladder,
-//! runnable with zero artifacts.
+//! and batch size, the **batched image path** sweep (sequential
+//! per-image/per-head attention vs the fused per-layer dispatches, in
+//! images/sec with dispatch counts per layer), and an end-to-end native
+//! serving throughput run — the measured (not analytic) counterpart of the
+//! reparameterization ladder, runnable with zero artifacts. Emits a JSON
+//! object for tooling alongside the tables.
 
 use shiftaddvit::coordinator::backend::NativeBackend;
 use shiftaddvit::coordinator::config::ServerConfig;
 use shiftaddvit::coordinator::server::serve_backend;
-use shiftaddvit::infer::model::tiny_latencies_ms;
+use shiftaddvit::data::synth_images;
+use shiftaddvit::infer::block::AttnExec;
+use shiftaddvit::infer::model::{tiny_latencies_ms, NativeModel};
 use shiftaddvit::model::ops::Variant;
-use shiftaddvit::util::bench::{f2, Table};
+use shiftaddvit::util::bench::{f1, f2, time_ms, Table};
+use shiftaddvit::util::json::Json;
+use shiftaddvit::util::stats::Summary;
 
 fn main() {
     let mut t = Table::new(&["Variant", "bs1 (ms)", "bs8 (ms)", "bs32 (ms)"]);
@@ -28,6 +35,77 @@ fn main() {
         ]);
     }
     t.print("Native engine — tiny-analogue forward latency per variant");
+
+    // --- batched image path: sequential vs fused attention dispatch -------
+    // The deployed mixture (LinearAdd attention): the per-image path pays
+    // b·heads·4 MatAdd dispatches per layer, the fused path a constant 2.
+    let model = NativeModel::tiny(Variant::SHIFTADD_MOE);
+    let mut sweep = Table::new(&[
+        "batch",
+        "sequential (img/s)",
+        "fused (img/s)",
+        "speedup",
+        "disp/layer seq",
+        "disp/layer fused",
+    ]);
+    let mut rows = Vec::new();
+    for &bs in &[1usize, 2, 4, 8, 16, 32] {
+        let (xs, _) = synth_images::gen_batch(9_000 + bs as u32, bs);
+        // Dispatch counts are deterministic per (mode, batch), so capture
+        // the trace from inside the timed runs instead of paying extra
+        // untimed forwards.
+        let seq_cell = std::cell::RefCell::new(None);
+        let seq_ms = Summary::from(&time_ms(
+            || {
+                let (_, tr) = model.forward_with(&xs, bs, AttnExec::PerImage);
+                *seq_cell.borrow_mut() = Some(tr);
+            },
+            2,
+            5,
+        ))
+        .p50;
+        let fused_cell = std::cell::RefCell::new(None);
+        let fused_ms = Summary::from(&time_ms(
+            || {
+                let (_, tr) = model.forward_with(&xs, bs, AttnExec::Fused);
+                *fused_cell.borrow_mut() = Some(tr);
+            },
+            2,
+            5,
+        ))
+        .p50;
+        let tr_seq = seq_cell.into_inner().expect("timed runs happened");
+        let tr_fused = fused_cell.into_inner().expect("timed runs happened");
+        let dpl_seq = tr_seq.attn_dispatches as f64 / tr_seq.blocks as f64;
+        let dpl_fused = tr_fused.attn_dispatches as f64 / tr_fused.blocks as f64;
+        let seq_img_s = bs as f64 / (seq_ms / 1e3);
+        let fused_img_s = bs as f64 / (fused_ms / 1e3);
+        sweep.row(&[
+            bs.to_string(),
+            f1(seq_img_s),
+            f1(fused_img_s),
+            f2(fused_img_s / seq_img_s),
+            f1(dpl_seq),
+            f1(dpl_fused),
+        ]);
+        rows.push(Json::obj(vec![
+            ("batch", Json::num(bs as f64)),
+            ("sequential_ms", Json::num(seq_ms)),
+            ("fused_ms", Json::num(fused_ms)),
+            ("sequential_img_s", Json::num(seq_img_s)),
+            ("fused_img_s", Json::num(fused_img_s)),
+            ("speedup", Json::num(fused_img_s / seq_img_s)),
+            ("dispatches_per_layer_sequential", Json::num(dpl_seq)),
+            ("dispatches_per_layer_fused", Json::num(dpl_fused)),
+        ]));
+    }
+    sweep.print("Batched image path — per-image vs fused per-layer dispatch");
+    let json = Json::obj(vec![
+        ("bench", Json::str("native_engine")),
+        ("variant", Json::str("shiftadd_moe")),
+        ("results", Json::Arr(rows)),
+    ]);
+    println!("\n{json}");
 
     let cfg = ServerConfig {
         requests: 48,

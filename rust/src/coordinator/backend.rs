@@ -353,6 +353,15 @@ impl InferenceBackend for NativeBackend {
         metrics.batches += 1;
         metrics.requests += n;
         metrics.record_step_occupancy(n, max_batch.max(1), n * self.tokens());
+        if trace.blocks > 0 {
+            // Fused-path amortization gauge: attention kernel calls per
+            // block layer for this step's batch (2 grouped calls however
+            // many requests were fused; the per-image path would pay
+            // b·heads·4 plain calls).
+            metrics
+                .attn_dispatches_per_layer
+                .push(trace.attn_dispatches as f64 / trace.blocks as f64);
+        }
 
         let out = BatchOutput {
             logits: Tensor::f32(vec![n, self.num_classes()], logits),

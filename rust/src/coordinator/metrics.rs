@@ -25,6 +25,12 @@ pub struct Metrics {
     pub batch_occupancy: Vec<f64>,
     /// per-step token rows packed into the fused dispatches
     pub step_tokens: Vec<f64>,
+    /// per-step attention kernel calls per block layer (native image
+    /// path): the fused path holds this at 2 grouped calls per LinearAdd
+    /// layer no matter the batch size — each grouped call packs all
+    /// images×heads into one operand, with per-group fan-out left to the
+    /// backend — where per-image execution pays b·heads·4 plain calls
+    pub attn_dispatches_per_layer: Vec<f64>,
     /// per-step live session count (streaming path only)
     pub live_sessions: Vec<f64>,
 }
@@ -131,6 +137,17 @@ impl Metrics {
                 ]),
             ));
         }
+        if !self.attn_dispatches_per_layer.is_empty() {
+            let s = Summary::from(&self.attn_dispatches_per_layer);
+            pairs.push((
+                "attn_dispatches_per_layer",
+                Json::obj(vec![
+                    ("mean", Json::num(s.mean)),
+                    ("max", Json::num(s.max)),
+                    ("n", Json::num(s.n as f64)),
+                ]),
+            ));
+        }
         if !self.live_sessions.is_empty() {
             let s = Summary::from(&self.live_sessions);
             pairs.push((
@@ -181,6 +198,13 @@ impl Metrics {
             println!(
                 "  tokens per step: mean {:.1}  p50 {:.1}  (n={})",
                 s.mean, s.p50, s.n
+            );
+        }
+        if !self.attn_dispatches_per_layer.is_empty() {
+            let s = Summary::from(&self.attn_dispatches_per_layer);
+            println!(
+                "  attn dispatches per layer: mean {:.1}  max {:.0}",
+                s.mean, s.max
             );
         }
         if !self.live_sessions.is_empty() {

@@ -20,7 +20,7 @@
 
 use std::sync::Arc;
 
-use crate::kernels::api::{LinearKernel, RawWeights};
+use crate::kernels::api::{LinearKernel, PreparedWeights, RawWeights};
 
 /// Numerical floor shared with `python/compile/kernels/ref.py::linattn_ref`.
 pub const EPS: f32 = 1e-6;
@@ -255,6 +255,232 @@ pub fn hamming_linear_attn_ref(
         let denom = bias + den + EPS;
         for e in 0..d {
             out[i * d + e] = (bf * sv[e] + num[e]) / denom;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Batched (fused per-layer) image-path attention
+// ---------------------------------------------------------------------------
+//
+// The image path runs `G = images × heads` independent attention problems
+// per layer. The entry points below take all G groups packed head-major —
+// group `g = img·heads + h` owns rows `g·n..(g+1)·n` — and execute them in
+// one call: the LinearAdd family through TWO grouped MatAdd dispatches
+// ([`LinearKernel::run_grouped`]) instead of 4·G per-head ones, the scalar
+// families (softmax / ReLU-linear) through one fork/join over the shared
+// kernel pool. Per-group arithmetic and accumulation order are identical to
+// the per-head functions, so every batched entry point is **bit-exact**
+// against its per-group counterpart (asserted by
+// `rust/tests/prop_batched_attn.rs`).
+
+/// Gather `(b·n × heads·hd)` head-interleaved rows into head-major groups:
+/// output group `g = img·heads + h` holds the image's tokens restricted to
+/// head `h`, as `n` contiguous rows of `hd`.
+pub fn pack_heads(x: &[f32], b: usize, n: usize, heads: usize, hd: usize) -> Vec<f32> {
+    let d = heads * hd;
+    assert_eq!(x.len(), b * n * d, "pack_heads: buffer is not b·n·d");
+    let mut out = vec![0.0f32; b * n * d];
+    for img in 0..b {
+        for h in 0..heads {
+            let gbase = (img * heads + h) * n * hd;
+            for i in 0..n {
+                let src = (img * n + i) * d + h * hd;
+                out[gbase + i * hd..gbase + (i + 1) * hd].copy_from_slice(&x[src..src + hd]);
+            }
+        }
+    }
+    out
+}
+
+/// Scatter head-major groups back to `(b·n × heads·hd)` interleaved rows —
+/// the exact inverse of [`pack_heads`].
+pub fn unpack_heads(xh: &[f32], b: usize, n: usize, heads: usize, hd: usize) -> Vec<f32> {
+    let d = heads * hd;
+    assert_eq!(xh.len(), b * n * d, "unpack_heads: buffer is not b·n·d");
+    let mut out = vec![0.0f32; b * n * d];
+    for img in 0..b {
+        for h in 0..heads {
+            let gbase = (img * heads + h) * n * hd;
+            for i in 0..n {
+                let dst = (img * n + i) * d + h * hd;
+                out[dst..dst + hd].copy_from_slice(&xh[gbase + i * hd..gbase + (i + 1) * hd]);
+            }
+        }
+    }
+    out
+}
+
+/// Run a per-head attention family over packed groups in one call, fanning
+/// groups across the shared kernel pool (group outputs are disjoint and
+/// each group's math is the untouched per-head function, so the packed
+/// result is bit-exact vs calling `f` per group). Buffers are taken by
+/// value so the fan-out can `Arc`-share them without copying — callers own
+/// freshly packed head-major buffers anyway. The group count is implied by
+/// the buffer length: `G = q.len() / (n·d)`.
+fn attn_groups(
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    n: usize,
+    d: usize,
+    f: fn(&[f32], &[f32], &[f32], usize, usize) -> Vec<f32>,
+) -> Vec<f32> {
+    assert_eq!(q.len() % (n * d), 0, "attn_groups: buffer is not G·n·d");
+    let g = q.len() / (n * d);
+    assert_eq!(k.len(), g * n * d);
+    assert_eq!(v.len(), g * n * d);
+    let pool = crate::kernels::parallel::shared_pool();
+    let gs = n * d;
+    if g < 2 || pool.len() == 1 {
+        let mut out = Vec::with_capacity(g * gs);
+        for gi in 0..g {
+            out.extend(f(
+                &q[gi * gs..(gi + 1) * gs],
+                &k[gi * gs..(gi + 1) * gs],
+                &v[gi * gs..(gi + 1) * gs],
+                n,
+                d,
+            ));
+        }
+        return out;
+    }
+    let qa = Arc::new(q);
+    let ka = Arc::new(k);
+    let va = Arc::new(v);
+    let jobs: Vec<_> = (0..g)
+        .map(|gi| {
+            let (qa, ka, va) = (qa.clone(), ka.clone(), va.clone());
+            move || {
+                f(
+                    &qa[gi * gs..(gi + 1) * gs],
+                    &ka[gi * gs..(gi + 1) * gs],
+                    &va[gi * gs..(gi + 1) * gs],
+                    n,
+                    d,
+                )
+            }
+        })
+        .collect();
+    pool.scatter(jobs).concat()
+}
+
+/// Batched [`softmax_attn`] over `q.len() / (n·d)` packed groups (one call
+/// per layer; buffers by value so the pool fan-out is copy-free).
+pub fn softmax_attn_batched(q: Vec<f32>, k: Vec<f32>, v: Vec<f32>, n: usize, d: usize) -> Vec<f32> {
+    attn_groups(q, k, v, n, d, softmax_attn)
+}
+
+/// Batched [`relu_linear_attn`] over `q.len() / (n·d)` packed groups (one
+/// call per layer; buffers by value so the pool fan-out is copy-free).
+pub fn relu_linear_attn_batched(
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    n: usize,
+    d: usize,
+) -> Vec<f32> {
+    attn_groups(q, k, v, n, d, relu_linear_attn)
+}
+
+/// Fused batched LinearAdd attention over `G = v.len() / (n·d)` packed
+/// (image × head) groups — same signature as the per-head
+/// [`hamming_linear_attn_kernel`], inputs interpreted group-major: the
+/// per-group math restructured into exactly **two** grouped MatAdd
+/// dispatches per call —
+///
+/// ```text
+///   stage 1:  [vᵀ; 1ᵀ]  @ kc   →  per-group kvᵀ (d×bits) over z (1×bits)
+///   stage 2:  [kvᵀ; z]  @ qcᵀ  →  per-group numᵀ (d×n)  over den (1×n)
+/// ```
+///
+/// — instead of 4·G per-head kernel calls. Stacking the ones/z row under
+/// each group's operand is safe because every MatAdd backend computes
+/// output rows independently; per-element accumulation order is unchanged,
+/// so the result is bit-exact against per-group
+/// [`hamming_linear_attn_kernel`] (and hence [`hamming_linear_attn_ref`]).
+pub fn hamming_linear_attn_batched(
+    kernel: &Arc<dyn LinearKernel>,
+    qc: &[i8],
+    kc: &[i8],
+    v: &[f32],
+    n: usize,
+    bits: usize,
+    d: usize,
+) -> Vec<f32> {
+    assert_eq!(v.len() % (n * d), 0, "batched attn: values are not G·n·d");
+    let g = v.len() / (n * d);
+    assert_eq!(qc.len(), g * n * bits);
+    assert_eq!(kc.len(), g * n * bits);
+    if g == 0 {
+        // Degenerate empty batch: match the per-image path, which returns
+        // cleanly instead of tripping run_grouped's no-groups assert.
+        return Vec::new();
+    }
+    let rows = d + 1; // d value rows + the ones/z row per group
+
+    // Stage-1 operand: per group, rows 0..d = vᵀ (d × n), row d = 1ᵀ.
+    let mut x1 = vec![0.0f32; g * rows * n];
+    for gi in 0..g {
+        let vb = gi * n * d;
+        let xb = gi * rows * n;
+        for j in 0..n {
+            for e in 0..d {
+                x1[xb + e * n + j] = v[vb + j * d + e];
+            }
+            x1[xb + d * n + j] = 1.0;
+        }
+    }
+    let kc_w: Vec<PreparedWeights> = (0..g)
+        .map(|gi| {
+            kernel.prepare(&RawWeights::new(
+                kc[gi * n * bits..(gi + 1) * n * bits]
+                    .iter()
+                    .map(|&c| c as f32)
+                    .collect(),
+                n,
+                bits,
+            ))
+        })
+        .collect();
+    let mut kvz = vec![0.0f32; g * rows * bits];
+    kernel.run_grouped(&kc_w, &x1, rows, &mut kvz);
+
+    // Stage-2 weights: qcᵀ (bits × n) per group.
+    let qc_w: Vec<PreparedWeights> = (0..g)
+        .map(|gi| {
+            let mut qct = vec![0.0f32; bits * n];
+            for i in 0..n {
+                for bb in 0..bits {
+                    qct[bb * n + i] = qc[(gi * n + i) * bits + bb] as f32;
+                }
+            }
+            kernel.prepare(&RawWeights::new(qct, bits, n))
+        })
+        .collect();
+    let mut numden = vec![0.0f32; g * rows * n];
+    kernel.run_grouped(&qc_w, &kvz, rows, &mut numden);
+
+    // Epilogue: per-group Σⱼvⱼ and the shared normalizer, same ascending-j
+    // order as the per-head path.
+    let bias = (n * bits) as f32;
+    let bf = bits as f32;
+    let mut out = vec![0.0f32; g * n * d];
+    for gi in 0..g {
+        let vb = gi * n * d;
+        let mut sv = vec![0.0f32; d];
+        for j in 0..n {
+            for (s, &vv) in sv.iter_mut().zip(&v[vb + j * d..vb + (j + 1) * d]) {
+                *s += vv;
+            }
+        }
+        let nb = gi * rows * n;
+        for i in 0..n {
+            let denom = bias + numden[nb + d * n + i] + EPS;
+            for e in 0..d {
+                out[vb + i * d + e] = (bf * sv[e] + numden[nb + e * n + i]) / denom;
+            }
         }
     }
     out
@@ -524,6 +750,96 @@ mod tests {
         for kernel in registry.for_primitive(crate::kernels::api::Primitive::MatAdd) {
             let got = hamming_linear_attn_kernel(&kernel, &qc, &kc, &v, n, bits, d);
             assert_eq!(got, want, "{} diverged from the oracle", kernel.id());
+        }
+    }
+
+    #[test]
+    fn hamming_kernel_matches_ref_on_non_power_of_two_shapes() {
+        // bits and hd independent and non-pow2 — previously only exercised
+        // indirectly through block shapes where bits == hd was a power of 2.
+        let registry = KernelRegistry::with_defaults();
+        let mut rng = XorShift64::new(333);
+        for (n, d, bits) in [(9, 3, 5), (11, 6, 7), (5, 5, 13), (7, 2, 3)] {
+            let h = KshHasher::new(d, bits, 17);
+            let q = rng.normals(n * d);
+            let k = rng.normals(n * d);
+            let v = rng.normals(n * d);
+            let qc = h.hash_matrix(&q, n);
+            let kc = h.hash_matrix(&k, n);
+            let want = hamming_linear_attn_ref(&qc, &kc, &v, n, bits, d);
+            for kernel in registry.for_primitive(crate::kernels::api::Primitive::MatAdd) {
+                let got = hamming_linear_attn_kernel(&kernel, &qc, &kc, &v, n, bits, d);
+                assert_eq!(got, want, "{} (n={n} d={d} bits={bits})", kernel.id());
+            }
+        }
+    }
+
+    #[test]
+    fn pack_unpack_heads_roundtrip() {
+        let (b, n, heads, hd) = (3, 5, 2, 4);
+        let mut rng = XorShift64::new(55);
+        let x = rng.normals(b * n * heads * hd);
+        let packed = pack_heads(&x, b, n, heads, hd);
+        assert_eq!(unpack_heads(&packed, b, n, heads, hd), x);
+        // group g = img·heads + h holds that head's rows contiguously
+        let d = heads * hd;
+        assert_eq!(packed[0..hd], x[0..hd]); // img 0, head 0, token 0
+        let g1 = n * hd; // img 0, head 1 group base
+        assert_eq!(packed[g1..g1 + hd], x[hd..d]);
+    }
+
+    #[test]
+    fn batched_hamming_matches_per_head_bit_exactly() {
+        let registry = KernelRegistry::with_defaults();
+        let mut rng = XorShift64::new(808);
+        let (g, n, d, bits) = (5, 9, 6, 11);
+        let h = KshHasher::new(d, bits, 3);
+        let q = rng.normals(g * n * d);
+        let k = rng.normals(g * n * d);
+        let v = rng.normals(g * n * d);
+        let qc = h.hash_matrix(&q, g * n);
+        let kc = h.hash_matrix(&k, g * n);
+        for kernel in registry.for_primitive(crate::kernels::api::Primitive::MatAdd) {
+            let got = hamming_linear_attn_batched(&kernel, &qc, &kc, &v, n, bits, d);
+            for gi in 0..g {
+                let want = hamming_linear_attn_kernel(
+                    &kernel,
+                    &qc[gi * n * bits..(gi + 1) * n * bits],
+                    &kc[gi * n * bits..(gi + 1) * n * bits],
+                    &v[gi * n * d..(gi + 1) * n * d],
+                    n,
+                    bits,
+                    d,
+                );
+                assert_eq!(
+                    &got[gi * n * d..(gi + 1) * n * d],
+                    want.as_slice(),
+                    "{} group {gi}",
+                    kernel.id()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batched_scalar_families_match_per_head_bit_exactly() {
+        let mut rng = XorShift64::new(606);
+        let (g, n, d) = (6, 7, 5);
+        let q = rng.normals(g * n * d);
+        let k = rng.normals(g * n * d);
+        let v = rng.normals(g * n * d);
+        let sm = softmax_attn_batched(q.clone(), k.clone(), v.clone(), n, d);
+        let rl = relu_linear_attn_batched(q.clone(), k.clone(), v.clone(), n, d);
+        for gi in 0..g {
+            let s = gi * n * d..(gi + 1) * n * d;
+            assert_eq!(
+                &sm[s.clone()],
+                softmax_attn(&q[s.clone()], &k[s.clone()], &v[s.clone()], n, d).as_slice()
+            );
+            assert_eq!(
+                &rl[s.clone()],
+                relu_linear_attn(&q[s.clone()], &k[s.clone()], &v[s.clone()], n, d).as_slice()
+            );
         }
     }
 

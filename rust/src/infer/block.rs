@@ -18,7 +18,10 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::infer::attn::{hamming_linear_attn_kernel, relu_linear_attn, softmax_attn};
+use crate::infer::attn::{
+    hamming_linear_attn_batched, hamming_linear_attn_kernel, pack_heads, relu_linear_attn,
+    relu_linear_attn_batched, softmax_attn, softmax_attn_batched, unpack_heads,
+};
 use crate::kernels::api::{LinearKernel, Operand, PreparedWeights, Primitive, RawWeights};
 use crate::kernels::planner::{Planner, Shape};
 use crate::model::ops::{Attn, Lin, Mlp, Variant};
@@ -52,31 +55,63 @@ pub fn layer_norm(x: &[f32], g: &[f32], b: &[f32], d: usize) -> Vec<f32> {
     out
 }
 
-/// Depthwise 3×3 convolution over one image's token grid, SAME padding
-/// (mirrors `model.py::dwconv_tokens`). `x`: (grid² × d); `dw`: (3·3·d).
-pub fn dwconv3x3(x: &[f32], dw: &[f32], grid: usize, d: usize) -> Vec<f32> {
-    assert_eq!(x.len(), grid * grid * d);
+/// Depthwise 3×3 convolution over an `h × w` token grid, SAME (zero)
+/// padding at every edge. `x`: (h·w × d) row-major tokens; `dw`: (3·3·d).
+pub fn dwconv3x3_hw(x: &[f32], dw: &[f32], h: usize, w: usize, d: usize) -> Vec<f32> {
+    assert_eq!(x.len(), h * w * d);
     assert_eq!(dw.len(), 9 * d);
-    let mut out = vec![0.0f32; grid * grid * d];
-    for y in 0..grid {
-        for xx in 0..grid {
+    let mut out = vec![0.0f32; h * w * d];
+    for y in 0..h {
+        for xx in 0..w {
             for c in 0..d {
                 let mut acc = 0.0f32;
                 for dy in 0..3usize {
                     for dx in 0..3usize {
                         let sy = y + dy;
                         let sx = xx + dx;
-                        if sy >= 1 && sy <= grid && sx >= 1 && sx <= grid {
-                            acc += x[((sy - 1) * grid + (sx - 1)) * d + c]
-                                * dw[(dy * 3 + dx) * d + c];
+                        if sy >= 1 && sy <= h && sx >= 1 && sx <= w {
+                            acc += x[((sy - 1) * w + (sx - 1)) * d + c] * dw[(dy * 3 + dx) * d + c];
                         }
                     }
                 }
-                out[(y * grid + xx) * d + c] = acc;
+                out[(y * w + xx) * d + c] = acc;
             }
         }
     }
     out
+}
+
+/// Depthwise 3×3 convolution over one image's square token grid, SAME
+/// padding (mirrors `model.py::dwconv_tokens`). `x`: (grid² × d).
+pub fn dwconv3x3(x: &[f32], dw: &[f32], grid: usize, d: usize) -> Vec<f32> {
+    dwconv3x3_hw(x, dw, grid, grid, d)
+}
+
+/// DWConv over every image of a batch in one call, images fanned across
+/// the shared kernel pool. Per-image outputs are disjoint and each image
+/// runs the untouched [`dwconv3x3`], so the batched result is bit-exact vs
+/// the per-image loop. `x` (b·grid² × d) is taken by value so the fan-out
+/// `Arc`-shares it without copying the activation buffer.
+pub fn dwconv3x3_batched(x: Vec<f32>, dw: &[f32], b: usize, grid: usize, d: usize) -> Vec<f32> {
+    let px = grid * grid * d;
+    assert_eq!(x.len(), b * px);
+    let pool = crate::kernels::parallel::shared_pool();
+    if b < 2 || pool.len() == 1 {
+        let mut out = Vec::with_capacity(b * px);
+        for img in 0..b {
+            out.extend(dwconv3x3(&x[img * px..(img + 1) * px], dw, grid, d));
+        }
+        return out;
+    }
+    let xa = Arc::new(x);
+    let dwa = Arc::new(dw.to_vec());
+    let jobs: Vec<_> = (0..b)
+        .map(|img| {
+            let (xa, dwa) = (xa.clone(), dwa.clone());
+            move || dwconv3x3(&xa[img * px..(img + 1) * px], &dwa, grid, d)
+        })
+        .collect();
+    pool.scatter(jobs).concat()
 }
 
 /// Xavier-ish dense init used by every native weight matrix (mirror of
@@ -231,10 +266,30 @@ pub enum MlpKind {
     Moe(MoeMlp),
 }
 
+/// How the attention sublayer executes over a batch of images.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttnExec {
+    /// One fused per-layer dispatch per primitive across every image and
+    /// head: one KSH hash sweep, two grouped MatAdd calls (LinearAdd), one
+    /// pool fan-out for the scalar families and the DWConv branch.
+    Fused,
+    /// The historical reference: image-by-image, head-by-head dispatch
+    /// (`b·heads·4` MatAdd calls per LinearAdd layer). Kept as the
+    /// bit-exactness baseline the property suite compares against.
+    PerImage,
+}
+
 /// Per-block diagnostics from one forward.
 pub struct BlockTrace {
     pub attn_ms: f64,
     pub mlp_ms: f64,
+    /// Kernel **calls** the attention sublayer issued (LinearAdd only; the
+    /// scalar families dispatch no kernels): the fused path makes 2
+    /// grouped [`LinearKernel::run_grouped`] calls per layer — each
+    /// covering all images×heads with one packed operand, though backends
+    /// without a grouped override still fan out per group internally — the
+    /// per-image path `b·heads·4` plain `run` calls.
+    pub attn_dispatches: usize,
     /// present iff the block's MLP is a MoE
     pub moe: Option<MoeTrace>,
 }
@@ -339,9 +394,19 @@ impl NativeBlock {
         let hd = dim / heads;
         let bits = hd;
         let (hasher, matadd) = if variant.attn == Attn::LinearAdd {
+            // The fused image path issues grouped dispatches whose per-group
+            // row count is hd+1; plan the MatAdd backend at the
+            // heads·(hd+1) fused shape so saved tables carry the batched
+            // geometry. `choose_batched` adopts any pinned same-(k, n)
+            // decision at another row count — in particular tables written
+            // before the fused path existed, which pinned the per-head
+            // m = hd shape — so startup never re-benchmarks a known family.
             (
                 Some(KshHasher::new(hd, bits, hash_seed)),
-                Some(planner.choose(Primitive::MatAdd, Shape::new(hd, tokens, bits))),
+                Some(planner.choose_batched(
+                    Primitive::MatAdd,
+                    Shape::new(heads * (hd + 1), tokens, bits),
+                )),
             )
         } else {
             (None, None)
@@ -364,13 +429,26 @@ impl NativeBlock {
         }
     }
 
-    /// In-place block forward over `b` images' tokens (`x`: b·tokens×dim).
+    /// In-place block forward over `b` images' tokens (`x`: b·tokens×dim),
+    /// on the fused batched attention path.
     pub fn forward(&self, x: &mut [f32], b: usize) -> BlockTrace {
+        self.forward_with(x, b, AttnExec::Fused)
+    }
+
+    /// The per-image/per-head reference execution — the baseline
+    /// [`NativeBlock::forward`] is property-tested bit-exact against
+    /// (`rust/tests/prop_batched_attn.rs` drives the comparison through
+    /// this method).
+    pub fn forward_per_image(&self, x: &mut [f32], b: usize) -> BlockTrace {
+        self.forward_with(x, b, AttnExec::PerImage)
+    }
+
+    /// Block forward with an explicit attention execution mode.
+    pub fn forward_with(&self, x: &mut [f32], b: usize, exec: AttnExec) -> BlockTrace {
         let d = self.dim;
         let n = self.tokens;
         let t = b * n;
         assert_eq!(x.len(), t * d);
-        let hd = d / self.heads;
 
         // --- attention sublayer -------------------------------------------
         let t_attn = Instant::now();
@@ -378,43 +456,10 @@ impl NativeBlock {
         let q = self.wq.forward(&u, t);
         let k = self.wk.forward(&u, t);
         let v = self.wv.forward(&u, t);
-        let mut o = vec![0.0f32; t * d];
-        let mut qh = vec![0.0f32; n * hd];
-        let mut kh = vec![0.0f32; n * hd];
-        let mut vh = vec![0.0f32; n * hd];
-        for img in 0..b {
-            let base = img * n * d;
-            for h in 0..self.heads {
-                for i in 0..n {
-                    let src = base + i * d + h * hd;
-                    qh[i * hd..(i + 1) * hd].copy_from_slice(&q[src..src + hd]);
-                    kh[i * hd..(i + 1) * hd].copy_from_slice(&k[src..src + hd]);
-                    vh[i * hd..(i + 1) * hd].copy_from_slice(&v[src..src + hd]);
-                }
-                let oh = match self.variant.attn {
-                    Attn::Msa => softmax_attn(&qh, &kh, &vh, n, hd),
-                    Attn::Linear => relu_linear_attn(&qh, &kh, &vh, n, hd),
-                    Attn::LinearAdd => {
-                        let hasher = self.hasher.as_ref().expect("LinearAdd needs a hasher");
-                        let kernel = self.matadd.as_ref().expect("LinearAdd needs MatAdd");
-                        let qc = hasher.hash_matrix(&qh, n);
-                        let kc = hasher.hash_matrix(&kh, n);
-                        hamming_linear_attn_kernel(kernel, &qc, &kc, &vh, n, self.bits, hd)
-                    }
-                };
-                for i in 0..n {
-                    let dst = base + i * d + h * hd;
-                    o[dst..dst + hd].copy_from_slice(&oh[i * hd..(i + 1) * hd]);
-                }
-            }
-            if self.variant.attn != Attn::Msa {
-                // Parallel DWConv on the V branch (local features).
-                let conv = dwconv3x3(&v[base..base + n * d], &self.raw.dw, self.grid, d);
-                for (ov, cv) in o[base..base + n * d].iter_mut().zip(&conv) {
-                    *ov += cv;
-                }
-            }
-        }
+        let (o, attn_dispatches) = match exec {
+            AttnExec::Fused => self.attn_fused(&q, &k, v, b),
+            AttnExec::PerImage => self.attn_per_image(&q, &k, &v, b),
+        };
         let a = self.wo.forward(&o, t);
         for (xv, av) in x.iter_mut().zip(&a) {
             *xv += av;
@@ -443,8 +488,95 @@ impl NativeBlock {
         BlockTrace {
             attn_ms,
             mlp_ms: t_mlp.elapsed().as_secs_f64() * 1e3,
+            attn_dispatches,
             moe,
         }
+    }
+
+    /// Fused attention over all images and heads: one head-major packing,
+    /// one KSH hash sweep, per-layer grouped/fanned dispatches, batched
+    /// DWConv (`v` by value so its fan-out is copy-free). Returns the
+    /// attention output (b·n × d) and the grouped-call count.
+    fn attn_fused(&self, q: &[f32], k: &[f32], v: Vec<f32>, b: usize) -> (Vec<f32>, usize) {
+        let d = self.dim;
+        let n = self.tokens;
+        let hd = d / self.heads;
+        let g = b * self.heads;
+        let qh = pack_heads(q, b, n, self.heads, hd);
+        let kh = pack_heads(k, b, n, self.heads, hd);
+        let vh = pack_heads(&v, b, n, self.heads, hd);
+        let (oh, dispatches) = match self.variant.attn {
+            Attn::Msa => (softmax_attn_batched(qh, kh, vh, n, hd), 0),
+            Attn::Linear => (relu_linear_attn_batched(qh, kh, vh, n, hd), 0),
+            Attn::LinearAdd => {
+                let hasher = self.hasher.as_ref().expect("LinearAdd needs a hasher");
+                let kernel = self.matadd.as_ref().expect("LinearAdd needs MatAdd");
+                // ONE hash sweep over every image's and head's tokens.
+                let qc = hasher.hash_matrix(&qh, g * n);
+                let kc = hasher.hash_matrix(&kh, g * n);
+                (
+                    hamming_linear_attn_batched(kernel, &qc, &kc, &vh, n, self.bits, hd),
+                    2,
+                )
+            }
+        };
+        let mut o = unpack_heads(&oh, b, n, self.heads, hd);
+        if self.variant.attn != Attn::Msa {
+            // Parallel DWConv on the V branch (local features), every image
+            // in one batched call (consumes `v`).
+            let conv = dwconv3x3_batched(v, &self.raw.dw, b, self.grid, d);
+            for (ov, cv) in o.iter_mut().zip(&conv) {
+                *ov += cv;
+            }
+        }
+        (o, dispatches)
+    }
+
+    /// The historical image-by-image, head-by-head attention loop.
+    fn attn_per_image(&self, q: &[f32], k: &[f32], v: &[f32], b: usize) -> (Vec<f32>, usize) {
+        let d = self.dim;
+        let n = self.tokens;
+        let hd = d / self.heads;
+        let mut o = vec![0.0f32; b * n * d];
+        let mut dispatches = 0usize;
+        let mut qh = vec![0.0f32; n * hd];
+        let mut kh = vec![0.0f32; n * hd];
+        let mut vh = vec![0.0f32; n * hd];
+        for img in 0..b {
+            let base = img * n * d;
+            for h in 0..self.heads {
+                for i in 0..n {
+                    let src = base + i * d + h * hd;
+                    qh[i * hd..(i + 1) * hd].copy_from_slice(&q[src..src + hd]);
+                    kh[i * hd..(i + 1) * hd].copy_from_slice(&k[src..src + hd]);
+                    vh[i * hd..(i + 1) * hd].copy_from_slice(&v[src..src + hd]);
+                }
+                let oh = match self.variant.attn {
+                    Attn::Msa => softmax_attn(&qh, &kh, &vh, n, hd),
+                    Attn::Linear => relu_linear_attn(&qh, &kh, &vh, n, hd),
+                    Attn::LinearAdd => {
+                        let hasher = self.hasher.as_ref().expect("LinearAdd needs a hasher");
+                        let kernel = self.matadd.as_ref().expect("LinearAdd needs MatAdd");
+                        let qc = hasher.hash_matrix(&qh, n);
+                        let kc = hasher.hash_matrix(&kh, n);
+                        dispatches += 4; // kᵀv, z, q(kᵀv), den
+                        hamming_linear_attn_kernel(kernel, &qc, &kc, &vh, n, self.bits, hd)
+                    }
+                };
+                for i in 0..n {
+                    let dst = base + i * d + h * hd;
+                    o[dst..dst + hd].copy_from_slice(&oh[i * hd..(i + 1) * hd]);
+                }
+            }
+            if self.variant.attn != Attn::Msa {
+                // Parallel DWConv on the V branch (local features).
+                let conv = dwconv3x3(&v[base..base + n * d], &self.raw.dw, self.grid, d);
+                for (ov, cv) in o[base..base + n * d].iter_mut().zip(&conv) {
+                    *ov += cv;
+                }
+            }
+        }
+        (o, dispatches)
     }
 
     /// Registry ids of the four attention linears (diagnostics).
@@ -486,6 +618,79 @@ mod tests {
         let mut rng = XorShift64::new(3);
         let x = rng.normals(grid * grid * d);
         assert_eq!(dwconv3x3(&x, &dw, grid, d), x);
+    }
+
+    #[test]
+    fn dwconv_edge_padding_counts_neighbors() {
+        // All-ones input and all-ones kernel: each output equals the number
+        // of in-bounds taps — 4 at corners, 6 on edges, 9 in the interior.
+        let (grid, d) = (3, 2);
+        let x = vec![1.0f32; grid * grid * d];
+        let dw = vec![1.0f32; 9 * d];
+        let out = dwconv3x3(&x, &dw, grid, d);
+        let want = [4.0, 6.0, 4.0, 6.0, 9.0, 6.0, 4.0, 6.0, 4.0];
+        for (cell, &w) in want.iter().enumerate() {
+            for c in 0..d {
+                assert_eq!(out[cell * d + c], w, "cell {cell} channel {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn dwconv_corner_tap_shifts_the_grid() {
+        // A kernel with only the (dy=0, dx=0) tap reads x[y-1][x-1]: output
+        // row/col 0 see zero padding, the rest is the input shifted by one.
+        let grid = 3;
+        let x: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let mut dw = vec![0.0f32; 9];
+        dw[0] = 1.0;
+        let out = dwconv3x3(&x, &dw, grid, 1);
+        assert_eq!(out, vec![0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn dwconv_non_square_grid_matches_bruteforce() {
+        // 2×4 grid against an independent brute-force accumulation.
+        let (h, w, d) = (2usize, 4usize, 3usize);
+        let mut rng = XorShift64::new(77);
+        let x = rng.normals(h * w * d);
+        let dw = rng.normals(9 * d);
+        let got = dwconv3x3_hw(&x, &dw, h, w, d);
+        for y in 0..h as isize {
+            for xx in 0..w as isize {
+                for c in 0..d {
+                    let mut want = 0.0f32;
+                    for dy in -1..=1isize {
+                        for dx in -1..=1isize {
+                            let (sy, sx) = (y + dy, xx + dx);
+                            if sy >= 0 && sy < h as isize && sx >= 0 && sx < w as isize {
+                                want += x[((sy * w as isize + sx) as usize) * d + c]
+                                    * dw[(((dy + 1) * 3 + dx + 1) as usize) * d + c];
+                            }
+                        }
+                    }
+                    let got_v = got[((y * w as isize + xx) as usize) * d + c];
+                    assert_eq!(got_v, want, "({y},{xx}) channel {c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dwconv_batched_matches_per_image_bit_exactly() {
+        let (b, grid, d) = (3, 4, 2);
+        let mut rng = XorShift64::new(91);
+        let x = rng.normals(b * grid * grid * d);
+        let dw = rng.normals(9 * d);
+        let got = dwconv3x3_batched(x.clone(), &dw, b, grid, d);
+        let px = grid * grid * d;
+        for img in 0..b {
+            assert_eq!(
+                &got[img * px..(img + 1) * px],
+                dwconv3x3(&x[img * px..(img + 1) * px], &dw, grid, d).as_slice(),
+                "image {img}"
+            );
+        }
     }
 
     #[test]

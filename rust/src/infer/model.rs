@@ -23,7 +23,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::data::synth_images;
-use crate::infer::block::{dense_init, layer_norm, BlockRaw, LinearLayer, NativeBlock};
+use crate::infer::block::{dense_init, layer_norm, AttnExec, BlockRaw, LinearLayer, NativeBlock};
 use crate::kernels::api::Primitive;
 use crate::kernels::planner::Planner;
 use crate::kernels::registry::KernelRegistry;
@@ -103,6 +103,13 @@ pub struct ForwardTrace {
     /// per-MoE-block (mult_ms, shift_ms) pairs
     pub expert_ms: Vec<[f64; 2]>,
     pub padding_waste: Vec<f64>,
+    /// attention kernel calls summed across all blocks this forward
+    /// (fused path: 2 grouped calls per LinearAdd layer regardless of
+    /// batch size — see `BlockTrace::attn_dispatches` for what a grouped
+    /// call covers; per-image path: b·heads·4 plain calls per layer)
+    pub attn_dispatches: usize,
+    /// transformer blocks executed (the dispatches-per-layer denominator)
+    pub blocks: usize,
 }
 
 /// The native multi-stage model.
@@ -221,8 +228,21 @@ impl NativeModel {
         self.stages.iter().map(|s| s.blocks.len()).sum()
     }
 
-    /// Classify `b` flattened HWC images → (logits (b×classes), trace).
+    /// Classify `b` flattened HWC images → (logits (b×classes), trace), on
+    /// the fused batched attention path.
     pub fn forward(&self, images: &[f32], b: usize) -> (Vec<f32>, ForwardTrace) {
+        self.forward_with(images, b, AttnExec::Fused)
+    }
+
+    /// Classify with an explicit attention execution mode
+    /// ([`AttnExec::PerImage`] is the bit-exact sequential reference the
+    /// property suite and the `native_engine` bench compare against).
+    pub fn forward_with(
+        &self,
+        images: &[f32],
+        b: usize,
+        exec: AttnExec,
+    ) -> (Vec<f32>, ForwardTrace) {
         let img = self.cfg.img;
         let patch = self.cfg.patch;
         let grid0 = img / patch;
@@ -279,7 +299,9 @@ impl NativeModel {
                 ));
             }
             for blk in &stage.blocks {
-                let btr = blk.forward(&mut t, b);
+                let btr = blk.forward_with(&mut t, b, exec);
+                trace.attn_dispatches += btr.attn_dispatches;
+                trace.blocks += 1;
                 trace.stage_ms.push((format!("blk{gi}_attn"), btr.attn_ms));
                 let mlp_name = if btr.moe.is_some() {
                     format!("blk{gi}_moe")

@@ -274,6 +274,47 @@ pub trait LinearKernel: Send + Sync {
     /// `out (m×n) = x (m×k) @ w (k×n)`. Panics if handed weight/operand
     /// variants this backend's `prepare`/`prepare_operand` does not produce.
     fn run(&self, w: &PreparedWeights, x: &Operand, out: &mut [f32]);
+
+    /// One **fused grouped dispatch**: `G = ws.len()` independent same-shape
+    /// problems `out_g (m×n) = x_g (m×k) @ w_g (k×n)` in a single call. The
+    /// operand is packed group-major (`x`: G·m×k, group `g` owning rows
+    /// `g·m..(g+1)·m`) and the output is packed the same way. This is the
+    /// entry point the batched image-path attention uses to issue one
+    /// MatAdd call per layer instead of one per (image, head) — the weights
+    /// (the ±1 Q/K code matrices) differ per group, which is why plain
+    /// row-stacking into one `run` cannot express it.
+    ///
+    /// The default walks the groups over [`LinearKernel::run`], so it is
+    /// bit-exact against per-group dispatch by construction. Backends may
+    /// override it to sweep every group in one parallel fork/join (see
+    /// `matadd/rowpar`), provided per-row accumulation order is unchanged.
+    fn run_grouped(&self, ws: &[PreparedWeights], x: &[f32], m: usize, out: &mut [f32]) {
+        let (_, k, n) = check_grouped_shapes(ws, x.len(), out.len(), m);
+        for (gi, w) in ws.iter().enumerate() {
+            let op = self.prepare_operand(&x[gi * m * k..(gi + 1) * m * k], m, k);
+            self.run(w, &op, &mut out[gi * m * n..(gi + 1) * m * n]);
+        }
+    }
+}
+
+/// Validate a grouped dispatch's packing: every group shares one `(k, n)`,
+/// the operand is G·m·k and the output G·m·n. Returns `(G, k, n)`.
+pub fn check_grouped_shapes(
+    ws: &[PreparedWeights],
+    x_len: usize,
+    out_len: usize,
+    m: usize,
+) -> (usize, usize, usize) {
+    let g = ws.len();
+    assert!(g > 0, "run_grouped: no groups");
+    let (k, n) = (ws[0].k(), ws[0].n());
+    assert!(
+        ws.iter().all(|w| w.k() == k && w.n() == n),
+        "run_grouped: groups must share one (k, n) shape"
+    );
+    assert_eq!(x_len, g * m * k, "run_grouped: operand is not G·m·k");
+    assert_eq!(out_len, g * m * n, "run_grouped: output is not G·m·n");
+    (g, k, n)
 }
 
 #[cfg(test)]

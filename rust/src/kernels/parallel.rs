@@ -17,7 +17,9 @@
 use std::sync::OnceLock;
 
 use crate::energy::ops::MacStyle;
-use crate::kernels::api::{LinearKernel, Operand, PreparedWeights, Primitive, RawWeights};
+use crate::kernels::api::{
+    check_grouped_shapes, LinearKernel, Operand, PreparedWeights, Primitive, RawWeights,
+};
 use crate::kernels::backends::{MatAddBitplane, MatShiftPlanes, SHIFT_TOL};
 use crate::kernels::matshift::PREC;
 use crate::kernels::{matadd, matshift};
@@ -192,6 +194,60 @@ impl LinearKernel for MatAddRowPar {
         let results = pool.scatter(jobs);
         for ((r0, _), chunk) in ranges.into_iter().zip(results) {
             out[r0 * n..r0 * n + chunk.len()].copy_from_slice(&chunk);
+        }
+    }
+
+    /// Fused grouped dispatch: all `G` small groups in ONE pool fork/join
+    /// (one job per group), instead of the default's per-group run loop.
+    /// Each job executes the serial row core over its own group's operand
+    /// and pm1 weights, so per-row accumulation order — and therefore the
+    /// bit-exactness contract vs `matadd/bitplane` — is unchanged. Groups
+    /// that are individually large enough to row-chunk (`m ≥ MIN_PAR_ROWS`)
+    /// go through [`MatAddRowPar::run`] instead, which spreads each group's
+    /// rows across the whole pool — grouping those would strand a big
+    /// group on a single worker.
+    fn run_grouped(&self, ws: &[PreparedWeights], x: &[f32], m: usize, out: &mut [f32]) {
+        let (g, k, n) = check_grouped_shapes(ws, x.len(), out.len(), m);
+        if m >= MIN_PAR_ROWS {
+            for (gi, w) in ws.iter().enumerate() {
+                let op = self.prepare_operand(&x[gi * m * k..(gi + 1) * m * k], m, k);
+                self.run(w, &op, &mut out[gi * m * n..(gi + 1) * m * n]);
+            }
+            return;
+        }
+        let packed: Vec<_> = ws
+            .iter()
+            .map(|w| match w {
+                PreparedWeights::Pm1(p) => {
+                    assert_eq!(p.k, k, "matadd/rowpar: grouped operand k mismatch");
+                    p.clone()
+                }
+                other => panic!(
+                    "matadd/rowpar: expected pm1 weights, got {}",
+                    other.variant_name()
+                ),
+            })
+            .collect();
+        let pool = shared_pool();
+        if g == 1 || g * m < MIN_PAR_ROWS || pool.len() == 1 {
+            for (gi, p) in packed.iter().enumerate() {
+                let chunk = matadd::matadd_pm1_rows(&x[gi * m * k..(gi + 1) * m * k], p, 0, m);
+                out[gi * m * n..(gi + 1) * m * n].copy_from_slice(&chunk);
+            }
+            return;
+        }
+        let xs = std::sync::Arc::new(x.to_vec());
+        let jobs: Vec<_> = packed
+            .iter()
+            .enumerate()
+            .map(|(gi, p)| {
+                let p = p.clone();
+                let xs = xs.clone();
+                move || matadd::matadd_pm1_rows(&xs[gi * m * k..(gi + 1) * m * k], &p, 0, m)
+            })
+            .collect();
+        for (gi, chunk) in pool.scatter(jobs).into_iter().enumerate() {
+            out[gi * m * n..(gi + 1) * m * n].copy_from_slice(&chunk);
         }
     }
 }

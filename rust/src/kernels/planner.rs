@@ -89,6 +89,51 @@ impl Planner {
         chosen
     }
 
+    /// Shape-family-aware [`Planner::choose`] for the fused grouped
+    /// dispatches, whose row count `m` follows the model geometry
+    /// (`heads·(head_dim+1)`) while `(k, n)` stays fixed: an exact
+    /// `(primitive, m×k×n)` hit is returned as usual; otherwise a cached or
+    /// pinned decision for the same `(primitive, k, n)` at the **nearest**
+    /// `m` is adopted and cached for this shape (so tables saved afterwards
+    /// carry it), and only an entirely unknown `(k, n)` family falls back
+    /// to a live benchmark. This is what lets a pinned lookup table answer
+    /// every row count of a family it has seen once — including tables
+    /// written before the fused geometry existed, which pinned the
+    /// per-head `m = head_dim` shape — with zero startup benchmarking.
+    pub fn choose_batched(&self, primitive: Primitive, shape: Shape) -> Arc<dyn LinearKernel> {
+        // Exact hit, family lookup, and cache insert all happen under ONE
+        // cache lock so a racing `choose` on the same shape can neither be
+        // overwritten nor double-logged (the one-decision-per-shape
+        // invariant `choose` documents).
+        let adopted = {
+            let mut cache = self.cache.lock().unwrap();
+            if let Some(k) = cache.get(&(primitive, shape)) {
+                return k.clone();
+            }
+            let family = cache
+                .iter()
+                .filter(|((p, s), _)| *p == primitive && s.k == shape.k && s.n == shape.n)
+                .min_by_key(|((_, s), _)| s.m.abs_diff(shape.m))
+                .map(|(_, k)| k.clone());
+            if let Some(kernel) = &family {
+                cache.insert((primitive, shape), kernel.clone());
+            }
+            family
+        };
+        match adopted {
+            Some(kernel) => {
+                self.log.lock().unwrap().push(Choice {
+                    primitive,
+                    shape,
+                    backend: kernel.backend().to_string(),
+                    measured_ms: Vec::new(),
+                });
+                kernel
+            }
+            None => self.choose(primitive, shape),
+        }
+    }
+
     /// Install a backend for a shape without measuring (lookup tables,
     /// reproducible runs). Panics if the backend is not registered.
     pub fn pin(&self, primitive: Primitive, shape: Shape, backend: &str) {
@@ -317,6 +362,64 @@ mod tests {
         )
         .unwrap();
         assert!(p.pin_table_json(&table).is_err());
+    }
+
+    #[test]
+    fn choose_batched_reuses_shape_family_without_benchmarking() {
+        let planner = Planner::new(Arc::new(KernelRegistry::with_defaults()));
+        let small = Shape::new(6, 16, 8);
+        let chosen = planner.choose(Primitive::MatAdd, small);
+        assert_eq!(planner.choices().len(), 1);
+        // same (k, n) family at a larger row count: adopt, don't re-measure
+        let big = planner.choose_batched(Primitive::MatAdd, Shape::new(60, 16, 8));
+        assert_eq!(big.id(), chosen.id());
+        let log = planner.choices();
+        assert_eq!(log.len(), 2);
+        assert!(
+            log[1].measured_ms.is_empty(),
+            "family fallback must not benchmark"
+        );
+        // exact repeat hits the cache without a new log entry
+        planner.choose_batched(Primitive::MatAdd, Shape::new(60, 16, 8));
+        assert_eq!(planner.choices().len(), 2);
+        // an entirely unknown (k, n) family still benchmarks
+        planner.choose_batched(Primitive::MatAdd, Shape::new(60, 9, 8));
+        assert!(!planner.choices()[2].measured_ms.is_empty());
+    }
+
+    #[test]
+    fn table_roundtrip_plans_fused_shape_family_without_benchmarking() {
+        // A pinned table must answer every row count of a (k, n) family it
+        // has seen once. The compat case that matters: a table written
+        // before the fused image path existed pinned the per-head
+        // m = head_dim MatAdd shape; a model built today requests the
+        // fused m = heads·(head_dim+1) shape — same (tokens, bits) family —
+        // and must plan off the pinned row with zero startup benchmarking.
+        let dir = std::env::temp_dir().join("savit_planner_fused_table_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fused.json");
+        let a = Planner::new(Arc::new(KernelRegistry::with_defaults()));
+        // pre-fused-path table: per-head shape (m = hd, k = tokens, n = bits)
+        a.choose(Primitive::MatAdd, Shape::new(16, 64, 16));
+        a.save_table(&path).unwrap();
+
+        let b = Planner::new(Arc::new(KernelRegistry::with_defaults()));
+        assert_eq!(b.load_table(&path).unwrap(), 1);
+        // today's construction shape: m = heads·(hd+1) = 2·17
+        let k = b.choose_batched(Primitive::MatAdd, Shape::new(2 * 17, 64, 16));
+        assert_eq!(k.backend(), a.choices()[0].backend);
+        assert!(
+            b.choices().iter().all(|c| c.measured_ms.is_empty()),
+            "loaded table must answer the fused shape family without measuring"
+        );
+        // and the adopted decision round-trips into b's own saved table
+        let table = b.to_table_json();
+        let rows = table.get("choices").unwrap().as_arr().unwrap();
+        assert!(
+            rows.iter()
+                .any(|r| r.get("m").and_then(|m| m.as_usize()) == Some(34)),
+            "adopted fused shape missing from the saved table"
+        );
     }
 
     #[test]

@@ -1,0 +1,242 @@
+//! Bit-exactness property suite for the fused batched image-path attention
+//! (the PR-4 tentpole): one fused kernel dispatch per primitive per layer
+//! (`AttnExec::Fused`) must be **bit-exact** against the historical
+//! image-by-image, head-by-head execution (`AttnExec::PerImage`) — for all
+//! three attention families, at every batch size, head count, and odd token
+//! count the generator draws — while issuing a constant number of kernel
+//! dispatches per layer instead of `b·heads·4`.
+
+use std::sync::Arc;
+
+use shiftaddvit::data::synth_images;
+use shiftaddvit::infer::attn::{
+    hamming_linear_attn_batched, hamming_linear_attn_kernel, pack_heads, unpack_heads,
+};
+use shiftaddvit::infer::block::{AttnExec, BlockRaw, NativeBlock};
+use shiftaddvit::infer::model::NativeModel;
+use shiftaddvit::kernels::api::{Primitive, RawWeights};
+use shiftaddvit::kernels::planner::Planner;
+use shiftaddvit::kernels::registry::KernelRegistry;
+use shiftaddvit::model::ops::{Attn, Variant};
+use shiftaddvit::quant::ksh::KshHasher;
+use shiftaddvit::util::prop::check;
+use shiftaddvit::util::rng::XorShift64;
+
+fn planner() -> Planner {
+    Planner::new(Arc::new(KernelRegistry::with_defaults()))
+}
+
+// ---------------------------------------------------------------------------
+// 1. Block level: fused forward ≡ per-image forward, all variants
+// ---------------------------------------------------------------------------
+
+/// One randomized case: build a block for `variant`, run the same input
+/// through both execution modes, demand bit-identical activations and the
+/// expected dispatch counts.
+fn block_case(rng: &mut XorShift64, variant: Variant, case: u64) -> Result<(), String> {
+    let b = [1usize, 2, 3, 5][rng.range(0, 4)];
+    let heads = [1usize, 2, 4][rng.range(0, 3)];
+    // Odd token counts: linear variants need a square grid for the DWConv
+    // branch (3²=9, 5²=25 — both odd); MSA takes any count.
+    let tokens = if variant.attn == Attn::Msa {
+        [7usize, 9, 13][rng.range(0, 3)]
+    } else {
+        [9usize, 25][rng.range(0, 2)]
+    };
+    // dim = heads·hd with hd ∈ {2, 3, 5}, so the head_dim (and with it the
+    // LinearAdd code width) is frequently non-power-of-two.
+    let dim = heads * [2usize, 3, 5][rng.range(0, 3)];
+    let p = planner();
+    let raw = BlockRaw::random(rng, dim, dim * 2);
+    let blk = NativeBlock::from_raw(raw, tokens, heads, variant, &p, &[16, 64], 0xC0DE + case);
+
+    let x0 = rng.normals(b * tokens * dim);
+    let mut fused = x0.clone();
+    let tr_fused = blk.forward_with(&mut fused, b, AttnExec::Fused);
+    let mut seq = x0;
+    let tr_seq = blk.forward_per_image(&mut seq, b);
+    if fused != seq {
+        let bad = fused
+            .iter()
+            .zip(&seq)
+            .position(|(a, b)| a != b)
+            .unwrap_or(0);
+        return Err(format!(
+            "fused != per-image at elem {bad} (variant {variant:?}, b={b}, heads={heads}, \
+             tokens={tokens}, dim={dim})"
+        ));
+    }
+    let (want_fused, want_seq) = if variant.attn == Attn::LinearAdd {
+        (2, b * heads * 4)
+    } else {
+        (0, 0)
+    };
+    if tr_fused.attn_dispatches != want_fused {
+        return Err(format!(
+            "fused path issued {} dispatches, want {want_fused}",
+            tr_fused.attn_dispatches
+        ));
+    }
+    if tr_seq.attn_dispatches != want_seq {
+        return Err(format!(
+            "per-image path issued {} dispatches, want {want_seq}",
+            tr_seq.attn_dispatches
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn fused_block_forward_is_bit_exact_msa() {
+    let mut case = 0u64;
+    check("fused-block-msa", 10, 6, |rng, _| {
+        case += 1;
+        block_case(rng, Variant::MSA, case)
+    });
+}
+
+#[test]
+fn fused_block_forward_is_bit_exact_linear() {
+    let mut case = 0u64;
+    check("fused-block-linear", 10, 6, |rng, _| {
+        case += 1;
+        block_case(rng, Variant::LINEAR, case)
+    });
+}
+
+#[test]
+fn fused_block_forward_is_bit_exact_linear_add() {
+    let mut case = 0u64;
+    check("fused-block-linear-add", 10, 6, |rng, _| {
+        case += 1;
+        block_case(rng, Variant::ADD, case)
+    });
+}
+
+#[test]
+fn fused_block_forward_is_bit_exact_full_reparameterization() {
+    // The deployed mixtures ride the same fused path: shift attention
+    // linears (ADD_SHIFT_BOTH) and the Mult/Shift MoE MLP (SHIFTADD_MOE).
+    let mut case = 100u64;
+    for variant in [Variant::ADD_SHIFT_BOTH, Variant::SHIFTADD_MOE] {
+        check("fused-block-reparam", 6, 4, |rng, _| {
+            case += 1;
+            block_case(rng, variant, case)
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Model level: fused classify ≡ per-image classify, dispatch gauges
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fused_model_forward_is_bit_exact_and_amortizes_dispatches() {
+    let model = NativeModel::tiny(Variant::ADD);
+    for b in [1usize, 3] {
+        let (xs, _) = synth_images::gen_batch(1234 + b as u32, b);
+        let (lf, tf) = model.forward_with(&xs, b, AttnExec::Fused);
+        let (ls, ts) = model.forward_with(&xs, b, AttnExec::PerImage);
+        assert_eq!(lf, ls, "logits diverged at batch {b}");
+        assert_eq!(tf.blocks, 2);
+        // fused: 2 grouped MatAdd dispatches per LinearAdd layer, batch-free
+        assert_eq!(tf.attn_dispatches, 4, "batch {b}");
+        // per-image: b·heads·4 per layer (tiny spec: heads 2 then 4)
+        assert_eq!(ts.attn_dispatches, b * (2 + 4) * 4, "batch {b}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. Kernel level: grouped dispatch ≡ per-group run, every MatAdd backend
+// ---------------------------------------------------------------------------
+
+#[test]
+fn run_grouped_matches_per_group_runs_bit_exactly() {
+    let registry = KernelRegistry::with_defaults();
+    let mut rng = XorShift64::new(71);
+    // covers the one-job-per-group fusion (small m), the serial fallback,
+    // and the large-m delegation to row-chunked run()
+    for (g, m, k, n) in [
+        (1usize, 3usize, 5usize, 4usize),
+        (4, 7, 9, 6),
+        (13, 5, 8, 3),
+        (2, 40, 6, 4),
+    ] {
+        let x = rng.normals(g * m * k);
+        let raws: Vec<RawWeights> = (0..g)
+            .map(|_| RawWeights::new(rng.normals(k * n), k, n))
+            .collect();
+        for kernel in registry.for_primitive(Primitive::MatAdd) {
+            let ws: Vec<_> = raws.iter().map(|r| kernel.prepare(r)).collect();
+            let mut fused = vec![0.0f32; g * m * n];
+            kernel.run_grouped(&ws, &x, m, &mut fused);
+            for gi in 0..g {
+                let op = kernel.prepare_operand(&x[gi * m * k..(gi + 1) * m * k], m, k);
+                let mut solo = vec![0.0f32; m * n];
+                kernel.run(&ws[gi], &op, &mut solo);
+                assert_eq!(
+                    &fused[gi * m * n..(gi + 1) * m * n],
+                    solo.as_slice(),
+                    "{} group {gi} (G={g})",
+                    kernel.id()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_hamming_attention_matches_ref_on_odd_shapes() {
+    // Non-power-of-two bits/hd and odd token counts through the fused
+    // two-dispatch path, against the per-head kernel (itself oracle-exact).
+    let registry = KernelRegistry::with_defaults();
+    check("batched-hamming-odd", 8, 5, |rng, size| {
+        let g = 1 + rng.range(0, 6);
+        let n = 3 + 2 * size; // odd
+        let d = [2usize, 3, 5, 6][rng.range(0, 4)];
+        let bits = [3usize, 5, 7, 11][rng.range(0, 4)];
+        let h = KshHasher::new(d, bits, 9 + size as u64);
+        let q = rng.normals(g * n * d);
+        let k = rng.normals(g * n * d);
+        let v = rng.normals(g * n * d);
+        let qc = h.hash_matrix(&q, g * n);
+        let kc = h.hash_matrix(&k, g * n);
+        for kernel in registry.for_primitive(Primitive::MatAdd) {
+            let got = hamming_linear_attn_batched(&kernel, &qc, &kc, &v, n, bits, d);
+            for gi in 0..g {
+                let want = hamming_linear_attn_kernel(
+                    &kernel,
+                    &qc[gi * n * bits..(gi + 1) * n * bits],
+                    &kc[gi * n * bits..(gi + 1) * n * bits],
+                    &v[gi * n * d..(gi + 1) * n * d],
+                    n,
+                    bits,
+                    d,
+                );
+                if got[gi * n * d..(gi + 1) * n * d] != want[..] {
+                    return Err(format!(
+                        "{} group {gi} diverged (g={g}, n={n}, d={d}, bits={bits})",
+                        kernel.id()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pack_heads_roundtrips_for_any_geometry() {
+    check("pack-heads-roundtrip", 12, 6, |rng, size| {
+        let b = 1 + rng.range(0, 5);
+        let heads = [1usize, 2, 4][rng.range(0, 3)];
+        let hd = 1 + size;
+        let n = 3 + rng.range(0, 9);
+        let x = rng.normals(b * n * heads * hd);
+        let packed = pack_heads(&x, b, n, heads, hd);
+        if unpack_heads(&packed, b, n, heads, hd) != x {
+            return Err(format!("roundtrip broke (b={b}, heads={heads}, hd={hd}, n={n})"));
+        }
+        Ok(())
+    });
+}
