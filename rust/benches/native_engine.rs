@@ -1,17 +1,25 @@
 //! Native-engine latency: the pure-Rust `infer` forward pass per variant
 //! and batch size, the **batched image path** sweep (sequential
 //! per-image/per-head attention vs the fused per-layer dispatches, in
-//! images/sec with dispatch counts per layer), and an end-to-end native
-//! serving throughput run — the measured (not analytic) counterpart of the
-//! reparameterization ladder, runnable with zero artifacts. Emits a JSON
-//! object for tooling alongside the tables.
+//! images/sec with dispatch counts per layer), the **kernel-family sweep**
+//! (serial vs rowpar vs simd backends pinned end to end via
+//! `Planner::force`, stamped with the detected CPU feature set), and an
+//! end-to-end native serving throughput run — the measured (not analytic)
+//! counterpart of the reparameterization ladder, runnable with zero
+//! artifacts. Emits a JSON object for tooling alongside the tables.
+
+use std::sync::Arc;
 
 use shiftaddvit::coordinator::backend::NativeBackend;
 use shiftaddvit::coordinator::config::ServerConfig;
 use shiftaddvit::coordinator::server::serve_backend;
 use shiftaddvit::data::synth_images;
 use shiftaddvit::infer::block::AttnExec;
-use shiftaddvit::infer::model::{tiny_latencies_ms, NativeModel};
+use shiftaddvit::infer::model::{tiny_latencies_ms, NativeModel, NativeModelConfig};
+use shiftaddvit::kernels::api::Primitive;
+use shiftaddvit::kernels::planner::Planner;
+use shiftaddvit::kernels::registry::KernelRegistry;
+use shiftaddvit::kernels::simd;
 use shiftaddvit::model::ops::Variant;
 use shiftaddvit::util::bench::{f1, f2, time_ms, Table};
 use shiftaddvit::util::json::Json;
@@ -100,10 +108,54 @@ fn main() {
         ]));
     }
     sweep.print("Batched image path — per-image vs fused per-layer dispatch");
+
+    // --- kernel-family sweep: simd vs rowpar vs serial behind the fused
+    // path. `Planner::force` pins every MatAdd (and MatShift) shape to one
+    // backend, so each row is the end-to-end images/sec of that kernel
+    // family on the deployed mixture — the measured trajectory the SIMD
+    // subsystem is accountable to.
+    let level = simd::active_level();
+    let kbs = 8usize;
+    let (kxs, _) = synth_images::gen_batch(11_000, kbs);
+    let mut ksweep = Table::new(&["pinned backends", "bs8 fused (ms)", "bs8 (img/s)"]);
+    let mut krows = Vec::new();
+    for (label, matadd, matshift) in [
+        ("matadd/bitplane + matshift/planes", "bitplane", "planes"),
+        ("matadd/rowpar + matshift/rowpar", "rowpar", "rowpar"),
+        ("matadd/simd + matshift/simd", "simd", "simd"),
+    ] {
+        let planner = Arc::new(Planner::new(Arc::new(KernelRegistry::with_defaults())));
+        planner.force(Primitive::MatAdd, matadd);
+        planner.force(Primitive::MatShift, matshift);
+        let pinned = NativeModel::new(NativeModelConfig::tiny(Variant::SHIFTADD_MOE), planner);
+        let ms = Summary::from(&time_ms(
+            || {
+                pinned.forward(&kxs, kbs);
+            },
+            2,
+            5,
+        ))
+        .p50;
+        let img_s = kbs as f64 / (ms / 1e3);
+        ksweep.row(&[label.to_string(), f2(ms), f1(img_s)]);
+        krows.push(Json::obj(vec![
+            ("matadd_backend", Json::str(matadd)),
+            ("matshift_backend", Json::str(matshift)),
+            ("ms", Json::num(ms)),
+            ("img_s", Json::num(img_s)),
+        ]));
+    }
+    ksweep.print(&format!(
+        "Fused image path by kernel family (cpu_features: {})",
+        level.name()
+    ));
+
     let json = Json::obj(vec![
         ("bench", Json::str("native_engine")),
         ("variant", Json::str("shiftadd_moe")),
+        ("cpu_features", Json::str(level.name())),
         ("results", Json::Arr(rows)),
+        ("kernel_family_sweep", Json::Arr(krows)),
     ]);
     println!("\n{json}");
 

@@ -95,7 +95,10 @@ pub struct ServerConfig {
     /// number of requests the synthetic client issues (sessions, for the
     /// stream workload)
     pub requests: usize,
-    /// mean request inter-arrival (ms); 0 = closed-loop
+    /// mean request inter-arrival (ms); 0 = closed-loop. Applies to both
+    /// workloads: the classify client thread paces its sends, and the
+    /// stream workload submits sessions on a deterministic seeded
+    /// open-loop schedule (`server::stream_arrival_schedule`).
     pub arrival_ms: f64,
     /// request shape (`classify` | `stream`)
     pub workload: Workload,

@@ -3,6 +3,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::kernels::planner::Choice;
 use crate::moe::balance;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
@@ -33,11 +34,28 @@ pub struct Metrics {
     pub attn_dispatches_per_layer: Vec<f64>,
     /// per-step live session count (streaming path only)
     pub live_sessions: Vec<f64>,
+    /// per-primitive chosen-backend gauge, recorded from the planner's
+    /// plan-time decisions (`NativeBackend` / streaming engine
+    /// construction): `"primitive/backend"` id → number of shapes that
+    /// resolved to it, so serve reports show which kernel family actually
+    /// ran (the XLA pipeline plans nothing and leaves this empty)
+    pub chosen_backends: BTreeMap<String, usize>,
 }
 
 impl Metrics {
     pub fn record(&mut self, stage: &str, ms: f64) {
         self.stages.entry(stage.to_string()).or_default().push(ms);
+    }
+
+    /// Rebuild the chosen-backend gauge from a planner decision log (plan
+    /// time + any lazy decisions since) — idempotent, so serve loops can
+    /// refresh it after construction and again before reporting.
+    pub fn record_plan(&mut self, choices: &[Choice]) {
+        self.chosen_backends.clear();
+        for c in choices {
+            let id = format!("{}/{}", c.primitive.name(), c.backend);
+            *self.chosen_backends.entry(id).or_insert(0) += 1;
+        }
     }
 
     /// Record one engine step's occupancy gauges (shared by the image
@@ -159,6 +177,14 @@ impl Metrics {
                 ]),
             ));
         }
+        if !self.chosen_backends.is_empty() {
+            let chosen: Vec<(&str, Json)> = self
+                .chosen_backends
+                .iter()
+                .map(|(id, n)| (id.as_str(), Json::num(*n as f64)))
+                .collect();
+            pairs.push(("chosen_backend", Json::obj(chosen)));
+        }
         Json::obj(pairs)
     }
 
@@ -214,6 +240,14 @@ impl Metrics {
                 self.live_sessions.iter().cloned().fold(0.0, f64::max)
             );
         }
+        if !self.chosen_backends.is_empty() {
+            let parts: Vec<String> = self
+                .chosen_backends
+                .iter()
+                .map(|(id, n)| format!("{id}×{n}"))
+                .collect();
+            println!("  planned kernel backends: {}", parts.join("  "));
+        }
     }
 }
 
@@ -264,6 +298,35 @@ mod tests {
         let j = m.to_json();
         assert_eq!(j.get("batches").unwrap().as_usize(), Some(1));
         assert!(j.get("batch_occupancy").is_none(), "no steps, no gauge");
+    }
+
+    #[test]
+    fn chosen_backend_gauge_counts_per_id_and_serializes() {
+        use crate::kernels::api::Primitive;
+        use crate::kernels::planner::Shape;
+        let mk = |p, backend: &str| Choice {
+            primitive: p,
+            shape: Shape::new(4, 4, 4),
+            backend: backend.to_string(),
+            measured_ms: Vec::new(),
+        };
+        let mut m = Metrics::default();
+        assert!(m.to_json().get("chosen_backend").is_none(), "empty → absent");
+        m.record_plan(&[
+            mk(Primitive::MatAdd, "simd"),
+            mk(Primitive::MatAdd, "simd"),
+            mk(Primitive::MatShift, "rowpar"),
+        ]);
+        assert_eq!(m.chosen_backends.get("matadd/simd"), Some(&2));
+        assert_eq!(m.chosen_backends.get("matshift/rowpar"), Some(&1));
+        let j = m.to_json();
+        let gauge = j.get("chosen_backend").expect("gauge serialized");
+        assert_eq!(gauge.get("matadd/simd").and_then(|v| v.as_usize()), Some(2));
+        // idempotent refresh: re-recording replaces, never double-counts
+        m.record_plan(&[mk(Primitive::MatAdd, "simd")]);
+        assert_eq!(m.chosen_backends.get("matadd/simd"), Some(&1));
+        assert!(m.chosen_backends.get("matshift/rowpar").is_none());
+        m.print(); // should not panic
     }
 
     #[test]

@@ -126,6 +126,9 @@ pub fn serve_backend(backend: &dyn InferenceBackend, cfg: &ServerConfig) -> Resu
 
     let batcher = Batcher::new(cfg.max_batch, cfg.batch_deadline_ms);
     let mut metrics = Metrics::default();
+    // Plan-time gauge: which kernel backend each (primitive, shape) of the
+    // engine resolved to at construction/warmup (xla plans nothing).
+    metrics.record_plan(&backend.planner_choices());
     let mut latencies = Vec::new();
     let mut modularized = Vec::new();
     let mut correct = 0usize;
@@ -172,6 +175,9 @@ pub fn serve_backend(backend: &dyn InferenceBackend, cfg: &ServerConfig) -> Resu
     }
     let wall_s = t0.elapsed().as_secs_f64();
     client.join().expect("client thread");
+    // Refresh the gauge: batched geometries may have planned lazily during
+    // the run (record_plan rebuilds, so this never double-counts).
+    metrics.record_plan(&backend.planner_choices());
 
     Ok(ServeReport {
         latency: Summary::from(&latencies),
@@ -253,10 +259,39 @@ pub fn stream_workload_lens(sessions: usize, mean_tokens: usize) -> Vec<usize> {
         .collect()
 }
 
+/// Deterministic arrival-offset schedule (ms, non-decreasing, first at 0)
+/// for the open-loop streaming client: session `i` arrives after `i`
+/// jittered gaps of `mean_ms · (0.5 + u)`, `u ∈ [0, 1)` drawn from `seed` —
+/// the same exponential-ish pacing the classification client thread uses,
+/// but precomputed so runs are reproducible and the schedule is testable.
+/// `mean_ms = 0` degenerates to the closed-loop schedule (all zeros).
+pub fn stream_arrival_schedule(sessions: usize, mean_ms: f64, seed: u64) -> Vec<f64> {
+    let mut rng = XorShift64::new(seed);
+    let mut at = 0.0f64;
+    (0..sessions)
+        .map(|_| {
+            let now = at;
+            at += mean_ms * (0.5 + rng.uniform() as f64);
+            now
+        })
+        .collect()
+}
+
+/// Seed of the open-loop arrival schedule (fixed: serving runs are
+/// reproducible; vary `cfg.arrival_ms` to change the traffic, not the draw).
+const STREAM_ARRIVAL_SEED: u64 = 0x0FE2_107;
+
 /// Serve `cfg.requests` token-streaming sessions on the native streaming
 /// engine (the paper's deployed mixture: Hamming LinearAdd attention +
 /// shift linears), continuously batched `cfg.max_live` at a time in
 /// `cfg.stream_chunk`-token steps.
+///
+/// With `cfg.arrival_ms > 0` the client is **open-loop**: sessions are
+/// submitted on the deterministic [`stream_arrival_schedule`] while the
+/// engine keeps stepping whatever is live, so admission control
+/// (`max_live`) is exercised by staggered arrivals instead of one up-front
+/// burst. `arrival_ms = 0` keeps the closed-loop behavior (all sessions
+/// submitted before the first step).
 pub fn serve_stream(cfg: &ServerConfig) -> Result<StreamReport> {
     if cfg.backend != BackendKind::Native {
         anyhow::bail!(
@@ -271,24 +306,44 @@ pub fn serve_stream(cfg: &ServerConfig) -> Result<StreamReport> {
     let mut engine = SessionEngine::new(model, cfg.stream_chunk.max(1), cfg.max_live.max(1));
 
     let lens = stream_workload_lens(cfg.requests, cfg.stream_tokens);
-    let mut tickets = Vec::with_capacity(lens.len());
-    let mut total_tokens = 0usize;
-    for (i, &n) in lens.iter().enumerate() {
-        let toks = XorShift64::new(0x70C0 + i as u64).normals(n * dim);
-        total_tokens += n;
-        tickets.push(engine.submit(toks));
-    }
+    let schedule = stream_arrival_schedule(lens.len(), cfg.arrival_ms, STREAM_ARRIVAL_SEED);
+    let total_tokens: usize = lens.iter().sum();
+    let mut seqs: Vec<Vec<f32>> = lens
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| XorShift64::new(0x70C0 + i as u64).normals(n * dim))
+        .collect();
 
     let mut metrics = Metrics::default();
+    let mut tickets = Vec::with_capacity(lens.len());
+    let mut steps = 0usize;
+    let mut next = 0usize;
     let t0 = Instant::now();
-    let steps = engine.run_to_completion(&mut metrics);
+    while next < seqs.len() || !engine.idle() {
+        let now_ms = t0.elapsed().as_secs_f64() * 1e3;
+        while next < seqs.len() && schedule[next] <= now_ms {
+            tickets.push(engine.submit(std::mem::take(&mut seqs[next])));
+            next += 1;
+        }
+        if engine.idle() {
+            // Open-loop gap: nothing live, next arrival is in the future.
+            let wait_ms = schedule[next] - now_ms;
+            if wait_ms > 0.0 {
+                thread::sleep(Duration::from_secs_f64(wait_ms / 1e3));
+            }
+            continue;
+        }
+        engine.step(&mut metrics);
+        steps += 1;
+    }
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
 
     let mut latencies = Vec::with_capacity(tickets.len());
     for t in &tickets {
-        let out = engine.poll(t).expect("run_to_completion finished all");
+        let out = engine.poll(t).expect("serve loop finished all sessions");
         latencies.push(out.latency_ms());
     }
+    metrics.record_plan(&engine.model.planner.choices());
     save_planner_table(cfg, &engine.model.planner.choices())?;
 
     Ok(StreamReport {

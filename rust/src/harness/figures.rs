@@ -13,6 +13,7 @@ use crate::energy::ops::MacStyle;
 use crate::kernels::api::{LinearKernel, Primitive, RawWeights};
 use crate::kernels::planner::{Planner, Shape};
 use crate::kernels::registry::KernelRegistry;
+use crate::kernels::simd;
 use crate::model::config::{classifier, gnt};
 use crate::model::ops::{count, Variant};
 use crate::util::bench::{f2, time_ms, Table};
@@ -152,12 +153,17 @@ fn kernel_sweep(
         ]));
     }
     t.print(&format!(
-        "{title}; avg best-backend speedup {:.2}x vs best baseline",
-        speedup_sum / shapes.len() as f64
+        "{title}; avg best-backend speedup {:.2}x vs best baseline \
+         (cpu_features: {})",
+        speedup_sum / shapes.len() as f64,
+        simd::active_level().name()
     ));
     Json::obj(vec![
         ("primitive", Json::str(contender.name())),
         ("batch", Json::num(batch as f64)),
+        // which vector unit the */simd columns ran on (the perf-trajectory
+        // key for simd-vs-rowpar-vs-ref comparisons across hosts)
+        ("cpu_features", Json::str(simd::active_level().name())),
         ("shapes", Json::Arr(shape_objs)),
     ])
 }

@@ -287,7 +287,9 @@ pub trait LinearKernel: Send + Sync {
     /// The default walks the groups over [`LinearKernel::run`], so it is
     /// bit-exact against per-group dispatch by construction. Backends may
     /// override it to sweep every group in one parallel fork/join (see
-    /// `matadd/rowpar`), provided per-row accumulation order is unchanged.
+    /// `matadd/rowpar` and `matadd/simd`, both built on
+    /// `parallel::run_grouped_matadd_forked`), provided per-row
+    /// accumulation order is unchanged.
     fn run_grouped(&self, ws: &[PreparedWeights], x: &[f32], m: usize, out: &mut [f32]) {
         let (_, k, n) = check_grouped_shapes(ws, x.len(), out.len(), m);
         for (gi, w) in ws.iter().enumerate() {

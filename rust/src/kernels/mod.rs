@@ -11,14 +11,22 @@
 //!   tolerance vs the dense oracle.
 //! - [`registry::KernelRegistry`] — named backends per [`api::Primitive`],
 //!   addressed as `"primitive/backend"`. Defaults: `matmul/{naive,blocked}`,
-//!   `matadd/{ref,packed,bitplane,rowpar}`, `matshift/{ref,planes,rowpar}`,
-//!   `fakeshift/{ref,cached}`. Registering a new backend automatically
-//!   enrolls it in the fig4/fig5 sweeps and the property suite.
+//!   `matadd/{ref,packed,bitplane,rowpar,simd}`,
+//!   `matshift/{ref,planes,rowpar,simd}`, `fakeshift/{ref,cached}`.
+//!   Registering a new backend automatically enrolls it in the fig4/fig5
+//!   sweeps and the property suite.
 //! - [`planner::Planner`] — benchmarks-or-looks-up the fastest backend per
 //!   (primitive, shape), memoizes the choice, and records measurements;
-//!   `pin` installs offline-autotuned choices without measuring.
+//!   `pin` installs offline-autotuned choices without measuring, `force`
+//!   overrides a whole primitive for per-backend experiments, and saved
+//!   lookup tables are stamped with the host CPU feature set.
 //! - [`parallel`] — the row-parallel `*/rowpar` backends executing on the
-//!   persistent `util::Pool` (bit-exact vs their serial counterparts).
+//!   persistent `util::Pool` (bit-exact vs their serial counterparts), plus
+//!   the shared pooled-row/grouped scheduling skeletons.
+//! - [`simd`] — explicit-SIMD `*/simd` backends: AVX2/NEON `core::arch`
+//!   inner loops behind runtime CPU-feature detection (override:
+//!   `SHIFTADD_NO_SIMD=1`), with a portable chunked fallback on every
+//!   platform; bit-exact vs `matadd/ref` / `matshift/ref`.
 //!
 //! These are the *true-arithmetic* counterparts of the L1 Pallas kernels:
 //! MatShift really executes integer `<<`/`>>` on INT8/INT32 operands, MatAdd
@@ -51,6 +59,7 @@ pub mod matshift;
 pub mod parallel;
 pub mod planner;
 pub mod registry;
+pub mod simd;
 
 pub use api::{LinearKernel, Operand, PreparedWeights, Primitive, RawWeights};
 pub use planner::{Planner, Shape};

@@ -3,25 +3,33 @@
 //! the MoE Shift expert (and any large-`m` caller) finally exploits the
 //! worker pool instead of running single-threaded.
 //!
-//! Parallelization is by contiguous row ranges: each pool job computes
-//! `matshift_fast_rows` / `matadd_pm1_rows` over its chunk against the
-//! `Arc`-shared prepared weights, and the results are stitched back in
-//! order. Per-row accumulation order is identical to the serial kernels, so
-//! the parallel backends are *bit-exact* vs `matshift/planes` and
-//! `matadd/bitplane` (asserted by the property suite).
+//! Parallelization is by contiguous row ranges: each pool job computes a
+//! row-range core (`matshift_fast_rows` / `matadd_pm1_rows`, or the simd
+//! cores for the `*/simd` backends) over its chunk against the `Arc`-shared
+//! prepared weights, and the results are stitched back in order. Per-row
+//! accumulation order is identical to the serial kernels, so the parallel
+//! backends are *bit-exact* vs `matshift/planes` and `matadd/bitplane`
+//! (asserted by the property suite).
+//!
+//! The scheduling skeleton is shared: [`run_matadd_rows`],
+//! [`run_matshift_rows`], and [`run_grouped_matadd_forked`] take the row
+//! core as a function pointer, so `*/rowpar` (serial cores) and `*/simd`
+//! (vectorized cores, `kernels::simd`) are the same dispatch logic around
+//! different inner loops.
 //!
 //! Do not call these backends from inside pool jobs themselves: a job that
 //! blocks on `Pool::scatter` can deadlock once every worker is blocked the
 //! same way.
 
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 
 use crate::energy::ops::MacStyle;
 use crate::kernels::api::{
     check_grouped_shapes, LinearKernel, Operand, PreparedWeights, Primitive, RawWeights,
 };
 use crate::kernels::backends::{MatAddBitplane, MatShiftPlanes, SHIFT_TOL};
-use crate::kernels::matshift::PREC;
+use crate::kernels::matadd::PackedPm1;
+use crate::kernels::matshift::{ShiftPlanes, PREC};
 use crate::kernels::{matadd, matshift};
 use crate::util::pool::Pool;
 
@@ -55,6 +63,178 @@ pub fn row_chunks(m: usize, chunks: usize) -> Vec<(usize, usize)> {
         .collect()
 }
 
+/// A ±1 MatAdd row-range core: rows `r0..r1` of the operand against the
+/// packed weights, `(r1-r0)×n` output. Both the serial and simd cores fit.
+pub type MatAddRowsFn = fn(&[f32], &PackedPm1, usize, usize) -> Vec<f32>;
+
+/// A MatShift row-range core: rows `r0..r1` of the INT8-widened operand
+/// against the shift planes, `(r1-r0)×n` i64 accumulators.
+pub type MatShiftRowsFn = fn(&[i32], &ShiftPlanes, usize, usize) -> Vec<i64>;
+
+/// Shared ±1 MatAdd execution skeleton: unpack weights/operand, run the
+/// row core inline below [`MIN_PAR_ROWS`], otherwise fan contiguous row
+/// chunks across the shared pool and stitch results back in order.
+pub fn run_matadd_rows(
+    rows_fn: MatAddRowsFn,
+    who: &'static str,
+    w: &PreparedWeights,
+    x: &Operand,
+    out: &mut [f32],
+) {
+    let packed = match w {
+        PreparedWeights::Pm1(p) => p.clone(),
+        other => panic!("{who}: expected pm1 weights, got {}", other.variant_name()),
+    };
+    let (xv, m) = match x {
+        Operand::F32 { m, k, x } => {
+            assert_eq!(*k, packed.k, "{who}: operand k mismatch");
+            (x.clone(), *m)
+        }
+        Operand::Int8 { .. } => panic!("{who}: expected f32 operand"),
+    };
+    let n = packed.n;
+    assert_eq!(out.len(), m * n, "{who}: output is not m*n");
+    let pool = shared_pool();
+    if m < MIN_PAR_ROWS || pool.len() == 1 {
+        out.copy_from_slice(&rows_fn(&xv, &packed, 0, m));
+        return;
+    }
+    let ranges = row_chunks(m, pool.len() * 2);
+    let jobs: Vec<_> = ranges
+        .iter()
+        .map(|&(r0, r1)| {
+            let packed = packed.clone();
+            let xv = xv.clone();
+            move || rows_fn(&xv, &packed, r0, r1)
+        })
+        .collect();
+    let results = pool.scatter(jobs);
+    for ((r0, _), chunk) in ranges.into_iter().zip(results) {
+        out[r0 * n..r0 * n + chunk.len()].copy_from_slice(&chunk);
+    }
+}
+
+/// Shared MatShift execution skeleton: accept either operand form
+/// (quantizing f32 through the one shared path), run the row core inline
+/// below [`MIN_PAR_ROWS`], otherwise fan row chunks across the pool;
+/// dequantize the i64 accumulators with the operand scale.
+pub fn run_matshift_rows(
+    rows_fn: MatShiftRowsFn,
+    who: &'static str,
+    w: &PreparedWeights,
+    x: &Operand,
+    out: &mut [f32],
+) {
+    let planes = match w {
+        PreparedWeights::Planes(p) => p.clone(),
+        other => panic!(
+            "{who}: expected planes weights, got {}",
+            other.variant_name()
+        ),
+    };
+    let (xq, m, scale) = match x {
+        Operand::Int8 { m, k, xq, scale } => {
+            assert_eq!(*k, planes.rows, "{who}: operand k mismatch");
+            (xq.clone(), *m, *scale)
+        }
+        Operand::F32 { m, k, x } => {
+            // Route through the one quantization path every shift
+            // backend shares, so calibration changes stay in sync.
+            assert_eq!(*k, planes.rows, "{who}: operand k mismatch");
+            match Operand::quantized(x, *m, *k) {
+                Operand::Int8 { xq, scale, .. } => (xq, *m, scale),
+                Operand::F32 { .. } => unreachable!("quantized() yields Int8"),
+            }
+        }
+    };
+    let n = planes.cols;
+    assert_eq!(out.len(), m * n, "{who}: output is not m*n");
+    let s = scale / (PREC as f32).exp2();
+    let pool = shared_pool();
+    if m < MIN_PAR_ROWS || pool.len() == 1 {
+        let acc = rows_fn(&xq, &planes, 0, m);
+        for (o, &a) in out.iter_mut().zip(&acc) {
+            *o = a as f32 * s;
+        }
+        return;
+    }
+    let ranges = row_chunks(m, pool.len() * 2);
+    let jobs: Vec<_> = ranges
+        .iter()
+        .map(|&(r0, r1)| {
+            let planes = planes.clone();
+            let xq = xq.clone();
+            move || rows_fn(&xq, &planes, r0, r1)
+        })
+        .collect();
+    let results = pool.scatter(jobs);
+    for ((r0, _), acc) in ranges.into_iter().zip(results) {
+        let dst = &mut out[r0 * n..r0 * n + acc.len()];
+        for (o, &a) in dst.iter_mut().zip(&acc) {
+            *o = a as f32 * s;
+        }
+    }
+}
+
+/// Shared grouped fork/join skeleton for ±1 MatAdd backends: all `G` small
+/// groups in ONE pool fork/join (one job per group running the row core),
+/// instead of the default per-group run loop. Each job executes the row
+/// core over its own group's operand and pm1 weights, so per-row
+/// accumulation order — and therefore the bit-exactness contract vs
+/// `matadd/bitplane` — is unchanged. Groups that are individually large
+/// enough to row-chunk (`m ≥ MIN_PAR_ROWS`) go through `kernel.run`
+/// instead, which spreads each group's rows across the whole pool —
+/// grouping those would strand a big group on a single worker.
+pub fn run_grouped_matadd_forked(
+    kernel: &dyn LinearKernel,
+    rows_fn: MatAddRowsFn,
+    who: &'static str,
+    ws: &[PreparedWeights],
+    x: &[f32],
+    m: usize,
+    out: &mut [f32],
+) {
+    let (g, k, n) = check_grouped_shapes(ws, x.len(), out.len(), m);
+    if m >= MIN_PAR_ROWS {
+        for (gi, w) in ws.iter().enumerate() {
+            let op = kernel.prepare_operand(&x[gi * m * k..(gi + 1) * m * k], m, k);
+            kernel.run(w, &op, &mut out[gi * m * n..(gi + 1) * m * n]);
+        }
+        return;
+    }
+    let packed: Vec<_> = ws
+        .iter()
+        .map(|w| match w {
+            PreparedWeights::Pm1(p) => {
+                assert_eq!(p.k, k, "{who}: grouped operand k mismatch");
+                p.clone()
+            }
+            other => panic!("{who}: expected pm1 weights, got {}", other.variant_name()),
+        })
+        .collect();
+    let pool = shared_pool();
+    if g == 1 || g * m < MIN_PAR_ROWS || pool.len() == 1 {
+        for (gi, p) in packed.iter().enumerate() {
+            let chunk = rows_fn(&x[gi * m * k..(gi + 1) * m * k], p, 0, m);
+            out[gi * m * n..(gi + 1) * m * n].copy_from_slice(&chunk);
+        }
+        return;
+    }
+    let xs = Arc::new(x.to_vec());
+    let jobs: Vec<_> = packed
+        .iter()
+        .enumerate()
+        .map(|(gi, p)| {
+            let p = p.clone();
+            let xs = xs.clone();
+            move || rows_fn(&xs[gi * m * k..(gi + 1) * m * k], &p, 0, m)
+        })
+        .collect();
+    for (gi, chunk) in pool.scatter(jobs).into_iter().enumerate() {
+        out[gi * m * n..(gi + 1) * m * n].copy_from_slice(&chunk);
+    }
+}
+
 /// `matshift/rowpar` — row-parallel blocked MatShift on the shared pool.
 pub struct MatShiftRowPar;
 
@@ -86,55 +266,7 @@ impl LinearKernel for MatShiftRowPar {
     }
 
     fn run(&self, w: &PreparedWeights, x: &Operand, out: &mut [f32]) {
-        let planes = match w {
-            PreparedWeights::Planes(p) => p.clone(),
-            other => panic!(
-                "matshift/rowpar: expected planes weights, got {}",
-                other.variant_name()
-            ),
-        };
-        let (xq, m, scale) = match x {
-            Operand::Int8 { m, k, xq, scale } => {
-                assert_eq!(*k, planes.rows, "matshift/rowpar: operand k mismatch");
-                (xq.clone(), *m, *scale)
-            }
-            Operand::F32 { m, k, x } => {
-                // Route through the one quantization path every shift
-                // backend shares, so calibration changes stay in sync.
-                assert_eq!(*k, planes.rows, "matshift/rowpar: operand k mismatch");
-                match Operand::quantized(x, *m, *k) {
-                    Operand::Int8 { xq, scale, .. } => (xq, *m, scale),
-                    Operand::F32 { .. } => unreachable!("quantized() yields Int8"),
-                }
-            }
-        };
-        let n = planes.cols;
-        assert_eq!(out.len(), m * n, "matshift/rowpar: output is not m*n");
-        let s = scale / (PREC as f32).exp2();
-        let pool = shared_pool();
-        if m < MIN_PAR_ROWS || pool.len() == 1 {
-            let acc = matshift::matshift_fast_rows(&xq, &planes, 0, m);
-            for (o, &a) in out.iter_mut().zip(&acc) {
-                *o = a as f32 * s;
-            }
-            return;
-        }
-        let ranges = row_chunks(m, pool.len() * 2);
-        let jobs: Vec<_> = ranges
-            .iter()
-            .map(|&(r0, r1)| {
-                let planes = planes.clone();
-                let xq = xq.clone();
-                move || matshift::matshift_fast_rows(&xq, &planes, r0, r1)
-            })
-            .collect();
-        let results = pool.scatter(jobs);
-        for ((r0, _), acc) in ranges.into_iter().zip(results) {
-            let dst = &mut out[r0 * n..r0 * n + acc.len()];
-            for (o, &a) in dst.iter_mut().zip(&acc) {
-                *o = a as f32 * s;
-            }
-        }
+        run_matshift_rows(matshift::matshift_fast_rows, "matshift/rowpar", w, x, out);
     }
 }
 
@@ -161,94 +293,13 @@ impl LinearKernel for MatAddRowPar {
     }
 
     fn run(&self, w: &PreparedWeights, x: &Operand, out: &mut [f32]) {
-        let packed = match w {
-            PreparedWeights::Pm1(p) => p.clone(),
-            other => panic!(
-                "matadd/rowpar: expected pm1 weights, got {}",
-                other.variant_name()
-            ),
-        };
-        let (xv, m) = match x {
-            Operand::F32 { m, k, x } => {
-                assert_eq!(*k, packed.k, "matadd/rowpar: operand k mismatch");
-                (x.clone(), *m)
-            }
-            Operand::Int8 { .. } => panic!("matadd/rowpar: expected f32 operand"),
-        };
-        let n = packed.n;
-        assert_eq!(out.len(), m * n, "matadd/rowpar: output is not m*n");
-        let pool = shared_pool();
-        if m < MIN_PAR_ROWS || pool.len() == 1 {
-            out.copy_from_slice(&matadd::matadd_pm1_rows(&xv, &packed, 0, m));
-            return;
-        }
-        let ranges = row_chunks(m, pool.len() * 2);
-        let jobs: Vec<_> = ranges
-            .iter()
-            .map(|&(r0, r1)| {
-                let packed = packed.clone();
-                let xv = xv.clone();
-                move || matadd::matadd_pm1_rows(&xv, &packed, r0, r1)
-            })
-            .collect();
-        let results = pool.scatter(jobs);
-        for ((r0, _), chunk) in ranges.into_iter().zip(results) {
-            out[r0 * n..r0 * n + chunk.len()].copy_from_slice(&chunk);
-        }
+        run_matadd_rows(matadd::matadd_pm1_rows, "matadd/rowpar", w, x, out);
     }
 
     /// Fused grouped dispatch: all `G` small groups in ONE pool fork/join
-    /// (one job per group), instead of the default's per-group run loop.
-    /// Each job executes the serial row core over its own group's operand
-    /// and pm1 weights, so per-row accumulation order — and therefore the
-    /// bit-exactness contract vs `matadd/bitplane` — is unchanged. Groups
-    /// that are individually large enough to row-chunk (`m ≥ MIN_PAR_ROWS`)
-    /// go through [`MatAddRowPar::run`] instead, which spreads each group's
-    /// rows across the whole pool — grouping those would strand a big
-    /// group on a single worker.
+    /// (see [`run_grouped_matadd_forked`] for the scheduling contract).
     fn run_grouped(&self, ws: &[PreparedWeights], x: &[f32], m: usize, out: &mut [f32]) {
-        let (g, k, n) = check_grouped_shapes(ws, x.len(), out.len(), m);
-        if m >= MIN_PAR_ROWS {
-            for (gi, w) in ws.iter().enumerate() {
-                let op = self.prepare_operand(&x[gi * m * k..(gi + 1) * m * k], m, k);
-                self.run(w, &op, &mut out[gi * m * n..(gi + 1) * m * n]);
-            }
-            return;
-        }
-        let packed: Vec<_> = ws
-            .iter()
-            .map(|w| match w {
-                PreparedWeights::Pm1(p) => {
-                    assert_eq!(p.k, k, "matadd/rowpar: grouped operand k mismatch");
-                    p.clone()
-                }
-                other => panic!(
-                    "matadd/rowpar: expected pm1 weights, got {}",
-                    other.variant_name()
-                ),
-            })
-            .collect();
-        let pool = shared_pool();
-        if g == 1 || g * m < MIN_PAR_ROWS || pool.len() == 1 {
-            for (gi, p) in packed.iter().enumerate() {
-                let chunk = matadd::matadd_pm1_rows(&x[gi * m * k..(gi + 1) * m * k], p, 0, m);
-                out[gi * m * n..(gi + 1) * m * n].copy_from_slice(&chunk);
-            }
-            return;
-        }
-        let xs = std::sync::Arc::new(x.to_vec());
-        let jobs: Vec<_> = packed
-            .iter()
-            .enumerate()
-            .map(|(gi, p)| {
-                let p = p.clone();
-                let xs = xs.clone();
-                move || matadd::matadd_pm1_rows(&xs[gi * m * k..(gi + 1) * m * k], &p, 0, m)
-            })
-            .collect();
-        for (gi, chunk) in pool.scatter(jobs).into_iter().enumerate() {
-            out[gi * m * n..(gi + 1) * m * n].copy_from_slice(&chunk);
-        }
+        run_grouped_matadd_forked(self, matadd::matadd_pm1_rows, "matadd/rowpar", ws, x, m, out);
     }
 }
 

@@ -6,7 +6,17 @@
 //! formats built outside the timed region, exactly like deployment) and
 //! caches the winner; later calls are a map lookup. `pin` installs a choice
 //! without measuring — the hook for offline-autotuned lookup tables, the
-//! ROADMAP's per-shape dispatch direction.
+//! ROADMAP's per-shape dispatch direction — and `force` overrides every
+//! shape of one primitive (the per-backend experiment hook the
+//! `native_engine` bench sweeps kernel families with).
+//!
+//! Lookup tables are **portable across hosts**: [`table_json`] stamps the
+//! CPU feature set the table was autotuned under (`cpu_features`, see
+//! `kernels::simd::detect`), and [`Planner::pin_table_json`] skips —
+//! with a warning, instead of failing — entries whose backend (or
+//! primitive) this registry does not have, so a table pinned on one host
+//! degrades to lazy re-planning of the affected shapes rather than
+//! crashing at startup or dispatch time.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -17,6 +27,7 @@ use anyhow::{anyhow, Result};
 
 use crate::kernels::api::{LinearKernel, Primitive, RawWeights};
 use crate::kernels::registry::KernelRegistry;
+use crate::kernels::simd::detect;
 use crate::util::json::Json;
 use crate::util::rng::XorShift64;
 
@@ -49,6 +60,8 @@ pub struct Choice {
 pub struct Planner {
     registry: Arc<KernelRegistry>,
     cache: Mutex<HashMap<(Primitive, Shape), Arc<dyn LinearKernel>>>,
+    /// whole-primitive overrides installed by [`Planner::force`]
+    forced: Mutex<HashMap<Primitive, Arc<dyn LinearKernel>>>,
     log: Mutex<Vec<Choice>>,
     reps: usize,
 }
@@ -58,6 +71,7 @@ impl Planner {
         Planner {
             registry,
             cache: Mutex::new(HashMap::new()),
+            forced: Mutex::new(HashMap::new()),
             log: Mutex::new(Vec::new()),
             reps: 3,
         }
@@ -75,6 +89,9 @@ impl Planner {
     /// (losers adopt it) and only the winning measurement is logged, so
     /// [`Planner::choices`] holds at most one entry per decided shape.
     pub fn choose(&self, primitive: Primitive, shape: Shape) -> Arc<dyn LinearKernel> {
+        if let Some(k) = self.forced_for(primitive, shape) {
+            return k;
+        }
         if let Some(k) = self.cache.lock().unwrap().get(&(primitive, shape)) {
             return k.clone();
         }
@@ -101,6 +118,9 @@ impl Planner {
     /// written before the fused geometry existed, which pinned the
     /// per-head `m = head_dim` shape — with zero startup benchmarking.
     pub fn choose_batched(&self, primitive: Primitive, shape: Shape) -> Arc<dyn LinearKernel> {
+        if let Some(k) = self.forced_for(primitive, shape) {
+            return k;
+        }
         // Exact hit, family lookup, and cache insert all happen under ONE
         // cache lock so a racing `choose` on the same shape can neither be
         // overwritten nor double-logged (the one-decision-per-shape
@@ -132,6 +152,48 @@ impl Planner {
             }
             None => self.choose(primitive, shape),
         }
+    }
+
+    /// Force **every** `choose`/`choose_batched` for `primitive` — any
+    /// shape, decided or not — to return `backend`: the per-backend
+    /// experiment hook (the `native_engine` bench sweeps kernel families
+    /// end to end with it). Each forced shape is cached and logged once as
+    /// a pinned-style choice, so saved tables record what actually ran.
+    /// Panics if the backend is not registered.
+    pub fn force(&self, primitive: Primitive, backend: &str) {
+        let k = self
+            .registry
+            .get(primitive, backend)
+            .unwrap_or_else(|| panic!("no backend {}/{backend}", primitive.name()));
+        self.forced.lock().unwrap().insert(primitive, k);
+    }
+
+    /// Resolve a [`Planner::force`] override for one shape, caching and
+    /// logging the first sighting of each shape (same bookkeeping as
+    /// [`Planner::pin`], so tables saved afterwards carry it).
+    fn forced_for(&self, primitive: Primitive, shape: Shape) -> Option<Arc<dyn LinearKernel>> {
+        let kernel = self.forced.lock().unwrap().get(&primitive)?.clone();
+        let mut cache = self.cache.lock().unwrap();
+        let fresh = match cache.get(&(primitive, shape)) {
+            Some(cached) => cached.id() != kernel.id(),
+            None => true,
+        };
+        if fresh {
+            cache.insert((primitive, shape), kernel.clone());
+            drop(cache);
+            let mut log = self.log.lock().unwrap();
+            // replace any superseded decision for this shape, so choices()
+            // (and hence saved tables and the chosen_backend gauge) keep
+            // the one-entry-per-decided-shape invariant under force
+            log.retain(|c| !(c.primitive == primitive && c.shape == shape));
+            log.push(Choice {
+                primitive,
+                shape,
+                backend: kernel.backend().to_string(),
+                measured_ms: Vec::new(),
+            });
+        }
+        Some(kernel)
     }
 
     /// Install a backend for a shape without measuring (lookup tables,
@@ -169,21 +231,34 @@ impl Planner {
     }
 
     /// Pin every entry of a lookup-table JSON. Returns the number of pinned
-    /// choices; fails (without panicking) on malformed entries or backends
-    /// missing from this registry.
+    /// choices. Entries naming a backend (or primitive) this registry does
+    /// not have are **skipped with a warning** instead of failing the whole
+    /// load: a table autotuned on another host — see the table's
+    /// `cpu_features` stamp — must degrade to lazy re-planning of the
+    /// affected shapes, never crash at startup or dispatch time.
+    /// Structurally malformed tables (missing keys, wrong types) still
+    /// fail.
     pub fn pin_table_json(&self, table: &Json) -> Result<usize> {
+        if let Some(stamp) = table.get("cpu_features").and_then(|v| v.as_str()) {
+            let host = detect::active_level().name();
+            if stamp != host {
+                eprintln!(
+                    "planner: table was autotuned with cpu_features={stamp}, this host runs \
+                     {host}; choices may be suboptimal and unknown backends will re-plan"
+                );
+            }
+        }
         let rows = table
             .req("choices")?
             .as_arr()
             .ok_or_else(|| anyhow!("'choices' is not an array"))?;
         let mut pinned = 0usize;
+        let mut skipped = 0usize;
         for row in rows {
             let prim_name = row
                 .req("primitive")?
                 .as_str()
                 .ok_or_else(|| anyhow!("'primitive' is not a string"))?;
-            let primitive = Primitive::parse(prim_name)
-                .ok_or_else(|| anyhow!("unknown primitive '{prim_name}'"))?;
             let backend = row
                 .req("backend")?
                 .as_str()
@@ -193,14 +268,34 @@ impl Planner {
                 row.req("k")?.as_usize().ok_or_else(|| anyhow!("bad k"))?,
                 row.req("n")?.as_usize().ok_or_else(|| anyhow!("bad n"))?,
             );
-            if self.registry.get(primitive, backend).is_none() {
-                anyhow::bail!(
-                    "planner table names unregistered backend {}/{backend}",
-                    primitive.name()
+            let Some(primitive) = Primitive::parse(prim_name) else {
+                eprintln!(
+                    "planner: skipping table entry for unknown primitive '{prim_name}' \
+                     (shape {}x{}x{} will re-plan)",
+                    shape.m, shape.k, shape.n
                 );
+                skipped += 1;
+                continue;
+            };
+            if self.registry.get(primitive, backend).is_none() {
+                eprintln!(
+                    "planner: skipping table entry {}/{backend} — not in this registry \
+                     (shape {}x{}x{} will re-plan)",
+                    primitive.name(),
+                    shape.m,
+                    shape.k,
+                    shape.n
+                );
+                skipped += 1;
+                continue;
             }
             self.pin(primitive, shape, backend);
             pinned += 1;
+        }
+        if skipped > 0 {
+            eprintln!(
+                "planner: {skipped} table entries skipped; affected shapes re-plan on first use"
+            );
         }
         Ok(pinned)
     }
@@ -262,7 +357,10 @@ impl Planner {
 }
 
 /// Lookup-table JSON for an arbitrary decision list (lets serving code dump
-/// a backend's choices without holding the [`Planner`] itself).
+/// a backend's choices without holding the [`Planner`] itself). The table
+/// is stamped with the CPU feature set it was autotuned under
+/// (`cpu_features`), so a load on a differently-equipped host can warn and
+/// degrade instead of silently mis-pinning.
 pub fn table_json(choices: &[Choice]) -> Json {
     let rows = choices
         .iter()
@@ -276,7 +374,10 @@ pub fn table_json(choices: &[Choice]) -> Json {
             ])
         })
         .collect();
-    Json::obj(vec![("choices", Json::Arr(rows))])
+    Json::obj(vec![
+        ("cpu_features", Json::str(detect::active_level().name())),
+        ("choices", Json::Arr(rows)),
+    ])
 }
 
 #[cfg(test)]
@@ -295,7 +396,7 @@ mod tests {
             1,
             "second choose must hit the cache"
         );
-        assert_eq!(planner.choices()[0].measured_ms.len(), 4);
+        assert_eq!(planner.choices()[0].measured_ms.len(), 5);
     }
 
     #[test]
@@ -355,13 +456,112 @@ mod tests {
     }
 
     #[test]
-    fn table_with_unknown_backend_fails_cleanly() {
+    fn table_with_unknown_backend_skips_and_replans() {
+        // Portability contract: a table pinned on a host whose registry had
+        // a backend this one lacks (e.g. a different CPU feature set, per
+        // the cpu_features stamp) must load anyway — the bogus entries are
+        // skipped and their shapes fall back to live planning, instead of
+        // failing the whole load (or worse, failing at dispatch time).
         let p = Planner::new(Arc::new(KernelRegistry::with_defaults()));
         let table = Json::parse(
-            r#"{"choices": [{"primitive": "matmul", "m": 1, "k": 1, "n": 1, "backend": "gpu"}]}"#,
+            r#"{"cpu_features": "avx512-unicorn", "choices": [
+                {"primitive": "matmul", "m": 6, "k": 5, "n": 4, "backend": "gpu"},
+                {"primitive": "hologram", "m": 1, "k": 1, "n": 1, "backend": "ref"},
+                {"primitive": "matadd", "m": 3, "k": 5, "n": 7, "backend": "bitplane"}
+            ]}"#,
         )
         .unwrap();
-        assert!(p.pin_table_json(&table).is_err());
+        assert_eq!(p.pin_table_json(&table).unwrap(), 1, "only the valid row pins");
+        // the pinned row answers without measuring
+        let k = p.choose(Primitive::MatAdd, Shape::new(3, 5, 7));
+        assert_eq!(k.id(), "matadd/bitplane");
+        assert!(p.choices().iter().all(|c| c.measured_ms.is_empty()));
+        // the skipped shape re-plans live instead of crashing
+        let k = p.choose(Primitive::MatMul, Shape::new(6, 5, 4));
+        assert_eq!(k.primitive(), Primitive::MatMul);
+        assert!(
+            p.choices().iter().any(|c| !c.measured_ms.is_empty()),
+            "skipped shape must have been re-benchmarked"
+        );
+    }
+
+    #[test]
+    fn table_with_malformed_entry_still_fails() {
+        let p = Planner::new(Arc::new(KernelRegistry::with_defaults()));
+        let table =
+            Json::parse(r#"{"choices": [{"primitive": "matmul", "m": 1, "k": 1}]}"#).unwrap();
+        assert!(p.pin_table_json(&table).is_err(), "missing keys are structural");
+    }
+
+    #[test]
+    fn table_json_is_stamped_with_cpu_features() {
+        let p = Planner::new(Arc::new(KernelRegistry::with_defaults()));
+        p.pin(Primitive::MatAdd, Shape::new(2, 2, 2), "simd");
+        let table = p.to_table_json();
+        let stamp = table.get("cpu_features").and_then(|v| v.as_str()).unwrap();
+        assert_eq!(
+            stamp,
+            crate::kernels::simd::active_level().name(),
+            "stamp must reflect the level the choices were made under"
+        );
+        // and a fresh planner accepts its own stamp
+        let q = Planner::new(Arc::new(KernelRegistry::with_defaults()));
+        assert_eq!(q.pin_table_json(&table).unwrap(), 1);
+    }
+
+    #[test]
+    fn force_overrides_every_shape_of_a_primitive() {
+        let planner = Planner::new(Arc::new(KernelRegistry::with_defaults()));
+        // decide one shape normally first: force must override it too
+        let before = planner.choose(Primitive::MatAdd, Shape::new(6, 5, 4));
+        assert_eq!(before.primitive(), Primitive::MatAdd);
+        planner.force(Primitive::MatAdd, "simd");
+        assert_eq!(
+            planner.choose(Primitive::MatAdd, Shape::new(6, 5, 4)).id(),
+            "matadd/simd"
+        );
+        assert_eq!(
+            planner
+                .choose_batched(Primitive::MatAdd, Shape::new(60, 5, 4))
+                .id(),
+            "matadd/simd"
+        );
+        // other primitives are untouched
+        assert_eq!(
+            planner.choose(Primitive::MatMul, Shape::new(4, 4, 4)).primitive(),
+            Primitive::MatMul
+        );
+        // forced decisions are logged unmeasured, so saved tables carry
+        // them — and a superseded benchmark entry is REPLACED, keeping one
+        // log entry per decided shape (the gauge/table invariant)
+        let shape_entries = planner
+            .choices()
+            .iter()
+            .filter(|c| c.primitive == Primitive::MatAdd && c.shape == Shape::new(6, 5, 4))
+            .count();
+        assert_eq!(shape_entries, 1, "force must not duplicate a shape's log entry");
+        // the fresh 60×5×4 shape always logs an unmeasured forced entry;
+        // 6×5×4 is replaced only if the benchmark had picked another
+        // backend (if simd won outright, its measured entry stands)
+        let forced_logged = planner
+            .choices()
+            .iter()
+            .filter(|c| c.backend == "simd" && c.measured_ms.is_empty())
+            .count();
+        assert!(forced_logged >= 1, "forced choices must be logged");
+        // every decided matadd shape resolves to the forced backend
+        assert!(planner
+            .choices()
+            .iter()
+            .filter(|c| c.primitive == Primitive::MatAdd)
+            .all(|c| c.backend == "simd"));
+    }
+
+    #[test]
+    #[should_panic(expected = "no backend")]
+    fn force_unknown_backend_panics() {
+        let planner = Planner::new(Arc::new(KernelRegistry::with_defaults()));
+        planner.force(Primitive::MatAdd, "gpu");
     }
 
     #[test]

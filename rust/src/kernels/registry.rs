@@ -14,6 +14,7 @@ use crate::kernels::backends::{
     MatMulNaive, MatShiftPlanes, MatShiftRef,
 };
 use crate::kernels::parallel::{MatAddRowPar, MatShiftRowPar};
+use crate::kernels::simd::{MatAddSimd, MatShiftSimd};
 
 /// An ordered collection of backends (registration order is enumeration
 /// order, so defaults list reference kernels before deployment ones).
@@ -30,7 +31,10 @@ impl KernelRegistry {
     }
 
     /// Every built-in backend: matmul/{naive,blocked}, matadd/{ref,packed,
-    /// bitplane,rowpar}, matshift/{ref,planes,rowpar}, fakeshift/{ref,cached}.
+    /// bitplane,rowpar,simd}, matshift/{ref,planes,rowpar,simd},
+    /// fakeshift/{ref,cached}. The `*/simd` backends always register —
+    /// their portable fallback runs everywhere; runtime detection (and the
+    /// `SHIFTADD_NO_SIMD` override) picks the instruction set per process.
     pub fn with_defaults() -> KernelRegistry {
         let mut r = KernelRegistry::new();
         r.register(Arc::new(MatMulNaive));
@@ -39,9 +43,11 @@ impl KernelRegistry {
         r.register(Arc::new(MatAddPacked));
         r.register(Arc::new(MatAddBitplane));
         r.register(Arc::new(MatAddRowPar));
+        r.register(Arc::new(MatAddSimd));
         r.register(Arc::new(MatShiftRef));
         r.register(Arc::new(MatShiftPlanes));
         r.register(Arc::new(MatShiftRowPar));
+        r.register(Arc::new(MatShiftSimd));
         r.register(Arc::new(FakeShiftRef));
         r.register(Arc::new(FakeShiftCached));
         r
@@ -110,7 +116,7 @@ mod tests {
     #[test]
     fn defaults_cover_every_primitive() {
         let r = KernelRegistry::with_defaults();
-        assert!(r.len() >= 11);
+        assert!(r.len() >= 13);
         for p in Primitive::ALL {
             assert!(!r.for_primitive(p).is_empty(), "{}", p.name());
         }

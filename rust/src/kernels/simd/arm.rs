@@ -1,0 +1,117 @@
+//! NEON cores for the `*/simd` backends (aarch64).
+//!
+//! Same structure as the AVX2 cores: vectorize over output columns, walk
+//! `k` in serial order, so per-element accumulation sequences — and hence
+//! the results — are bit-exact vs `matadd/ref` / `matshift/ref`. MatAdd
+//! uses an 8-wide column tile (two 4-lane vectors, matching the shared
+//! `LANES` block and the one-`u64`-of-sign-bytes load); MatShift uses a
+//! 4-wide tile (its shift/negate planes are i32, one vector per load).
+//!
+//! Every function is `#[target_feature(enable = "neon")]` — NEON is
+//! baseline on aarch64, but dispatch still goes through the runtime
+//! `detect` gate so `SHIFTADD_NO_SIMD` can force the portable core.
+
+use std::arch::aarch64::{
+    vaddq_f32, vaddq_s32, vaddq_s64, vdupq_n_f32, vdupq_n_s32, vdupq_n_s64, vdupq_n_u32,
+    veorq_s32, veorq_u32, vget_high_s32, vget_high_u16, vget_low_s32, vget_low_u16, vld1_u8,
+    vld1q_s32, vmovl_s32, vmovl_u16, vmovl_u8, vreinterpretq_f32_u32, vshlq_n_u32, vshlq_s32,
+    vst1q_f32, vst1q_s64, vsubq_s32,
+};
+
+use crate::kernels::matadd::PackedPm1;
+use crate::kernels::matshift::ShiftPlanes;
+use crate::kernels::simd::portable::{matadd_pm1_tail, matshift_tail, BK, LANES};
+
+/// NEON ±1 MatAdd row core: rows `r0..r1`, 8 columns per tile (two 4-lane
+/// accumulators).
+///
+/// # Safety
+/// The caller must have verified NEON support at runtime
+/// (`SimdLevel::Neon.available()`).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn matadd_pm1_rows_neon(
+    x: &[f32],
+    b: &PackedPm1,
+    r0: usize,
+    r1: usize,
+) -> Vec<f32> {
+    let (k, n) = (b.k, b.n);
+    assert!(r0 <= r1 && r1 * k <= x.len());
+    let mut o = vec![0.0f32; (r1 - r0) * n];
+    for r in r0..r1 {
+        let xrow = &x[r * k..(r + 1) * k];
+        let obase = (r - r0) * n;
+        let mut c0 = 0usize;
+        while c0 + LANES <= n {
+            let mut acc0 = vdupq_n_f32(0.0);
+            let mut acc1 = vdupq_n_f32(0.0);
+            for (kk, xv) in xrow.iter().enumerate() {
+                let xb = vdupq_n_u32(xv.to_bits());
+                // 8 sign bytes → u16x8 → two u32x4 sign-bit masks
+                let sw = vmovl_u8(vld1_u8(b.sign.as_ptr().add(kk * n + c0)));
+                let flip0 = vshlq_n_u32::<24>(vmovl_u16(vget_low_u16(sw)));
+                let flip1 = vshlq_n_u32::<24>(vmovl_u16(vget_high_u16(sw)));
+                acc0 = vaddq_f32(acc0, vreinterpretq_f32_u32(veorq_u32(xb, flip0)));
+                acc1 = vaddq_f32(acc1, vreinterpretq_f32_u32(veorq_u32(xb, flip1)));
+            }
+            vst1q_f32(o.as_mut_ptr().add(obase + c0), acc0);
+            vst1q_f32(o.as_mut_ptr().add(obase + c0 + 4), acc1);
+            c0 += LANES;
+        }
+        for (c, out) in o[obase..obase + n].iter_mut().enumerate().skip(c0) {
+            *out = matadd_pm1_tail(xrow, &b.sign, n, c);
+        }
+    }
+    o
+}
+
+/// NEON MatShift row core: rows `r0..r1`, 4 columns per tile, the serial
+/// kernel's `BK` k-tiling with an i32 vector tile flushed into two i64
+/// vectors.
+///
+/// # Safety
+/// The caller must have verified NEON support at runtime
+/// (`SimdLevel::Neon.available()`).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn matshift_rows_neon(
+    xq: &[i32],
+    w: &ShiftPlanes,
+    r0: usize,
+    r1: usize,
+) -> Vec<i64> {
+    let (k, n) = (w.rows, w.cols);
+    assert!(r0 <= r1 && r1 * k <= xq.len());
+    const CN: usize = 4;
+    let mut acc = vec![0i64; (r1 - r0) * n];
+    for r in r0..r1 {
+        let xrow = &xq[r * k..(r + 1) * k];
+        let obase = (r - r0) * n;
+        let mut c0 = 0usize;
+        while c0 + CN <= n {
+            // i64 accumulators for columns c0..c0+2 and c0+2..c0+4
+            let mut lo = vdupq_n_s64(0);
+            let mut hi = vdupq_n_s64(0);
+            for k0 in (0..k).step_by(BK) {
+                let kend = (k0 + BK).min(k);
+                let mut tile = vdupq_n_s32(0);
+                for kk in k0..kend {
+                    let xv = vdupq_n_s32(xrow[kk]);
+                    let sh = vld1q_s32(w.sh.as_ptr().add(kk * n + c0));
+                    let neg = vld1q_s32(w.neg.as_ptr().add(kk * n + c0));
+                    // vshlq_s32: per-lane left shift (all counts ≥ 0 here)
+                    let v = vshlq_s32(xv, sh);
+                    tile = vaddq_s32(tile, vsubq_s32(veorq_s32(v, neg), neg));
+                }
+                lo = vaddq_s64(lo, vmovl_s32(vget_low_s32(tile)));
+                hi = vaddq_s64(hi, vmovl_s32(vget_high_s32(tile)));
+            }
+            vst1q_s64(acc.as_mut_ptr().add(obase + c0), lo);
+            vst1q_s64(acc.as_mut_ptr().add(obase + c0 + 2), hi);
+            c0 += CN;
+        }
+        for (c, out) in acc[obase..obase + n].iter_mut().enumerate().skip(c0) {
+            *out = matshift_tail(xrow, w, n, c);
+        }
+    }
+    acc
+}

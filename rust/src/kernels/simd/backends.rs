@@ -1,0 +1,141 @@
+//! The `matadd/simd` and `matshift/simd` registry backends: the rowpar
+//! scheduling skeleton (`kernels::parallel`) around the vectorized row
+//! cores, so the backends get simd inner loops *and* the pool fan-out —
+//! including the grouped fork/join override the fused batched attention
+//! path dispatches through.
+//!
+//! Deployment formats are delegated to the serial backends
+//! (`matadd/bitplane` → pm1 sign bytes, `matshift/planes` → shift/negate
+//! planes) so the bit-exactness contract vs `matadd/ref` / `matshift/ref`
+//! cannot drift: same weights, same operand preparation, same per-element
+//! accumulation order, different instruction selection.
+
+use crate::energy::ops::MacStyle;
+use crate::kernels::api::{LinearKernel, Operand, PreparedWeights, Primitive, RawWeights};
+use crate::kernels::backends::{MatAddBitplane, MatShiftPlanes, SHIFT_TOL};
+use crate::kernels::parallel::{run_grouped_matadd_forked, run_matadd_rows, run_matshift_rows};
+use crate::kernels::simd::{matadd_pm1_rows_simd, matshift_rows_simd};
+
+/// `matadd/simd` — vectorized ±1 MatAdd (AVX2 / NEON / portable) on the
+/// shared pool.
+pub struct MatAddSimd;
+
+impl LinearKernel for MatAddSimd {
+    fn primitive(&self) -> Primitive {
+        Primitive::MatAdd
+    }
+
+    fn backend(&self) -> &'static str {
+        "simd"
+    }
+
+    fn mac_style(&self) -> MacStyle {
+        MacStyle::AddInt32
+    }
+
+    /// Same deployment format as the serial `matadd/bitplane` backend —
+    /// delegated so the bit-exactness contract cannot drift.
+    fn prepare(&self, w: &RawWeights) -> PreparedWeights {
+        MatAddBitplane.prepare(w)
+    }
+
+    fn run(&self, w: &PreparedWeights, x: &Operand, out: &mut [f32]) {
+        run_matadd_rows(matadd_pm1_rows_simd, "matadd/simd", w, x, out);
+    }
+
+    /// Fused grouped dispatch: all `G` small groups in ONE pool fork/join,
+    /// each job running the simd row core (see
+    /// [`run_grouped_matadd_forked`] for the scheduling contract).
+    fn run_grouped(&self, ws: &[PreparedWeights], x: &[f32], m: usize, out: &mut [f32]) {
+        run_grouped_matadd_forked(self, matadd_pm1_rows_simd, "matadd/simd", ws, x, m, out);
+    }
+}
+
+/// `matshift/simd` — vectorized variable-shift MatShift (AVX2 / NEON /
+/// portable) on the shared pool.
+pub struct MatShiftSimd;
+
+impl LinearKernel for MatShiftSimd {
+    fn primitive(&self) -> Primitive {
+        Primitive::MatShift
+    }
+
+    fn backend(&self) -> &'static str {
+        "simd"
+    }
+
+    fn mac_style(&self) -> MacStyle {
+        MacStyle::ShiftInt32
+    }
+
+    fn tolerance(&self) -> f32 {
+        SHIFT_TOL
+    }
+
+    /// Same deployment format as the serial `matshift/planes` backend —
+    /// delegated so the bit-exactness contract cannot drift.
+    fn prepare(&self, w: &RawWeights) -> PreparedWeights {
+        MatShiftPlanes.prepare(w)
+    }
+
+    fn prepare_operand(&self, x: &[f32], m: usize, k: usize) -> Operand {
+        MatShiftPlanes.prepare_operand(x, m, k)
+    }
+
+    fn run(&self, w: &PreparedWeights, x: &Operand, out: &mut [f32]) {
+        run_matshift_rows(matshift_rows_simd, "matshift/simd", w, x, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::registry::KernelRegistry;
+    use crate::util::rng::XorShift64;
+
+    #[test]
+    fn simd_backends_are_registered_with_defaults() {
+        let r = KernelRegistry::with_defaults();
+        assert_eq!(r.lookup("matadd/simd").unwrap().backend(), "simd");
+        assert_eq!(r.lookup("matshift/simd").unwrap().backend(), "simd");
+    }
+
+    #[test]
+    fn matadd_simd_matches_bitplane_bit_exactly() {
+        let r = KernelRegistry::with_defaults();
+        let simd = r.lookup("matadd/simd").unwrap();
+        let serial = r.lookup("matadd/bitplane").unwrap();
+        let mut rng = XorShift64::new(31);
+        // spans the inline path and the pooled path
+        for m in [3usize, 40] {
+            let (k, n) = (11, 13);
+            let raw = RawWeights::new(rng.normals(k * n), k, n);
+            let x = rng.normals(m * k);
+            let mut a = vec![0.0f32; m * n];
+            let mut b = vec![0.0f32; m * n];
+            simd.run(&simd.prepare(&raw), &simd.prepare_operand(&x, m, k), &mut a);
+            serial.run(&serial.prepare(&raw), &serial.prepare_operand(&x, m, k), &mut b);
+            assert_eq!(a, b, "m={m}");
+        }
+    }
+
+    #[test]
+    fn matshift_simd_matches_planes_bit_exactly() {
+        let r = KernelRegistry::with_defaults();
+        let simd = r.lookup("matshift/simd").unwrap();
+        let serial = r.lookup("matshift/planes").unwrap();
+        let mut rng = XorShift64::new(37);
+        for m in [5usize, 48] {
+            let (k, n) = (9, 10);
+            let raw = RawWeights::new(rng.normals(k * n), k, n);
+            let x = rng.normals(m * k);
+            // one shared quantized operand so both see identical INT8 data
+            let op = Operand::quantized(&x, m, k);
+            let mut a = vec![0.0f32; m * n];
+            let mut b = vec![0.0f32; m * n];
+            simd.run(&simd.prepare(&raw), &op, &mut a);
+            serial.run(&serial.prepare(&raw), &op, &mut b);
+            assert_eq!(a, b, "m={m}");
+        }
+    }
+}

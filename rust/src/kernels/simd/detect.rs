@@ -1,0 +1,151 @@
+//! Runtime CPU-feature detection for the `*/simd` backends.
+//!
+//! Detection resolves to a [`SimdLevel`]: the best instruction set the host
+//! can execute (AVX2 on x86-64, NEON on aarch64, otherwise the portable
+//! chunked fallback). The `SHIFTADD_NO_SIMD` environment variable forces the
+//! portable level regardless of hardware — the knob CI uses to exercise the
+//! fallback path on machines whose vector units would otherwise shadow it.
+//!
+//! [`active_level`] caches the decision process-wide (one env read, one
+//! feature probe), so the override must be set before the first kernel
+//! dispatch — in practice, before the process starts. [`detect_level`] and
+//! [`resolve_level`] stay uncached for tests.
+
+use std::sync::OnceLock;
+
+/// Environment variable forcing the portable fallback when set to anything
+/// other than empty or `0`.
+pub const NO_SIMD_ENV: &str = "SHIFTADD_NO_SIMD";
+
+/// The instruction-set tiers the simd cores are implemented for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SimdLevel {
+    /// x86-64 AVX2 (8×f32 / 8×i32 vectors, variable per-lane shifts)
+    Avx2,
+    /// aarch64 NEON (4-lane vectors, paired for 8-wide column blocks)
+    Neon,
+    /// chunked-`u64`/unrolled scalar fallback — every platform
+    Portable,
+}
+
+impl SimdLevel {
+    /// Tag used for planner-table stamps and bench JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+            SimdLevel::Portable => "portable",
+        }
+    }
+
+    /// Inverse of [`SimdLevel::name`] (reading table stamps).
+    pub fn parse(s: &str) -> Option<SimdLevel> {
+        [SimdLevel::Avx2, SimdLevel::Neon, SimdLevel::Portable]
+            .into_iter()
+            .find(|l| l.name() == s)
+    }
+
+    /// True when this host can execute the level *right now* — the safety
+    /// gate every dispatch into a `target_feature` core goes through.
+    pub fn available(self) -> bool {
+        match self {
+            SimdLevel::Portable => true,
+            SimdLevel::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_feature_detected!("avx2")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            SimdLevel::Neon => {
+                #[cfg(target_arch = "aarch64")]
+                {
+                    std::arch::is_aarch64_feature_detected!("neon")
+                }
+                #[cfg(not(target_arch = "aarch64"))]
+                {
+                    false
+                }
+            }
+        }
+    }
+}
+
+/// Best level the hardware supports, ignoring the env override.
+pub fn hardware_level() -> SimdLevel {
+    if SimdLevel::Avx2.available() {
+        SimdLevel::Avx2
+    } else if SimdLevel::Neon.available() {
+        SimdLevel::Neon
+    } else {
+        SimdLevel::Portable
+    }
+}
+
+/// True when [`NO_SIMD_ENV`] asks for the portable path.
+pub fn no_simd_env() -> bool {
+    match std::env::var(NO_SIMD_ENV) {
+        Ok(v) => !v.is_empty() && v != "0",
+        Err(_) => false,
+    }
+}
+
+/// Pure resolution step: what level an override flag + this hardware yield.
+/// Split out so tests can exercise the override without mutating process
+/// env (env mutation races other tests in the same binary).
+pub fn resolve_level(no_simd: bool) -> SimdLevel {
+    if no_simd {
+        SimdLevel::Portable
+    } else {
+        hardware_level()
+    }
+}
+
+/// Uncached detection: env override + hardware probe.
+pub fn detect_level() -> SimdLevel {
+    resolve_level(no_simd_env())
+}
+
+/// The process-wide level every `*/simd` backend dispatches on (cached on
+/// first use).
+pub fn active_level() -> SimdLevel {
+    static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
+    *LEVEL.get_or_init(detect_level)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for l in [SimdLevel::Avx2, SimdLevel::Neon, SimdLevel::Portable] {
+            assert_eq!(SimdLevel::parse(l.name()), Some(l));
+        }
+        assert_eq!(SimdLevel::parse("avx512-unicorn"), None);
+    }
+
+    #[test]
+    fn portable_is_always_available() {
+        assert!(SimdLevel::Portable.available());
+        // The hardware level is by construction executable here.
+        assert!(hardware_level().available());
+    }
+
+    #[test]
+    fn override_forces_portable() {
+        assert_eq!(resolve_level(true), SimdLevel::Portable);
+        assert_eq!(resolve_level(false), hardware_level());
+    }
+
+    #[test]
+    fn active_level_is_consistent_with_env() {
+        // Whatever the cached decision was, it must match what the current
+        // env + hardware resolve to (tests never mutate the env).
+        assert_eq!(active_level(), detect_level());
+        assert!(active_level().available());
+    }
+}

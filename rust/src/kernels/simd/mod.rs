@@ -1,0 +1,143 @@
+//! Explicit-SIMD kernel subsystem: vectorized MatAdd / MatShift inner
+//! loops behind runtime CPU-feature detection, with a portable fallback so
+//! `matadd/simd` and `matshift/simd` exist on every platform.
+//!
+//! # Architecture
+//!
+//! - [`detect`] — resolves a [`SimdLevel`] once per process (AVX2 on
+//!   x86-64, NEON on aarch64, portable otherwise), honoring the
+//!   `SHIFTADD_NO_SIMD` env override (CI's forced-fallback knob).
+//! - [`portable`] — chunked-`u64`/unrolled scalar cores, the guaranteed
+//!   floor and the oracle the intrinsic cores are property-tested against.
+//! - `x86` / `arm` — `core::arch` AVX2 and NEON cores behind
+//!   `cfg(target_arch)` + `#[target_feature]`, reached only through the
+//!   level-clamping dispatchers below (never without a runtime probe).
+//! - [`MatAddSimd`] / [`MatShiftSimd`] — the registry backends: simd inner
+//!   loops on the rowpar-style pool fan-out, including the grouped
+//!   fork/join override the fused batched attention path dispatches
+//!   through.
+//!
+//! # Correctness contract
+//!
+//! Every core vectorizes over output columns while walking `k` in serial
+//! order, so each output element accumulates its contributions in exactly
+//! the sequence the serial kernels use — the subsystem is **bit-exact** vs
+//! `matadd/ref` and `matshift/ref` on every shape (enforced by
+//! `rust/tests/prop_simd.rs` across odd shapes, non-multiple-of-lane-width
+//! k/n, and every KSH bit width).
+
+pub mod detect;
+pub mod portable;
+
+#[cfg(target_arch = "aarch64")]
+mod arm;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+mod backends;
+
+pub use backends::{MatAddSimd, MatShiftSimd};
+pub use detect::{active_level, SimdLevel, NO_SIMD_ENV};
+
+use crate::kernels::matadd::PackedPm1;
+use crate::kernels::matshift::ShiftPlanes;
+
+/// Clamp a requested level to what this host can actually execute — the
+/// safety gate in front of the `target_feature` cores.
+fn executable(level: SimdLevel) -> SimdLevel {
+    if level.available() {
+        level
+    } else {
+        SimdLevel::Portable
+    }
+}
+
+/// ±1 MatAdd rows `r0..r1` at an explicit [`SimdLevel`] (clamped to this
+/// host). Bit-exact across levels; tests use this to compare every
+/// available core against the portable oracle.
+pub fn matadd_pm1_rows_at(
+    level: SimdLevel,
+    x: &[f32],
+    b: &PackedPm1,
+    r0: usize,
+    r1: usize,
+) -> Vec<f32> {
+    match executable(level) {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `executable` returned Avx2 only after a runtime probe.
+        SimdLevel::Avx2 => unsafe { x86::matadd_pm1_rows_avx2(x, b, r0, r1) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: `executable` returned Neon only after a runtime probe.
+        SimdLevel::Neon => unsafe { arm::matadd_pm1_rows_neon(x, b, r0, r1) },
+        _ => portable::matadd_pm1_rows_portable(x, b, r0, r1),
+    }
+}
+
+/// ±1 MatAdd rows at the process-wide [`active_level`] — the `matadd/simd`
+/// backend's row core.
+pub fn matadd_pm1_rows_simd(x: &[f32], b: &PackedPm1, r0: usize, r1: usize) -> Vec<f32> {
+    matadd_pm1_rows_at(detect::active_level(), x, b, r0, r1)
+}
+
+/// MatShift rows `r0..r1` at an explicit [`SimdLevel`] (clamped to this
+/// host). Bit-exact across levels.
+pub fn matshift_rows_at(
+    level: SimdLevel,
+    xq: &[i32],
+    w: &ShiftPlanes,
+    r0: usize,
+    r1: usize,
+) -> Vec<i64> {
+    match executable(level) {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `executable` returned Avx2 only after a runtime probe.
+        SimdLevel::Avx2 => unsafe { x86::matshift_rows_avx2(xq, w, r0, r1) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: `executable` returned Neon only after a runtime probe.
+        SimdLevel::Neon => unsafe { arm::matshift_rows_neon(xq, w, r0, r1) },
+        _ => portable::matshift_rows_portable(xq, w, r0, r1),
+    }
+}
+
+/// MatShift rows at the process-wide [`active_level`] — the
+/// `matshift/simd` backend's row core.
+pub fn matshift_rows_simd(xq: &[i32], w: &ShiftPlanes, r0: usize, r1: usize) -> Vec<i64> {
+    matshift_rows_at(detect::active_level(), xq, w, r0, r1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{matadd, matshift};
+    use crate::quant::pow2;
+    use crate::util::rng::XorShift64;
+
+    #[test]
+    fn unavailable_levels_clamp_to_portable() {
+        // At most one intrinsic level is available on any host, so the
+        // other must transparently fall back instead of hitting UB.
+        let mut rng = XorShift64::new(4);
+        let (m, k, n) = (3, 7, 11);
+        let x = rng.normals(m * k);
+        let codes: Vec<i8> = (0..k * n)
+            .map(|_| if rng.uniform() < 0.5 { -1 } else { 1 })
+            .collect();
+        let packed = matadd::PackedPm1::pack(&codes, k, n);
+        let want = matadd::matadd_pm1_rows(&x, &packed, 0, m);
+        for level in [SimdLevel::Avx2, SimdLevel::Neon, SimdLevel::Portable] {
+            assert_eq!(matadd_pm1_rows_at(level, &x, &packed, 0, m), want, "{level:?}");
+        }
+    }
+
+    #[test]
+    fn active_dispatch_matches_serial() {
+        let mut rng = XorShift64::new(5);
+        let (m, k, n) = (5, 9, 13);
+        let xq: Vec<i32> = (0..m * k).map(|_| rng.range(0, 255) as i32 - 127).collect();
+        let planes = matshift::ShiftPlanes::from_pow2(&pow2::quantize(&rng.normals(k * n), k, n));
+        assert_eq!(
+            matshift_rows_simd(&xq, &planes, 0, m),
+            matshift::matshift_fast_rows(&xq, &planes, 0, m)
+        );
+    }
+}

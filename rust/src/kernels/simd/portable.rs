@@ -1,0 +1,192 @@
+//! Portable chunked fallback cores — the `*/simd` backends' guaranteed
+//! floor on every platform.
+//!
+//! Both cores block the output columns into [`LANES`]-wide tiles with the
+//! per-lane arithmetic kept *identical* to the serial kernels
+//! (`matadd::matadd_pm1_rows`, `matshift::matshift_fast_rows`): each output
+//! element still accumulates its contributions in ascending `k`, so the
+//! blocked execution is bit-exact vs the serial references (and hence vs
+//! `matadd/ref` / `matshift/ref`). The MatAdd core additionally reads each
+//! tile's 8 sign bytes through one `u64` load (SWAR-style) instead of 8 byte
+//! loads; the register-resident accumulator tiles are what the
+//! autovectorizer needs to emit real vector code even without intrinsics.
+
+use crate::kernels::matadd::PackedPm1;
+use crate::kernels::matshift::ShiftPlanes;
+
+/// Column-block width shared by the simd cores: one AVX2 vector, two NEON
+/// vectors, or one unrolled portable tile.
+pub const LANES: usize = 8;
+
+/// K-tile width, matching `matshift_fast_rows`: ≤ 32 accumulations of
+/// `|x·2^sh| < 2^22` keep the i32 tile exact before the i64 flush.
+pub(crate) const BK: usize = 32;
+
+/// Scalar-tail MatAdd column — the exact serial formula, shared by every
+/// core's ragged right edge.
+#[inline]
+pub(crate) fn matadd_pm1_tail(xrow: &[f32], sign: &[u8], n: usize, c: usize) -> f32 {
+    let mut a = 0.0f32;
+    for (kk, xv) in xrow.iter().enumerate() {
+        a += f32::from_bits(xv.to_bits() ^ ((sign[kk * n + c] as u32) << 24));
+    }
+    a
+}
+
+/// Scalar-tail MatShift column — the reference k-tiling on one column,
+/// shared by every core's ragged right edge.
+#[inline]
+pub(crate) fn matshift_tail(xrow: &[i32], w: &ShiftPlanes, n: usize, c: usize) -> i64 {
+    let k = xrow.len();
+    let mut acc = 0i64;
+    for k0 in (0..k).step_by(BK) {
+        let kend = (k0 + BK).min(k);
+        let mut tile = 0i32;
+        for kk in k0..kend {
+            let v = xrow[kk].wrapping_shl(w.sh[kk * n + c] as u32);
+            tile = tile.wrapping_add((v ^ w.neg[kk * n + c]).wrapping_sub(w.neg[kk * n + c]));
+        }
+        acc += tile as i64;
+    }
+    acc
+}
+
+/// Portable ±1 MatAdd row core: rows `r0..r1`, column-blocked with one
+/// `u64` sign-byte load per tile row. Bit-exact vs `matadd_pm1_rows`.
+pub fn matadd_pm1_rows_portable(x: &[f32], b: &PackedPm1, r0: usize, r1: usize) -> Vec<f32> {
+    let (k, n) = (b.k, b.n);
+    assert!(r0 <= r1 && r1 * k <= x.len());
+    let mut o = vec![0.0f32; (r1 - r0) * n];
+    for r in r0..r1 {
+        let xrow = &x[r * k..(r + 1) * k];
+        let orow = &mut o[(r - r0) * n..(r - r0 + 1) * n];
+        let mut c0 = 0usize;
+        while c0 + LANES <= n {
+            let mut acc = [0.0f32; LANES];
+            for (kk, xv) in xrow.iter().enumerate() {
+                let xb = xv.to_bits();
+                let base = kk * n + c0;
+                // one u64 covers the tile's 8 sign bytes; from_le_bytes
+                // keeps byte l in lane l on every endianness
+                let sw = u64::from_le_bytes(b.sign[base..base + LANES].try_into().unwrap());
+                for (l, a) in acc.iter_mut().enumerate() {
+                    let s = ((sw >> (8 * l)) & 0xFF) as u32;
+                    *a += f32::from_bits(xb ^ (s << 24));
+                }
+            }
+            orow[c0..c0 + LANES].copy_from_slice(&acc);
+            c0 += LANES;
+        }
+        for (c, o) in orow.iter_mut().enumerate().skip(c0) {
+            *o = matadd_pm1_tail(xrow, &b.sign, n, c);
+        }
+    }
+    o
+}
+
+/// Portable MatShift row core: rows `r0..r1`, column-blocked over the same
+/// `BK` k-tiling as `matshift_fast_rows`. Bit-exact vs the serial kernel
+/// (integer arithmetic, no i32 overflow within a tile by the INT8 operand
+/// contract).
+pub fn matshift_rows_portable(xq: &[i32], w: &ShiftPlanes, r0: usize, r1: usize) -> Vec<i64> {
+    let (k, n) = (w.rows, w.cols);
+    assert!(r0 <= r1 && r1 * k <= xq.len());
+    let mut acc = vec![0i64; (r1 - r0) * n];
+    for r in r0..r1 {
+        let xrow = &xq[r * k..(r + 1) * k];
+        let orow = &mut acc[(r - r0) * n..(r - r0 + 1) * n];
+        let mut c0 = 0usize;
+        while c0 + LANES <= n {
+            for k0 in (0..k).step_by(BK) {
+                let kend = (k0 + BK).min(k);
+                let mut tile = [0i32; LANES];
+                for kk in k0..kend {
+                    let xv = xrow[kk];
+                    let base = kk * n + c0;
+                    let shrow = &w.sh[base..base + LANES];
+                    let negrow = &w.neg[base..base + LANES];
+                    for (l, t) in tile.iter_mut().enumerate() {
+                        let v = xv.wrapping_shl(shrow[l] as u32);
+                        *t = t.wrapping_add((v ^ negrow[l]).wrapping_sub(negrow[l]));
+                    }
+                }
+                for (l, t) in tile.iter().enumerate() {
+                    orow[c0 + l] += *t as i64;
+                }
+            }
+            c0 += LANES;
+        }
+        for (c, o) in orow.iter_mut().enumerate().skip(c0) {
+            *o = matshift_tail(xrow, w, n, c);
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{matadd, matshift};
+    use crate::quant::pow2;
+    use crate::util::prop::check;
+    use crate::util::rng::XorShift64;
+
+    fn pm1(rng: &mut XorShift64, len: usize) -> Vec<i8> {
+        (0..len)
+            .map(|_| if rng.uniform() < 0.5 { -1 } else { 1 })
+            .collect()
+    }
+
+    #[test]
+    fn matadd_core_bit_exact_vs_serial_rows() {
+        check("portable-matadd-vs-serial", 24, 20, |rng, size| {
+            // non-multiple-of-LANES widths by construction
+            let (m, k, n) = (size + 1, size + 3, size + 2);
+            let x = rng.normals(m * k);
+            let packed = matadd::PackedPm1::pack(&pm1(rng, k * n), k, n);
+            let got = matadd_pm1_rows_portable(&x, &packed, 0, m);
+            let want = matadd::matadd_pm1_rows(&x, &packed, 0, m);
+            if got != want {
+                return Err(format!("diverged at m={m} k={k} n={n}"));
+            }
+            // row sub-ranges agree too (the pool-chunk contract)
+            let lo = matadd_pm1_rows_portable(&x, &packed, 1.min(m), m);
+            if lo != matadd::matadd_pm1_rows(&x, &packed, 1.min(m), m) {
+                return Err("row range diverged".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matshift_core_bit_exact_vs_serial_rows() {
+        check("portable-matshift-vs-serial", 24, 20, |rng, size| {
+            let (m, k, n) = (size + 1, size * 2 + 1, size + 3);
+            let xq: Vec<i32> = (0..m * k).map(|_| rng.range(0, 255) as i32 - 127).collect();
+            let q = pow2::quantize(&rng.normals(k * n), k, n);
+            let planes = matshift::ShiftPlanes::from_pow2(&q);
+            let got = matshift_rows_portable(&xq, &planes, 0, m);
+            let want = matshift::matshift_fast_rows(&xq, &planes, 0, m);
+            if got != want {
+                return Err(format!("diverged at m={m} k={k} n={n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn exact_lane_width_columns() {
+        // n = LANES and n = 2·LANES exercise the all-vector (no tail) path.
+        let mut rng = XorShift64::new(9);
+        for n in [LANES, 2 * LANES] {
+            let (m, k) = (3, 5);
+            let x = rng.normals(m * k);
+            let packed = matadd::PackedPm1::pack(&pm1(&mut rng, k * n), k, n);
+            assert_eq!(
+                matadd_pm1_rows_portable(&x, &packed, 0, m),
+                matadd::matadd_pm1_rows(&x, &packed, 0, m),
+                "n={n}"
+            );
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! AVX2 cores for the `*/simd` backends (x86-64).
+//!
+//! Both kernels vectorize over **output columns** — 8 f32/i32 lanes per
+//! tile — while walking `k` in the same order as the serial kernels, so
+//! every output element accumulates its contributions in the identical
+//! sequence and the results are bit-exact vs `matadd/ref` / `matshift/ref`
+//! (IEEE lane adds are the same operation as the scalar `+`; integer lane
+//! ops are wrapping, like the scalar cores).
+//!
+//! Every function here is `#[target_feature(enable = "avx2")]`: callers
+//! must have runtime-verified AVX2 (see `detect::SimdLevel::available`)
+//! before dispatching in — `simd::matadd_pm1_rows_at` is the only caller
+//! and clamps unavailable levels to the portable core.
+
+use std::arch::x86_64::{
+    __m128i, __m256i, _mm256_add_epi32, _mm256_add_epi64, _mm256_add_ps, _mm256_castsi256_ps,
+    _mm256_castsi256_si128, _mm256_cvtepi32_epi64, _mm256_cvtepu8_epi32, _mm256_extracti128_si256,
+    _mm256_loadu_si256, _mm256_set1_epi32, _mm256_setzero_ps, _mm256_setzero_si256,
+    _mm256_slli_epi32, _mm256_sllv_epi32, _mm256_storeu_ps, _mm256_storeu_si256, _mm256_sub_epi32,
+    _mm256_xor_si256, _mm_loadl_epi64,
+};
+
+use crate::kernels::matadd::PackedPm1;
+use crate::kernels::matshift::ShiftPlanes;
+use crate::kernels::simd::portable::{matadd_pm1_tail, matshift_tail, BK, LANES};
+
+/// AVX2 ±1 MatAdd row core: rows `r0..r1`, 8 columns per vector.
+///
+/// # Safety
+/// The caller must have verified AVX2 support at runtime
+/// (`SimdLevel::Avx2.available()`).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn matadd_pm1_rows_avx2(
+    x: &[f32],
+    b: &PackedPm1,
+    r0: usize,
+    r1: usize,
+) -> Vec<f32> {
+    let (k, n) = (b.k, b.n);
+    assert!(r0 <= r1 && r1 * k <= x.len());
+    let mut o = vec![0.0f32; (r1 - r0) * n];
+    for r in r0..r1 {
+        let xrow = &x[r * k..(r + 1) * k];
+        let obase = (r - r0) * n;
+        let mut c0 = 0usize;
+        while c0 + LANES <= n {
+            let mut acc = _mm256_setzero_ps();
+            for (kk, xv) in xrow.iter().enumerate() {
+                let xb = _mm256_set1_epi32(xv.to_bits() as i32);
+                // 8 sign bytes → 8 u32 lanes → sign-bit masks (byte << 24)
+                let sb = _mm_loadl_epi64(b.sign.as_ptr().add(kk * n + c0) as *const __m128i);
+                let flip = _mm256_slli_epi32::<24>(_mm256_cvtepu8_epi32(sb));
+                acc = _mm256_add_ps(acc, _mm256_castsi256_ps(_mm256_xor_si256(xb, flip)));
+            }
+            _mm256_storeu_ps(o.as_mut_ptr().add(obase + c0), acc);
+            c0 += LANES;
+        }
+        for (c, out) in o[obase..obase + n].iter_mut().enumerate().skip(c0) {
+            *out = matadd_pm1_tail(xrow, &b.sign, n, c);
+        }
+    }
+    o
+}
+
+/// AVX2 MatShift row core: rows `r0..r1`, 8 columns per vector, the serial
+/// kernel's `BK` k-tiling with an i32 vector tile flushed into two i64
+/// vectors.
+///
+/// # Safety
+/// The caller must have verified AVX2 support at runtime
+/// (`SimdLevel::Avx2.available()`).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn matshift_rows_avx2(
+    xq: &[i32],
+    w: &ShiftPlanes,
+    r0: usize,
+    r1: usize,
+) -> Vec<i64> {
+    let (k, n) = (w.rows, w.cols);
+    assert!(r0 <= r1 && r1 * k <= xq.len());
+    let mut acc = vec![0i64; (r1 - r0) * n];
+    for r in r0..r1 {
+        let xrow = &xq[r * k..(r + 1) * k];
+        let obase = (r - r0) * n;
+        let mut c0 = 0usize;
+        while c0 + LANES <= n {
+            // i64 accumulators for columns c0..c0+4 and c0+4..c0+8
+            let mut lo = _mm256_setzero_si256();
+            let mut hi = _mm256_setzero_si256();
+            for k0 in (0..k).step_by(BK) {
+                let kend = (k0 + BK).min(k);
+                let mut tile = _mm256_setzero_si256();
+                for kk in k0..kend {
+                    let xv = _mm256_set1_epi32(xrow[kk]);
+                    let sh = _mm256_loadu_si256(w.sh.as_ptr().add(kk * n + c0) as *const __m256i);
+                    let neg = _mm256_loadu_si256(w.neg.as_ptr().add(kk * n + c0) as *const __m256i);
+                    let v = _mm256_sllv_epi32(xv, sh);
+                    tile = _mm256_add_epi32(tile, _mm256_sub_epi32(_mm256_xor_si256(v, neg), neg));
+                }
+                let hi128 = _mm256_extracti128_si256::<1>(tile);
+                lo = _mm256_add_epi64(lo, _mm256_cvtepi32_epi64(_mm256_castsi256_si128(tile)));
+                hi = _mm256_add_epi64(hi, _mm256_cvtepi32_epi64(hi128));
+            }
+            _mm256_storeu_si256(acc.as_mut_ptr().add(obase + c0) as *mut __m256i, lo);
+            _mm256_storeu_si256(acc.as_mut_ptr().add(obase + c0 + 4) as *mut __m256i, hi);
+            c0 += LANES;
+        }
+        for (c, out) in acc[obase..obase + n].iter_mut().enumerate().skip(c0) {
+            *out = matshift_tail(xrow, w, n, c);
+        }
+    }
+    acc
+}

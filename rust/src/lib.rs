@@ -14,7 +14,10 @@
 //!   `kernels::planner::Planner`): every multiplication primitive (MatMul,
 //!   MatAdd, MatShift, FakeShift) is a set of named backends behind one
 //!   `prepare`/`prepare_operand`/`run` contract, including row-parallel
-//!   backends on the persistent `util::pool::Pool`. The harness figures,
+//!   backends on the persistent `util::pool::Pool` and explicit-SIMD
+//!   backends (`kernels::simd`: AVX2/NEON `core::arch` inner loops behind
+//!   runtime CPU-feature detection, portable fallback everywhere,
+//!   `SHIFTADD_NO_SIMD=1` override). The harness figures,
 //!   the kernel-level MoE experts (`moe::experts`), the fig4/fig5 benches,
 //!   and the Eyeriss op counting (`model::ops::PrimitiveStyles`) all
 //!   resolve kernels through the registry; the planner memoizes the fastest

@@ -1,0 +1,271 @@
+//! Property suite for the SIMD kernel subsystem (`kernels::simd`): the
+//! correctness contract is **bit-exactness vs `matadd/ref` and
+//! `matshift/ref` on every shape** — odd dimensions, non-multiple-of-
+//! lane-width k/n, every KSH bit width the attention path uses, grouped
+//! dispatch, and the forced portable fallback (`SHIFTADD_NO_SIMD=1`; CI
+//! runs this suite in both modes).
+
+use std::sync::Arc;
+
+use shiftaddvit::infer::attn::{
+    hamming_linear_attn_batched, hamming_linear_attn_kernel, hamming_linear_attn_ref,
+};
+use shiftaddvit::kernels::api::{LinearKernel, Operand, RawWeights};
+use shiftaddvit::kernels::matadd::PackedPm1;
+use shiftaddvit::kernels::matshift::ShiftPlanes;
+use shiftaddvit::kernels::parallel::MIN_PAR_ROWS;
+use shiftaddvit::kernels::registry::KernelRegistry;
+use shiftaddvit::kernels::simd::{self, SimdLevel};
+use shiftaddvit::kernels::{matadd, matshift};
+use shiftaddvit::quant::pow2;
+use shiftaddvit::util::prop::check;
+use shiftaddvit::util::rng::XorShift64;
+
+fn pm1(rng: &mut XorShift64, len: usize) -> Vec<i8> {
+    (0..len)
+        .map(|_| if rng.uniform() < 0.5 { -1 } else { 1 })
+        .collect()
+}
+
+fn int8_ops(rng: &mut XorShift64, len: usize) -> Vec<i32> {
+    (0..len).map(|_| rng.range(0, 255) as i32 - 127).collect()
+}
+
+/// The deliberately awkward shape grid: boundaries of the 8-lane column
+/// blocks, the 4-lane NEON MatShift tile, the 32-wide k-tiling, and the
+/// pool fan-out threshold.
+fn shape_grid() -> Vec<(usize, usize, usize)> {
+    let mut grid = Vec::new();
+    for &m in &[1usize, 3, MIN_PAR_ROWS - 1, MIN_PAR_ROWS, MIN_PAR_ROWS * 2 + 3] {
+        for &(k, n) in &[(1usize, 1usize), (5, 7), (31, 9), (32, 8), (33, 17), (64, 16)] {
+            grid.push((m, k, n));
+        }
+    }
+    grid
+}
+
+// ---------------------------------------------------------------------------
+// Backend-level bit-exactness vs the /ref oracles
+// ---------------------------------------------------------------------------
+
+/// `matadd/simd` ≡ `matadd/ref` (bit-exact) on the full shape grid: same
+/// ±1 codes, identical per-element accumulation order, so the outputs are
+/// equal as bit patterns, not merely close.
+#[test]
+fn matadd_simd_bit_exact_vs_ref_on_shape_grid() {
+    let registry = KernelRegistry::with_defaults();
+    let simd_k = registry.lookup("matadd/simd").expect("registered");
+    let ref_k = registry.lookup("matadd/ref").expect("registered");
+    let mut rng = XorShift64::new(0x51D0);
+    for (m, k, n) in shape_grid() {
+        let x = rng.normals(m * k);
+        // ±1 raw weights: ref ternarizes, simd binarizes — identical codes
+        let raw = RawWeights::new(
+            pm1(&mut rng, k * n).iter().map(|&v| v as f32).collect(),
+            k,
+            n,
+        );
+        let mut got = vec![0.0f32; m * n];
+        let mut want = vec![0.0f32; m * n];
+        simd_k.run(
+            &simd_k.prepare(&raw),
+            &simd_k.prepare_operand(&x, m, k),
+            &mut got,
+        );
+        ref_k.run(
+            &ref_k.prepare(&raw),
+            &ref_k.prepare_operand(&x, m, k),
+            &mut want,
+        );
+        assert_eq!(got, want, "matadd/simd diverged from /ref at {m}x{k}x{n}");
+    }
+}
+
+/// `matshift/simd` ≡ `matshift/ref` (bit-exact) on the full shape grid
+/// under one shared INT8 operand: identical i64 accumulators (integer
+/// arithmetic, the i32 tiles cannot wrap under the INT8 operand contract),
+/// identical dequantization.
+#[test]
+fn matshift_simd_bit_exact_vs_ref_on_shape_grid() {
+    let registry = KernelRegistry::with_defaults();
+    let simd_k = registry.lookup("matshift/simd").expect("registered");
+    let ref_k = registry.lookup("matshift/ref").expect("registered");
+    let mut rng = XorShift64::new(0x51D1);
+    for (m, k, n) in shape_grid() {
+        let x = rng.normals(m * k);
+        let raw = RawWeights::new(rng.normals(k * n), k, n);
+        let op = Operand::quantized(&x, m, k);
+        let mut got = vec![0.0f32; m * n];
+        let mut want = vec![0.0f32; m * n];
+        simd_k.run(&simd_k.prepare(&raw), &op, &mut got);
+        ref_k.run(&ref_k.prepare(&raw), &op, &mut want);
+        assert_eq!(got, want, "matshift/simd diverged from /ref at {m}x{k}x{n}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Every available instruction-set core vs the serial row cores
+// ---------------------------------------------------------------------------
+
+/// Each core the host can execute — portable always, plus AVX2/NEON where
+/// detected — must be bit-identical to the serial row kernels on random
+/// odd shapes and row sub-ranges (unavailable levels clamp to portable, so
+/// iterating all three is safe everywhere).
+#[test]
+fn every_level_matches_serial_row_cores() {
+    for level in [SimdLevel::Portable, SimdLevel::Avx2, SimdLevel::Neon] {
+        check(&format!("simd-level-{level:?}"), 16, 14, |rng, size| {
+            let (m, k, n) = (size + 1, size * 2 + 3, size + 5);
+            let x = rng.normals(m * k);
+            let packed = PackedPm1::pack(&pm1(rng, k * n), k, n);
+            let a = simd::matadd_pm1_rows_at(level, &x, &packed, 0, m);
+            if a != matadd::matadd_pm1_rows(&x, &packed, 0, m) {
+                return Err(format!("matadd {level:?} diverged at {m}x{k}x{n}"));
+            }
+            // sub-range (the pool-chunk unit)
+            let r0 = m / 2;
+            if simd::matadd_pm1_rows_at(level, &x, &packed, r0, m)
+                != matadd::matadd_pm1_rows(&x, &packed, r0, m)
+            {
+                return Err(format!("matadd {level:?} row range diverged"));
+            }
+            let xq = int8_ops(rng, m * k);
+            let planes = ShiftPlanes::from_pow2(&pow2::quantize(&rng.normals(k * n), k, n));
+            if simd::matshift_rows_at(level, &xq, &planes, 0, m)
+                != matshift::matshift_fast_rows(&xq, &planes, 0, m)
+            {
+                return Err(format!("matshift {level:?} diverged at {m}x{k}x{n}"));
+            }
+            Ok(())
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Grouped dispatch ≡ per-group
+// ---------------------------------------------------------------------------
+
+/// `run_grouped` on the simd backends — including the fork/join override —
+/// must be bit-exact vs per-group `run`, across group counts and row
+/// counts spanning the forked and per-group-pooled branches.
+#[test]
+fn simd_run_grouped_matches_per_group_dispatch() {
+    let registry = KernelRegistry::with_defaults();
+    for id in ["matadd/simd", "matshift/simd"] {
+        let kernel = registry.lookup(id).expect(id);
+        let mut rng = XorShift64::new(0x6709);
+        for (g, m) in [(1usize, 3usize), (3, 5), (8, 2), (2, MIN_PAR_ROWS + 5)] {
+            let (k, n) = (13, 11);
+            let ws: Vec<_> = (0..g)
+                .map(|_| kernel.prepare(&RawWeights::new(rng.normals(k * n), k, n)))
+                .collect();
+            let x = rng.normals(g * m * k);
+            let mut fused = vec![0.0f32; g * m * n];
+            kernel.run_grouped(&ws, &x, m, &mut fused);
+            for (gi, w) in ws.iter().enumerate() {
+                let op = kernel.prepare_operand(&x[gi * m * k..(gi + 1) * m * k], m, k);
+                let mut solo = vec![0.0f32; m * n];
+                kernel.run(w, &op, &mut solo);
+                assert_eq!(
+                    &fused[gi * m * n..(gi + 1) * m * n],
+                    solo.as_slice(),
+                    "{id}: grouped dispatch diverged at group {gi}/{g} (m={m})"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// KSH attention bit widths
+// ---------------------------------------------------------------------------
+
+/// The Hamming LinearAdd attention on `matadd/simd` is bit-exact vs the
+/// readable oracle for every KSH code width the model family uses —
+/// including widths straddling the 8-lane blocks — and the fused batched
+/// entry point agrees per group.
+#[test]
+fn hamming_attention_on_simd_backend_is_bit_exact_for_all_ksh_widths() {
+    let registry = KernelRegistry::with_defaults();
+    let kernel: Arc<dyn LinearKernel> = registry.lookup("matadd/simd").expect("registered");
+    let mut rng = XorShift64::new(0x4A11);
+    for &bits in &[3usize, 7, 8, 15, 16, 17] {
+        for &(n, d) in &[(5usize, 4usize), (16, 8), (23, 9)] {
+            let qc = pm1(&mut rng, n * bits);
+            let kc = pm1(&mut rng, n * bits);
+            let v = rng.normals(n * d);
+            let got = hamming_linear_attn_kernel(&kernel, &qc, &kc, &v, n, bits, d);
+            let want = hamming_linear_attn_ref(&qc, &kc, &v, n, bits, d);
+            assert_eq!(got, want, "bits={bits} n={n} d={d}");
+
+            // fused batched path: 3 groups through two grouped dispatches
+            let g = 3usize;
+            let qcg = pm1(&mut rng, g * n * bits);
+            let kcg = pm1(&mut rng, g * n * bits);
+            let vg = rng.normals(g * n * d);
+            let fused = hamming_linear_attn_batched(&kernel, &qcg, &kcg, &vg, n, bits, d);
+            for gi in 0..g {
+                let want = hamming_linear_attn_ref(
+                    &qcg[gi * n * bits..(gi + 1) * n * bits],
+                    &kcg[gi * n * bits..(gi + 1) * n * bits],
+                    &vg[gi * n * d..(gi + 1) * n * d],
+                    n,
+                    bits,
+                    d,
+                );
+                assert_eq!(
+                    &fused[gi * n * d..(gi + 1) * n * d],
+                    want.as_slice(),
+                    "batched group {gi}, bits={bits}"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Forced fallback (SHIFTADD_NO_SIMD)
+// ---------------------------------------------------------------------------
+
+/// The env override must force the portable level; without it, the active
+/// level is whatever the hardware probe found. CI runs the whole suite
+/// twice — default and `SHIFTADD_NO_SIMD=1` — so both sides of this branch
+/// execute, and every bit-exactness test above runs on the portable cores
+/// in the second pass.
+#[test]
+fn active_level_honors_the_no_simd_override() {
+    use shiftaddvit::kernels::simd::detect;
+    assert_eq!(detect::resolve_level(true), SimdLevel::Portable);
+    assert_eq!(detect::resolve_level(false), detect::hardware_level());
+    if detect::no_simd_env() {
+        assert_eq!(
+            simd::active_level(),
+            SimdLevel::Portable,
+            "SHIFTADD_NO_SIMD is set: the simd backends must run portable"
+        );
+    } else {
+        assert_eq!(simd::active_level(), detect::hardware_level());
+    }
+}
+
+/// Even with the hardware level active, the portable core is reachable
+/// explicitly and agrees with the backend output (so a table or result
+/// produced under `SHIFTADD_NO_SIMD=1` is interchangeable with one from
+/// the vectorized path).
+#[test]
+fn portable_and_active_levels_are_interchangeable() {
+    let mut rng = XorShift64::new(0xFA11);
+    let (m, k, n) = (7, 19, 21);
+    let x = rng.normals(m * k);
+    let packed = PackedPm1::pack(&pm1(&mut rng, k * n), k, n);
+    assert_eq!(
+        simd::matadd_pm1_rows_at(SimdLevel::Portable, &x, &packed, 0, m),
+        simd::matadd_pm1_rows_simd(&x, &packed, 0, m)
+    );
+    let xq = int8_ops(&mut rng, m * k);
+    let planes = ShiftPlanes::from_pow2(&pow2::quantize(&rng.normals(k * n), k, n));
+    assert_eq!(
+        simd::matshift_rows_at(SimdLevel::Portable, &xq, &planes, 0, m),
+        simd::matshift_rows_simd(&xq, &planes, 0, m)
+    );
+}

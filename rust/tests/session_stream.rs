@@ -16,7 +16,9 @@ use std::sync::Arc;
 use shiftaddvit::coordinator::backend::{create_backend, NativeBackend};
 use shiftaddvit::coordinator::config::{ServerConfig, Workload};
 use shiftaddvit::coordinator::metrics::Metrics;
-use shiftaddvit::coordinator::server::{serve_backend, serve_stream, stream_workload_lens};
+use shiftaddvit::coordinator::server::{
+    serve_backend, serve_stream, stream_arrival_schedule, stream_workload_lens,
+};
 use shiftaddvit::coordinator::sessions::SessionEngine;
 use shiftaddvit::infer::session::{SessionSpec, StreamAttn, StreamModel};
 use shiftaddvit::kernels::planner::Planner;
@@ -167,6 +169,58 @@ fn stream_serve_end_to_end() {
     let occ = report.occupancy.as_ref().expect("engine stepped");
     assert!(occ.mean > 0.0 && occ.mean <= 1.0);
     assert_eq!(report.metrics.requests, 5);
+    // plan-time chosen-backend gauge populated by the native engine
+    assert!(
+        !report.metrics.chosen_backends.is_empty(),
+        "stream serve must report which kernel backends were planned"
+    );
+}
+
+#[test]
+fn stream_arrival_schedule_is_deterministic_and_monotone() {
+    let a = stream_arrival_schedule(16, 5.0, 42);
+    assert_eq!(a, stream_arrival_schedule(16, 5.0, 42), "same seed, same schedule");
+    // (seed 40 differs from 42 in a bit XorShift64's seed mask keeps)
+    assert_ne!(a, stream_arrival_schedule(16, 5.0, 40), "seed changes the draw");
+    assert_eq!(a.len(), 16);
+    assert_eq!(a[0], 0.0, "first session arrives immediately");
+    for w in a.windows(2) {
+        assert!(w[1] >= w[0], "arrival offsets must be non-decreasing");
+        let gap = w[1] - w[0];
+        assert!((2.5..7.5).contains(&gap), "jitter spans mean·[0.5, 1.5): {gap}");
+    }
+    // closed-loop degenerate case: zero mean → everything at t=0
+    assert!(stream_arrival_schedule(4, 0.0, 7).iter().all(|&t| t == 0.0));
+}
+
+#[test]
+fn open_loop_stream_exercises_admission_control_under_pacing() {
+    // Staggered arrivals (1 ms mean) against a 2-slot live cap: sessions
+    // must trickle into the continuous batch as slots free up, and every
+    // result must still come back (the engine's bit-exactness contract is
+    // interleaving-invariant, so only completion + gauges need checking).
+    let cfg = ServerConfig {
+        requests: 6,
+        stream_tokens: 10,
+        stream_chunk: 4,
+        max_live: 2,
+        arrival_ms: 1.0,
+        workload: Workload::Stream,
+        ..ServerConfig::default()
+    };
+    let report = serve_stream(&cfg).unwrap();
+    assert_eq!(report.sessions, 6);
+    assert_eq!(report.metrics.requests, 6, "every paced session completed");
+    assert!(
+        report.metrics.live_sessions.iter().all(|&l| l <= 2.0),
+        "admission control must cap live sessions"
+    );
+    assert!(report.steps > 0);
+    assert_eq!(
+        report.total_tokens,
+        stream_workload_lens(6, 10).iter().sum::<usize>()
+    );
+    assert!(report.latency.p99 >= report.latency.p50);
 }
 
 // ---------------------------------------------------------------------------
