@@ -1,0 +1,133 @@
+//! Sharded serving throughput: the classify workload behind the fleet
+//! router, swept over workers ∈ {1, 2, 4} × routing policy with the same
+//! open-loop synthetic client, plus a stream-workload sweep for per-token
+//! latency percentiles. `workers = 1` is the classic single-engine loop
+//! (no fleet layer) — the scaling baseline. Emits the tables and a
+//! trailing JSON object with latency percentiles for tooling.
+
+use shiftaddvit::coordinator::config::ServerConfig;
+use shiftaddvit::coordinator::server::{serve_auto, serve_stream};
+use shiftaddvit::fleet::policy::PolicyKind;
+use shiftaddvit::util::bench::{f1, f2, Table};
+use shiftaddvit::util::json::Json;
+use shiftaddvit::util::stats::Summary;
+
+/// classify requests per run (open-loop paced)
+const REQUESTS: usize = 48;
+/// stream sessions per run
+const SESSIONS: usize = 12;
+/// mean open-loop inter-arrival (ms) — keeps every fleet size busy
+const ARRIVAL_MS: f64 = 1.0;
+
+const POLICIES: [PolicyKind; 3] = [
+    PolicyKind::RoundRobin,
+    PolicyKind::LeastLoaded,
+    PolicyKind::Affinity,
+];
+
+fn latency_json(s: &Summary) -> Json {
+    Json::obj(vec![
+        ("mean", Json::num(s.mean)),
+        ("p50", Json::num(s.p50)),
+        ("p95", Json::num(s.p95)),
+        ("p99", Json::num(s.p99)),
+        ("max", Json::num(s.max)),
+    ])
+}
+
+fn main() {
+    // --- classify: workers × policy, open-loop client -----------------------
+    let mut table = Table::new(&[
+        "workers",
+        "policy",
+        "throughput (img/s)",
+        "p50 (ms)",
+        "p99 (ms)",
+        "speedup",
+    ]);
+    let mut classify_rows = Vec::new();
+    let mut base_rps = 0.0f64;
+    for &workers in &[1usize, 2, 4] {
+        for &policy in &POLICIES {
+            // the single-engine baseline has no router, so policy is moot
+            if workers == 1 && policy != PolicyKind::RoundRobin {
+                continue;
+            }
+            let cfg = ServerConfig {
+                requests: REQUESTS,
+                max_batch: 4,
+                arrival_ms: ARRIVAL_MS,
+                workers,
+                policy,
+                ..ServerConfig::default()
+            };
+            let report = serve_auto(&cfg).expect("classify serving run");
+            if workers == 1 {
+                base_rps = report.throughput_rps;
+            }
+            let policy_cell = if workers == 1 {
+                "(solo)".to_string()
+            } else {
+                policy.name().to_string()
+            };
+            table.row(&[
+                workers.to_string(),
+                policy_cell,
+                f1(report.throughput_rps),
+                f2(report.latency.p50),
+                f2(report.latency.p99),
+                f2(report.throughput_rps / base_rps),
+            ]);
+            classify_rows.push(Json::obj(vec![
+                ("workers", Json::num(workers as f64)),
+                ("policy", Json::str(policy.name())),
+                ("requests", Json::num(REQUESTS as f64)),
+                ("throughput_rps", Json::num(report.throughput_rps)),
+                ("latency_ms", latency_json(&report.latency)),
+                ("speedup", Json::num(report.throughput_rps / base_rps)),
+            ]));
+        }
+    }
+    table.print("Fleet serving — classify throughput, workers × policy");
+
+    // --- stream: per-token latency percentiles across fleet sizes -----------
+    let mut stream_table = Table::new(&[
+        "workers",
+        "tok/s",
+        "token p50 (ms)",
+        "token p95 (ms)",
+        "token p99 (ms)",
+    ]);
+    let mut stream_rows = Vec::new();
+    for &workers in &[1usize, 2, 4] {
+        let cfg = ServerConfig {
+            requests: SESSIONS,
+            arrival_ms: ARRIVAL_MS,
+            workers,
+            policy: PolicyKind::LeastLoaded,
+            ..ServerConfig::default()
+        };
+        let report = serve_stream(&cfg).expect("stream serving run");
+        stream_table.row(&[
+            workers.to_string(),
+            f1(report.tokens_per_sec),
+            f2(report.token_latency.p50),
+            f2(report.token_latency.p95),
+            f2(report.token_latency.p99),
+        ]);
+        let mut row = report.to_json();
+        if let Json::Obj(map) = &mut row {
+            map.insert("workers".to_string(), Json::num(workers as f64));
+        }
+        stream_rows.push(row);
+    }
+    stream_table.print("Fleet serving — stream per-token latency, least-loaded");
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("fleet")),
+        ("arrival_ms", Json::num(ARRIVAL_MS)),
+        ("classify", Json::Arr(classify_rows)),
+        ("stream", Json::Arr(stream_rows)),
+    ]);
+    println!("\n{json}");
+}

@@ -90,23 +90,56 @@ pub struct StepReport {
     pub modularized_ms: f64,
 }
 
+/// Completed outputs a queue will hold for callers that never poll.
+/// A serving loop that polls promptly never comes near this; a caller that
+/// submits and walks away would otherwise grow the done map without bound
+/// (every output holds a logits vector).
+pub const DEFAULT_DONE_CAP: usize = 4096;
+
 /// Shared submit/poll bookkeeping every backend embeds: a pending queue and
 /// a done map behind one mutex, so the trait methods stay `&self`.
+///
+/// The done side is bounded: outputs that are never polled are evicted
+/// oldest-first once the map exceeds its cap, so an abandoned ticket leaks
+/// at most `done_cap` outputs, not the whole run.
 #[derive(Default)]
 pub struct RequestQueue {
     inner: Mutex<QueueInner>,
 }
 
-#[derive(Default)]
 struct QueueInner {
     pending: VecDeque<(usize, Request)>,
     done: HashMap<usize, RequestOutput>,
+    /// completion order of ids in `done` (may hold stale, already-polled
+    /// ids; compacted when it outgrows the live map)
+    done_order: VecDeque<usize>,
+    done_cap: usize,
     next_id: usize,
+}
+
+impl Default for QueueInner {
+    fn default() -> Self {
+        QueueInner {
+            pending: VecDeque::new(),
+            done: HashMap::new(),
+            done_order: VecDeque::new(),
+            done_cap: DEFAULT_DONE_CAP,
+            next_id: 0,
+        }
+    }
 }
 
 impl RequestQueue {
     pub fn new() -> RequestQueue {
         RequestQueue::default()
+    }
+
+    /// A queue that keeps at most `cap` unpolled outputs (tests use tiny
+    /// caps to exercise eviction).
+    pub fn with_done_cap(cap: usize) -> RequestQueue {
+        let q = RequestQueue::default();
+        q.inner.lock().unwrap().done_cap = cap.max(1);
+        q
     }
 
     pub fn submit(&self, request: Request) -> Ticket {
@@ -121,6 +154,11 @@ impl RequestQueue {
         self.inner.lock().unwrap().pending.len()
     }
 
+    /// Completed-but-unpolled outputs currently held.
+    pub fn done_len(&self) -> usize {
+        self.inner.lock().unwrap().done.len()
+    }
+
     /// Dequeue up to `max` requests (FIFO) for one fused batch.
     pub fn take(&self, max: usize) -> Vec<(usize, Request)> {
         let mut q = self.inner.lock().unwrap();
@@ -129,7 +167,8 @@ impl RequestQueue {
     }
 
     /// File per-request outputs sliced out of one batch result, stamping
-    /// each with the step's completion time.
+    /// each with the step's completion time. Evicts the oldest unpolled
+    /// outputs once the done map exceeds its cap.
     pub fn complete(&self, batch: Vec<(usize, Request)>, out: &BatchOutput) -> Result<()> {
         let n = batch.len();
         let logits = out.logits.as_f32()?;
@@ -156,6 +195,25 @@ impl RequestQueue {
                     label: req.label,
                 },
             );
+            q.done_order.push_back(id);
+        }
+        // Oldest-first eviction of unpolled outputs. Stale order entries
+        // (polled ids) pop harmlessly — they no longer remove anything.
+        while q.done.len() > q.done_cap {
+            match q.done_order.pop_front() {
+                Some(old) => {
+                    q.done.remove(&old);
+                }
+                None => break,
+            }
+        }
+        // Compact stale order entries so the order log tracks the live map
+        // instead of the run length.
+        if q.done_order.len() > 2 * q.done_cap {
+            let QueueInner {
+                done, done_order, ..
+            } = &mut *q;
+            done_order.retain(|id| done.contains_key(id));
         }
         Ok(())
     }
@@ -352,6 +410,7 @@ impl InferenceBackend for NativeBackend {
         metrics.padding_waste.extend(trace.padding_waste.iter());
         metrics.batches += 1;
         metrics.requests += n;
+        metrics.request_ids.extend(batch.iter().map(|(_, r)| r.id));
         metrics.record_step_occupancy(n, max_batch.max(1), n * self.tokens());
         if trace.blocks > 0 {
             // Fused-path amortization gauge: attention kernel calls per
@@ -520,6 +579,72 @@ mod tests {
                 assert!((x - y).abs() < 0.5, "batched {x} vs single {y}");
             }
         }
+    }
+
+    #[test]
+    fn step_threads_request_ids_into_metrics() {
+        let backend = NativeBackend::tiny(Variant::SHIFTADD_MOE);
+        let (xs, _) = crate::data::synth_images::gen_batch(41, 2);
+        let px = backend.img() * backend.img() * 3;
+        for i in 0..2 {
+            backend.submit(Request {
+                id: 500 + i,
+                pixels: xs[i * px..(i + 1) * px].to_vec(),
+                label: None,
+                arrived: Instant::now(),
+            });
+        }
+        let mut m = Metrics::default();
+        backend.step(8, &mut m).unwrap();
+        assert_eq!(m.request_ids, vec![500, 501]);
+    }
+
+    #[test]
+    fn done_map_is_bounded_for_never_polled_outputs() {
+        // Regression: completed outputs that nobody polls used to
+        // accumulate forever. The queue now evicts oldest-first past its
+        // cap, and keeps exactly the newest `cap` outputs.
+        let q = RequestQueue::with_done_cap(3);
+        let complete_one = |q: &RequestQueue, i: usize| {
+            let t = q.submit(Request {
+                id: i,
+                pixels: vec![0.0; 4],
+                label: None,
+                arrived: Instant::now(),
+            });
+            let batch = q.take(1);
+            let out = BatchOutput {
+                logits: Tensor::f32(vec![1, 2], vec![i as f32, 0.0]),
+                dispatch_mask_blk0: Vec::new(),
+                batch_ms: 0.1,
+                modularized_ms: 0.1,
+            };
+            q.complete(batch, &out).unwrap();
+            t
+        };
+        let tickets: Vec<Ticket> = (0..10).map(|i| complete_one(&q, i)).collect();
+        assert_eq!(q.done_len(), 3, "cap holds");
+        // the three newest survive, the seven oldest were evicted
+        for t in &tickets[..7] {
+            assert!(q.poll(t).is_none(), "old unpolled output must be evicted");
+        }
+        for (i, t) in tickets[7..].iter().enumerate() {
+            let out = q.poll(t).expect("newest outputs survive");
+            assert_eq!(out.logits[0], (7 + i) as f32);
+        }
+        // polling promptly never loses anything, whatever the cap
+        let t = complete_one(&q, 99);
+        assert_eq!(q.poll(&t).unwrap().request_id, 99);
+        assert_eq!(q.done_len(), 0);
+        // long runs with prompt polling keep the order log compacted
+        for i in 0..40 {
+            let t = complete_one(&q, 1000 + i);
+            assert!(q.poll(&t).is_some());
+        }
+        assert!(
+            q.inner.lock().unwrap().done_order.len() <= 6,
+            "stale order entries must be compacted"
+        );
     }
 
     #[test]

@@ -5,8 +5,10 @@
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-/// One inference request.
-#[derive(Debug)]
+/// One inference request. `Clone` exists for the fleet router, which keeps
+/// a copy of every in-flight request so work stranded on a dead worker can
+/// be resubmitted.
+#[derive(Debug, Clone)]
 pub struct Request {
     pub id: usize,
     /// flattened HWC image

@@ -4,6 +4,7 @@ use std::path::Path;
 
 use anyhow::Result;
 
+use crate::fleet::policy::PolicyKind;
 use crate::util::json::Json;
 
 /// How MoE expert execution is timed/executed.
@@ -112,6 +113,11 @@ pub struct ServerConfig {
     pub planner_table: Option<String>,
     /// where to dump the planner's decisions after the run (JSON path)
     pub planner_table_save: Option<String>,
+    /// engine workers behind the fleet router; 1 = the classic
+    /// single-engine loop (no fleet layer)
+    pub workers: usize,
+    /// how the fleet router places requests across workers
+    pub policy: PolicyKind,
 }
 
 impl Default for ServerConfig {
@@ -129,6 +135,8 @@ impl Default for ServerConfig {
             max_live: 8,
             planner_table: None,
             planner_table_save: None,
+            workers: 1,
+            policy: PolicyKind::RoundRobin,
         }
     }
 }
@@ -174,6 +182,12 @@ impl ServerConfig {
         }
         if let Some(v) = j.get("planner_table_save").and_then(|v| v.as_str()) {
             c.planner_table_save = Some(v.to_string());
+        }
+        if let Some(v) = j.get("workers").and_then(|v| v.as_usize()) {
+            c.workers = v;
+        }
+        if let Some(v) = j.get("policy").and_then(|v| v.as_str()) {
+            c.policy = PolicyKind::parse(v)?;
         }
         Ok(c)
     }
@@ -233,6 +247,20 @@ mod tests {
         assert_eq!(d.workload, Workload::Classify);
         assert!(Workload::parse("nope").is_err());
         assert_eq!(Workload::Stream.name(), "stream");
+    }
+
+    #[test]
+    fn fleet_fields_parse_and_default() {
+        let dir = std::env::temp_dir().join("savit_cfg_fleet_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"workers": 3, "policy": "least-loaded"}"#).unwrap();
+        let c = ServerConfig::from_file(&p).unwrap();
+        assert_eq!(c.workers, 3);
+        assert_eq!(c.policy, PolicyKind::LeastLoaded);
+        let d = ServerConfig::default();
+        assert_eq!(d.workers, 1);
+        assert_eq!(d.policy, PolicyKind::RoundRobin);
     }
 
     #[test]

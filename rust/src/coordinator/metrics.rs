@@ -9,7 +9,7 @@ use crate::util::json::Json;
 use crate::util::stats::Summary;
 
 /// Accumulates samples per named stage.
-#[derive(Default, Debug)]
+#[derive(Default, Debug, Clone)]
 pub struct Metrics {
     stages: BTreeMap<String, Vec<f64>>,
     /// tokens routed per expert (cumulative)
@@ -34,6 +34,10 @@ pub struct Metrics {
     pub attn_dispatches_per_layer: Vec<f64>,
     /// per-step live session count (streaming path only)
     pub live_sessions: Vec<f64>,
+    /// caller-supplied ids of the requests completed so far, in completion
+    /// order — the audit trail a fleet merge preserves (every submitted id
+    /// shows up exactly once across all workers)
+    pub request_ids: Vec<usize>,
     /// per-primitive chosen-backend gauge, recorded from the planner's
     /// plan-time decisions (`NativeBackend` / streaming engine
     /// construction): `"primitive/backend"` id → number of shapes that
@@ -111,6 +115,35 @@ impl Metrics {
         Some((imp, load))
     }
 
+    /// Fold another engine's metrics into this one (fleet aggregation:
+    /// stage samples concatenate, counters add, gauges concatenate, the
+    /// chosen-backend gauge sums per id, request ids concatenate).
+    pub fn merge(&mut self, other: &Metrics) {
+        for (k, v) in &other.stages {
+            self.stages
+                .entry(k.clone())
+                .or_default()
+                .extend_from_slice(v);
+        }
+        for e in 0..2 {
+            self.expert_tokens[e] += other.expert_tokens[e];
+            self.expert_gates[e] += other.expert_gates[e];
+            self.expert_times[e].extend_from_slice(&other.expert_times[e]);
+        }
+        self.batches += other.batches;
+        self.requests += other.requests;
+        self.padding_waste.extend_from_slice(&other.padding_waste);
+        self.batch_occupancy.extend_from_slice(&other.batch_occupancy);
+        self.step_tokens.extend_from_slice(&other.step_tokens);
+        self.attn_dispatches_per_layer
+            .extend_from_slice(&other.attn_dispatches_per_layer);
+        self.live_sessions.extend_from_slice(&other.live_sessions);
+        self.request_ids.extend_from_slice(&other.request_ids);
+        for (id, n) in &other.chosen_backends {
+            *self.chosen_backends.entry(id.clone()).or_insert(0) += n;
+        }
+    }
+
     /// JSON dump for tooling.
     pub fn to_json(&self) -> Json {
         let mut pairs: Vec<(&str, Json)> = vec![
@@ -184,6 +217,10 @@ impl Metrics {
                 .map(|(id, n)| (id.as_str(), Json::num(*n as f64)))
                 .collect();
             pairs.push(("chosen_backend", Json::obj(chosen)));
+        }
+        if !self.request_ids.is_empty() {
+            let ids: Vec<f64> = self.request_ids.iter().map(|&id| id as f64).collect();
+            pairs.push(("request_ids", Json::arr_num(&ids)));
         }
         Json::obj(pairs)
     }
@@ -327,6 +364,41 @@ mod tests {
         assert_eq!(m.chosen_backends.get("matadd/simd"), Some(&1));
         assert!(m.chosen_backends.get("matshift/rowpar").is_none());
         m.print(); // should not panic
+    }
+
+    #[test]
+    fn merge_folds_counters_samples_and_request_ids() {
+        let mut a = Metrics::default();
+        a.record("stem", 1.0);
+        a.batches = 2;
+        a.requests = 3;
+        a.expert_tokens = [10, 5];
+        a.request_ids = vec![0, 2];
+        a.chosen_backends.insert("matadd/simd".into(), 2);
+        let mut b = Metrics::default();
+        b.record("stem", 3.0);
+        b.record("head", 0.5);
+        b.batches = 1;
+        b.requests = 2;
+        b.expert_tokens = [1, 4];
+        b.request_ids = vec![1, 3];
+        b.chosen_backends.insert("matadd/simd".into(), 1);
+        b.chosen_backends.insert("matshift/rowpar".into(), 1);
+        a.merge(&b);
+        assert_eq!(a.batches, 3);
+        assert_eq!(a.requests, 5);
+        assert_eq!(a.expert_tokens, [11, 9]);
+        assert_eq!(a.stage_summary("stem").unwrap().n, 2);
+        assert_eq!(a.stage_summary("head").unwrap().n, 1);
+        assert_eq!(a.request_ids, vec![0, 2, 1, 3]);
+        assert_eq!(a.chosen_backends.get("matadd/simd"), Some(&3));
+        assert_eq!(a.chosen_backends.get("matshift/rowpar"), Some(&1));
+        // request ids round-trip through JSON
+        let j = a.to_json();
+        assert!(j.get("request_ids").is_some());
+        // Clone gives an independent copy (fleet snapshot semantics)
+        let c = a.clone();
+        assert_eq!(c.requests, a.requests);
     }
 
     #[test]

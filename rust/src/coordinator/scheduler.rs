@@ -339,6 +339,7 @@ impl InferenceBackend for MoePipeline {
         }
         let out = MoePipeline::run_batch(self, &pixels, n, metrics)?;
         metrics.record_step_occupancy(n, max_batch.max(1), n * self.serve.tokens);
+        metrics.request_ids.extend(batch.iter().map(|(_, r)| r.id));
         let rep = StepReport {
             served: n,
             batch_ms: out.batch_ms,

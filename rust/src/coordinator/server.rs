@@ -16,7 +16,8 @@
 //! tables and `--backend` apply uniformly) and dispatches on
 //! `cfg.workload`.
 
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -27,12 +28,15 @@ use crate::coordinator::batcher::{Batcher, Request};
 use crate::coordinator::config::{BackendKind, ServerConfig, Workload};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::MoePipeline;
-use crate::coordinator::sessions::SessionEngine;
+use crate::coordinator::sessions::{SessionEngine, StreamTicket};
 use crate::data::synth_images;
+use crate::fleet::policy::WorkerView;
+use crate::fleet::router::{Router, WorkerBreakdown};
 use crate::infer::session::{SessionSpec, StreamAttn, StreamModel};
 use crate::kernels::planner::{table_json, Choice};
 use crate::model::ops::Lin;
 use crate::runtime::artifact::Manifest;
+use crate::util::json::Json;
 use crate::util::rng::XorShift64;
 use crate::util::stats::Summary;
 
@@ -49,6 +53,8 @@ pub struct ServeReport {
     pub occupancy: Option<Summary>,
     /// per-step fused token rows
     pub step_tokens: Option<Summary>,
+    /// per-worker breakdown (fleet runs; empty on the single-engine path)
+    pub per_worker: Vec<WorkerBreakdown>,
 }
 
 /// Run the serving benchmark against the XLA artifact pipeline (the
@@ -63,6 +69,14 @@ pub fn serve(manifest: &Manifest, cfg: &ServerConfig) -> Result<ServeReport> {
 /// (The stream workload is native-only; it reports through
 /// [`StreamReport`], so callers wanting it use [`serve_stream`] directly.)
 pub fn serve_auto(cfg: &ServerConfig) -> Result<ServeReport> {
+    if cfg.workers > 1 {
+        // Fleet path: each worker owns its engine and planner inside its
+        // own thread, so there is no single planner table to dump.
+        if cfg.planner_table_save.is_some() {
+            println!("planner table not saved: fleet workers own their planners");
+        }
+        return serve_fleet(cfg);
+    }
     let backend = create_backend(cfg)?;
     let report = serve_backend(backend.as_ref(), cfg)?;
     save_planner_table(cfg, &backend.planner_choices())?;
@@ -192,6 +206,100 @@ pub fn serve_backend(backend: &dyn InferenceBackend, cfg: &ServerConfig) -> Resu
         step_tokens: metrics.step_tokens_summary(),
         metrics,
         sample_masks,
+        per_worker: Vec::new(),
+    })
+}
+
+/// Classification serving across a fleet of engine workers behind the
+/// [`Router`] (`cfg.workers > 1`): the same synthetic client, but requests
+/// are placed by the configured routing policy and every worker fuses its
+/// own queue on its own thread. Outputs are collected through the
+/// supervised poll, so the run survives worker death by resubmission.
+pub fn serve_fleet(cfg: &ServerConfig) -> Result<ServeReport> {
+    let mut router = Router::from_server_config(cfg)?;
+    println!(
+        "fleet: {} workers ready  policy {}",
+        router.worker_count(),
+        router.policy_name()
+    );
+
+    let (tx, rx) = mpsc::channel::<Request>();
+    let n_req = cfg.requests;
+    let arrival_ms = cfg.arrival_ms;
+    // Same deterministic client as the single-engine loop, so fleet and
+    // solo runs see identical request sets.
+    let client = thread::spawn(move || {
+        let mut rng = XorShift64::new(0xC11E17);
+        for id in 0..n_req {
+            let sample = synth_images::gen_image(5_000_000 + id as u32);
+            let req = Request {
+                id,
+                pixels: sample.pixels,
+                label: Some(sample.label),
+                arrived: Instant::now(),
+            };
+            if tx.send(req).is_err() {
+                return;
+            }
+            if arrival_ms > 0.0 {
+                let jitter = 0.5 + rng.uniform() as f64;
+                thread::sleep(Duration::from_secs_f64(arrival_ms * jitter / 1e3));
+            }
+        }
+    });
+
+    let t0 = Instant::now();
+    let mut tickets = Vec::with_capacity(n_req);
+    while let Ok(req) = rx.recv() {
+        tickets.push(router.submit(req)?);
+    }
+    client.join().expect("client thread");
+
+    let mut latencies = Vec::with_capacity(tickets.len());
+    let mut modularized = Vec::with_capacity(tickets.len());
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    let mut sample_masks = Vec::new();
+    for t in &tickets {
+        let out = router.poll_wait(t, Duration::from_secs(120))?;
+        latencies.push(out.latency_ms());
+        // per-request view of the ideal-parallel makespan: each output
+        // carries its serving batch's modularized time
+        modularized.push(out.modularized_ms);
+        if let Some(label) = out.label {
+            total += 1;
+            if argmax(&out.logits) == label {
+                correct += 1;
+            }
+        }
+        if sample_masks.len() < 8 && !out.dispatch_mask_blk0.is_empty() {
+            sample_masks.push(out.dispatch_mask_blk0);
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    if router.resubmitted() > 0 {
+        println!(
+            "fleet: {} requests resubmitted after worker death",
+            router.resubmitted()
+        );
+    }
+    let (metrics, per_worker) = router.metrics_report();
+    router.shutdown()?;
+
+    Ok(ServeReport {
+        latency: Summary::from(&latencies),
+        modularized_latency: Summary::from(&modularized),
+        throughput_rps: metrics.requests as f64 / wall_s,
+        accuracy: if total > 0 {
+            correct as f64 / total as f64
+        } else {
+            0.0
+        },
+        occupancy: metrics.occupancy_summary(),
+        step_tokens: metrics.step_tokens_summary(),
+        metrics,
+        sample_masks,
+        per_worker,
     })
 }
 
@@ -212,7 +320,22 @@ impl ServeReport {
             "batch modularized latency (ideal parallelism)  mean {:.2} ms",
             self.modularized_latency.mean
         );
+        print_per_worker(&self.per_worker);
         self.metrics.print();
+    }
+}
+
+/// Shared per-worker report lines (classify + stream fleet paths).
+fn print_per_worker(per_worker: &[WorkerBreakdown]) {
+    if per_worker.is_empty() {
+        return;
+    }
+    println!("per-worker breakdown:");
+    for b in per_worker {
+        println!(
+            "  worker {:2} [{:8}]  requests {:5}  batches {:5}  load {}",
+            b.id, b.state, b.requests, b.batches, b.load
+        );
     }
 }
 
@@ -229,9 +352,24 @@ pub struct StreamReport {
     pub tokens_per_sec: f64,
     /// per-session end-to-end latency (submit → logits)
     pub latency: Summary,
+    /// per-token latency (session latency / tokens streamed) — the
+    /// p50/p95/p99 baseline the phase-disaggregation work needs
+    pub token_latency: Summary,
     pub occupancy: Option<Summary>,
     pub step_tokens: Option<Summary>,
     pub metrics: Metrics,
+    /// per-worker breakdown (fleet runs; empty on the single-engine path)
+    pub per_worker: Vec<WorkerBreakdown>,
+}
+
+fn summary_json(s: &Summary) -> Json {
+    Json::obj(vec![
+        ("mean", Json::num(s.mean)),
+        ("p50", Json::num(s.p50)),
+        ("p95", Json::num(s.p95)),
+        ("p99", Json::num(s.p99)),
+        ("max", Json::num(s.max)),
+    ])
 }
 
 impl StreamReport {
@@ -245,7 +383,29 @@ impl StreamReport {
             "session latency  mean {:.2} ms  p50 {:.2}  p99 {:.2}",
             self.latency.mean, self.latency.p50, self.latency.p99
         );
+        println!(
+            "per-token latency  p50 {:.3} ms  p95 {:.3}  p99 {:.3}",
+            self.token_latency.p50, self.token_latency.p95, self.token_latency.p99
+        );
+        print_per_worker(&self.per_worker);
         self.metrics.print();
+    }
+
+    /// JSON shape for benches/tooling (trailing-JSON convention).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("sessions", Json::num(self.sessions as f64)),
+            ("total_tokens", Json::num(self.total_tokens as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("wall_ms", Json::num(self.wall_ms)),
+            ("tokens_per_sec", Json::num(self.tokens_per_sec)),
+            ("latency_ms", summary_json(&self.latency)),
+            ("token_latency_ms", summary_json(&self.token_latency)),
+            (
+                "per_worker",
+                Json::Arr(self.per_worker.iter().map(|b| b.to_json()).collect()),
+            ),
+        ])
     }
 }
 
@@ -300,6 +460,9 @@ pub fn serve_stream(cfg: &ServerConfig) -> Result<StreamReport> {
             cfg.backend.name()
         );
     }
+    if cfg.workers > 1 {
+        return serve_stream_fleet(cfg);
+    }
     let planner = create_planner(cfg)?;
     let model = StreamModel::new(SessionSpec::tiny(StreamAttn::LinearAdd, Lin::Shift), planner);
     let dim = model.spec.dim;
@@ -339,9 +502,11 @@ pub fn serve_stream(cfg: &ServerConfig) -> Result<StreamReport> {
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
 
     let mut latencies = Vec::with_capacity(tickets.len());
+    let mut token_latencies = Vec::with_capacity(tickets.len());
     for t in &tickets {
         let out = engine.poll(t).expect("serve loop finished all sessions");
         latencies.push(out.latency_ms());
+        token_latencies.push(out.latency_ms() / out.tokens.max(1) as f64);
     }
     metrics.record_plan(&engine.model.planner.choices());
     save_planner_table(cfg, &engine.model.planner.choices())?;
@@ -353,9 +518,175 @@ pub fn serve_stream(cfg: &ServerConfig) -> Result<StreamReport> {
         wall_ms,
         tokens_per_sec: total_tokens as f64 / (wall_ms / 1e3).max(1e-12),
         latency: Summary::from(&latencies),
+        token_latency: Summary::from(&token_latencies),
         occupancy: metrics.occupancy_summary(),
         step_tokens: metrics.step_tokens_summary(),
         metrics,
+        per_worker: Vec::new(),
+    })
+}
+
+/// What one stream fleet worker hands back when its inbox closes and its
+/// engine drains.
+struct StreamWorkerResult {
+    sessions: usize,
+    steps: usize,
+    latencies: Vec<f64>,
+    token_latencies: Vec<f64>,
+    metrics: Metrics,
+}
+
+/// The stream workload across `cfg.workers` [`SessionEngine`]s, one per
+/// thread. `SessionEngine` steps by `&mut self`, so each worker owns its
+/// engine outright; the main thread plays router: it walks the open-loop
+/// arrival schedule and places each session with the configured fleet
+/// policy over live-load gauges that workers decrement as sessions retire
+/// (shape key = the session's token count).
+fn serve_stream_fleet(cfg: &ServerConfig) -> Result<StreamReport> {
+    let workers = cfg.workers;
+    let lens = stream_workload_lens(cfg.requests, cfg.stream_tokens);
+    let schedule = stream_arrival_schedule(lens.len(), cfg.arrival_ms, STREAM_ARRIVAL_SEED);
+    let total_tokens: usize = lens.iter().sum();
+    let dim = SessionSpec::tiny(StreamAttn::LinearAdd, Lin::Shift).dim;
+    let mut seqs: Vec<Vec<f32>> = lens
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| XorShift64::new(0x70C0 + i as u64).normals(n * dim))
+        .collect();
+
+    let mut inboxes = Vec::with_capacity(workers);
+    let mut loads: Vec<Arc<AtomicUsize>> = Vec::with_capacity(workers);
+    let mut handles = Vec::with_capacity(workers);
+    for w in 0..workers {
+        let (tx, rx) = mpsc::channel::<Vec<f32>>();
+        let load = Arc::new(AtomicUsize::new(0));
+        let planner = create_planner(cfg)?;
+        let chunk = cfg.stream_chunk.max(1);
+        let max_live = cfg.max_live.max(1);
+        let thread_load = Arc::clone(&load);
+        let handle = thread::Builder::new()
+            .name(format!("stream-worker-{w}"))
+            .spawn(move || -> StreamWorkerResult {
+                let model = StreamModel::new(
+                    SessionSpec::tiny(StreamAttn::LinearAdd, Lin::Shift),
+                    planner,
+                );
+                let mut engine = SessionEngine::new(model, chunk, max_live);
+                let mut metrics = Metrics::default();
+                let mut tickets: Vec<StreamTicket> = Vec::new();
+                let mut steps = 0usize;
+                let mut open = true;
+                loop {
+                    loop {
+                        match rx.try_recv() {
+                            Ok(seq) => tickets.push(engine.submit(seq)),
+                            Err(mpsc::TryRecvError::Empty) => break,
+                            Err(mpsc::TryRecvError::Disconnected) => {
+                                open = false;
+                                break;
+                            }
+                        }
+                    }
+                    if engine.idle() {
+                        if !open {
+                            break;
+                        }
+                        // open-loop gap: next arrival is in the future
+                        thread::sleep(Duration::from_micros(200));
+                        continue;
+                    }
+                    let st = engine.step(&mut metrics);
+                    steps += 1;
+                    if st.finished > 0 {
+                        thread_load.fetch_sub(st.finished, Ordering::SeqCst);
+                    }
+                }
+                metrics.record_plan(&engine.model.planner.choices());
+                let mut latencies = Vec::with_capacity(tickets.len());
+                let mut token_latencies = Vec::with_capacity(tickets.len());
+                for t in &tickets {
+                    let out = engine.poll(t).expect("stream worker drained its sessions");
+                    latencies.push(out.latency_ms());
+                    token_latencies.push(out.latency_ms() / out.tokens.max(1) as f64);
+                }
+                StreamWorkerResult {
+                    sessions: tickets.len(),
+                    steps,
+                    latencies,
+                    token_latencies,
+                    metrics,
+                }
+            })
+            .expect("spawn stream worker thread");
+        inboxes.push(tx);
+        loads.push(load);
+        handles.push(handle);
+    }
+
+    let mut policy = cfg.policy.build(crate::fleet::router::DEFAULT_POLICY_SEED);
+    println!(
+        "fleet: {} stream workers  policy {}",
+        workers,
+        policy.name()
+    );
+    let t0 = Instant::now();
+    for (i, len) in lens.iter().enumerate() {
+        let wait_ms = schedule[i] - t0.elapsed().as_secs_f64() * 1e3;
+        if wait_ms > 0.0 {
+            thread::sleep(Duration::from_secs_f64(wait_ms / 1e3));
+        }
+        let views: Vec<WorkerView> = loads
+            .iter()
+            .enumerate()
+            .map(|(id, load)| WorkerView {
+                id,
+                ready: true,
+                load: load.load(Ordering::SeqCst),
+            })
+            .collect();
+        let w = policy
+            .pick(*len as u64, &views)
+            .expect("every stream worker admits");
+        loads[w].fetch_add(1, Ordering::SeqCst);
+        inboxes[w]
+            .send(std::mem::take(&mut seqs[i]))
+            .expect("stream worker inbox open");
+    }
+    drop(inboxes); // workers drain and exit
+
+    let mut merged = Metrics::default();
+    let mut latencies = Vec::with_capacity(lens.len());
+    let mut token_latencies = Vec::with_capacity(lens.len());
+    let mut steps = 0usize;
+    let mut per_worker = Vec::with_capacity(workers);
+    for (w, handle) in handles.into_iter().enumerate() {
+        let res = handle.join().expect("stream worker thread");
+        steps += res.steps;
+        latencies.extend_from_slice(&res.latencies);
+        token_latencies.extend_from_slice(&res.token_latencies);
+        merged.merge(&res.metrics);
+        per_worker.push(WorkerBreakdown {
+            id: w,
+            state: "done",
+            requests: res.sessions,
+            batches: res.steps,
+            load: 0,
+        });
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    Ok(StreamReport {
+        sessions: lens.len(),
+        total_tokens,
+        steps,
+        wall_ms,
+        tokens_per_sec: total_tokens as f64 / (wall_ms / 1e3).max(1e-12),
+        latency: Summary::from(&latencies),
+        token_latency: Summary::from(&token_latencies),
+        occupancy: merged.occupancy_summary(),
+        step_tokens: merged.step_tokens_summary(),
+        metrics: merged,
+        per_worker,
     })
 }
 

@@ -197,11 +197,13 @@ impl SessionEngine {
         let mut finished = 0usize;
         let model = &self.model;
         let done = &mut self.done;
+        let req_ids = &mut metrics.request_ids;
         self.live.retain(|s| {
             if s.fed * d < s.tokens.len() {
                 return true;
             }
             finished += 1;
+            req_ids.push(s.id);
             done.insert(
                 s.id,
                 StreamOutput {

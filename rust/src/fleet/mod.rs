@@ -1,0 +1,37 @@
+//! The fleet layer: sharded multi-worker serving behind one router.
+//!
+//! One process used to own exactly one engine ([`crate::coordinator`]'s
+//! `InferenceBackend` or `SessionEngine`), so every kernel win stopped
+//! scaling at a single worker. This subsystem fronts **N** engine workers
+//! behind a single submit/poll surface (the sglang router shape: pluggable
+//! routing policy, worker registry with add/remove, health probes):
+//!
+//! - [`worker::FleetWorker`] — one engine on its own thread: an inbox
+//!   channel, a stepping loop that drives `submit/step/poll`, and a health
+//!   state machine (`Starting → Ready → Draining → Dead`) with liveness
+//!   heartbeats advanced by the step loop;
+//! - [`policy`] — the [`policy::RoutingPolicy`] trait with
+//!   [`policy::RoundRobin`], [`policy::LeastLoaded`] (fewest in-flight
+//!   requests, from the per-worker occupancy gauges), and
+//!   [`policy::Affinity`] (stable hash of the request shape → worker, so
+//!   planner tables and warmed caches stay hot per worker), all
+//!   deterministic under a seeded tiebreak;
+//! - [`router::Router`] — `submit(Request) -> FleetTicket`, `poll`,
+//!   runtime `add_worker`/`remove_worker` (remove drains: stop admitting,
+//!   finish live work, join the thread), `/liveness`-`/readiness`-
+//!   `/metrics`-shaped reports, and resubmission of requests stranded on a
+//!   dead worker.
+//!
+//! Workers are built by a factory closure, so native and XLA engines mix
+//! in one fleet — they already share the request-level contract from
+//! [`crate::coordinator::backend`]. Construction happens *inside* the
+//! worker thread (each worker owns its engine, planner, and caches), which
+//! is what makes shape affinity worth routing for.
+
+pub mod policy;
+pub mod router;
+pub mod worker;
+
+pub use policy::{PolicyKind, RoutingPolicy, WorkerView};
+pub use router::{FleetTicket, Router, RouterConfig, WorkerBreakdown};
+pub use worker::{FleetWorker, WorkerHealth};

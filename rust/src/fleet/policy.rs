@@ -1,0 +1,278 @@
+//! Routing policies: which worker gets the next request.
+//!
+//! Policies are pure decision functions over a snapshot of worker state
+//! ([`WorkerView`]), so they are unit-testable without threads, and every
+//! source of arbitrariness is a seeded RNG — placement is reproducible for
+//! a given seed and call sequence.
+
+use crate::util::rng::XorShift64;
+
+use anyhow::Result;
+
+/// One worker as the policy sees it: id, whether it currently admits
+/// requests, and its load gauge (queued + in-flight requests).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkerView {
+    pub id: usize,
+    pub ready: bool,
+    pub load: usize,
+}
+
+/// A load-balancing decision procedure. `shape_key` is a stable
+/// fingerprint of the request's shape (pixel count for images, token-buffer
+/// length for streams) — only [`Affinity`] uses it. Views arrive sorted by
+/// worker id; the policy returns the chosen worker's id, or `None` when no
+/// worker is ready.
+pub trait RoutingPolicy: Send {
+    fn name(&self) -> &'static str;
+    fn pick(&mut self, shape_key: u64, workers: &[WorkerView]) -> Option<usize>;
+}
+
+/// Which policy the router runs (CLI/config surface).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    RoundRobin,
+    LeastLoaded,
+    Affinity,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Result<PolicyKind> {
+        match s {
+            "round-robin" => Ok(PolicyKind::RoundRobin),
+            "least-loaded" => Ok(PolicyKind::LeastLoaded),
+            "affinity" => Ok(PolicyKind::Affinity),
+            other => anyhow::bail!(
+                "unknown routing policy '{other}' (round-robin|least-loaded|affinity)"
+            ),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::RoundRobin => "round-robin",
+            PolicyKind::LeastLoaded => "least-loaded",
+            PolicyKind::Affinity => "affinity",
+        }
+    }
+
+    /// Instantiate the policy. `seed` feeds every tiebreak, so two routers
+    /// built with the same seed place identical request sequences
+    /// identically.
+    pub fn build(self, seed: u64) -> Box<dyn RoutingPolicy> {
+        match self {
+            PolicyKind::RoundRobin => Box::new(RoundRobin::new()),
+            PolicyKind::LeastLoaded => Box::new(LeastLoaded::new(seed)),
+            PolicyKind::Affinity => Box::new(Affinity::new(seed)),
+        }
+    }
+}
+
+/// Cycle over the ready workers in id order.
+pub struct RoundRobin {
+    cursor: usize,
+}
+
+impl RoundRobin {
+    pub fn new() -> RoundRobin {
+        RoundRobin { cursor: 0 }
+    }
+}
+
+impl Default for RoundRobin {
+    fn default() -> Self {
+        RoundRobin::new()
+    }
+}
+
+impl RoutingPolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn pick(&mut self, _shape_key: u64, workers: &[WorkerView]) -> Option<usize> {
+        let ready: Vec<&WorkerView> = workers.iter().filter(|w| w.ready).collect();
+        if ready.is_empty() {
+            return None;
+        }
+        let chosen = ready[self.cursor % ready.len()].id;
+        self.cursor = self.cursor.wrapping_add(1);
+        Some(chosen)
+    }
+}
+
+/// Fewest queued + in-flight requests; ties broken by a seeded draw (the
+/// RNG only advances on an actual tie, so tie-free sequences are
+/// placement-identical across seeds).
+pub struct LeastLoaded {
+    rng: XorShift64,
+}
+
+impl LeastLoaded {
+    pub fn new(seed: u64) -> LeastLoaded {
+        LeastLoaded {
+            rng: XorShift64::new(seed | 1),
+        }
+    }
+}
+
+impl RoutingPolicy for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn pick(&mut self, _shape_key: u64, workers: &[WorkerView]) -> Option<usize> {
+        let ready: Vec<&WorkerView> = workers.iter().filter(|w| w.ready).collect();
+        let min = ready.iter().map(|w| w.load).min()?;
+        let cands: Vec<usize> = ready
+            .iter()
+            .filter(|w| w.load == min)
+            .map(|w| w.id)
+            .collect();
+        if cands.len() == 1 {
+            return Some(cands[0]);
+        }
+        Some(cands[self.rng.next_u64() as usize % cands.len()])
+    }
+}
+
+/// Stable shape → worker pinning: equal request shapes land on one worker
+/// (per-worker planner tables and warmed caches stay hot), different
+/// shapes spread by hash. Remaps only when the ready set changes.
+pub struct Affinity {
+    seed: u64,
+}
+
+impl Affinity {
+    pub fn new(seed: u64) -> Affinity {
+        Affinity { seed }
+    }
+}
+
+/// FNV-1a over the little-endian bytes of `x`, offset by `seed`.
+fn fnv1a(x: u64, seed: u64) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ seed;
+    for b in x.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_0000_01b3);
+    }
+    h
+}
+
+impl RoutingPolicy for Affinity {
+    fn name(&self) -> &'static str {
+        "affinity"
+    }
+
+    fn pick(&mut self, shape_key: u64, workers: &[WorkerView]) -> Option<usize> {
+        let ready: Vec<&WorkerView> = workers.iter().filter(|w| w.ready).collect();
+        if ready.is_empty() {
+            return None;
+        }
+        let h = fnv1a(shape_key, self.seed);
+        Some(ready[h as usize % ready.len()].id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn views(loads: &[(usize, bool, usize)]) -> Vec<WorkerView> {
+        loads
+            .iter()
+            .map(|&(id, ready, load)| WorkerView { id, ready, load })
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_cycles_ready_workers_in_id_order() {
+        let ws = views(&[(0, true, 0), (1, true, 0), (2, true, 0)]);
+        let mut p = RoundRobin::new();
+        let picks: Vec<usize> = (0..7).map(|_| p.pick(0, &ws).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn round_robin_skips_not_ready_and_handles_empty() {
+        let ws = views(&[(0, false, 0), (1, true, 0), (2, true, 0)]);
+        let mut p = RoundRobin::new();
+        let picks: Vec<usize> = (0..4).map(|_| p.pick(0, &ws).unwrap()).collect();
+        assert_eq!(picks, vec![1, 2, 1, 2]);
+        assert_eq!(p.pick(0, &views(&[(0, false, 0)])), None);
+        assert_eq!(p.pick(0, &[]), None);
+    }
+
+    #[test]
+    fn least_loaded_picks_the_minimum() {
+        let mut p = LeastLoaded::new(7);
+        let ws = views(&[(0, true, 2), (1, true, 0), (2, true, 1)]);
+        assert_eq!(p.pick(0, &ws), Some(1));
+        // not-ready workers never win, even at zero load
+        let ws = views(&[(0, false, 0), (1, true, 3), (2, true, 5)]);
+        assert_eq!(p.pick(0, &ws), Some(1));
+    }
+
+    #[test]
+    fn least_loaded_tiebreak_is_seed_deterministic() {
+        let ws = views(&[(0, true, 1), (1, true, 1), (2, true, 1), (3, true, 1)]);
+        let seq = |seed: u64| -> Vec<usize> {
+            let mut p = LeastLoaded::new(seed);
+            (0..16).map(|_| p.pick(0, &ws).unwrap()).collect()
+        };
+        assert_eq!(seq(42), seq(42), "same seed, same placement");
+        // a tie among 4 workers over 16 draws lands on more than one worker
+        let s = seq(42);
+        assert!(s.iter().any(|&w| w != s[0]), "tiebreak must spread");
+    }
+
+    #[test]
+    fn least_loaded_rng_only_advances_on_ties() {
+        // Tie-free sequences are placement-identical across seeds.
+        let ws = views(&[(0, true, 3), (1, true, 1), (2, true, 2)]);
+        let mut a = LeastLoaded::new(1);
+        let mut b = LeastLoaded::new(999);
+        for _ in 0..8 {
+            assert_eq!(a.pick(0, &ws), b.pick(0, &ws));
+        }
+    }
+
+    #[test]
+    fn affinity_pins_equal_shapes_and_spreads_distinct_ones() {
+        let ws = views(&[(0, true, 0), (1, true, 0), (2, true, 0), (3, true, 0)]);
+        let mut p = Affinity::new(0xA11F);
+        let first = p.pick(2352, &ws).unwrap();
+        for _ in 0..10 {
+            assert_eq!(p.pick(2352, &ws), Some(first), "equal shapes stay pinned");
+        }
+        // many distinct shapes reach more than one worker
+        let hit: std::collections::BTreeSet<usize> =
+            (0..64u64).map(|k| p.pick(k * 97 + 5, &ws).unwrap()).collect();
+        assert!(hit.len() > 1, "distinct shapes must spread across the fleet");
+    }
+
+    #[test]
+    fn affinity_remaps_when_the_pinned_worker_leaves() {
+        let mut p = Affinity::new(9);
+        let all = views(&[(0, true, 0), (1, true, 0), (2, true, 0)]);
+        let pinned = p.pick(77, &all).unwrap();
+        let mut shrunk = all.clone();
+        shrunk[pinned].ready = false;
+        let moved = p.pick(77, &shrunk).unwrap();
+        assert_ne!(moved, pinned, "draining worker must not be picked");
+        // and the remap itself is stable
+        assert_eq!(p.pick(77, &shrunk), Some(moved));
+    }
+
+    #[test]
+    fn kind_parse_build_and_names() {
+        assert_eq!(PolicyKind::parse("round-robin").unwrap(), PolicyKind::RoundRobin);
+        assert_eq!(PolicyKind::parse("least-loaded").unwrap(), PolicyKind::LeastLoaded);
+        assert_eq!(PolicyKind::parse("affinity").unwrap(), PolicyKind::Affinity);
+        assert!(PolicyKind::parse("random").is_err());
+        for k in [PolicyKind::RoundRobin, PolicyKind::LeastLoaded, PolicyKind::Affinity] {
+            assert_eq!(k.build(1).name(), k.name());
+            assert_eq!(PolicyKind::parse(k.name()).unwrap(), k);
+        }
+    }
+}

@@ -1,0 +1,587 @@
+//! The fleet router: one submit/poll surface over N engine workers.
+//!
+//! [`Router::submit`] places each request on a worker chosen by the
+//! configured [`RoutingPolicy`] and returns a [`FleetTicket`]; workers
+//! step autonomously on their own threads and file outputs into one
+//! fleet-wide done map, so [`Router::poll`] works no matter which worker
+//! (or re-placement) served the request. The router also keeps a copy of
+//! every in-flight request, which is what makes [`Router::supervise`]
+//! able to resubmit work stranded on a dead worker — kill a worker
+//! mid-flight and every submitted request still completes on a survivor.
+//!
+//! Runtime membership: [`Router::add_worker`] grows the fleet;
+//! [`Router::remove_worker`] drains (stops admitting, finishes live work,
+//! joins the thread). Health surfaces mirror the usual probe endpoints:
+//! [`Router::liveness`], [`Router::readiness`], [`Router::metrics_json`].
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::backend::{create_backend, RequestOutput};
+use crate::coordinator::batcher::Request;
+use crate::coordinator::config::ServerConfig;
+use crate::coordinator::metrics::Metrics;
+use crate::fleet::policy::{PolicyKind, RoutingPolicy, WorkerView};
+use crate::fleet::worker::{BackendFactory, DoneMap, FleetWorker, WorkerHealth};
+use crate::util::json::Json;
+
+/// Default seed for policy tiebreaks (override via [`RouterConfig`]).
+pub const DEFAULT_POLICY_SEED: u64 = 0xF1EE7;
+
+/// How long a worker may take to build + warm its engine (the planner may
+/// benchmark kernels during warmup).
+const READY_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// How long a drain (finish live work) may take.
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Fleet shape and knobs.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    pub workers: usize,
+    /// per-worker fused-batch cap (each worker's `step(max_batch)`)
+    pub max_batch: usize,
+    pub policy: PolicyKind,
+    pub policy_seed: u64,
+    /// throttle each worker's step loop (ms); 0 = full speed. Chaos tests
+    /// use this to hold work in flight long enough to kill a worker.
+    pub step_delay_ms: f64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            workers: 1,
+            max_batch: 8,
+            policy: PolicyKind::RoundRobin,
+            policy_seed: DEFAULT_POLICY_SEED,
+            step_delay_ms: 0.0,
+        }
+    }
+}
+
+/// Handle to a routed request: the worker it was placed on (initial
+/// placement — resubmission may move it) plus the fleet-wide request id.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FleetTicket {
+    pub worker: usize,
+    pub id: u64,
+}
+
+/// A request the fleet has accepted but the caller has not yet polled.
+/// The payload copy is the resubmission source if its worker dies.
+struct Inflight {
+    request: Request,
+    worker: usize,
+}
+
+/// One worker's row in the liveness probe.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerProbe {
+    pub id: usize,
+    pub state: WorkerHealth,
+    pub heartbeat: u64,
+    pub load: usize,
+    pub served: usize,
+}
+
+/// `/liveness` shape: per-worker state + heartbeat, `live` while any
+/// worker is not dead.
+#[derive(Clone, Debug)]
+pub struct LivenessReport {
+    pub workers: Vec<WorkerProbe>,
+    pub live: bool,
+}
+
+impl LivenessReport {
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .workers
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("id", Json::num(p.id as f64)),
+                    ("state", Json::str(p.state.name())),
+                    ("heartbeat", Json::num(p.heartbeat as f64)),
+                    ("load", Json::num(p.load as f64)),
+                    ("served", Json::num(p.served as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("live", Json::str(if self.live { "true" } else { "false" })),
+            ("workers", Json::Arr(rows)),
+        ])
+    }
+}
+
+/// `/readiness` shape: ready while at least one worker admits requests.
+#[derive(Clone, Copy, Debug)]
+pub struct ReadinessReport {
+    pub total: usize,
+    pub ready_workers: usize,
+    pub ready: bool,
+}
+
+impl ReadinessReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ready", Json::str(if self.ready { "true" } else { "false" })),
+            ("ready_workers", Json::num(self.ready_workers as f64)),
+            ("total_workers", Json::num(self.total as f64)),
+        ])
+    }
+}
+
+/// Per-worker slice of a serving report (`/metrics` shape, and the
+/// `ServeReport`/`StreamReport` per-worker breakdowns).
+#[derive(Clone, Debug)]
+pub struct WorkerBreakdown {
+    pub id: usize,
+    pub state: &'static str,
+    /// requests this worker completed
+    pub requests: usize,
+    /// fused engine batches it stepped
+    pub batches: usize,
+    /// queued + in-flight requests at snapshot time
+    pub load: usize,
+}
+
+impl WorkerBreakdown {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("state", Json::str(self.state)),
+            ("requests", Json::num(self.requests as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("load", Json::num(self.load as f64)),
+        ])
+    }
+}
+
+/// The router fleet.
+pub struct Router {
+    cfg: RouterConfig,
+    factory: BackendFactory,
+    policy: Box<dyn RoutingPolicy>,
+    /// sorted by id (ids are monotonic; removal preserves order)
+    workers: Vec<FleetWorker>,
+    done: DoneMap,
+    inflight: HashMap<u64, Inflight>,
+    next_fleet_id: u64,
+    next_worker_id: usize,
+    resubmitted: usize,
+}
+
+impl Router {
+    /// Spawn `cfg.workers` workers from `factory` and wait until every one
+    /// is `Ready` (workers warm their engines in their own threads).
+    pub fn new(cfg: RouterConfig, factory: BackendFactory) -> Result<Router> {
+        let mut router = Router {
+            policy: cfg.policy.build(cfg.policy_seed),
+            cfg,
+            factory,
+            workers: Vec::new(),
+            done: Arc::new(Mutex::new(HashMap::new())),
+            inflight: HashMap::new(),
+            next_fleet_id: 0,
+            next_worker_id: 0,
+            resubmitted: 0,
+        };
+        for _ in 0..router.cfg.workers.max(1) {
+            router.add_worker()?;
+        }
+        Ok(router)
+    }
+
+    /// Build a fleet whose workers run the engine described by a
+    /// [`ServerConfig`] (`create_backend` inside each worker thread — the
+    /// single construction path, so `--backend` and planner tables apply
+    /// per worker).
+    pub fn from_server_config(cfg: &ServerConfig) -> Result<Router> {
+        let engine_cfg = cfg.clone();
+        let factory: BackendFactory = Arc::new(move || create_backend(&engine_cfg));
+        Router::new(
+            RouterConfig {
+                workers: cfg.workers.max(1),
+                max_batch: cfg.max_batch,
+                policy: cfg.policy,
+                policy_seed: DEFAULT_POLICY_SEED,
+                step_delay_ms: 0.0,
+            },
+            factory,
+        )
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn worker_ids(&self) -> Vec<usize> {
+        self.workers.iter().map(|w| w.id).collect()
+    }
+
+    /// Requests resubmitted after their worker died.
+    pub fn resubmitted(&self) -> usize {
+        self.resubmitted
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    fn views(&self) -> Vec<WorkerView> {
+        self.workers
+            .iter()
+            .map(|w| WorkerView {
+                id: w.id,
+                ready: w.health() == WorkerHealth::Ready,
+                load: w.load(),
+            })
+            .collect()
+    }
+
+    fn worker(&self, id: usize) -> Result<&FleetWorker> {
+        self.workers
+            .iter()
+            .find(|w| w.id == id)
+            .ok_or_else(|| anyhow!("no worker {id} in the fleet"))
+    }
+
+    /// Place `fleet_id` on a policy-chosen worker; re-picks when a worker
+    /// races to dead between the snapshot and the send.
+    fn place(&mut self, fleet_id: u64, request: &Request) -> Result<usize> {
+        let shape_key = request.pixels.len() as u64;
+        for _ in 0..self.workers.len().max(1) {
+            let views = self.views();
+            let Some(wid) = self.policy.pick(shape_key, &views) else {
+                break;
+            };
+            if self.worker(wid)?.submit(fleet_id, request.clone()).is_ok() {
+                return Ok(wid);
+            }
+        }
+        Err(anyhow!(
+            "no ready worker to route to (fleet of {})",
+            self.workers.len()
+        ))
+    }
+
+    /// Route one request. Returns the placement + fleet request id.
+    pub fn submit(&mut self, request: Request) -> Result<FleetTicket> {
+        let fleet_id = self.next_fleet_id;
+        let worker = self.place(fleet_id, &request)?;
+        self.next_fleet_id += 1;
+        self.inflight.insert(fleet_id, Inflight { request, worker });
+        Ok(FleetTicket {
+            worker,
+            id: fleet_id,
+        })
+    }
+
+    /// Remove and return a finished request's output, if ready.
+    pub fn poll(&mut self, ticket: &FleetTicket) -> Option<RequestOutput> {
+        let out = self.done.lock().unwrap().remove(&ticket.id)?;
+        self.inflight.remove(&ticket.id);
+        Some(out)
+    }
+
+    /// Health sweep: reap workers whose thread died, then resubmit every
+    /// in-flight request whose worker is gone and whose output was never
+    /// filed. A request that completed just before its worker died is NOT
+    /// resubmitted (the done map is checked first), so outputs are neither
+    /// lost nor duplicated. Errors when stranded work exists but no ready
+    /// worker remains.
+    pub fn supervise(&mut self) -> Result<usize> {
+        // Reap dead workers; their filed outputs live in the shared map.
+        let any_dead = self
+            .workers
+            .iter()
+            .any(|w| w.health() == WorkerHealth::Dead);
+        if any_dead {
+            let mut kept = Vec::with_capacity(self.workers.len());
+            for w in self.workers.drain(..) {
+                if w.health() == WorkerHealth::Dead {
+                    if let Some(e) = w.error() {
+                        eprintln!("fleet: reaping worker {}: {e}", w.id);
+                    } else {
+                        eprintln!("fleet: reaping dead worker {}", w.id);
+                    }
+                    w.join();
+                } else {
+                    kept.push(w);
+                }
+            }
+            self.workers = kept;
+        }
+
+        // Resubmit stranded work: placed on a worker no longer in the
+        // fleet, output never filed.
+        let alive: HashSet<usize> = self.workers.iter().map(|w| w.id).collect();
+        let completed: HashSet<u64> = self.done.lock().unwrap().keys().copied().collect();
+        let stranded: Vec<u64> = self
+            .inflight
+            .iter()
+            .filter(|(fid, inf)| !alive.contains(&inf.worker) && !completed.contains(fid))
+            .map(|(fid, _)| *fid)
+            .collect();
+        let mut moved = 0usize;
+        for fid in stranded {
+            let request = self
+                .inflight
+                .get(&fid)
+                .expect("stranded id came from inflight")
+                .request
+                .clone();
+            let worker = self.place(fid, &request).map_err(|e| {
+                anyhow!("request {fid} stranded on a dead worker and could not be re-placed: {e}")
+            })?;
+            self.inflight
+                .get_mut(&fid)
+                .expect("stranded id came from inflight")
+                .worker = worker;
+            moved += 1;
+        }
+        self.resubmitted += moved;
+        Ok(moved)
+    }
+
+    /// Poll with supervision: block until the output arrives, resubmitting
+    /// stranded work along the way.
+    pub fn poll_wait(&mut self, ticket: &FleetTicket, timeout: Duration) -> Result<RequestOutput> {
+        let t0 = Instant::now();
+        loop {
+            if let Some(out) = self.poll(ticket) {
+                return Ok(out);
+            }
+            self.supervise()?;
+            if t0.elapsed() > timeout {
+                return Err(anyhow!(
+                    "request {} not completed within {timeout:?}",
+                    ticket.id
+                ));
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+
+    /// Grow the fleet by one worker; blocks until it is `Ready`.
+    pub fn add_worker(&mut self) -> Result<usize> {
+        let id = self.next_worker_id;
+        self.next_worker_id += 1;
+        let w = FleetWorker::spawn(
+            id,
+            Arc::clone(&self.factory),
+            self.cfg.max_batch,
+            self.cfg.step_delay_ms,
+            Arc::clone(&self.done),
+        );
+        if let Err(e) = w.wait_health(WorkerHealth::Ready, READY_TIMEOUT) {
+            w.kill();
+            w.join();
+            return Err(e);
+        }
+        self.workers.push(w);
+        Ok(id)
+    }
+
+    /// Drain one worker out of the fleet: it stops admitting immediately
+    /// (no longer a policy candidate), finishes its live work, then its
+    /// thread is joined. Completed-but-unpolled outputs survive in the
+    /// fleet-wide done map.
+    pub fn remove_worker(&mut self, id: usize) -> Result<()> {
+        let pos = self
+            .workers
+            .iter()
+            .position(|w| w.id == id)
+            .ok_or_else(|| anyhow!("no worker {id} in the fleet"))?;
+        let w = self.workers.remove(pos);
+        w.drain();
+        let drained = w.wait_health(WorkerHealth::Dead, DRAIN_TIMEOUT);
+        w.join();
+        drained.map_err(|e| anyhow!("worker {id} failed to drain: {e}"))
+    }
+
+    /// Chaos hook: kill a worker mid-flight (no drain). The next
+    /// [`Router::supervise`] reaps it and resubmits its stranded work.
+    pub fn kill_worker(&mut self, id: usize) -> Result<()> {
+        self.worker(id)?.kill();
+        Ok(())
+    }
+
+    /// Orderly fleet shutdown: drain everyone, join every thread.
+    pub fn shutdown(&mut self) -> Result<()> {
+        for w in &self.workers {
+            w.drain();
+        }
+        let mut first_err = None;
+        for w in self.workers.drain(..) {
+            if let Err(e) = w.wait_health(WorkerHealth::Dead, DRAIN_TIMEOUT) {
+                first_err.get_or_insert(e);
+            }
+            w.join();
+        }
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+
+    /// `/liveness`: per-worker health + heartbeat.
+    pub fn liveness(&self) -> LivenessReport {
+        let workers: Vec<WorkerProbe> = self
+            .workers
+            .iter()
+            .map(|w| WorkerProbe {
+                id: w.id,
+                state: w.health(),
+                heartbeat: w.heartbeat(),
+                load: w.load(),
+                served: w.served(),
+            })
+            .collect();
+        let live = workers.iter().any(|p| p.state != WorkerHealth::Dead);
+        LivenessReport { workers, live }
+    }
+
+    /// `/readiness`: can the fleet admit a request right now?
+    pub fn readiness(&self) -> ReadinessReport {
+        let ready_workers = self
+            .workers
+            .iter()
+            .filter(|w| w.health() == WorkerHealth::Ready)
+            .count();
+        ReadinessReport {
+            total: self.workers.len(),
+            ready_workers,
+            ready: ready_workers > 0,
+        }
+    }
+
+    /// Merged fleet metrics plus the per-worker breakdown.
+    pub fn metrics_report(&self) -> (Metrics, Vec<WorkerBreakdown>) {
+        let mut merged = Metrics::default();
+        let mut per_worker = Vec::new();
+        for w in &self.workers {
+            let state = w.health().name();
+            w.with_metrics(|m| {
+                merged.merge(m);
+                per_worker.push(WorkerBreakdown {
+                    id: w.id,
+                    state,
+                    requests: w.served(),
+                    batches: m.batches,
+                    load: w.load(),
+                });
+            });
+        }
+        (merged, per_worker)
+    }
+
+    /// `/metrics`: merged engine metrics, per-worker rows, resubmissions.
+    pub fn metrics_json(&self) -> Json {
+        let (merged, per_worker) = self.metrics_report();
+        Json::obj(vec![
+            ("policy", Json::str(self.policy.name())),
+            ("resubmitted", Json::num(self.resubmitted as f64)),
+            (
+                "workers",
+                Json::Arr(per_worker.iter().map(|b| b.to_json()).collect()),
+            ),
+            ("engine", merged.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::NativeBackend;
+    use crate::coordinator::backend::InferenceBackend;
+    use crate::data::synth_images;
+    use crate::model::ops::Variant;
+
+    fn factory() -> BackendFactory {
+        Arc::new(|| {
+            let b: Box<dyn InferenceBackend> = Box::new(NativeBackend::tiny(Variant::SHIFTADD_MOE));
+            Ok(b)
+        })
+    }
+
+    fn request(id: usize) -> Request {
+        let s = synth_images::gen_image(70_000 + id as u32);
+        Request {
+            id,
+            pixels: s.pixels,
+            label: Some(s.label),
+            arrived: Instant::now(),
+        }
+    }
+
+    fn router(workers: usize, policy: PolicyKind) -> Router {
+        Router::new(
+            RouterConfig {
+                workers,
+                max_batch: 4,
+                policy,
+                ..RouterConfig::default()
+            },
+            factory(),
+        )
+        .expect("fleet starts")
+    }
+
+    #[test]
+    fn round_robin_fleet_serves_and_reports() {
+        let mut r = router(2, PolicyKind::RoundRobin);
+        assert_eq!(r.worker_ids(), vec![0, 1]);
+        assert!(r.readiness().ready);
+        let tickets: Vec<FleetTicket> = (0..4).map(|i| r.submit(request(i)).unwrap()).collect();
+        // deterministic round-robin placement across the two workers
+        assert_eq!(
+            tickets.iter().map(|t| t.worker).collect::<Vec<_>>(),
+            vec![0, 1, 0, 1]
+        );
+        for t in &tickets {
+            let out = r.poll_wait(t, Duration::from_secs(60)).unwrap();
+            assert!(!out.logits.is_empty());
+            assert!(r.poll(t).is_none(), "poll consumes");
+        }
+        let live = r.liveness();
+        assert!(live.live);
+        assert_eq!(live.workers.len(), 2);
+        assert!(live.workers.iter().all(|p| p.heartbeat > 0));
+        let (merged, per_worker) = r.metrics_report();
+        assert_eq!(merged.requests, 4);
+        assert_eq!(per_worker.iter().map(|b| b.requests).sum::<usize>(), 4);
+        // probe JSON shapes parse back
+        let j = r.metrics_json();
+        assert_eq!(j.get("resubmitted").and_then(|v| v.as_usize()), Some(0));
+        assert!(r.liveness().to_json().get("workers").is_some());
+        assert!(r.readiness().to_json().get("ready").is_some());
+        r.shutdown().unwrap();
+        assert_eq!(r.worker_count(), 0);
+    }
+
+    #[test]
+    fn add_and_remove_worker_at_runtime() {
+        let mut r = router(1, PolicyKind::RoundRobin);
+        let added = r.add_worker().unwrap();
+        assert_eq!(added, 1);
+        assert_eq!(r.worker_ids(), vec![0, 1]);
+        // keep the new worker busy so remove has live work to drain
+        let tickets: Vec<FleetTicket> = (0..6).map(|i| r.submit(request(i)).unwrap()).collect();
+        r.remove_worker(1).unwrap();
+        assert_eq!(r.worker_ids(), vec![0]);
+        // drained outputs survive; everything completes, nothing duplicated
+        for t in &tickets {
+            assert!(r.poll_wait(t, Duration::from_secs(60)).is_ok());
+        }
+        assert_eq!(r.resubmitted(), 0, "a drain strands nothing");
+        assert!(r.remove_worker(7).is_err(), "unknown worker id");
+        r.shutdown().unwrap();
+    }
+}

@@ -1,0 +1,513 @@
+//! One engine worker on its own thread.
+//!
+//! A [`FleetWorker`] owns a `Box<dyn InferenceBackend>` — built *inside*
+//! the worker thread by a factory closure, so the engine, its planner, and
+//! its caches are thread-local — and drives it with a stepping loop fed by
+//! an inbox channel. The router talks to the worker only through that
+//! inbox plus a shared atomic state block ([`WorkerShared`]): a health
+//! state machine (`Starting → Ready → Draining → Dead`), a liveness
+//! heartbeat advanced every loop iteration, and load/served gauges the
+//! routing policies read.
+//!
+//! Completed [`RequestOutput`]s are filed into the fleet-wide done map
+//! keyed by the router-assigned fleet request id, so results survive the
+//! worker that produced them — the router polls one map no matter which
+//! worker (or which *re*-placement, after a death) served a request.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::backend::{InferenceBackend, RequestOutput, Ticket};
+use crate::coordinator::batcher::Request;
+use crate::coordinator::metrics::Metrics;
+
+/// Builds a worker's engine inside its thread. Shared by every spawn so
+/// `add_worker` clones are identical (same config ⇒ same seeded weights ⇒
+/// bit-identical outputs across the fleet).
+pub type BackendFactory = Arc<dyn Fn() -> Result<Box<dyn InferenceBackend>> + Send + Sync>;
+
+/// Fleet-wide completed-output map: fleet request id → output.
+pub type DoneMap = Arc<Mutex<HashMap<u64, RequestOutput>>>;
+
+/// The worker health state machine. Transitions:
+/// `Starting → Ready` (engine built + warmed), `Ready → Draining`
+/// (remove_worker), `Draining → Dead` (live work finished), and any state
+/// `→ Dead` on kill, engine error, or thread exit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerHealth {
+    Starting,
+    Ready,
+    Draining,
+    Dead,
+}
+
+impl WorkerHealth {
+    pub fn name(self) -> &'static str {
+        match self {
+            WorkerHealth::Starting => "starting",
+            WorkerHealth::Ready => "ready",
+            WorkerHealth::Draining => "draining",
+            WorkerHealth::Dead => "dead",
+        }
+    }
+
+    fn from_u8(v: u8) -> WorkerHealth {
+        match v {
+            0 => WorkerHealth::Starting,
+            1 => WorkerHealth::Ready,
+            2 => WorkerHealth::Draining,
+            _ => WorkerHealth::Dead,
+        }
+    }
+
+    fn as_u8(self) -> u8 {
+        match self {
+            WorkerHealth::Starting => 0,
+            WorkerHealth::Ready => 1,
+            WorkerHealth::Draining => 2,
+            WorkerHealth::Dead => 3,
+        }
+    }
+}
+
+/// State shared between the router and one worker thread. All gauges are
+/// atomics so health probes never block the step loop; the metrics mutex
+/// is held only across one engine step or one report snapshot.
+pub struct WorkerShared {
+    state: AtomicU8,
+    heartbeat: AtomicU64,
+    /// requests routed here and not yet completed (queued + in-flight)
+    load: AtomicUsize,
+    /// requests this worker completed
+    served: AtomicUsize,
+    metrics: Mutex<Metrics>,
+    error: Mutex<Option<String>>,
+}
+
+impl WorkerShared {
+    fn new() -> Arc<WorkerShared> {
+        Arc::new(WorkerShared {
+            state: AtomicU8::new(WorkerHealth::Starting.as_u8()),
+            heartbeat: AtomicU64::new(0),
+            load: AtomicUsize::new(0),
+            served: AtomicUsize::new(0),
+            metrics: Mutex::new(Metrics::default()),
+            error: Mutex::new(None),
+        })
+    }
+
+    pub fn health(&self) -> WorkerHealth {
+        WorkerHealth::from_u8(self.state.load(Ordering::SeqCst))
+    }
+
+    fn set_health(&self, h: WorkerHealth) {
+        self.state.store(h.as_u8(), Ordering::SeqCst);
+    }
+
+    pub fn heartbeat(&self) -> u64 {
+        self.heartbeat.load(Ordering::SeqCst)
+    }
+
+    pub fn load(&self) -> usize {
+        self.load.load(Ordering::SeqCst)
+    }
+
+    pub fn served(&self) -> usize {
+        self.served.load(Ordering::SeqCst)
+    }
+
+    fn fail(&self, msg: String) {
+        *self.error.lock().unwrap() = Some(msg);
+        self.set_health(WorkerHealth::Dead);
+    }
+}
+
+enum Command {
+    /// (fleet request id, payload)
+    Submit(u64, Request),
+    /// stop admitting, finish live work, then exit (state → Dead)
+    Drain,
+    /// exit immediately, stranding live work (chaos/test hook)
+    Kill,
+}
+
+/// Router-side handle to one worker thread.
+pub struct FleetWorker {
+    pub id: usize,
+    tx: mpsc::Sender<Command>,
+    shared: Arc<WorkerShared>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl FleetWorker {
+    /// Spawn a worker: the thread builds its engine via `factory`, warms it
+    /// up, flips to `Ready`, then steps its inbox. `step_delay_ms > 0`
+    /// throttles the loop (rate-limit / chaos-test hook).
+    pub fn spawn(
+        id: usize,
+        factory: BackendFactory,
+        max_batch: usize,
+        step_delay_ms: f64,
+        done: DoneMap,
+    ) -> FleetWorker {
+        let shared = WorkerShared::new();
+        let (tx, rx) = mpsc::channel::<Command>();
+        let thread_shared = Arc::clone(&shared);
+        let handle = thread::Builder::new()
+            .name(format!("fleet-worker-{id}"))
+            .spawn(move || {
+                worker_main(id, factory, max_batch, step_delay_ms, rx, done, thread_shared)
+            })
+            .expect("spawn fleet worker thread");
+        FleetWorker {
+            id,
+            tx,
+            shared,
+            handle: Some(handle),
+        }
+    }
+
+    /// Health, corrected for a thread that exited without reporting: a
+    /// finished thread is `Dead` whatever the state block says.
+    pub fn health(&self) -> WorkerHealth {
+        let h = self.shared.health();
+        let thread_gone = match &self.handle {
+            Some(j) => j.is_finished(),
+            None => true,
+        };
+        if h != WorkerHealth::Dead && thread_gone {
+            self.shared.set_health(WorkerHealth::Dead);
+            return WorkerHealth::Dead;
+        }
+        h
+    }
+
+    pub fn heartbeat(&self) -> u64 {
+        self.shared.heartbeat()
+    }
+
+    pub fn load(&self) -> usize {
+        self.shared.load()
+    }
+
+    pub fn served(&self) -> usize {
+        self.shared.served()
+    }
+
+    pub fn error(&self) -> Option<String> {
+        self.shared.error.lock().unwrap().clone()
+    }
+
+    /// Route one request here. Fails when the worker is not admitting
+    /// (draining/dead) or its inbox is gone.
+    pub fn submit(&self, fleet_id: u64, request: Request) -> Result<()> {
+        if self.health() != WorkerHealth::Ready {
+            return Err(anyhow!(
+                "worker {} is {} — not admitting requests",
+                self.id,
+                self.health().name()
+            ));
+        }
+        self.shared.load.fetch_add(1, Ordering::SeqCst);
+        self.tx
+            .send(Command::Submit(fleet_id, request))
+            .map_err(|_| {
+                self.shared.load.fetch_sub(1, Ordering::SeqCst);
+                self.shared.set_health(WorkerHealth::Dead);
+                anyhow!("worker {} inbox closed", self.id)
+            })
+    }
+
+    /// Begin a graceful drain (stop admitting, finish live work, exit).
+    pub fn drain(&self) {
+        let _ = self.tx.send(Command::Drain);
+    }
+
+    /// Kill the worker mid-flight, stranding live work (chaos/test hook —
+    /// the router's supervise pass resubmits stranded requests).
+    pub fn kill(&self) {
+        let _ = self.tx.send(Command::Kill);
+    }
+
+    /// Block until the worker reaches `target` (or `Dead`, which is
+    /// terminal). Errors on timeout or on dying before a non-Dead target.
+    pub fn wait_health(&self, target: WorkerHealth, timeout: Duration) -> Result<()> {
+        let t0 = std::time::Instant::now();
+        loop {
+            let h = self.health();
+            if h == target {
+                return Ok(());
+            }
+            if h == WorkerHealth::Dead {
+                return Err(anyhow!(
+                    "worker {} died while waiting for {}: {}",
+                    self.id,
+                    target.name(),
+                    self.error().unwrap_or_else(|| "no error recorded".into())
+                ));
+            }
+            if t0.elapsed() > timeout {
+                return Err(anyhow!(
+                    "worker {} stuck in {} waiting for {}",
+                    self.id,
+                    h.name(),
+                    target.name()
+                ));
+            }
+            thread::sleep(Duration::from_micros(200));
+        }
+    }
+
+    /// Snapshot-read this worker's metrics.
+    pub fn with_metrics<T>(&self, f: impl FnOnce(&Metrics) -> T) -> T {
+        f(&self.shared.metrics.lock().unwrap())
+    }
+
+    /// Join the worker thread (after drain/kill).
+    pub fn join(mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// What the inbox handler decided the loop should do next.
+enum Flow {
+    Continue,
+    Exit,
+}
+
+fn handle_command(
+    cmd: Command,
+    backend: &dyn InferenceBackend,
+    pending: &mut Vec<(u64, Ticket)>,
+    draining: &mut bool,
+    shared: &WorkerShared,
+) -> Flow {
+    match cmd {
+        Command::Submit(fleet_id, request) => {
+            let ticket = backend.submit(request);
+            pending.push((fleet_id, ticket));
+            Flow::Continue
+        }
+        Command::Drain => {
+            *draining = true;
+            shared.set_health(WorkerHealth::Draining);
+            Flow::Continue
+        }
+        Command::Kill => {
+            shared.set_health(WorkerHealth::Dead);
+            Flow::Exit
+        }
+    }
+}
+
+/// Non-blocking inbox sweep. A disconnected inbox (router handle dropped)
+/// flips the worker into drain mode: finish live work, then exit.
+fn drain_inbox(
+    rx: &mpsc::Receiver<Command>,
+    backend: &dyn InferenceBackend,
+    pending: &mut Vec<(u64, Ticket)>,
+    draining: &mut bool,
+    shared: &WorkerShared,
+) -> Flow {
+    loop {
+        match rx.try_recv() {
+            Ok(cmd) => {
+                if let Flow::Exit = handle_command(cmd, backend, pending, draining, shared) {
+                    return Flow::Exit;
+                }
+            }
+            Err(TryRecvError::Empty) => return Flow::Continue,
+            Err(TryRecvError::Disconnected) => {
+                *draining = true;
+                return Flow::Continue;
+            }
+        }
+    }
+}
+
+fn worker_main(
+    id: usize,
+    factory: BackendFactory,
+    max_batch: usize,
+    step_delay_ms: f64,
+    rx: mpsc::Receiver<Command>,
+    done: DoneMap,
+    shared: Arc<WorkerShared>,
+) {
+    let backend = match factory().and_then(|b| {
+        b.warmup()?;
+        Ok(b)
+    }) {
+        Ok(b) => b,
+        Err(e) => {
+            shared.fail(format!("worker {id} failed to start: {e}"));
+            return;
+        }
+    };
+    // Plan-time gauge: warmup settled the planner's backend choices.
+    shared
+        .metrics
+        .lock()
+        .unwrap()
+        .record_plan(&backend.planner_choices());
+    shared.set_health(WorkerHealth::Ready);
+
+    let mut pending: Vec<(u64, Ticket)> = Vec::new();
+    let mut draining = false;
+    loop {
+        shared.heartbeat.fetch_add(1, Ordering::SeqCst);
+
+        // Idle (nothing queued, nothing awaiting poll): block briefly on the
+        // inbox instead of spinning. Everything else drains it non-blocking.
+        if pending.is_empty() && backend.queued() == 0 && !draining {
+            match rx.recv_timeout(Duration::from_millis(1)) {
+                Ok(cmd) => {
+                    if let Flow::Exit =
+                        handle_command(cmd, backend.as_ref(), &mut pending, &mut draining, &shared)
+                    {
+                        return;
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => {
+                    // Router gone, no work left: clean exit.
+                    shared.set_health(WorkerHealth::Dead);
+                    return;
+                }
+            }
+        }
+        if let Flow::Exit =
+            drain_inbox(&rx, backend.as_ref(), &mut pending, &mut draining, &shared)
+        {
+            return;
+        }
+
+        if backend.queued() > 0 {
+            if step_delay_ms > 0.0 {
+                // Throttle hook (rate limiting / chaos tests). Re-drain the
+                // inbox after the sleep so a Kill sent during the window
+                // wins over the step — its live work is reliably stranded.
+                thread::sleep(Duration::from_secs_f64(step_delay_ms / 1e3));
+                if let Flow::Exit =
+                    drain_inbox(&rx, backend.as_ref(), &mut pending, &mut draining, &shared)
+                {
+                    return;
+                }
+            }
+            let step = {
+                let mut metrics = shared.metrics.lock().unwrap();
+                backend.step(max_batch.max(1), &mut metrics)
+            };
+            if let Err(e) = step {
+                shared.fail(format!("worker {id} engine step failed: {e}"));
+                return;
+            }
+        }
+
+        // File finished outputs into the fleet-wide done map.
+        let mut completed = 0usize;
+        pending.retain(|(fleet_id, ticket)| match backend.poll(ticket) {
+            Some(out) => {
+                done.lock().unwrap().insert(*fleet_id, out);
+                completed += 1;
+                false
+            }
+            None => true,
+        });
+        if completed > 0 {
+            shared.load.fetch_sub(completed, Ordering::SeqCst);
+            shared.served.fetch_add(completed, Ordering::SeqCst);
+        }
+
+        if draining && pending.is_empty() && backend.queued() == 0 {
+            shared.set_health(WorkerHealth::Dead);
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::NativeBackend;
+    use crate::data::synth_images;
+    use crate::model::ops::Variant;
+    use std::time::Instant;
+
+    fn factory() -> BackendFactory {
+        Arc::new(|| {
+            let b: Box<dyn InferenceBackend> = Box::new(NativeBackend::tiny(Variant::SHIFTADD_MOE));
+            Ok(b)
+        })
+    }
+
+    fn request(id: usize) -> Request {
+        let s = synth_images::gen_image(40_000 + id as u32);
+        Request {
+            id,
+            pixels: s.pixels,
+            label: Some(s.label),
+            arrived: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn worker_lifecycle_serves_then_drains() {
+        let done: DoneMap = Arc::new(Mutex::new(HashMap::new()));
+        let w = FleetWorker::spawn(0, factory(), 4, 0.0, Arc::clone(&done));
+        w.wait_health(WorkerHealth::Ready, Duration::from_secs(60)).unwrap();
+        let hb0 = w.heartbeat();
+        w.submit(10, request(0)).unwrap();
+        w.submit(11, request(1)).unwrap();
+        // outputs land in the shared map
+        let t0 = Instant::now();
+        while done.lock().unwrap().len() < 2 {
+            assert!(t0.elapsed() < Duration::from_secs(60), "worker never completed");
+            thread::sleep(Duration::from_micros(200));
+        }
+        assert_eq!(w.load(), 0);
+        assert_eq!(w.served(), 2);
+        assert!(w.heartbeat() > hb0, "step loop must advance the heartbeat");
+        let out = done.lock().unwrap().remove(&10).unwrap();
+        assert_eq!(out.request_id, 0);
+        w.drain();
+        w.wait_health(WorkerHealth::Dead, Duration::from_secs(60)).unwrap();
+        assert!(w.submit(12, request(2)).is_err(), "dead workers admit nothing");
+        w.join();
+    }
+
+    #[test]
+    fn kill_strands_live_work_without_filing_outputs() {
+        let done: DoneMap = Arc::new(Mutex::new(HashMap::new()));
+        // Big step delay: the kill lands before the first step completes.
+        let w = FleetWorker::spawn(3, factory(), 4, 200.0, Arc::clone(&done));
+        w.wait_health(WorkerHealth::Ready, Duration::from_secs(60)).unwrap();
+        w.submit(7, request(0)).unwrap();
+        w.kill();
+        w.wait_health(WorkerHealth::Dead, Duration::from_secs(60)).unwrap();
+        w.join();
+        assert!(
+            !done.lock().unwrap().contains_key(&7),
+            "killed worker must not have filed the stranded output"
+        );
+    }
+
+    #[test]
+    fn failed_factory_reports_dead_with_error() {
+        let done: DoneMap = Arc::new(Mutex::new(HashMap::new()));
+        let boom: BackendFactory = Arc::new(|| Err(anyhow!("no engine here")));
+        let w = FleetWorker::spawn(9, boom, 4, 0.0, done);
+        assert!(w.wait_health(WorkerHealth::Ready, Duration::from_secs(60)).is_err());
+        assert_eq!(w.health(), WorkerHealth::Dead);
+        assert!(w.error().unwrap().contains("no engine here"));
+        w.join();
+    }
+}

@@ -55,6 +55,7 @@ pub mod data;
 pub mod infer;
 pub mod runtime;
 pub mod coordinator;
+pub mod fleet;
 pub mod nvs;
 pub mod harness;
 

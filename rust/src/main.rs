@@ -6,6 +6,7 @@
 //!                     [--arrival-ms X] [--config cfg.json]
 //!                     [--workload classify|stream] [--stream-tokens T]
 //!                     [--chunk C] [--max-live L]
+//!                     [--workers N] [--policy round-robin|least-loaded|affinity]
 //!                     [--planner-table t.json] [--save-planner-table t.json]
 //! shiftaddvit table   --id 1|3|4|6|11|12   [--model pvtv2_b0]
 //! shiftaddvit fig     --id 3|4|5           [--batch 1]
@@ -18,6 +19,7 @@ use anyhow::{bail, Result};
 
 use shiftaddvit::coordinator::config::{BackendKind, DispatchMode, ServerConfig, Workload};
 use shiftaddvit::coordinator::server::serve_workload;
+use shiftaddvit::fleet::policy::PolicyKind;
 use shiftaddvit::energy::eyeriss::{energy, Hierarchy};
 use shiftaddvit::harness::{breakdown, figures, lra, nvs, overall, scaling};
 use shiftaddvit::model::config::classifier;
@@ -62,6 +64,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.stream_tokens = args.usize_or("stream-tokens", cfg.stream_tokens)?;
     cfg.stream_chunk = args.usize_or("chunk", cfg.stream_chunk)?;
     cfg.max_live = args.usize_or("max-live", cfg.max_live)?;
+    cfg.workers = args.usize_or("workers", cfg.workers)?;
+    if let Some(p) = args.get("policy") {
+        cfg.policy = PolicyKind::parse(p)?;
+    }
     if let Some(d) = args.get("dispatch") {
         cfg.dispatch = DispatchMode::parse(d)?;
     }
@@ -77,7 +83,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(p) = args.get("save-planner-table") {
         cfg.planner_table_save = Some(p.to_string());
     }
-    println!("serving the {} workload on the {} backend", cfg.workload.name(), cfg.backend.name());
+    if cfg.workers > 1 {
+        println!(
+            "serving the {} workload on the {} backend across {} workers ({})",
+            cfg.workload.name(),
+            cfg.backend.name(),
+            cfg.workers,
+            cfg.policy.name()
+        );
+    } else {
+        println!(
+            "serving the {} workload on the {} backend",
+            cfg.workload.name(),
+            cfg.backend.name()
+        );
+    }
     serve_workload(&cfg)
 }
 

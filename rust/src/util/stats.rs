@@ -9,6 +9,7 @@ pub struct Summary {
     pub min: f64,
     pub p50: f64,
     pub p90: f64,
+    pub p95: f64,
     pub p99: f64,
     pub max: f64,
 }
@@ -28,6 +29,7 @@ impl Summary {
             min: s[0],
             p50: percentile(&s, 0.50),
             p90: percentile(&s, 0.90),
+            p95: percentile(&s, 0.95),
             p99: percentile(&s, 0.99),
             max: s[n - 1],
         }
@@ -93,6 +95,9 @@ mod tests {
     fn summary_orders_percentiles() {
         let xs: Vec<f64> = (0..1000).map(|i| (i as f64) * 0.1).collect();
         let s = Summary::from(&xs);
-        assert!(s.min <= s.p50 && s.p50 <= s.p90 && s.p90 <= s.p99 && s.p99 <= s.max);
+        assert!(s.min <= s.p50 && s.p50 <= s.p90 && s.p90 <= s.p95);
+        assert!(s.p95 <= s.p99 && s.p99 <= s.max);
+        // uniform 0..99.9: p95 sits at ~94.9
+        assert!((s.p95 - 94.905).abs() < 1e-9);
     }
 }

@@ -1,0 +1,280 @@
+//! Fleet router integration suite:
+//!
+//! 1. PROPERTY: fleet outputs are bit-identical to a single-worker run for
+//!    the same request set, under every routing policy (solo batches:
+//!    `max_batch = 1`, because per-tensor INT8 calibration spans a batch);
+//! 2. placement is deterministic for a fixed policy seed;
+//! 3. `LeastLoaded` actually tracks occupancy: busy workers are routed
+//!    around, and gauges drain as work completes;
+//! 4. `Affinity` keeps equal request shapes on one worker;
+//! 5. chaos: killing a worker mid-flight still completes every submitted
+//!    request on the survivors (resubmission), bit-identically;
+//! 6. `remove_worker` under load drains cleanly — nothing lost, nothing
+//!    duplicated;
+//! 7. fleet serving also scales the classify serve loop end to end
+//!    (`serve_fleet` report sanity + per-worker breakdown).
+
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use shiftaddvit::coordinator::backend::{InferenceBackend, NativeBackend};
+use shiftaddvit::coordinator::batcher::Request;
+use shiftaddvit::coordinator::config::ServerConfig;
+use shiftaddvit::coordinator::metrics::Metrics;
+use shiftaddvit::coordinator::server::serve_fleet;
+use shiftaddvit::data::synth_images;
+use shiftaddvit::fleet::policy::PolicyKind;
+use shiftaddvit::fleet::router::{Router, RouterConfig};
+use shiftaddvit::fleet::worker::BackendFactory;
+use shiftaddvit::model::ops::Variant;
+
+const POLL: Duration = Duration::from_secs(120);
+
+fn factory() -> BackendFactory {
+    Arc::new(|| {
+        let b: Box<dyn InferenceBackend> = Box::new(NativeBackend::tiny(Variant::SHIFTADD_MOE));
+        Ok(b)
+    })
+}
+
+fn request(id: usize) -> Request {
+    let s = synth_images::gen_image(40_000 + id as u32);
+    Request {
+        id,
+        pixels: s.pixels,
+        label: Some(s.label),
+        arrived: Instant::now(),
+    }
+}
+
+fn router_with(workers: usize, policy: PolicyKind, max_batch: usize, step_delay_ms: f64) -> Router {
+    Router::new(
+        RouterConfig {
+            workers,
+            max_batch,
+            policy,
+            step_delay_ms,
+            ..RouterConfig::default()
+        },
+        factory(),
+    )
+    .expect("fleet starts")
+}
+
+/// Solo reference: the same requests through ONE engine, one request per
+/// batch — the bit-exactness baseline every fleet run must reproduce.
+fn solo_logits(n: usize) -> Vec<Vec<f32>> {
+    let backend = NativeBackend::tiny(Variant::SHIFTADD_MOE);
+    let mut m = Metrics::default();
+    let mut outs = Vec::with_capacity(n);
+    for i in 0..n {
+        let t = backend.submit(request(i));
+        backend.step(1, &mut m).unwrap();
+        outs.push(backend.poll(&t).expect("solo step completed").logits);
+    }
+    outs
+}
+
+// ---------------------------------------------------------------------------
+// 1. Bit-identical property under every policy
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fleet_outputs_are_bit_identical_to_single_worker_under_every_policy() {
+    let n = 6;
+    let want = solo_logits(n);
+    for policy in [
+        PolicyKind::RoundRobin,
+        PolicyKind::LeastLoaded,
+        PolicyKind::Affinity,
+    ] {
+        let mut r = router_with(2, policy, 1, 0.0);
+        let tickets: Vec<_> = (0..n).map(|i| r.submit(request(i)).unwrap()).collect();
+        for (i, t) in tickets.iter().enumerate() {
+            let out = r.poll_wait(t, POLL).unwrap();
+            assert_eq!(out.request_id, i);
+            assert_eq!(
+                out.logits, want[i],
+                "policy {policy:?}: request {i} diverged from the solo run"
+            );
+        }
+        r.shutdown().unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Deterministic placement under a fixed seed
+// ---------------------------------------------------------------------------
+
+#[test]
+fn placement_is_deterministic_for_a_fixed_policy_seed() {
+    for policy in [
+        PolicyKind::RoundRobin,
+        PolicyKind::LeastLoaded,
+        PolicyKind::Affinity,
+    ] {
+        // Throttled steps: all 9 submissions land before any step finishes,
+        // so the load gauges the policy sees are timing-independent.
+        let place = |seed: u64| -> Vec<usize> {
+            let mut r = Router::new(
+                RouterConfig {
+                    workers: 3,
+                    max_batch: 4,
+                    policy,
+                    policy_seed: seed,
+                    step_delay_ms: 50.0,
+                },
+                factory(),
+            )
+            .expect("fleet starts");
+            let placed: Vec<usize> =
+                (0..9).map(|i| r.submit(request(i)).unwrap().worker).collect();
+            r.shutdown().unwrap();
+            placed
+        };
+        assert_eq!(
+            place(7),
+            place(7),
+            "policy {policy:?}: same seed must place identically"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. LeastLoaded tracks occupancy
+// ---------------------------------------------------------------------------
+
+#[test]
+fn least_loaded_routes_around_busy_workers_and_gauges_drain() {
+    // Throttle steps so the first request is still in flight when the
+    // second arrives: the occupancy gauge must steer it to the idle worker.
+    let mut r = router_with(2, PolicyKind::LeastLoaded, 4, 60.0);
+    let t1 = r.submit(request(0)).unwrap();
+    let t2 = r.submit(request(1)).unwrap();
+    assert_ne!(t1.worker, t2.worker, "least-loaded must pick the idle worker");
+    r.poll_wait(&t1, POLL).unwrap();
+    r.poll_wait(&t2, POLL).unwrap();
+    // gauges drained back to zero: a fresh pair splits again instead of
+    // piling onto one worker
+    let t3 = r.submit(request(2)).unwrap();
+    let t4 = r.submit(request(3)).unwrap();
+    assert_ne!(t3.worker, t4.worker, "drained gauges must split fresh work");
+    r.poll_wait(&t3, POLL).unwrap();
+    r.poll_wait(&t4, POLL).unwrap();
+    r.shutdown().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// 4. Affinity pins equal shapes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn affinity_keeps_equal_shapes_on_one_worker() {
+    let mut r = router_with(3, PolicyKind::Affinity, 4, 0.0);
+    let tickets: Vec<_> = (0..8).map(|i| r.submit(request(i)).unwrap()).collect();
+    let pinned = tickets[0].worker;
+    assert!(
+        tickets.iter().all(|t| t.worker == pinned),
+        "classify requests share one shape, so affinity must pin them all"
+    );
+    for t in &tickets {
+        r.poll_wait(t, POLL).unwrap();
+    }
+    let (merged, per_worker) = r.metrics_report();
+    assert_eq!(merged.requests, 8);
+    assert_eq!(
+        per_worker.iter().filter(|b| b.requests > 0).count(),
+        1,
+        "exactly one worker served the pinned shape"
+    );
+    r.shutdown().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// 5. Chaos: kill a worker mid-flight
+// ---------------------------------------------------------------------------
+
+#[test]
+fn killing_a_worker_mid_flight_completes_every_request_bit_identically() {
+    let n = 6;
+    let want = solo_logits(n);
+    // Solo batches (bit-exactness baseline) + throttled steps, so the
+    // victim's work is reliably still in flight when the kill lands.
+    let mut r = router_with(3, PolicyKind::RoundRobin, 1, 80.0);
+    let tickets: Vec<_> = (0..n).map(|i| r.submit(request(i)).unwrap()).collect();
+    let victim = tickets[0].worker;
+    r.kill_worker(victim).unwrap();
+    for (i, t) in tickets.iter().enumerate() {
+        let out = r.poll_wait(t, POLL).unwrap();
+        assert_eq!(
+            out.logits, want[i],
+            "request {i} diverged after worker {victim} died"
+        );
+    }
+    assert!(
+        r.resubmitted() > 0,
+        "the killed worker's stranded requests were re-placed"
+    );
+    assert_eq!(r.worker_count(), 2, "the dead worker was reaped");
+    assert!(r.readiness().ready, "survivors still admit requests");
+    r.shutdown().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// 6. remove_worker drains cleanly under load
+// ---------------------------------------------------------------------------
+
+#[test]
+fn remove_worker_under_load_loses_and_duplicates_nothing() {
+    let mut r = router_with(2, PolicyKind::RoundRobin, 2, 20.0);
+    let tickets: Vec<_> = (0..8).map(|i| r.submit(request(i)).unwrap()).collect();
+    let removed = tickets[0].worker;
+    // blocks until the removed worker finished its live work
+    r.remove_worker(removed).unwrap();
+    assert_eq!(r.worker_count(), 1);
+    let mut seen = HashSet::new();
+    for t in &tickets {
+        let out = r.poll_wait(t, POLL).unwrap();
+        assert!(
+            seen.insert(out.request_id),
+            "duplicate output for request {}",
+            out.request_id
+        );
+        assert!(r.poll(t).is_none(), "second poll must find nothing");
+    }
+    assert_eq!(seen.len(), 8, "every request completed exactly once");
+    assert_eq!(r.resubmitted(), 0, "drained work finishes, it is never re-placed");
+    r.shutdown().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// 7. End-to-end fleet serve loop
+// ---------------------------------------------------------------------------
+
+#[test]
+fn serve_fleet_end_to_end_reports_per_worker_breakdown() {
+    let cfg = ServerConfig {
+        requests: 10,
+        max_batch: 4,
+        workers: 2,
+        policy: PolicyKind::LeastLoaded,
+        ..ServerConfig::default()
+    };
+    let report = serve_fleet(&cfg).unwrap();
+    assert_eq!(report.metrics.requests, 10);
+    assert!(report.throughput_rps > 0.0);
+    assert!(report.latency.p99 >= report.latency.p50);
+    assert_eq!(report.per_worker.len(), 2);
+    assert_eq!(
+        report.per_worker.iter().map(|b| b.requests).sum::<usize>(),
+        10,
+        "per-worker breakdown must account for every request"
+    );
+    // per-request ids were threaded into the merged metrics: every client
+    // id shows up exactly once across the fleet
+    let mut ids = report.metrics.request_ids.clone();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..10).collect::<Vec<_>>());
+    report.print(); // smoke: fleet report printing must not panic
+}
