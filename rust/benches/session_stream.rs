@@ -3,9 +3,20 @@
 //! tokens/sec — the measured case for cross-request continuous batching:
 //! one MatMul/MatShift dispatch per linear per layer per step, amortized
 //! over every live session, instead of one dispatch chain per session.
-//! Emits both the table and a JSON object for tooling.
+//!
+//! Part two is the scheduler sweep: open-loop short-session arrivals with
+//! one adversarial long prompt injected mid-run, stepped under the legacy
+//! single-phase scheduler vs the phase-disaggregated one at two prefill
+//! budgets — the p99 per-token latency the disaggregation is judged on.
+//! Emits both tables and a JSON object for tooling.
 
-use shiftaddvit::infer::session::{SessionState, StreamAttn, StreamModel};
+use std::sync::Arc;
+
+use shiftaddvit::coordinator::metrics::Metrics;
+use shiftaddvit::coordinator::sessions::{SchedulerMode, SessionEngine, StreamTicket};
+use shiftaddvit::infer::session::{SessionSpec, SessionState, StreamAttn, StreamModel};
+use shiftaddvit::kernels::planner::Planner;
+use shiftaddvit::kernels::registry::KernelRegistry;
 use shiftaddvit::model::ops::Lin;
 use shiftaddvit::util::bench::{f1, f2, time_ms};
 use shiftaddvit::util::json::Json;
@@ -14,6 +25,76 @@ use shiftaddvit::util::stats::Summary;
 
 const TOKENS: usize = 64;
 const CHUNK: usize = 8;
+
+// --- adversarial scheduler sweep ------------------------------------------
+const ADV_CHUNK: usize = 4;
+const ADV_MAX_LIVE: usize = 2;
+const ADV_SHORTS: usize = 20;
+const ADV_SHORT_TOKENS: usize = 8;
+const ADV_LONG_TOKENS: usize = 384;
+/// scheduler tick the adversarial long prompt lands on
+const ADV_LONG_AT: usize = 2;
+const ADV_ARRIVALS_PER_TICK: usize = 2;
+
+struct AdvOutcome {
+    short_tok: Summary,
+    long_ms: f64,
+    long_tok_ms: f64,
+    decode_p99: f64,
+    steps: usize,
+}
+
+/// One adversarial run: `ADV_SHORTS` short sessions arrive open-loop
+/// (`ADV_ARRIVALS_PER_TICK` per scheduler tick) with a long prompt
+/// injected at tick `ADV_LONG_AT`; under single-phase scheduling the
+/// prompt occupies a scarce live slot for `ADV_LONG_TOKENS / ADV_CHUNK`
+/// steps, while disaggregation keeps it in the budgeted prefill dispatch.
+fn adversarial_run(mode: SchedulerMode, planner: &Arc<Planner>) -> AdvOutcome {
+    let spec = SessionSpec::tiny(StreamAttn::LinearAdd, Lin::Shift);
+    let model = StreamModel::new(spec.clone(), Arc::clone(planner));
+    let d = spec.dim;
+    let mut eng = SessionEngine::with_mode(model, ADV_CHUNK, ADV_MAX_LIVE, mode);
+    let mut metrics = Metrics::default();
+    let mut shorts: Vec<StreamTicket> = Vec::new();
+    let mut long_ticket = None;
+    let mut decode_ms = Vec::new();
+    let mut steps = 0usize;
+    let mut tick = 0usize;
+    while shorts.len() < ADV_SHORTS || long_ticket.is_none() || !eng.idle() {
+        for _ in 0..ADV_ARRIVALS_PER_TICK {
+            if shorts.len() < ADV_SHORTS {
+                let seed = 0xAD5 + shorts.len() as u64;
+                shorts.push(eng.submit(XorShift64::new(seed).normals(ADV_SHORT_TOKENS * d)));
+            }
+        }
+        if tick == ADV_LONG_AT {
+            long_ticket = Some(eng.submit(XorShift64::new(0xADD).normals(ADV_LONG_TOKENS * d)));
+        }
+        if !eng.idle() {
+            let st = eng.step(&mut metrics);
+            steps += 1;
+            if st.decode_tokens > 0 {
+                decode_ms.push(st.decode_ms);
+            }
+        }
+        tick += 1;
+    }
+    let mut short_tok = Vec::new();
+    for t in &shorts {
+        let o = eng.poll(t).expect("short session completed");
+        short_tok.push(o.latency_ms() / o.tokens as f64);
+    }
+    let lo = eng
+        .poll(&long_ticket.expect("long prompt submitted"))
+        .expect("long prompt completed");
+    AdvOutcome {
+        short_tok: Summary::from(&short_tok),
+        long_ms: lo.latency_ms(),
+        long_tok_ms: lo.latency_ms() / lo.tokens as f64,
+        decode_p99: Summary::from(&decode_ms).p99,
+        steps,
+    }
+}
 
 fn main() {
     // The paper's deployed mixture: Hamming LinearAdd attention (MatAdd)
@@ -92,6 +173,69 @@ fn main() {
     }
 
     table.print("Streaming sessions — sequential vs fused batched stepping");
+
+    // --- adversarial long-prompt sweep: single-phase vs disaggregated -----
+    // One shared planner across every run, so the comparison is pure
+    // scheduling (identical kernel placements, bit-exact logits).
+    let planner = Arc::new(Planner::new(Arc::new(KernelRegistry::with_defaults())));
+    let cases = [
+        ("single-phase", SchedulerMode::SinglePhase, 0usize),
+        (
+            "disagg",
+            SchedulerMode::Disaggregated {
+                prefill_budget: ADV_CHUNK * ADV_MAX_LIVE,
+            },
+            ADV_CHUNK * ADV_MAX_LIVE,
+        ),
+        (
+            "disagg",
+            SchedulerMode::Disaggregated {
+                prefill_budget: 2 * ADV_CHUNK * ADV_MAX_LIVE,
+            },
+            2 * ADV_CHUNK * ADV_MAX_LIVE,
+        ),
+    ];
+    let mut adv_table = shiftaddvit::util::bench::Table::new(&[
+        "scheduler",
+        "budget",
+        "short p50 (ms/tok)",
+        "short p99 (ms/tok)",
+        "long prompt (ms)",
+        "decode p99 (ms)",
+        "steps",
+    ]);
+    let mut adv_rows = Vec::new();
+    for (name, mode, budget) in cases {
+        let out = adversarial_run(mode, &planner);
+        adv_table.row(&[
+            name.to_string(),
+            if budget == 0 {
+                "-".to_string()
+            } else {
+                budget.to_string()
+            },
+            f2(out.short_tok.p50),
+            f2(out.short_tok.p99),
+            f1(out.long_ms),
+            f2(out.decode_p99),
+            out.steps.to_string(),
+        ]);
+        adv_rows.push(Json::obj(vec![
+            ("scheduler", Json::str(name)),
+            ("prefill_budget", Json::num(budget as f64)),
+            ("short_tok_p50_ms", Json::num(out.short_tok.p50)),
+            ("short_tok_p99_ms", Json::num(out.short_tok.p99)),
+            ("long_ms", Json::num(out.long_ms)),
+            ("long_tok_ms", Json::num(out.long_tok_ms)),
+            ("decode_p99_ms", Json::num(out.decode_p99)),
+            ("steps", Json::num(out.steps as f64)),
+        ]));
+    }
+    adv_table.print(&format!(
+        "Adversarial arrivals — {ADV_SHORTS}×{ADV_SHORT_TOKENS}-token sessions + one \
+         {ADV_LONG_TOKENS}-token prompt (chunk {ADV_CHUNK}, max_live {ADV_MAX_LIVE})"
+    ));
+
     let json = Json::obj(vec![
         ("bench", Json::str("session_stream")),
         ("dim", Json::num(d as f64)),
@@ -99,6 +243,7 @@ fn main() {
         ("tokens_per_session", Json::num(TOKENS as f64)),
         ("chunk", Json::num(CHUNK as f64)),
         ("results", Json::Arr(rows)),
+        ("adversarial", Json::Arr(adv_rows)),
     ]);
     println!("\n{json}");
 }

@@ -57,6 +57,36 @@ impl BackendKind {
     }
 }
 
+/// How the streaming engine schedules prefill vs decode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// legacy baseline: arrivals prefill inside the same fused step that
+    /// advances live streams
+    SinglePhase,
+    /// phase-disaggregated: decode dispatches first and alone; new prompts
+    /// catch up in a separate prefill dispatch under `prefill_budget`
+    Disaggregated,
+}
+
+impl SchedulerKind {
+    pub fn parse(s: &str) -> Result<SchedulerKind> {
+        match s {
+            "single-phase" => Ok(SchedulerKind::SinglePhase),
+            "disaggregated" => Ok(SchedulerKind::Disaggregated),
+            other => {
+                anyhow::bail!("unknown scheduler '{other}' (single-phase|disaggregated)")
+            }
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedulerKind::SinglePhase => "single-phase",
+            SchedulerKind::Disaggregated => "disaggregated",
+        }
+    }
+}
+
 /// Which request shape the server drives.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Workload {
@@ -109,6 +139,12 @@ pub struct ServerConfig {
     pub stream_chunk: usize,
     /// stream workload: live-session cap (continuous-batching slots)
     pub max_live: usize,
+    /// stream workload: how prefill and decode share the step loop
+    pub scheduler: SchedulerKind,
+    /// stream workload: max prompt tokens the prefill phase feeds per step
+    /// (0 = auto-size to `stream_chunk · max_live`, so one step of intake
+    /// never outweighs a full decode batch and decode is never starved)
+    pub prefill_budget: usize,
     /// offline-autotuned planner table to pin on startup (JSON path)
     pub planner_table: Option<String>,
     /// where to dump the planner's decisions after the run (JSON path)
@@ -133,6 +169,8 @@ impl Default for ServerConfig {
             stream_tokens: 64,
             stream_chunk: 8,
             max_live: 8,
+            scheduler: SchedulerKind::Disaggregated,
+            prefill_budget: 0,
             planner_table: None,
             planner_table_save: None,
             workers: 1,
@@ -177,6 +215,12 @@ impl ServerConfig {
         if let Some(v) = j.get("max_live").and_then(|v| v.as_usize()) {
             c.max_live = v;
         }
+        if let Some(v) = j.get("scheduler").and_then(|v| v.as_str()) {
+            c.scheduler = SchedulerKind::parse(v)?;
+        }
+        if let Some(v) = j.get("prefill_budget").and_then(|v| v.as_usize()) {
+            c.prefill_budget = v;
+        }
         if let Some(v) = j.get("planner_table").and_then(|v| v.as_str()) {
             c.planner_table = Some(v.to_string());
         }
@@ -190,6 +234,18 @@ impl ServerConfig {
             c.policy = PolicyKind::parse(v)?;
         }
         Ok(c)
+    }
+
+    /// Effective per-step prefill token budget: the explicit
+    /// `prefill_budget`, or (when 0) auto-sized to one full decode batch
+    /// (`stream_chunk · max_live`) so intake keeps pace with decode without
+    /// ever outweighing it in a single step.
+    pub fn resolve_prefill_budget(&self) -> usize {
+        if self.prefill_budget > 0 {
+            self.prefill_budget
+        } else {
+            (self.stream_chunk.max(1) * self.max_live.max(1)).max(1)
+        }
     }
 }
 
@@ -247,6 +303,31 @@ mod tests {
         assert_eq!(d.workload, Workload::Classify);
         assert!(Workload::parse("nope").is_err());
         assert_eq!(Workload::Stream.name(), "stream");
+    }
+
+    #[test]
+    fn scheduler_fields_parse_default_and_autosize() {
+        let dir = std::env::temp_dir().join("savit_cfg_sched_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(
+            &p,
+            r#"{"scheduler": "single-phase", "prefill_budget": 24,
+                "stream_chunk": 4, "max_live": 3}"#,
+        )
+        .unwrap();
+        let c = ServerConfig::from_file(&p).unwrap();
+        assert_eq!(c.scheduler, SchedulerKind::SinglePhase);
+        assert_eq!(c.prefill_budget, 24);
+        assert_eq!(c.resolve_prefill_budget(), 24, "explicit budget wins");
+        // defaults: disaggregated scheduler, budget auto-sized to one full
+        // decode batch
+        let d = ServerConfig::default();
+        assert_eq!(d.scheduler, SchedulerKind::Disaggregated);
+        assert_eq!(d.prefill_budget, 0);
+        assert_eq!(d.resolve_prefill_budget(), d.stream_chunk * d.max_live);
+        assert!(SchedulerKind::parse("nope").is_err());
+        assert_eq!(SchedulerKind::Disaggregated.name(), "disaggregated");
     }
 
     #[test]

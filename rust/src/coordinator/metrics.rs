@@ -34,6 +34,15 @@ pub struct Metrics {
     pub attn_dispatches_per_layer: Vec<f64>,
     /// per-step live session count (streaming path only)
     pub live_sessions: Vec<f64>,
+    /// per-step token rows advanced by the decode dispatch (streaming
+    /// path; the single-phase scheduler reports its whole fused step here,
+    /// prompts included — that asymmetry IS the phase-disaggregation story)
+    pub decode_tokens: Vec<f64>,
+    /// per-step token rows fed by the budgeted prefill dispatch (streaming
+    /// path; 0 under the single-phase scheduler)
+    pub prefill_tokens: Vec<f64>,
+    /// per-step prefill-queue depth at step start (streaming path)
+    pub prefill_queue: Vec<f64>,
     /// caller-supplied ids of the requests completed so far, in completion
     /// order — the audit trail a fleet merge preserves (every submitted id
     /// shows up exactly once across all workers)
@@ -138,6 +147,9 @@ impl Metrics {
         self.attn_dispatches_per_layer
             .extend_from_slice(&other.attn_dispatches_per_layer);
         self.live_sessions.extend_from_slice(&other.live_sessions);
+        self.decode_tokens.extend_from_slice(&other.decode_tokens);
+        self.prefill_tokens.extend_from_slice(&other.prefill_tokens);
+        self.prefill_queue.extend_from_slice(&other.prefill_queue);
         self.request_ids.extend_from_slice(&other.request_ids);
         for (id, n) in &other.chosen_backends {
             *self.chosen_backends.entry(id.clone()).or_insert(0) += n;
@@ -210,6 +222,25 @@ impl Metrics {
                 ]),
             ));
         }
+        for (key, gauge) in [
+            ("decode_tokens", &self.decode_tokens),
+            ("prefill_tokens", &self.prefill_tokens),
+            ("prefill_queue", &self.prefill_queue),
+        ] {
+            if gauge.is_empty() {
+                continue;
+            }
+            let s = Summary::from(gauge);
+            pairs.push((
+                key,
+                Json::obj(vec![
+                    ("mean", Json::num(s.mean)),
+                    ("p99", Json::num(s.p99)),
+                    ("max", Json::num(s.max)),
+                    ("n", Json::num(s.n as f64)),
+                ]),
+            ));
+        }
         if !self.chosen_backends.is_empty() {
             let chosen: Vec<(&str, Json)> = self
                 .chosen_backends
@@ -275,6 +306,21 @@ impl Metrics {
                 "  live sessions per step: mean {:.1}  max {:.0}",
                 mean(&self.live_sessions),
                 self.live_sessions.iter().cloned().fold(0.0, f64::max)
+            );
+        }
+        if !self.decode_tokens.is_empty() {
+            let dec = Summary::from(&self.decode_tokens);
+            let pre = Summary::from(&self.prefill_tokens);
+            println!(
+                "  decode tokens per step: mean {:.1}  p99 {:.0}  |  prefill: mean {:.1}  p99 {:.0}",
+                dec.mean, dec.p99, pre.mean, pre.p99
+            );
+        }
+        if self.prefill_queue.iter().any(|&q| q > 0.0) {
+            let s = Summary::from(&self.prefill_queue);
+            println!(
+                "  prefill queue depth: mean {:.1}  max {:.0}",
+                s.mean, s.max
             );
         }
         if !self.chosen_backends.is_empty() {
@@ -399,6 +445,29 @@ mod tests {
         // Clone gives an independent copy (fleet snapshot semantics)
         let c = a.clone();
         assert_eq!(c.requests, a.requests);
+    }
+
+    #[test]
+    fn phase_gauges_merge_and_serialize() {
+        let mut a = Metrics::default();
+        assert!(a.to_json().get("decode_tokens").is_none(), "empty → absent");
+        a.decode_tokens.push(8.0);
+        a.prefill_tokens.push(16.0);
+        a.prefill_queue.push(2.0);
+        let mut b = Metrics::default();
+        b.decode_tokens.push(4.0);
+        b.prefill_tokens.push(0.0);
+        b.prefill_queue.push(0.0);
+        a.merge(&b);
+        assert_eq!(a.decode_tokens, vec![8.0, 4.0]);
+        assert_eq!(a.prefill_tokens, vec![16.0, 0.0]);
+        assert_eq!(a.prefill_queue, vec![2.0, 0.0]);
+        let j = a.to_json();
+        let dec = j.get("decode_tokens").expect("gauge serialized");
+        assert_eq!(dec.get("n").and_then(|v| v.as_usize()), Some(2));
+        assert!(j.get("prefill_tokens").is_some());
+        assert!(j.get("prefill_queue").is_some());
+        a.print(); // should not panic
     }
 
     #[test]

@@ -25,15 +25,16 @@ use anyhow::Result;
 
 use crate::coordinator::backend::{create_backend, create_planner, InferenceBackend, Ticket};
 use crate::coordinator::batcher::{Batcher, Request};
-use crate::coordinator::config::{BackendKind, ServerConfig, Workload};
+use crate::coordinator::config::{BackendKind, SchedulerKind, ServerConfig, Workload};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::MoePipeline;
-use crate::coordinator::sessions::{SessionEngine, StreamTicket};
+use crate::coordinator::sessions::{SchedulerMode, SessionEngine, StreamTicket};
 use crate::data::synth_images;
 use crate::fleet::policy::WorkerView;
 use crate::fleet::router::{Router, WorkerBreakdown};
 use crate::infer::session::{SessionSpec, StreamAttn, StreamModel};
-use crate::kernels::planner::{table_json, Choice};
+use crate::kernels::planner::{table_json, Choice, Planner};
+use crate::kernels::registry::KernelRegistry;
 use crate::model::ops::Lin;
 use crate::runtime::artifact::Manifest;
 use crate::util::json::Json;
@@ -353,8 +354,14 @@ pub struct StreamReport {
     /// per-session end-to-end latency (submit → logits)
     pub latency: Summary,
     /// per-token latency (session latency / tokens streamed) — the
-    /// p50/p95/p99 baseline the phase-disaggregation work needs
+    /// p50/p95/p99 the phase-disaggregated scheduler is judged on
     pub token_latency: Summary,
+    /// per-session queue wait (arrival → first admission into a fused
+    /// dispatch): how long intake sat behind the admission budget
+    pub queue_wait: Summary,
+    /// per-session time-to-first-token (arrival → completion of the step
+    /// that first fed it)
+    pub ttft: Summary,
     pub occupancy: Option<Summary>,
     pub step_tokens: Option<Summary>,
     pub metrics: Metrics,
@@ -387,6 +394,15 @@ impl StreamReport {
             "per-token latency  p50 {:.3} ms  p95 {:.3}  p99 {:.3}",
             self.token_latency.p50, self.token_latency.p95, self.token_latency.p99
         );
+        println!(
+            "queue wait  p50 {:.3} ms  p95 {:.3}  p99 {:.3}   ttft  p50 {:.3} ms  p95 {:.3}  p99 {:.3}",
+            self.queue_wait.p50,
+            self.queue_wait.p95,
+            self.queue_wait.p99,
+            self.ttft.p50,
+            self.ttft.p95,
+            self.ttft.p99
+        );
         print_per_worker(&self.per_worker);
         self.metrics.print();
     }
@@ -401,6 +417,8 @@ impl StreamReport {
             ("tokens_per_sec", Json::num(self.tokens_per_sec)),
             ("latency_ms", summary_json(&self.latency)),
             ("token_latency_ms", summary_json(&self.token_latency)),
+            ("queue_wait_ms", summary_json(&self.queue_wait)),
+            ("ttft_ms", summary_json(&self.ttft)),
             (
                 "per_worker",
                 Json::Arr(self.per_worker.iter().map(|b| b.to_json()).collect()),
@@ -466,7 +484,10 @@ pub fn serve_stream(cfg: &ServerConfig) -> Result<StreamReport> {
     let planner = create_planner(cfg)?;
     let model = StreamModel::new(SessionSpec::tiny(StreamAttn::LinearAdd, Lin::Shift), planner);
     let dim = model.spec.dim;
-    let mut engine = SessionEngine::new(model, cfg.stream_chunk.max(1), cfg.max_live.max(1));
+    let mode = engine_mode(cfg);
+    print_scheduler(mode);
+    let mut engine =
+        SessionEngine::with_mode(model, cfg.stream_chunk.max(1), cfg.max_live.max(1), mode);
 
     let lens = stream_workload_lens(cfg.requests, cfg.stream_tokens);
     let schedule = stream_arrival_schedule(lens.len(), cfg.arrival_ms, STREAM_ARRIVAL_SEED);
@@ -503,10 +524,14 @@ pub fn serve_stream(cfg: &ServerConfig) -> Result<StreamReport> {
 
     let mut latencies = Vec::with_capacity(tickets.len());
     let mut token_latencies = Vec::with_capacity(tickets.len());
+    let mut queue_waits = Vec::with_capacity(tickets.len());
+    let mut ttfts = Vec::with_capacity(tickets.len());
     for t in &tickets {
         let out = engine.poll(t).expect("serve loop finished all sessions");
         latencies.push(out.latency_ms());
         token_latencies.push(out.latency_ms() / out.tokens.max(1) as f64);
+        queue_waits.push(out.queue_wait_ms());
+        ttfts.push(out.ttft_ms());
     }
     metrics.record_plan(&engine.model.planner.choices());
     save_planner_table(cfg, &engine.model.planner.choices())?;
@@ -519,11 +544,33 @@ pub fn serve_stream(cfg: &ServerConfig) -> Result<StreamReport> {
         tokens_per_sec: total_tokens as f64 / (wall_ms / 1e3).max(1e-12),
         latency: Summary::from(&latencies),
         token_latency: Summary::from(&token_latencies),
+        queue_wait: Summary::from(&queue_waits),
+        ttft: Summary::from(&ttfts),
         occupancy: metrics.occupancy_summary(),
         step_tokens: metrics.step_tokens_summary(),
         metrics,
         per_worker: Vec::new(),
     })
+}
+
+/// Map the configured scheduler onto the engine's mode, resolving the
+/// auto-sized prefill budget.
+fn engine_mode(cfg: &ServerConfig) -> SchedulerMode {
+    match cfg.scheduler {
+        SchedulerKind::SinglePhase => SchedulerMode::SinglePhase,
+        SchedulerKind::Disaggregated => SchedulerMode::Disaggregated {
+            prefill_budget: cfg.resolve_prefill_budget(),
+        },
+    }
+}
+
+fn print_scheduler(mode: SchedulerMode) {
+    match mode {
+        SchedulerMode::SinglePhase => println!("stream scheduler: single-phase (legacy)"),
+        SchedulerMode::Disaggregated { prefill_budget } => println!(
+            "stream scheduler: disaggregated (prefill budget {prefill_budget} tokens/step)"
+        ),
+    }
 }
 
 /// What one stream fleet worker hands back when its inbox closes and its
@@ -533,6 +580,8 @@ struct StreamWorkerResult {
     steps: usize,
     latencies: Vec<f64>,
     token_latencies: Vec<f64>,
+    queue_waits: Vec<f64>,
+    ttfts: Vec<f64>,
     metrics: Metrics,
 }
 
@@ -542,6 +591,11 @@ struct StreamWorkerResult {
 /// arrival schedule and places each session with the configured fleet
 /// policy over live-load gauges that workers decrement as sessions retire
 /// (shape key = the session's token count).
+///
+/// The planner is tuned ONCE in the factory — a probe model autotunes (or
+/// pins `cfg.planner_table`) on the main thread — and every worker pins
+/// the resulting table via [`Planner::pin_table_json`], so N workers never
+/// re-benchmark the same shapes N times and all place identical kernels.
 fn serve_stream_fleet(cfg: &ServerConfig) -> Result<StreamReport> {
     let workers = cfg.workers;
     let lens = stream_workload_lens(cfg.requests, cfg.stream_tokens);
@@ -553,6 +607,23 @@ fn serve_stream_fleet(cfg: &ServerConfig) -> Result<StreamReport> {
         .enumerate()
         .map(|(i, &n)| XorShift64::new(0x70C0 + i as u64).normals(n * dim))
         .collect();
+    let mode = engine_mode(cfg);
+    print_scheduler(mode);
+
+    // Plan once in the factory: the probe model autotunes every shape the
+    // workers will need (or pins them from cfg.planner_table), then the
+    // table is shared with every worker at spawn.
+    let factory_planner = create_planner(cfg)?;
+    let _probe = StreamModel::new(
+        SessionSpec::tiny(StreamAttn::LinearAdd, Lin::Shift),
+        Arc::clone(&factory_planner),
+    );
+    let table_text = factory_planner.to_table_json().to_string();
+    println!(
+        "fleet: planner tuned once in the factory ({} choices shared with {workers} workers)",
+        factory_planner.choices().len()
+    );
+    save_planner_table(cfg, &factory_planner.choices())?;
 
     let mut inboxes = Vec::with_capacity(workers);
     let mut loads: Vec<Arc<AtomicUsize>> = Vec::with_capacity(workers);
@@ -560,18 +631,22 @@ fn serve_stream_fleet(cfg: &ServerConfig) -> Result<StreamReport> {
     for w in 0..workers {
         let (tx, rx) = mpsc::channel::<Vec<f32>>();
         let load = Arc::new(AtomicUsize::new(0));
-        let planner = create_planner(cfg)?;
         let chunk = cfg.stream_chunk.max(1);
         let max_live = cfg.max_live.max(1);
         let thread_load = Arc::clone(&load);
+        let worker_table = table_text.clone();
         let handle = thread::Builder::new()
             .name(format!("stream-worker-{w}"))
             .spawn(move || -> StreamWorkerResult {
+                let planner = Arc::new(Planner::new(Arc::new(KernelRegistry::with_defaults())));
+                planner
+                    .pin_table_json(&Json::parse(&worker_table).expect("factory table parses"))
+                    .expect("factory table pins on the worker planner");
                 let model = StreamModel::new(
                     SessionSpec::tiny(StreamAttn::LinearAdd, Lin::Shift),
                     planner,
                 );
-                let mut engine = SessionEngine::new(model, chunk, max_live);
+                let mut engine = SessionEngine::with_mode(model, chunk, max_live, mode);
                 let mut metrics = Metrics::default();
                 let mut tickets: Vec<StreamTicket> = Vec::new();
                 let mut steps = 0usize;
@@ -604,16 +679,22 @@ fn serve_stream_fleet(cfg: &ServerConfig) -> Result<StreamReport> {
                 metrics.record_plan(&engine.model.planner.choices());
                 let mut latencies = Vec::with_capacity(tickets.len());
                 let mut token_latencies = Vec::with_capacity(tickets.len());
+                let mut queue_waits = Vec::with_capacity(tickets.len());
+                let mut ttfts = Vec::with_capacity(tickets.len());
                 for t in &tickets {
                     let out = engine.poll(t).expect("stream worker drained its sessions");
                     latencies.push(out.latency_ms());
                     token_latencies.push(out.latency_ms() / out.tokens.max(1) as f64);
+                    queue_waits.push(out.queue_wait_ms());
+                    ttfts.push(out.ttft_ms());
                 }
                 StreamWorkerResult {
                     sessions: tickets.len(),
                     steps,
                     latencies,
                     token_latencies,
+                    queue_waits,
+                    ttfts,
                     metrics,
                 }
             })
@@ -657,6 +738,8 @@ fn serve_stream_fleet(cfg: &ServerConfig) -> Result<StreamReport> {
     let mut merged = Metrics::default();
     let mut latencies = Vec::with_capacity(lens.len());
     let mut token_latencies = Vec::with_capacity(lens.len());
+    let mut queue_waits = Vec::with_capacity(lens.len());
+    let mut ttfts = Vec::with_capacity(lens.len());
     let mut steps = 0usize;
     let mut per_worker = Vec::with_capacity(workers);
     for (w, handle) in handles.into_iter().enumerate() {
@@ -664,6 +747,8 @@ fn serve_stream_fleet(cfg: &ServerConfig) -> Result<StreamReport> {
         steps += res.steps;
         latencies.extend_from_slice(&res.latencies);
         token_latencies.extend_from_slice(&res.token_latencies);
+        queue_waits.extend_from_slice(&res.queue_waits);
+        ttfts.extend_from_slice(&res.ttfts);
         merged.merge(&res.metrics);
         per_worker.push(WorkerBreakdown {
             id: w,
@@ -683,6 +768,8 @@ fn serve_stream_fleet(cfg: &ServerConfig) -> Result<StreamReport> {
         tokens_per_sec: total_tokens as f64 / (wall_ms / 1e3).max(1e-12),
         latency: Summary::from(&latencies),
         token_latency: Summary::from(&token_latencies),
+        queue_wait: Summary::from(&queue_waits),
+        ttft: Summary::from(&ttfts),
         occupancy: merged.occupancy_summary(),
         step_tokens: merged.step_tokens_summary(),
         metrics: merged,

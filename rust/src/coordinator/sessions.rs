@@ -1,16 +1,32 @@
 //! Cross-request continuous batching of streaming sessions (sglang-style
-//! router, shrunk to this repo's shape): every [`SessionEngine::step`]
-//! packs the next token chunk of EVERY live session into one fused
-//! [`StreamModel::extend_batch`] — a single MatMul/MatShift dispatch per
-//! linear per layer shared by all live requests — then retires finished
-//! sessions and admits queued ones, so requests of different lengths join
-//! and leave the batch without ever stalling each other.
+//! scheduler, shrunk to this repo's shape), now **phase-disaggregated**:
+//! prefill (catching a newly arrived prompt's backlog up to steady state)
+//! and decode (advancing warmed live streams) run as separate fused
+//! dispatches with separate queues, mirroring the prefill/decode
+//! disaggregation in the sglang scheduler.
+//!
+//! - **Decode phase** (priority): every *warmed* live session contributes
+//!   its next `chunk` tokens to ONE fused [`StreamModel::extend_batch`] —
+//!   a single MatMul/MatShift dispatch per linear per layer shared by all
+//!   live requests. Because no prompt backlog rides in this dispatch, its
+//!   cost — and therefore every live stream's per-token latency — is
+//!   bounded by `max_live · chunk` no matter what just arrived.
+//! - **Prefill phase**: newly submitted sessions wait in the
+//!   [`PrefillQueue`] and catch up their backlog in *budgeted* heterogeneous
+//!   chunks (up to `prefill_budget` tokens per step across the whole
+//!   queue, FIFO). A session graduates to the live set once its remaining
+//!   backlog fits in one decode chunk — it enters the decode batch warm,
+//!   and it can keep warming even while every live slot is taken.
+//!
+//! [`SchedulerMode::SinglePhase`] keeps the legacy fused loop (admission
+//! straight into the shared step) as the measured baseline; both modes are
+//! bit-exact against solo full-prefix inference under any budget and any
+//! arrival interleaving, because every per-token operation in
+//! `infer::session` is row-independent.
 //!
 //! The engine is deliberately synchronous and deterministic: callers own
 //! the step loop (a serving thread, a bench, or a test driving it to
-//! completion), and because the fused step is bit-exact against solo
-//! stepping (see `infer::session`), every result equals the one-shot
-//! full-prefix recompute of that request alone.
+//! completion).
 
 use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
@@ -27,14 +43,36 @@ pub struct StreamTicket {
 /// Where a streaming request currently is.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StreamStatus {
-    /// waiting for a live slot
+    /// waiting in the prefill queue, nothing fed yet
     Queued,
-    /// live: `fed` of `total` tokens streamed so far
+    /// tokens flowing — prefilling in the queue or live in the decode set:
+    /// `fed` of `total` tokens streamed so far
     Streaming { fed: usize, total: usize },
     /// finished — result waiting in [`SessionEngine::poll`]
     Done,
     /// unknown ticket (never submitted, or already polled)
     Unknown,
+}
+
+/// How [`SessionEngine::step`] schedules admission and stepping.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerMode {
+    /// legacy baseline: arrivals are admitted straight into the one fused
+    /// step that also advances live streams
+    SinglePhase,
+    /// prefill/decode disaggregation: decode dispatches first and alone;
+    /// arrivals catch up in a separate budgeted prefill dispatch
+    /// (`prefill_budget` tokens per step, `usize::MAX` = unbounded)
+    Disaggregated { prefill_budget: usize },
+}
+
+impl SchedulerMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedulerMode::SinglePhase => "single-phase",
+            SchedulerMode::Disaggregated { .. } => "disaggregated",
+        }
+    }
 }
 
 /// Finished request: logits plus latency/stepping diagnostics.
@@ -43,9 +81,13 @@ pub struct StreamOutput {
     pub logits: Vec<f32>,
     /// tokens the session streamed end to end
     pub tokens: usize,
-    /// engine steps the session was live in
+    /// engine steps that fed this session ≥ 1 token (prefill or decode)
     pub steps: usize,
     pub arrived: Instant,
+    /// when the session's first tokens entered a fused dispatch
+    pub first_fed: Instant,
+    /// when the fused step that first fed it completed
+    pub first_done: Instant,
     pub finished: Instant,
 }
 
@@ -53,21 +95,46 @@ impl StreamOutput {
     pub fn latency_ms(&self) -> f64 {
         self.finished.duration_since(self.arrived).as_secs_f64() * 1e3
     }
+
+    /// Arrival → first admission into a fused dispatch (queue wait).
+    pub fn queue_wait_ms(&self) -> f64 {
+        self.first_fed.duration_since(self.arrived).as_secs_f64() * 1e3
+    }
+
+    /// Arrival → completion of the step that first fed it
+    /// (time-to-first-token).
+    pub fn ttft_ms(&self) -> f64 {
+        self.first_done.duration_since(self.arrived).as_secs_f64() * 1e3
+    }
 }
 
 /// Diagnostics from one [`SessionEngine::step`].
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StepStats {
-    /// sessions live during the step
+    /// sessions live in the decode set during the step
     pub live: usize,
-    /// token rows packed into the fused dispatches
+    /// total token rows packed into the step's fused dispatches
     pub tokens: usize,
     /// sessions retired by the step
     pub finished: usize,
     pub step_ms: f64,
+    /// tokens the decode dispatch advanced (single-phase: the whole fused
+    /// step, prompts included — that is exactly the baseline's problem)
+    pub decode_tokens: usize,
+    /// tokens the budgeted prefill dispatch fed (single-phase: always 0)
+    pub prefill_tokens: usize,
+    /// queued sessions the prefill dispatch touched this step
+    pub prefill_sessions: usize,
+    /// sessions graduated from the prefill queue into the live set
+    pub admitted: usize,
+    pub decode_ms: f64,
+    pub prefill_ms: f64,
 }
 
-struct LiveSession {
+/// One streaming request anywhere in its lifecycle: waiting/prefilling in
+/// the [`PrefillQueue`] or live in the decode set. Its `state` is begun at
+/// submit, so prefill progress survives the move between phases.
+struct Session {
     id: usize,
     state: SessionState,
     tokens: Vec<f32>,
@@ -75,34 +142,84 @@ struct LiveSession {
     fed: usize,
     steps: usize,
     arrived: Instant,
+    first_fed: Option<Instant>,
+    first_done: Option<Instant>,
 }
+
+impl Session {
+    fn total(&self, d: usize) -> usize {
+        self.tokens.len() / d
+    }
+
+    fn remaining(&self, d: usize) -> usize {
+        self.total(d) - self.fed
+    }
+}
+
+/// FIFO of sessions still catching up their prompt backlog (plus, under
+/// admission control, warmed sessions waiting for a free live slot).
+type PrefillQueue = VecDeque<Session>;
 
 /// The continuous-batching scheduler over one [`StreamModel`].
 pub struct SessionEngine {
     pub model: StreamModel,
-    /// tokens each live session contributes per step
+    /// tokens each live session contributes per decode step
     chunk: usize,
     /// live-session cap (admission control)
     max_live: usize,
-    queue: VecDeque<(usize, Vec<f32>, Instant)>,
-    live: Vec<LiveSession>,
+    mode: SchedulerMode,
+    queue: PrefillQueue,
+    live: Vec<Session>,
     done: HashMap<usize, StreamOutput>,
     next_id: usize,
 }
 
 impl SessionEngine {
+    /// Legacy single-phase engine (the measured baseline).
     pub fn new(model: StreamModel, chunk: usize, max_live: usize) -> SessionEngine {
+        SessionEngine::with_mode(model, chunk, max_live, SchedulerMode::SinglePhase)
+    }
+
+    /// Phase-disaggregated engine with a per-step prefill token budget.
+    pub fn disaggregated(
+        model: StreamModel,
+        chunk: usize,
+        max_live: usize,
+        prefill_budget: usize,
+    ) -> SessionEngine {
+        SessionEngine::with_mode(
+            model,
+            chunk,
+            max_live,
+            SchedulerMode::Disaggregated { prefill_budget },
+        )
+    }
+
+    pub fn with_mode(
+        model: StreamModel,
+        chunk: usize,
+        max_live: usize,
+        mode: SchedulerMode,
+    ) -> SessionEngine {
         assert!(chunk > 0, "chunk must be positive");
         assert!(max_live > 0, "max_live must be positive");
+        if let SchedulerMode::Disaggregated { prefill_budget } = mode {
+            assert!(prefill_budget > 0, "prefill budget must be positive");
+        }
         SessionEngine {
             model,
             chunk,
             max_live,
-            queue: VecDeque::new(),
+            mode,
+            queue: PrefillQueue::new(),
             live: Vec::new(),
             done: HashMap::new(),
             next_id: 0,
         }
+    }
+
+    pub fn mode(&self) -> SchedulerMode {
+        self.mode
     }
 
     /// Enqueue one request: a flattened (n × dim) token sequence.
@@ -114,12 +231,27 @@ impl SessionEngine {
         );
         let id = self.next_id;
         self.next_id += 1;
-        self.queue.push_back((id, tokens, Instant::now()));
+        self.queue.push_back(Session {
+            id,
+            state: self.model.begin(),
+            tokens,
+            fed: 0,
+            steps: 0,
+            arrived: Instant::now(),
+            first_fed: None,
+            first_done: None,
+        });
         StreamTicket { id }
     }
 
+    /// Sessions in the prefill queue (waiting or mid-catch-up).
     pub fn queued(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Queued sessions that have already streamed some tokens (prefilling).
+    pub fn prefilling(&self) -> usize {
+        self.queue.iter().filter(|s| s.fed > 0).count()
     }
 
     pub fn live_count(&self) -> usize {
@@ -133,13 +265,21 @@ impl SessionEngine {
     }
 
     pub fn status(&self, ticket: &StreamTicket) -> StreamStatus {
-        if self.queue.iter().any(|(id, _, _)| *id == ticket.id) {
-            return StreamStatus::Queued;
+        let d = self.model.spec.dim;
+        if let Some(s) = self.queue.iter().find(|s| s.id == ticket.id) {
+            return if s.fed == 0 {
+                StreamStatus::Queued
+            } else {
+                StreamStatus::Streaming {
+                    fed: s.fed,
+                    total: s.total(d),
+                }
+            };
         }
         if let Some(s) = self.live.iter().find(|s| s.id == ticket.id) {
             return StreamStatus::Streaming {
                 fed: s.fed,
-                total: s.tokens.len() / self.model.spec.dim,
+                total: s.total(d),
             };
         }
         if self.done.contains_key(&ticket.id) {
@@ -148,52 +288,168 @@ impl SessionEngine {
         StreamStatus::Unknown
     }
 
-    /// One continuous-batching step: admit queued requests into free live
-    /// slots, stream each live session's next chunk through ONE fused
-    /// [`StreamModel::extend_batch`], retire finished sessions.
+    /// One scheduler step. Single-phase: admit into free slots, then one
+    /// fused step over everything live. Disaggregated: graduate warmed
+    /// sessions, decode dispatch (live only), then the budgeted prefill
+    /// dispatch over the queue.
     pub fn step(&mut self, metrics: &mut Metrics) -> StepStats {
-        // --- admission ---------------------------------------------------
+        match self.mode {
+            SchedulerMode::SinglePhase => self.step_single_phase(metrics),
+            SchedulerMode::Disaggregated { prefill_budget } => {
+                self.step_disaggregated(prefill_budget, metrics)
+            }
+        }
+    }
+
+    fn step_single_phase(&mut self, metrics: &mut Metrics) -> StepStats {
+        // --- admission: arrivals go straight into the shared fused step ---
+        let mut admitted = 0usize;
         while self.live.len() < self.max_live {
             match self.queue.pop_front() {
-                Some((id, tokens, arrived)) => self.live.push(LiveSession {
-                    id,
-                    state: self.model.begin(),
-                    tokens,
-                    fed: 0,
-                    steps: 0,
-                    arrived,
-                }),
+                Some(s) => {
+                    self.live.push(s);
+                    admitted += 1;
+                }
                 None => break,
             }
         }
         if self.live.is_empty() {
             return StepStats::default();
         }
+        let waiting = self.queue.len();
 
-        // --- one fused multi-session step --------------------------------
+        // --- one fused multi-session step (prompts and streams mixed) -----
         let t0 = Instant::now();
+        let chunk = self.chunk;
+        let takes = vec![chunk; self.live.len()];
+        let trace = fused_feed(&self.model, &mut self.live, &takes);
+        let live = self.live.len();
+        let finished = self.retire(metrics);
+        let step_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        self.record_step(metrics, live, waiting, trace.total_tokens, 0, step_ms);
+        metrics.record("stream_decode", step_ms);
+        metrics.requests += finished;
+        StepStats {
+            live,
+            tokens: trace.total_tokens,
+            finished,
+            step_ms,
+            decode_tokens: trace.total_tokens,
+            prefill_tokens: 0,
+            prefill_sessions: 0,
+            admitted,
+            decode_ms: step_ms,
+            prefill_ms: 0.0,
+        }
+    }
+
+    fn step_disaggregated(&mut self, prefill_budget: usize, metrics: &mut Metrics) -> StepStats {
         let d = self.model.spec.dim;
         let chunk = self.chunk;
-        let chunks: Vec<Vec<f32>> = self
-            .live
-            .iter()
-            .map(|s| {
-                let total = s.tokens.len() / d;
-                let hi = (s.fed + chunk).min(total);
-                s.tokens[s.fed * d..hi * d].to_vec()
-            })
-            .collect();
-        let refs: Vec<&[f32]> = chunks.iter().map(|c| c.as_slice()).collect();
-        let mut states: Vec<&mut SessionState> =
-            self.live.iter_mut().map(|s| &mut s.state).collect();
-        let trace = self.model.extend_batch(&mut states, &refs);
 
-        // --- bookkeeping + retirement ------------------------------------
-        let live = self.live.len();
-        for (s, c) in self.live.iter_mut().zip(&chunks) {
-            s.fed += c.len() / d;
-            s.steps += 1;
+        // --- graduation: warmed sessions take free live slots (FIFO) ------
+        let mut admitted = 0usize;
+        let mut i = 0usize;
+        while self.live.len() < self.max_live && i < self.queue.len() {
+            if self.queue[i].remaining(d) <= chunk {
+                let s = self.queue.remove(i).expect("index checked");
+                self.live.push(s);
+                admitted += 1;
+            } else {
+                i += 1;
+            }
         }
+        if self.live.is_empty() && self.queue.is_empty() {
+            return StepStats::default();
+        }
+        let waiting = self.queue.len();
+        let t0 = Instant::now();
+
+        // --- decode phase: live streams only, one fused dispatch ----------
+        // No prompt backlog rides here, so decode cost is bounded by
+        // max_live · chunk no matter what just arrived.
+        let (decode_tokens, decode_ms, finished) = if self.live.is_empty() {
+            (0, 0.0, 0)
+        } else {
+            let td = Instant::now();
+            let takes = vec![chunk; self.live.len()];
+            let trace = fused_feed(&self.model, &mut self.live, &takes);
+            let finished = self.retire(metrics);
+            let decode_ms = td.elapsed().as_secs_f64() * 1e3;
+            metrics.record("stream_decode", decode_ms);
+            (trace.total_tokens, decode_ms, finished)
+        };
+        let live = self.live.len() + finished;
+
+        // --- prefill phase: budgeted catch-up over the queue, FIFO --------
+        // Each session may feed up to its backlog-minus-one-chunk (the last
+        // chunk is left for the decode batch it will graduate into), and
+        // the whole dispatch never exceeds the budget.
+        let mut budget = prefill_budget;
+        let mut takes = vec![0usize; self.queue.len()];
+        for (s, take) in self.queue.iter().zip(takes.iter_mut()) {
+            if budget == 0 {
+                break;
+            }
+            let r = s.remaining(d);
+            if r <= chunk {
+                continue; // warmed: waiting for a live slot
+            }
+            *take = (r - chunk).min(budget);
+            budget -= *take;
+        }
+        let prefill_sessions = takes.iter().filter(|&&t| t > 0).count();
+        let (prefill_tokens, prefill_ms) = if prefill_sessions == 0 {
+            (0, 0.0)
+        } else {
+            let tp = Instant::now();
+            let trace = fused_feed(&self.model, self.queue.make_contiguous(), &takes);
+            let prefill_ms = tp.elapsed().as_secs_f64() * 1e3;
+            metrics.record("stream_prefill", prefill_ms);
+            (trace.total_tokens, prefill_ms)
+        };
+
+        let step_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let tokens = decode_tokens + prefill_tokens;
+        self.record_step(metrics, live, waiting, decode_tokens, prefill_tokens, step_ms);
+        metrics.requests += finished;
+        StepStats {
+            live,
+            tokens,
+            finished,
+            step_ms,
+            decode_tokens,
+            prefill_tokens,
+            prefill_sessions,
+            admitted,
+            decode_ms,
+            prefill_ms,
+        }
+    }
+
+    /// Shared per-step gauge recording (both scheduler modes).
+    fn record_step(
+        &self,
+        metrics: &mut Metrics,
+        live: usize,
+        waiting: usize,
+        decode_tokens: usize,
+        prefill_tokens: usize,
+        step_ms: f64,
+    ) {
+        metrics.record("stream_step", step_ms);
+        metrics.record_step_occupancy(live, self.max_live, decode_tokens + prefill_tokens);
+        metrics.live_sessions.push(live as f64);
+        metrics.decode_tokens.push(decode_tokens as f64);
+        metrics.prefill_tokens.push(prefill_tokens as f64);
+        metrics.prefill_queue.push(waiting as f64);
+        metrics.batches += 1;
+    }
+
+    /// Move finished live sessions into the done map. Returns the count.
+    fn retire(&mut self, metrics: &mut Metrics) -> usize {
+        let d = self.model.spec.dim;
         let mut finished = 0usize;
         let model = &self.model;
         let done = &mut self.done;
@@ -211,24 +467,14 @@ impl SessionEngine {
                     tokens: s.fed,
                     steps: s.steps,
                     arrived: s.arrived,
+                    first_fed: s.first_fed.expect("finished session was fed"),
+                    first_done: s.first_done.expect("finished session was fed"),
                     finished: Instant::now(),
                 },
             );
             false
         });
-
-        let step_ms = t0.elapsed().as_secs_f64() * 1e3;
-        metrics.record("stream_step", step_ms);
-        metrics.record_step_occupancy(live, self.max_live, trace.total_tokens);
-        metrics.live_sessions.push(live as f64);
-        metrics.batches += 1;
-        metrics.requests += finished;
-        StepStats {
-            live,
-            tokens: trace.total_tokens,
-            finished,
-            step_ms,
-        }
+        finished
     }
 
     /// Remove and return a finished request's output, if ready.
@@ -247,6 +493,45 @@ impl SessionEngine {
     }
 }
 
+/// Feed `takes[i]` tokens (clamped to the session's remaining backlog;
+/// 0 = skip) from each session through ONE fused
+/// [`StreamModel::extend_batch`] with heterogeneous per-session chunk
+/// lengths, stamping first-fed/first-done instants.
+fn fused_feed(
+    model: &StreamModel,
+    sessions: &mut [Session],
+    takes: &[usize],
+) -> crate::infer::session::StepTrace {
+    let d = model.spec.dim;
+    let chunks: Vec<Vec<f32>> = sessions
+        .iter()
+        .zip(takes)
+        .map(|(s, &take)| {
+            let hi = (s.fed + take).min(s.total(d));
+            s.tokens[s.fed * d..hi * d].to_vec()
+        })
+        .collect();
+    let refs: Vec<&[f32]> = chunks.iter().map(|c| c.as_slice()).collect();
+    let fed_at = Instant::now();
+    let mut states: Vec<&mut SessionState> =
+        sessions.iter_mut().map(|s| &mut s.state).collect();
+    let trace = model.extend_batch(&mut states, &refs);
+    let done_at = Instant::now();
+    for (s, c) in sessions.iter_mut().zip(&chunks) {
+        let m = c.len() / d;
+        if m == 0 {
+            continue;
+        }
+        if s.first_fed.is_none() {
+            s.first_fed = Some(fed_at);
+            s.first_done = Some(done_at);
+        }
+        s.fed += m;
+        s.steps += 1;
+    }
+    trace
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -256,6 +541,15 @@ mod tests {
 
     fn engine(chunk: usize, max_live: usize) -> SessionEngine {
         SessionEngine::new(StreamModel::tiny(StreamAttn::LinearAdd, Lin::Mult), chunk, max_live)
+    }
+
+    fn phased(chunk: usize, max_live: usize, budget: usize) -> SessionEngine {
+        SessionEngine::disaggregated(
+            StreamModel::tiny(StreamAttn::LinearAdd, Lin::Mult),
+            chunk,
+            max_live,
+            budget,
+        )
     }
 
     #[test]
@@ -289,6 +583,12 @@ mod tests {
         assert!(m.live_sessions.iter().all(|&l| l <= 2.0));
         assert!(m.batch_occupancy.iter().any(|&o| o == 1.0));
         assert_eq!(m.requests, 4);
+        // single-phase: every token counts as decode, prefill gauge stays 0
+        assert!(m.prefill_tokens.iter().all(|&t| t == 0.0));
+        assert_eq!(
+            m.decode_tokens.iter().sum::<f64>(),
+            lens.iter().sum::<usize>() as f64
+        );
     }
 
     #[test]
@@ -309,6 +609,9 @@ mod tests {
         let out = eng.poll(&ta).unwrap();
         assert_eq!(out.steps, 2);
         assert!(out.latency_ms() >= 0.0);
+        assert!(out.queue_wait_ms() >= 0.0);
+        assert!(out.ttft_ms() >= out.queue_wait_ms());
+        assert!(out.latency_ms() >= out.ttft_ms());
         assert_eq!(eng.status(&ta), StreamStatus::Unknown, "poll consumes");
     }
 
@@ -331,9 +634,127 @@ mod tests {
     }
 
     #[test]
+    fn disaggregated_engine_is_bit_exact_and_budget_bounded() {
+        let budget = 5usize;
+        let mut eng = phased(3, 2, budget);
+        let d = eng.model.spec.dim;
+        let lens = [2usize, 17, 5, 9, 1];
+        let seqs: Vec<Vec<f32>> = lens
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| XorShift64::new(300 + i as u64).normals(n * d))
+            .collect();
+        let tickets: Vec<StreamTicket> =
+            seqs.iter().map(|s| eng.submit(s.clone())).collect();
+        let mut m = Metrics::default();
+        let mut steps = 0usize;
+        while !eng.idle() {
+            let st = eng.step(&mut m);
+            steps += 1;
+            assert!(
+                st.prefill_tokens <= budget,
+                "prefill dispatch exceeded budget: {} > {budget}",
+                st.prefill_tokens
+            );
+            assert!(
+                st.decode_tokens <= 2 * 3,
+                "decode dispatch exceeded max_live·chunk: {}",
+                st.decode_tokens
+            );
+            assert!(st.live <= 2);
+        }
+        assert!(steps > 3);
+        for (t, s) in tickets.iter().zip(&seqs) {
+            let out = eng.poll(t).expect("completed");
+            assert_eq!(
+                out.logits,
+                eng.model.forward_full(s),
+                "disaggregated stepping diverged from solo full-prefix"
+            );
+        }
+        assert_eq!(m.requests, lens.len());
+        // both phases actually ran: the 17- and 9-token prompts must have
+        // prefilled (backlog > chunk), the short ones decoded straight away
+        assert!(m.prefill_tokens.iter().sum::<f64>() > 0.0);
+        assert!(m.decode_tokens.iter().sum::<f64>() > 0.0);
+        assert_eq!(
+            m.prefill_tokens.iter().sum::<f64>() + m.decode_tokens.iter().sum::<f64>(),
+            lens.iter().sum::<usize>() as f64
+        );
+    }
+
+    #[test]
+    fn long_prompt_prefills_while_live_slots_are_full() {
+        // Live set saturated by two endlessly... well, long-enough streams;
+        // a long arrival must still make prefill progress in the queue.
+        let mut eng = phased(2, 2, 4);
+        let d = eng.model.spec.dim;
+        let _a = eng.submit(XorShift64::new(7).normals(2 * d));
+        let _b = eng.submit(XorShift64::new(8).normals(2 * d));
+        let mut m = Metrics::default();
+        eng.step(&mut m); // both graduate (remaining ≤ chunk) and finish next
+        let tl = eng.submit(XorShift64::new(9).normals(20 * d));
+        let _c = eng.submit(XorShift64::new(10).normals(2 * d));
+        let _d2 = eng.submit(XorShift64::new(11).normals(2 * d));
+        let st = eng.step(&mut m);
+        // the two short arrivals grabbed the freed slots; the long prompt
+        // prefilled under budget in the same step
+        assert_eq!(eng.status(&tl), StreamStatus::Streaming { fed: 4, total: 20 });
+        assert!(st.prefill_tokens == 4 && st.prefill_sessions == 1);
+        assert_eq!(eng.prefilling(), 1);
+        eng.run_to_completion(&mut m);
+        let out = eng.poll(&tl).unwrap();
+        assert_eq!(out.tokens, 20);
+    }
+
+    #[test]
+    fn single_phase_and_disaggregated_agree_bit_exactly() {
+        use crate::infer::session::SessionSpec;
+        use crate::kernels::planner::Planner;
+        use crate::kernels::registry::KernelRegistry;
+        use std::sync::Arc;
+        // One shared planner: every engine's model resolves to the same
+        // kernel backends, so equality is a pure scheduling statement.
+        let planner = Arc::new(Planner::new(Arc::new(KernelRegistry::with_defaults())));
+        let spec = SessionSpec::tiny(StreamAttn::LinearAdd, Lin::Mult);
+        let d = spec.dim;
+        let lens = [6usize, 14, 3, 8];
+        let seqs: Vec<Vec<f32>> = lens
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| XorShift64::new(500 + i as u64).normals(n * d))
+            .collect();
+        let mut run = |mode: SchedulerMode| -> Vec<Vec<f32>> {
+            let model = StreamModel::new(spec.clone(), Arc::clone(&planner));
+            let mut eng = SessionEngine::with_mode(model, 4, 2, mode);
+            let tickets: Vec<StreamTicket> =
+                seqs.iter().map(|s| eng.submit(s.clone())).collect();
+            let mut m = Metrics::default();
+            eng.run_to_completion(&mut m);
+            tickets
+                .iter()
+                .map(|t| eng.poll(t).unwrap().logits)
+                .collect()
+        };
+        let a = run(SchedulerMode::SinglePhase);
+        let b = run(SchedulerMode::Disaggregated { prefill_budget: 1 });
+        let c = run(SchedulerMode::Disaggregated {
+            prefill_budget: usize::MAX,
+        });
+        assert_eq!(a, b, "1-token budget diverged from the legacy path");
+        assert_eq!(a, c, "unbounded budget diverged from the legacy path");
+    }
+
+    #[test]
     #[should_panic(expected = "multiple of dim")]
     fn submit_rejects_ragged_buffers() {
         let mut eng = engine(2, 2);
         eng.submit(vec![0.0; 5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "budget must be positive")]
+    fn zero_prefill_budget_is_rejected() {
+        phased(2, 2, 0);
     }
 }

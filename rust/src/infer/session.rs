@@ -159,6 +159,10 @@ pub struct StepTrace {
     pub sessions: usize,
     /// total token rows fused into each per-layer dispatch
     pub total_tokens: usize,
+    /// largest single-session chunk in the step — chunk lengths are
+    /// heterogeneous, which is what lets the disaggregated scheduler fuse
+    /// a big prefill catch-up next to zero-length skips in one dispatch
+    pub max_chunk: usize,
 }
 
 /// The token-streaming causal model behind sessions.
@@ -270,6 +274,10 @@ impl StreamModel {
     /// session alone (see module docs).
     ///
     /// `chunks[i]` is session `i`'s next tokens (mᵢ × dim; mᵢ may be 0).
+    /// Chunk lengths are fully heterogeneous — the phase-disaggregated
+    /// scheduler (`coordinator::sessions`) relies on this to fuse one
+    /// session's large prefill catch-up with other sessions' zero-length
+    /// skips in a single budgeted dispatch.
     pub fn extend_batch(&self, sessions: &mut [&mut SessionState], chunks: &[&[f32]]) -> StepTrace {
         assert_eq!(sessions.len(), chunks.len(), "one chunk per session");
         let d = self.spec.dim;
@@ -282,10 +290,12 @@ impl StreamModel {
             })
             .collect();
         let total: usize = ms.iter().sum();
+        let max_chunk = ms.iter().copied().max().unwrap_or(0);
         if total == 0 {
             return StepTrace {
                 sessions: sessions.len(),
                 total_tokens: 0,
+                max_chunk: 0,
             };
         }
         let mut x = Vec::with_capacity(total * d);
@@ -358,6 +368,7 @@ impl StreamModel {
         StepTrace {
             sessions: sessions.len(),
             total_tokens: total,
+            max_chunk,
         }
     }
 
@@ -448,6 +459,35 @@ mod tests {
         }
         assert_eq!(model.finish(&fa), model.finish(&sa));
         assert_eq!(model.finish(&fb), model.finish(&sb));
+    }
+
+    #[test]
+    fn heterogeneous_chunk_lengths_fuse_bit_exactly() {
+        // One big catch-up chunk, one steady chunk, one zero-length skip in
+        // the same fused dispatch — the disaggregated scheduler's shape.
+        let model = StreamModel::tiny(StreamAttn::LinearAdd, Lin::Shift);
+        let d = model.spec.dim;
+        let ta = gen_tokens(41, 9, d);
+        let tb = gen_tokens(42, 2, d);
+        let tc = gen_tokens(43, 3, d);
+        let mut sa = model.begin();
+        let mut sb = model.begin();
+        let mut sc = model.begin();
+        let empty: &[f32] = &[];
+        let tr = model.extend_batch(
+            &mut [&mut sa, &mut sb, &mut sc],
+            &[ta.as_slice(), empty, tc.as_slice()],
+        );
+        assert_eq!(tr.total_tokens, 12);
+        assert_eq!(tr.max_chunk, 9);
+        let tr2 = model.extend_batch(
+            &mut [&mut sa, &mut sb, &mut sc],
+            &[empty, tb.as_slice(), empty],
+        );
+        assert_eq!((tr2.total_tokens, tr2.max_chunk), (2, 2));
+        assert_eq!(model.finish(&sa), model.forward_full(&ta));
+        assert_eq!(model.finish(&sb), model.forward_full(&tb));
+        assert_eq!(model.finish(&sc), model.forward_full(&tc));
     }
 
     #[test]

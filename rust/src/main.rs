@@ -6,6 +6,8 @@
 //!                     [--arrival-ms X] [--config cfg.json]
 //!                     [--workload classify|stream] [--stream-tokens T]
 //!                     [--chunk C] [--max-live L]
+//!                     [--scheduler single-phase|disaggregated]
+//!                     [--prefill-budget TOKENS]
 //!                     [--workers N] [--policy round-robin|least-loaded|affinity]
 //!                     [--planner-table t.json] [--save-planner-table t.json]
 //! shiftaddvit table   --id 1|3|4|6|11|12   [--model pvtv2_b0]
@@ -17,7 +19,9 @@
 
 use anyhow::{bail, Result};
 
-use shiftaddvit::coordinator::config::{BackendKind, DispatchMode, ServerConfig, Workload};
+use shiftaddvit::coordinator::config::{
+    BackendKind, DispatchMode, SchedulerKind, ServerConfig, Workload,
+};
 use shiftaddvit::coordinator::server::serve_workload;
 use shiftaddvit::fleet::policy::PolicyKind;
 use shiftaddvit::energy::eyeriss::{energy, Hierarchy};
@@ -64,7 +68,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.stream_tokens = args.usize_or("stream-tokens", cfg.stream_tokens)?;
     cfg.stream_chunk = args.usize_or("chunk", cfg.stream_chunk)?;
     cfg.max_live = args.usize_or("max-live", cfg.max_live)?;
+    cfg.prefill_budget = args.usize_or("prefill-budget", cfg.prefill_budget)?;
     cfg.workers = args.usize_or("workers", cfg.workers)?;
+    if let Some(s) = args.get("scheduler") {
+        cfg.scheduler = SchedulerKind::parse(s)?;
+    }
     if let Some(p) = args.get("policy") {
         cfg.policy = PolicyKind::parse(p)?;
     }

@@ -1,0 +1,296 @@
+//! Phase-disaggregation suite for the continuous batcher:
+//!
+//! 1. PROPERTY: for random workloads, arrival interleavings, and prefill
+//!    budgets {1 token, exactly one chunk, unbounded}, the disaggregated
+//!    scheduler's logits are *bit-exact* vs the legacy single-phase path
+//!    and vs solo full-prefix inference (all engines share one planner, so
+//!    equality is a pure scheduling statement);
+//! 2. ISOLATION: a long prompt landing mid-run never lifts the decode
+//!    dispatch above `max_live · chunk` tokens, yet still catches up at
+//!    the budget rate while every live slot is taken;
+//! 3. the serve loop runs under both explicit scheduler configs (solo and
+//!    fleet) and reports queue-wait / time-to-first-token percentiles;
+//! 4. the scheduler/prefill-budget config keys parse from JSON files.
+
+use std::sync::Arc;
+
+use shiftaddvit::coordinator::config::{SchedulerKind, ServerConfig, Workload};
+use shiftaddvit::coordinator::metrics::Metrics;
+use shiftaddvit::coordinator::server::serve_stream;
+use shiftaddvit::coordinator::sessions::{SchedulerMode, SessionEngine, StreamStatus, StreamTicket};
+use shiftaddvit::infer::session::{SessionSpec, StreamAttn, StreamModel};
+use shiftaddvit::kernels::planner::Planner;
+use shiftaddvit::kernels::registry::KernelRegistry;
+use shiftaddvit::model::ops::Lin;
+use shiftaddvit::util::prop::check;
+use shiftaddvit::util::rng::XorShift64;
+
+fn shared_planner() -> Arc<Planner> {
+    Arc::new(Planner::new(Arc::new(KernelRegistry::with_defaults())))
+}
+
+/// Drive one engine over a staggered arrival schedule (`arrive_at[i]` =
+/// scheduler tick before which session `i` is submitted) and return every
+/// session's logits in submission order, plus the run's metrics.
+fn run_schedule(
+    planner: &Arc<Planner>,
+    spec: &SessionSpec,
+    seqs: &[Vec<f32>],
+    arrive_at: &[usize],
+    chunk: usize,
+    max_live: usize,
+    mode: SchedulerMode,
+) -> (Vec<Vec<f32>>, Metrics) {
+    let model = StreamModel::new(spec.clone(), Arc::clone(planner));
+    let mut eng = SessionEngine::with_mode(model, chunk, max_live, mode);
+    let mut tickets: Vec<Option<StreamTicket>> = vec![None; seqs.len()];
+    let mut metrics = Metrics::default();
+    let mut tick = 0usize;
+    while tickets.iter().any(|t| t.is_none()) || !eng.idle() {
+        for (i, &at) in arrive_at.iter().enumerate() {
+            if at == tick {
+                tickets[i] = Some(eng.submit(seqs[i].clone()));
+            }
+        }
+        if !eng.idle() {
+            eng.step(&mut metrics);
+        }
+        tick += 1;
+    }
+    let outs = tickets
+        .iter()
+        .map(|t| {
+            eng.poll(t.as_ref().expect("all sessions submitted"))
+                .expect("engine drained every session")
+                .logits
+        })
+        .collect();
+    (outs, metrics)
+}
+
+// ---------------------------------------------------------------------------
+// 1. Scheduling-invariance property
+// ---------------------------------------------------------------------------
+
+#[test]
+fn property_any_budget_and_interleaving_matches_single_phase() {
+    let spec = SessionSpec::tiny(StreamAttn::LinearAdd, Lin::Mult);
+    let planner = shared_planner();
+    let solo_model = StreamModel::new(spec.clone(), Arc::clone(&planner));
+    let d = spec.dim;
+    check("phase-disagg-equivalence", 8, 5, |rng, size| {
+        let n_sessions = 2 + rng.range(0, size + 2);
+        let chunk = 1 + rng.range(0, 4);
+        let max_live = 1 + rng.range(0, 3);
+        let lens: Vec<usize> = (0..n_sessions)
+            .map(|_| 1 + rng.range(0, 4 * chunk + 3))
+            .collect();
+        let seqs: Vec<Vec<f32>> = lens.iter().map(|&n| rng.normals(n * d)).collect();
+        // arrivals scattered over the first ~2·n ticks: some sessions land
+        // while others are mid-prefill, mid-decode, or already done
+        let arrive_at: Vec<usize> = (0..n_sessions)
+            .map(|_| rng.range(0, 2 * n_sessions))
+            .collect();
+
+        let solo: Vec<Vec<f32>> = seqs.iter().map(|s| solo_model.forward_full(s)).collect();
+        let (want, _) = run_schedule(
+            &planner,
+            &spec,
+            &seqs,
+            &arrive_at,
+            chunk,
+            max_live,
+            SchedulerMode::SinglePhase,
+        );
+        if want != solo {
+            return Err(format!(
+                "single-phase baseline diverged from solo (chunk {chunk}, \
+                 max_live {max_live}, lens {lens:?}, arrivals {arrive_at:?})"
+            ));
+        }
+        for budget in [1usize, chunk, usize::MAX] {
+            let (got, m) = run_schedule(
+                &planner,
+                &spec,
+                &seqs,
+                &arrive_at,
+                chunk,
+                max_live,
+                SchedulerMode::Disaggregated {
+                    prefill_budget: budget,
+                },
+            );
+            if got != want {
+                return Err(format!(
+                    "budget {budget}: logits diverged from single-phase (chunk \
+                     {chunk}, max_live {max_live}, lens {lens:?}, arrivals {arrive_at:?})"
+                ));
+            }
+            if m.prefill_tokens.iter().any(|&t| t > budget as f64) {
+                return Err(format!(
+                    "budget {budget}: a prefill dispatch exceeded it ({:?})",
+                    m.prefill_tokens
+                ));
+            }
+            if m.decode_tokens.iter().any(|&t| t > (chunk * max_live) as f64) {
+                return Err(format!(
+                    "a decode dispatch exceeded max_live·chunk = {}",
+                    chunk * max_live
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// 2. Long-prompt isolation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn long_prompt_arrival_never_inflates_the_decode_dispatch() {
+    let spec = SessionSpec::tiny(StreamAttn::LinearAdd, Lin::Shift);
+    let planner = shared_planner();
+    let d = spec.dim;
+    let (chunk, max_live, budget) = (2usize, 2usize, 4usize);
+    let model = StreamModel::new(spec.clone(), Arc::clone(&planner));
+    let mut eng = SessionEngine::disaggregated(model, chunk, max_live, budget);
+    let mut m = Metrics::default();
+
+    // A stream of short sessions keeps the decode batch saturated; a
+    // 24-token prompt lands alongside them and must catch up in the
+    // prefill dispatch without ever riding in (or delaying) decode.
+    for i in 0..6u64 {
+        eng.submit(XorShift64::new(1 + i).normals(2 * d));
+    }
+    let long = XorShift64::new(9).normals(24 * d);
+    let tl = eng.submit(long.clone());
+    let mut prefill_rates = Vec::new();
+    while !eng.idle() {
+        let fed_before = match eng.status(&tl) {
+            StreamStatus::Streaming { fed, .. } => fed,
+            _ => 0,
+        };
+        let st = eng.step(&mut m);
+        // the decode dispatch never grows because of the arrival
+        assert!(
+            st.decode_tokens <= chunk * max_live,
+            "decode dispatch inflated to {} tokens",
+            st.decode_tokens
+        );
+        assert!(st.prefill_tokens <= budget);
+        if let StreamStatus::Streaming { fed, .. } = eng.status(&tl) {
+            if st.live == max_live && fed > fed_before {
+                // the decode batch was full, yet the prompt still caught up
+                // — and at the budget rate, not the decode chunk rate
+                prefill_rates.push(fed - fed_before);
+            }
+        }
+    }
+    assert!(
+        prefill_rates.iter().any(|&r| r == budget),
+        "long prompt should prefill at the budget rate while slots are full \
+         (saw {prefill_rates:?})"
+    );
+    let out = eng.poll(&tl).expect("long prompt completed");
+    assert_eq!(out.tokens, 24);
+    assert_eq!(
+        out.logits,
+        eng.model.forward_full(&long),
+        "budgeted catch-up diverged from solo full-prefix"
+    );
+    assert!(out.ttft_ms() >= out.queue_wait_ms());
+    assert!(out.latency_ms() >= out.ttft_ms());
+}
+
+// ---------------------------------------------------------------------------
+// 3. Serve loop under explicit scheduler configs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn serve_stream_reports_latency_gauges_under_both_schedulers() {
+    for kind in [SchedulerKind::SinglePhase, SchedulerKind::Disaggregated] {
+        let cfg = ServerConfig {
+            requests: 5,
+            stream_tokens: 10,
+            stream_chunk: 4,
+            max_live: 2,
+            scheduler: kind,
+            prefill_budget: 6,
+            workload: Workload::Stream,
+            ..ServerConfig::default()
+        };
+        let report = serve_stream(&cfg).unwrap();
+        assert_eq!(report.metrics.requests, 5, "{}", kind.name());
+        assert_eq!(report.queue_wait.n, 5);
+        assert_eq!(report.ttft.n, 5);
+        // per-session orderings (wait ≤ ttft ≤ latency) survive into the
+        // percentiles because they hold pointwise
+        assert!(report.ttft.p50 >= report.queue_wait.p50);
+        assert!(report.latency.p99 >= report.ttft.p99);
+        let js = report.to_json();
+        assert!(js.get("queue_wait_ms").is_some());
+        assert!(js.get("ttft_ms").is_some());
+        if kind == SchedulerKind::Disaggregated {
+            // both phase gauges flowed into the merged metrics
+            assert!(!report.metrics.prefill_queue.is_empty());
+            assert!(report.metrics.decode_tokens.iter().sum::<f64>() > 0.0);
+        }
+    }
+}
+
+#[test]
+fn fleet_stream_shares_one_planner_table_and_merges_gauges() {
+    let cfg = ServerConfig {
+        requests: 6,
+        stream_tokens: 8,
+        stream_chunk: 4,
+        max_live: 2,
+        workers: 2,
+        workload: Workload::Stream,
+        ..ServerConfig::default()
+    };
+    let report = serve_stream(&cfg).unwrap();
+    assert_eq!(report.metrics.requests, 6);
+    assert_eq!(report.per_worker.len(), 2);
+    assert_eq!(
+        report.per_worker.iter().map(|b| b.requests).sum::<usize>(),
+        6,
+        "every session placed on exactly one worker"
+    );
+    assert_eq!(report.queue_wait.n, 6);
+    assert_eq!(report.ttft.n, 6);
+    // the factory table pinned on every worker: plans exist and none were
+    // re-benchmarked inside a worker thread
+    assert!(!report.metrics.chosen_backends.is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// 4. Config plumbing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn scheduler_config_keys_parse_from_json() {
+    let dir = std::env::temp_dir().join("savit_phase_disagg_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cfg.json");
+    std::fs::write(
+        &path,
+        r#"{"workload": "stream", "scheduler": "single-phase", "prefill_budget": 9}"#,
+    )
+    .unwrap();
+    let cfg = ServerConfig::from_file(&path).unwrap();
+    assert_eq!(cfg.workload, Workload::Stream);
+    assert_eq!(cfg.scheduler, SchedulerKind::SinglePhase);
+    assert_eq!(cfg.prefill_budget, 9);
+    assert_eq!(cfg.resolve_prefill_budget(), 9, "explicit budget wins");
+
+    std::fs::write(&path, r#"{"stream_chunk": 4, "max_live": 3}"#).unwrap();
+    let auto = ServerConfig::from_file(&path).unwrap();
+    assert_eq!(auto.scheduler, SchedulerKind::Disaggregated, "default");
+    assert_eq!(
+        auto.resolve_prefill_budget(),
+        12,
+        "budget auto-sizes to one full decode batch"
+    );
+}
