@@ -10,6 +10,7 @@ used trained checkpoints).
 from __future__ import annotations
 
 import os
+import struct
 from typing import Any, Dict
 
 import jax
@@ -47,6 +48,66 @@ def unflatten_like(template: Any, flat: Dict[str, np.ndarray], prefix: str = "")
 def save_params(params: Any, path: str) -> None:
     os.makedirs(os.path.dirname(path), exist_ok=True)
     np.savez(path, **flatten(params))
+
+
+# --- flat binary export (.sap) ---------------------------------------------
+#
+# The byte format of the Rust runtime's ``bundle::params::FlatParams`` (see
+# rust/src/bundle/params.rs): magic ``SAPF0001``, u32 LE entry count, then per
+# dotted key in strictly ascending order: u16 LE key length + utf-8 key,
+# u8 ndim, ndim x u32 LE dims, row-major f32 LE data. ``shiftaddvit bundle
+# pack --params out.sap`` wraps the result in a signed .sabundle.
+
+FLAT_MAGIC = b"SAPF0001"
+
+
+def export_flat(params: Any, path: str) -> None:
+    """Write a parameter pytree as a Rust-loadable ``.sap`` flat blob."""
+    flat = flatten(params)
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(FLAT_MAGIC)
+        f.write(struct.pack("<I", len(flat)))
+        for key in sorted(flat):
+            # asarray, not ascontiguousarray: the latter promotes 0-d
+            # scalars to shape (1,); tobytes() emits C order regardless.
+            arr = np.asarray(flat[key], dtype="<f4")
+            name = key.encode("utf-8")
+            f.write(struct.pack("<H", len(name)))
+            f.write(name)
+            f.write(struct.pack("<B", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def load_flat(path: str) -> Dict[str, np.ndarray]:
+    """Read a ``.sap`` flat blob back into ``{dotted key: float32 array}``."""
+    with open(path, "rb") as f:
+        blob = f.read()
+    if blob[:8] != FLAT_MAGIC:
+        raise ValueError(f"{path}: bad magic (not a SAPF0001 flat params blob)")
+    (count,) = struct.unpack_from("<I", blob, 8)
+    pos = 12
+    out: Dict[str, np.ndarray] = {}
+    for _ in range(count):
+        (name_len,) = struct.unpack_from("<H", blob, pos)
+        pos += 2
+        name = blob[pos : pos + name_len].decode("utf-8")
+        pos += name_len
+        ndim = blob[pos]
+        pos += 1
+        dims = struct.unpack_from(f"<{ndim}I", blob, pos)
+        pos += 4 * ndim
+        numel = int(np.prod(dims, dtype=np.int64))
+        arr = np.frombuffer(blob, dtype="<f4", count=numel, offset=pos)
+        pos += 4 * numel
+        out[name] = arr.reshape(dims).copy()
+    if pos != len(blob):
+        raise ValueError(f"{path}: {len(blob) - pos} trailing bytes")
+    return out
 
 
 def trained_path(model: str, variant: str) -> str:

@@ -1,0 +1,104 @@
+"""Flat-params export tests: ``.sap`` byte layout + round-trip.
+
+The ``.sap`` blob is the Python→Rust weight hand-off (``bundle::params``
+in the Rust runtime); these tests pin the byte layout so both sides stay
+in sync. The trained-checkpoint test skips cleanly when no ``.npz``
+artifacts exist under ``python/trained/``.
+"""
+
+import glob
+import os
+import struct
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax", reason="params_io imports jax at module load")
+
+from compile import params_io as P
+
+
+def tree():
+    return {
+        "stem": {
+            "w": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "b": np.zeros(4, np.float32),
+        },
+        "blocks": [
+            {"g": np.full(5, 2.5, np.float32)},
+            {"g": np.linspace(-1, 1, 5).astype(np.float32)},
+        ],
+        "scale": np.float32(3.0),
+    }
+
+
+def test_export_flat_round_trips(tmp_path):
+    path = str(tmp_path / "p.sap")
+    P.export_flat(tree(), path)
+    back = P.load_flat(path)
+    flat = P.flatten(tree())
+    assert sorted(back) == sorted(flat)
+    for k, v in flat.items():
+        want = np.asarray(v, dtype=np.float32)
+        assert back[k].dtype == np.float32
+        assert back[k].shape == want.shape
+        np.testing.assert_array_equal(back[k], want)
+
+
+def test_header_layout_matches_rust_reader(tmp_path):
+    path = str(tmp_path / "h.sap")
+    P.export_flat({"a": np.ones((2, 2), np.float32)}, path)
+    with open(path, "rb") as f:
+        blob = f.read()
+    assert blob[:8] == b"SAPF0001"
+    assert struct.unpack_from("<I", blob, 8) == (1,)
+    # u16 keylen + key + u8 ndim + 2 u32 dims + 4 f32s — and nothing after.
+    assert struct.unpack_from("<H", blob, 12) == (1,)
+    assert blob[14:15] == b"a"
+    assert blob[15] == 2
+    assert struct.unpack_from("<II", blob, 16) == (2, 2)
+    assert len(blob) == 24 + 16
+
+
+def test_keys_are_sorted_on_disk(tmp_path):
+    # The Rust reader rejects unsorted entries, so order is part of the
+    # format: the first key on disk must be the lexicographically smallest.
+    path = str(tmp_path / "s.sap")
+    P.export_flat({"z": np.zeros(1, np.float32), "a": np.ones(1, np.float32)}, path)
+    with open(path, "rb") as f:
+        blob = f.read()
+    (l0,) = struct.unpack_from("<H", blob, 12)
+    assert blob[14 : 14 + l0].decode("utf-8") == "a"
+
+
+def test_jax_arrays_export_too(tmp_path):
+    import jax.numpy as jnp
+
+    path = str(tmp_path / "j.sap")
+    P.export_flat({"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)}, path)
+    back = P.load_flat(path)
+    np.testing.assert_array_equal(
+        back["w"], np.arange(6, dtype=np.float32).reshape(2, 3)
+    )
+
+
+def test_load_flat_rejects_bad_magic(tmp_path):
+    path = str(tmp_path / "bad.sap")
+    with open(path, "wb") as f:
+        f.write(b"NOTSAPF0" + b"\x00" * 8)
+    with pytest.raises(ValueError, match="bad magic"):
+        P.load_flat(path)
+
+
+def test_trained_checkpoint_exports_to_flat(tmp_path):
+    """Trained ``.npz`` checkpoints (if any) export losslessly to ``.sap``."""
+    npzs = sorted(glob.glob(os.path.join(P.TRAINED_DIR, "*.npz")))
+    if not npzs:
+        pytest.skip("no trained checkpoints under python/trained/")
+    flat = {k: np.asarray(v, np.float32) for k, v in np.load(npzs[0]).items()}
+    path = str(tmp_path / "trained.sap")
+    P.export_flat(flat, path)
+    back = P.load_flat(path)
+    assert sorted(back) == sorted(flat)
+    for k, v in flat.items():
+        np.testing.assert_array_equal(back[k], v)

@@ -1,0 +1,348 @@
+//! `.sabundle` archive read/write: one signed, content-addressed file
+//! carrying everything a worker needs to warm-start — model params, the
+//! autotuned planner table, and its `cpu_features` stamp.
+//!
+//! ```text
+//! magic  "SABUNDL1"                      (8 bytes)
+//! u32 LE manifest length
+//! u32 LE signature length (always 32)
+//! signature bytes        HMAC-SHA256(key, sha256(manifest))
+//! manifest bytes         compact JSON (see below)
+//! payload bytes          every entry's content, concatenated in
+//!                        manifest order, no padding
+//! ```
+//!
+//! The manifest lists every entry with its length and SHA-256, so the
+//! signature over the manifest digest transitively covers each payload
+//! byte; the payload must also end exactly where the entry lengths say it
+//! does, so appended junk is rejected too. Flipping any single byte in the
+//! file makes `open` fail — magic/header mangling, manifest edits, and
+//! signature bit-flips die at the signature check, payload flips die at the
+//! per-entry content hash with the offending entry named.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::hash::{hex, sha256};
+use super::params::FlatParams;
+use super::sign::{hmac_sha256, verify_hmac};
+use crate::kernels::simd::detect;
+use crate::util::json::Json;
+
+/// File magic for the bundle archive, version 1.
+pub const MAGIC: &[u8; 8] = b"SABUNDL1";
+/// `format` field every manifest must carry.
+pub const FORMAT: &str = "sabundle-v1";
+/// Entry name of the flat params blob.
+pub const ENTRY_PARAMS: &str = "params.sap";
+/// Entry name of the planner table JSON.
+pub const ENTRY_TABLE: &str = "planner_table.json";
+
+/// One manifest entry: name, payload length, payload SHA-256 (hex).
+#[derive(Clone, Debug)]
+pub struct EntryInfo {
+    pub name: String,
+    pub len: usize,
+    pub sha256: String,
+}
+
+/// Header-level view of a bundle (no key needed; signature not checked).
+#[derive(Clone, Debug)]
+pub struct BundleInfo {
+    pub digest: String,
+    pub model: String,
+    pub untrained: bool,
+    pub cpu_features: String,
+    pub entries: Vec<EntryInfo>,
+}
+
+/// A fully verified bundle: signature checked, every entry hash checked.
+#[derive(Clone, Debug)]
+pub struct LoadedBundle {
+    /// Hex SHA-256 of the manifest — the bundle's content address.
+    pub digest: String,
+    pub model: String,
+    pub untrained: bool,
+    pub cpu_features: String,
+    pub params: FlatParams,
+    pub table: Json,
+}
+
+/// Write a bundle and return its hex digest.
+pub fn pack(
+    path: &Path,
+    model: &str,
+    params: &FlatParams,
+    table: &Json,
+    untrained: bool,
+    key: &[u8],
+) -> Result<String> {
+    let payloads: Vec<(&str, Vec<u8>)> = vec![
+        (ENTRY_PARAMS, params.to_bytes()),
+        (ENTRY_TABLE, table.to_string().into_bytes()),
+    ];
+    let cpu = match table.get("cpu_features").and_then(|v| v.as_str()) {
+        Some(s) => s.to_string(),
+        None => detect::active_level().name().to_string(),
+    };
+    let entries: Vec<Json> = payloads
+        .iter()
+        .map(|(name, bytes)| {
+            Json::obj(vec![
+                ("name", Json::str(*name)),
+                ("len", Json::num(bytes.len() as f64)),
+                ("sha256", Json::str(hex(&sha256(bytes)))),
+            ])
+        })
+        .collect();
+    let manifest = Json::obj(vec![
+        ("format", Json::str(FORMAT)),
+        ("model", Json::str(model)),
+        ("untrained", Json::Bool(untrained)),
+        ("cpu_features", Json::str(cpu)),
+        ("entries", Json::Arr(entries)),
+    ]);
+    let manifest_bytes = manifest.to_string().into_bytes();
+    let digest = sha256(&manifest_bytes);
+    let sig = hmac_sha256(key, &digest);
+
+    let mut file = Vec::new();
+    file.extend_from_slice(MAGIC);
+    file.extend_from_slice(&(manifest_bytes.len() as u32).to_le_bytes());
+    file.extend_from_slice(&(sig.len() as u32).to_le_bytes());
+    file.extend_from_slice(&sig);
+    file.extend_from_slice(&manifest_bytes);
+    for (_, bytes) in &payloads {
+        file.extend_from_slice(bytes);
+    }
+    std::fs::write(path, &file).with_context(|| format!("writing bundle {path:?}"))?;
+    Ok(hex(&digest))
+}
+
+/// Raw structural view of a bundle file: header parsed, nothing verified.
+struct RawBundle<'a> {
+    sig: &'a [u8],
+    manifest_bytes: &'a [u8],
+    payload: &'a [u8],
+}
+
+fn parse_raw(bytes: &[u8]) -> Result<RawBundle<'_>> {
+    if bytes.len() < 16 || &bytes[..8] != MAGIC {
+        bail!("bad bundle magic (not a SABUNDL1 archive)");
+    }
+    let manifest_len = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize;
+    let sig_len = u32::from_le_bytes([bytes[12], bytes[13], bytes[14], bytes[15]]) as usize;
+    if sig_len != 32 {
+        bail!("bundle signature length is {sig_len}, expected 32");
+    }
+    let sig_end = 16 + sig_len;
+    let manifest_end = sig_end.checked_add(manifest_len).context("header overflow")?;
+    if manifest_end > bytes.len() {
+        bail!(
+            "bundle truncated: header promises {manifest_end} bytes, file has {}",
+            bytes.len()
+        );
+    }
+    Ok(RawBundle {
+        sig: &bytes[16..sig_end],
+        manifest_bytes: &bytes[sig_end..manifest_end],
+        payload: &bytes[manifest_end..],
+    })
+}
+
+/// Fetch a string field out of a manifest-shaped JSON object.
+fn req_str(j: &Json, key: &str) -> Result<String> {
+    let s = j
+        .req(key)?
+        .as_str()
+        .with_context(|| format!("manifest '{key}' is not a string"))?;
+    Ok(s.to_string())
+}
+
+fn parse_manifest(manifest_bytes: &[u8]) -> Result<BundleInfo> {
+    let text = std::str::from_utf8(manifest_bytes).context("bundle manifest is not utf-8")?;
+    let manifest = Json::parse(text).context("bundle manifest is not valid JSON")?;
+    let format = req_str(&manifest, "format")?;
+    if format != FORMAT {
+        bail!("unsupported bundle format '{format}' (expected '{FORMAT}')");
+    }
+    let model = req_str(&manifest, "model")?;
+    let untrained = manifest.req("untrained")?.as_bool().context("bad 'untrained'")?;
+    let cpu_features = req_str(&manifest, "cpu_features")?;
+    let mut entries = Vec::new();
+    let list = manifest.req("entries")?.as_arr().context("bad 'entries'")?;
+    for e in list {
+        entries.push(EntryInfo {
+            name: req_str(e, "name")?,
+            len: e.req("len")?.as_usize().context("bad entry 'len'")?,
+            sha256: req_str(e, "sha256")?,
+        });
+    }
+    Ok(BundleInfo {
+        digest: hex(&sha256(manifest_bytes)),
+        model,
+        untrained,
+        cpu_features,
+        entries,
+    })
+}
+
+/// Slice the payload region into per-entry byte ranges (aligned with
+/// `info.entries`), enforcing that the entry lengths cover the payload
+/// exactly — no missing and no trailing bytes.
+fn slice_entries<'a>(info: &BundleInfo, payload: &'a [u8]) -> Result<Vec<&'a [u8]>> {
+    let mut out = Vec::with_capacity(info.entries.len());
+    let mut pos = 0usize;
+    for e in &info.entries {
+        let end = pos.checked_add(e.len).context("entry length overflow")?;
+        if end > payload.len() {
+            bail!("bundle entry '{}' runs past the end of the file", e.name);
+        }
+        out.push(&payload[pos..end]);
+        pos = end;
+    }
+    if pos != payload.len() {
+        bail!("bundle has {} trailing payload bytes", payload.len() - pos);
+    }
+    Ok(out)
+}
+
+/// Read header + manifest without verifying the signature or entry hashes.
+pub fn inspect(path: &Path) -> Result<BundleInfo> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading bundle {path:?}"))?;
+    let raw = parse_raw(&bytes)?;
+    let info = parse_manifest(raw.manifest_bytes)?;
+    slice_entries(&info, raw.payload)?;
+    Ok(info)
+}
+
+/// Open and fully verify a bundle: signature over the manifest digest
+/// first, then every entry's content hash.
+pub fn open(path: &Path, key: &[u8]) -> Result<LoadedBundle> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading bundle {path:?}"))?;
+    let raw = parse_raw(&bytes)?;
+    let digest = sha256(raw.manifest_bytes);
+    if !verify_hmac(key, &digest, raw.sig) {
+        bail!("bundle signature verification failed (tampered manifest or wrong key)");
+    }
+    let info = parse_manifest(raw.manifest_bytes)?;
+    let slices = slice_entries(&info, raw.payload)?;
+    let mut params = None;
+    let mut table = None;
+    for (e, data) in info.entries.iter().zip(slices) {
+        if hex(&sha256(data)) != e.sha256 {
+            bail!("bundle entry '{}' failed its content hash", e.name);
+        }
+        match e.name.as_str() {
+            ENTRY_PARAMS => {
+                let p = FlatParams::from_bytes(data).context("decoding bundle params")?;
+                params = Some(p);
+            }
+            ENTRY_TABLE => {
+                let text = std::str::from_utf8(data).context("bundle table is not utf-8")?;
+                let t = Json::parse(text).context("bundle planner table is not JSON")?;
+                table = Some(t);
+            }
+            _ => {}
+        }
+    }
+    let params = params.context("bundle has no 'params.sap' entry")?;
+    let table = table.context("bundle has no 'planner_table.json' entry")?;
+    Ok(LoadedBundle {
+        digest: info.digest,
+        model: info.model,
+        untrained: info.untrained,
+        cpu_features: info.cpu_features,
+        params,
+        table,
+    })
+}
+
+/// Verify a bundle and write its manifest and entries into `dir`.
+pub fn unpack(path: &Path, dir: &Path, key: &[u8]) -> Result<()> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading bundle {path:?}"))?;
+    let raw = parse_raw(&bytes)?;
+    let digest = sha256(raw.manifest_bytes);
+    if !verify_hmac(key, &digest, raw.sig) {
+        bail!("bundle signature verification failed (tampered manifest or wrong key)");
+    }
+    let info = parse_manifest(raw.manifest_bytes)?;
+    let slices = slice_entries(&info, raw.payload)?;
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+    std::fs::write(dir.join("manifest.json"), raw.manifest_bytes)?;
+    for (e, data) in info.entries.iter().zip(slices) {
+        if hex(&sha256(data)) != e.sha256 {
+            bail!("bundle entry '{}' failed its content hash", e.name);
+        }
+        std::fs::write(dir.join(&e.name), data)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_params() -> FlatParams {
+        let mut p = FlatParams::new();
+        p.insert("w", vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        p.insert("b", vec![2], vec![0.5, -0.5]);
+        p
+    }
+
+    fn tiny_table() -> Json {
+        Json::parse(r#"{"cpu_features": "portable", "choices": []}"#).unwrap()
+    }
+
+    #[test]
+    fn pack_open_round_trip() {
+        let path = std::env::temp_dir().join("savit_bundle_roundtrip_test.sabundle");
+        let digest = pack(&path, "tiny", &tiny_params(), &tiny_table(), true, b"k").unwrap();
+        let b = open(&path, b"k").unwrap();
+        assert_eq!(b.digest, digest);
+        assert_eq!(b.model, "tiny");
+        assert!(b.untrained);
+        assert_eq!(b.cpu_features, "portable");
+        assert_eq!(b.params, tiny_params());
+        assert_eq!(b.table, tiny_table());
+        let info = inspect(&path).unwrap();
+        assert_eq!(info.digest, digest);
+        assert_eq!(info.entries.len(), 2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn wrong_key_is_rejected() {
+        let path = std::env::temp_dir().join("savit_bundle_wrongkey_test.sabundle");
+        pack(&path, "tiny", &tiny_params(), &tiny_table(), true, b"k").unwrap();
+        let err = open(&path, b"other").unwrap_err().to_string();
+        assert!(err.contains("signature"), "unexpected error: {err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn payload_flip_names_the_entry() {
+        let path = std::env::temp_dir().join("savit_bundle_flip_test.sabundle");
+        pack(&path, "tiny", &tiny_params(), &tiny_table(), true, b"k").unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1; // inside planner_table.json, the final entry
+        bytes[last] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = open(&path, b"k").unwrap_err().to_string();
+        assert!(err.contains("planner_table.json"), "unexpected error: {err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn appended_bytes_are_rejected() {
+        let path = std::env::temp_dir().join("savit_bundle_append_test.sabundle");
+        pack(&path, "tiny", &tiny_params(), &tiny_table(), true, b"k").unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.push(0);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = open(&path, b"k").unwrap_err().to_string();
+        assert!(err.contains("trailing"), "unexpected error: {err}");
+        std::fs::remove_file(&path).ok();
+    }
+}

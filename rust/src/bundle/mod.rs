@@ -1,0 +1,19 @@
+//! Signed, content-addressed model bundles (`.sabundle`).
+//!
+//! The deployable artifact for the native engine: one file carrying the
+//! flat params blob ([`params::FlatParams`], written by
+//! `python/compile/params_io.py::export_flat`), the autotuned planner
+//! table with its `cpu_features` stamp, and a manifest that SHA-256
+//! content-addresses every entry ([`hash`]) and is HMAC-signed over its
+//! digest ([`sign`]). `archive` packs and verifies the container; the
+//! serving stack (`coordinator::backend::load_bundle`) verifies a bundle
+//! once and warm-starts every fleet worker from the same loaded params and
+//! pinned planner table.
+
+pub mod archive;
+pub mod hash;
+pub mod params;
+pub mod sign;
+
+pub use archive::{inspect, open, pack, unpack, BundleInfo, LoadedBundle};
+pub use params::{FlatParams, FlatTensor};

@@ -1,0 +1,272 @@
+//! Flat binary params format (`.sap`): dotted keys → f32 tensors.
+//!
+//! The same byte layout is written by `python/compile/params_io.py::
+//! export_flat` and read here, so trained JAX weights cross the language
+//! boundary without a JSON/npz dependency on the Rust side:
+//!
+//! ```text
+//! magic  "SAPF0001"                       (8 bytes)
+//! u32 LE entry count
+//! per entry, sorted by key:
+//!   u16 LE key length, utf-8 key bytes
+//!   u8 ndim (<= 8), then ndim x u32 LE dims
+//!   product(dims) x f32 LE tensor data
+//! ```
+//!
+//! Entries are sorted by key on both sides, so the byte stream — and hence
+//! the bundle content hash — is a pure function of the tensor values.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::kernels::api::RawWeights;
+
+/// File magic for the flat params format, version 1.
+pub const MAGIC: &[u8; 8] = b"SAPF0001";
+
+const MAX_NDIM: usize = 8;
+
+/// One named tensor: shape plus row-major f32 data.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FlatTensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl FlatTensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        let expect: usize = dims.iter().product();
+        assert_eq!(data.len(), expect, "tensor data does not match its dims");
+        FlatTensor { dims, data }
+    }
+}
+
+/// An ordered map of dotted keys to tensors with a canonical byte encoding.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FlatParams {
+    entries: BTreeMap<String, FlatTensor>,
+}
+
+impl FlatParams {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: &str, dims: Vec<usize>, data: Vec<f32>) {
+        assert!(dims.len() <= MAX_NDIM, "tensor '{name}' has too many dims");
+        self.entries.insert(name.to_string(), FlatTensor::new(dims, data));
+    }
+
+    pub fn get(&self, name: &str) -> Option<&FlatTensor> {
+        self.entries.get(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Sorted tensor names.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.keys().map(String::as_str).collect()
+    }
+
+    /// Fetch a tensor that must exist.
+    pub fn req(&self, name: &str) -> Result<&FlatTensor> {
+        match self.entries.get(name) {
+            Some(t) => Ok(t),
+            None => bail!("params missing tensor '{name}'"),
+        }
+    }
+
+    /// Fetch a 2-D tensor with the exact shape `[k, n]` as kernel weights.
+    pub fn req_matrix(&self, name: &str, k: usize, n: usize) -> Result<RawWeights> {
+        let t = self.req(name)?;
+        if t.dims != [k, n] {
+            bail!(
+                "tensor '{name}' has shape {:?}, expected [{k}, {n}]",
+                t.dims
+            );
+        }
+        Ok(RawWeights::new(t.data.clone(), k, n))
+    }
+
+    /// Fetch a 1-D tensor with exactly `n` elements.
+    pub fn req_vec(&self, name: &str, n: usize) -> Result<Vec<f32>> {
+        let t = self.req(name)?;
+        if t.dims != [n] {
+            bail!("tensor '{name}' has shape {:?}, expected [{n}]", t.dims);
+        }
+        Ok(t.data.clone())
+    }
+
+    /// Fetch a tensor with an arbitrary exact shape, returning its data.
+    pub fn req_shaped(&self, name: &str, dims: &[usize]) -> Result<Vec<f32>> {
+        let t = self.req(name)?;
+        if t.dims != dims {
+            bail!("tensor '{name}' has shape {:?}, expected {dims:?}", t.dims);
+        }
+        Ok(t.data.clone())
+    }
+
+    /// Canonical byte encoding (see the module doc for the layout).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(self.entries.len() as u32).to_le_bytes());
+        for (name, t) in &self.entries {
+            out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.push(t.dims.len() as u8);
+            for d in &t.dims {
+                out.extend_from_slice(&(*d as u32).to_le_bytes());
+            }
+            for v in &t.data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Decode the canonical byte encoding. Every read is bounds-checked;
+    /// malformed input yields an error, never a panic, and trailing bytes
+    /// after the last entry are rejected.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let mut r = Reader { bytes, pos: 0 };
+        let magic = r.take(8)?;
+        if magic != MAGIC {
+            bail!("bad params magic (not a SAPF0001 flat params blob)");
+        }
+        let count = r.u32()? as usize;
+        let mut entries = BTreeMap::new();
+        let mut prev_name: Option<String> = None;
+        for _ in 0..count {
+            let name_len = r.u16()? as usize;
+            let name = std::str::from_utf8(r.take(name_len)?)
+                .context("params entry name is not utf-8")?
+                .to_string();
+            if let Some(prev) = &prev_name {
+                if *prev >= name {
+                    bail!("params entries are not sorted by key ('{prev}' >= '{name}')");
+                }
+            }
+            let ndim = r.u8()? as usize;
+            if ndim > MAX_NDIM {
+                bail!("tensor '{name}' has {ndim} dims (max {MAX_NDIM})");
+            }
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(r.u32()? as usize);
+            }
+            let numel: usize = dims.iter().product();
+            let raw = r.take(numel.checked_mul(4).context("tensor size overflow")?)?;
+            let data: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            prev_name = Some(name.clone());
+            entries.insert(name, FlatTensor { dims, data });
+        }
+        if r.pos != bytes.len() {
+            bail!(
+                "{} trailing bytes after the last params entry",
+                bytes.len() - r.pos
+            );
+        }
+        Ok(FlatParams { entries })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_bytes()).with_context(|| format!("writing {path:?}"))
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        Self::from_bytes(&bytes).with_context(|| format!("decoding params in {path:?}"))
+    }
+}
+
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).context("params blob offset overflow")?;
+        if end > self.bytes.len() {
+            bail!(
+                "params blob truncated at byte {} (wanted {n} more)",
+                self.pos
+            );
+        }
+        let out = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> FlatParams {
+        let mut p = FlatParams::new();
+        p.insert("b.vec", vec![3], vec![1.0, -2.5, 3.25]);
+        p.insert("a.mat", vec![2, 2], vec![0.5, 1.5, -0.5, 4.0]);
+        p.insert("c.scalar", vec![], vec![7.0]);
+        p
+    }
+
+    #[test]
+    fn round_trip_preserves_everything() {
+        let p = sample();
+        let back = FlatParams::from_bytes(&p.to_bytes()).unwrap();
+        assert_eq!(p, back);
+        assert_eq!(back.names(), vec!["a.mat", "b.vec", "c.scalar"]);
+        assert_eq!(back.req("b.vec").unwrap().data, vec![1.0, -2.5, 3.25]);
+    }
+
+    #[test]
+    fn typed_readers_enforce_shapes() {
+        let p = sample();
+        let m = p.req_matrix("a.mat", 2, 2).unwrap();
+        assert_eq!((m.k, m.n), (2, 2));
+        assert!(p.req_matrix("a.mat", 4, 1).is_err());
+        assert_eq!(p.req_vec("b.vec", 3).unwrap().len(), 3);
+        assert!(p.req_vec("a.mat", 4).is_err());
+        assert!(p.req("missing").is_err());
+    }
+
+    #[test]
+    fn malformed_blobs_error_instead_of_panicking() {
+        let good = sample().to_bytes();
+        assert!(FlatParams::from_bytes(&good[..good.len() - 1]).is_err());
+        assert!(FlatParams::from_bytes(b"NOTMAGIC").is_err());
+        let mut trailing = good.clone();
+        trailing.push(0);
+        assert!(FlatParams::from_bytes(&trailing).is_err());
+        for cut in [0, 4, 9, 13] {
+            assert!(FlatParams::from_bytes(&good[..cut]).is_err(), "cut {cut}");
+        }
+    }
+}

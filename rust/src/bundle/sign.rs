@@ -1,0 +1,97 @@
+//! Keyed-HMAC signing of bundle manifests (HMAC-SHA256, RFC 2104).
+//!
+//! Bundles are signed over the 32-byte SHA-256 digest of the manifest, so
+//! the signature transitively covers every entry's content hash. The key is
+//! a caller-supplied byte string (`--bundle-key`); [`DEFAULT_KEY`] is a
+//! development key so the round-trip works out of the box — production
+//! deployments pass their own.
+
+use super::hash::{sha256, Sha256};
+
+/// Development signing key used when the caller does not supply one.
+pub const DEFAULT_KEY: &str = "shiftaddvit-dev-bundle-key";
+
+const BLOCK: usize = 64;
+
+/// HMAC-SHA256 over `msg` with `key` (keys longer than one block are hashed
+/// first, per RFC 2104).
+pub fn hmac_sha256(key: &[u8], msg: &[u8]) -> [u8; 32] {
+    let mut k = [0u8; BLOCK];
+    if key.len() > BLOCK {
+        k[..32].copy_from_slice(&sha256(key));
+    } else {
+        k[..key.len()].copy_from_slice(key);
+    }
+    let mut ipad = [0u8; BLOCK];
+    let mut opad = [0u8; BLOCK];
+    for i in 0..BLOCK {
+        ipad[i] = k[i] ^ 0x36;
+        opad[i] = k[i] ^ 0x5c;
+    }
+    let mut inner = Sha256::new();
+    inner.update(&ipad);
+    inner.update(msg);
+    let inner_digest = inner.finalize();
+    let mut outer = Sha256::new();
+    outer.update(&opad);
+    outer.update(&inner_digest);
+    outer.finalize()
+}
+
+/// Verify `sig` against HMAC-SHA256(key, msg) without early exit on the
+/// first mismatching byte (XOR-fold compare).
+pub fn verify_hmac(key: &[u8], msg: &[u8], sig: &[u8]) -> bool {
+    if sig.len() != 32 {
+        return false;
+    }
+    let expect = hmac_sha256(key, msg);
+    let mut diff = 0u8;
+    for (a, b) in expect.iter().zip(sig.iter()) {
+        diff |= a ^ b;
+    }
+    diff == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bundle::hash::hex;
+
+    // RFC 4231 test case 1: key = 0x0b * 20, data = "Hi There".
+    #[test]
+    fn rfc4231_case1() {
+        let key = [0x0bu8; 20];
+        assert_eq!(
+            hex(&hmac_sha256(&key, b"Hi There")),
+            "b0344c61d8db38535ca8afceaf0bf12b881dc200c9833da726e9376c2e32cff7"
+        );
+    }
+
+    // RFC 4231 test case 2: key = "Jefe".
+    #[test]
+    fn rfc4231_case2() {
+        assert_eq!(
+            hex(&hmac_sha256(b"Jefe", b"what do ya want for nothing?")),
+            "5bdcc146bf60754e6a042426089575c75a003f089d2739839dec58b964ec3843"
+        );
+    }
+
+    #[test]
+    fn long_key_is_hashed_first() {
+        let long_key = vec![0xaau8; 131];
+        let direct = hmac_sha256(&long_key, b"msg");
+        let hashed = hmac_sha256(&sha256(&long_key), b"msg");
+        assert_eq!(direct, hashed);
+    }
+
+    #[test]
+    fn verify_accepts_and_rejects() {
+        let sig = hmac_sha256(b"k", b"payload");
+        assert!(verify_hmac(b"k", b"payload", &sig));
+        let mut bad = sig;
+        bad[13] ^= 0x01;
+        assert!(!verify_hmac(b"k", b"payload", &bad));
+        assert!(!verify_hmac(b"other-key", b"payload", &sig));
+        assert!(!verify_hmac(b"k", b"payload", &sig[..31]));
+    }
+}

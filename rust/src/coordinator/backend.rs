@@ -26,6 +26,8 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::bundle::archive::{self, LoadedBundle};
+use crate::bundle::sign;
 use crate::coordinator::batcher::Request;
 use crate::coordinator::config::{BackendKind, DispatchMode, ServerConfig};
 use crate::coordinator::metrics::Metrics;
@@ -36,6 +38,7 @@ use crate::kernels::registry::KernelRegistry;
 use crate::model::ops::Variant;
 use crate::runtime::artifact::Manifest;
 use crate::runtime::tensor::Tensor;
+use crate::util::json::Json;
 
 /// Result of one batch, whichever engine produced it.
 pub struct BatchOutput {
@@ -336,8 +339,14 @@ impl NativeBackend {
     /// Build on an externally prepared planner (e.g. one pre-pinned from an
     /// offline-autotuned lookup table).
     pub fn with_planner(cfg: NativeModelConfig, planner: Arc<Planner>) -> NativeBackend {
+        NativeBackend::from_model(NativeModel::new(cfg, planner))
+    }
+
+    /// Wrap an already-built model (e.g. one warm-started from bundle
+    /// params via [`NativeModel::from_params`]).
+    pub fn from_model(model: NativeModel) -> NativeBackend {
         NativeBackend {
-            model: NativeModel::new(cfg, planner),
+            model,
             queue: RequestQueue::new(),
         }
     }
@@ -451,6 +460,52 @@ impl InferenceBackend for NativeBackend {
 /// loads the artifact manifest (fails fast with the usual
 /// "run `make artifacts`" context when absent).
 pub fn create_backend(cfg: &ServerConfig) -> Result<Box<dyn InferenceBackend>> {
+    let bundle = load_bundle(cfg)?;
+    create_backend_with(cfg, bundle.as_deref(), None)
+}
+
+/// Verify the configured `.sabundle` once — signature over the manifest
+/// digest, then every entry's content hash — and load it. Returns `None`
+/// when no bundle is configured. The fleet factories call this before any
+/// worker spawns, so a tampered bundle is rejected up front.
+pub fn load_bundle(cfg: &ServerConfig) -> Result<Option<Arc<LoadedBundle>>> {
+    let path = match &cfg.bundle {
+        Some(p) => p,
+        None => return Ok(None),
+    };
+    if cfg.backend != BackendKind::Native {
+        anyhow::bail!(
+            "--bundle needs the native backend (the xla path bakes \
+             weights into its artifacts)"
+        );
+    }
+    if cfg.planner_table.is_some() {
+        anyhow::bail!(
+            "--bundle and --planner-table are mutually exclusive \
+             (the bundle pins its own table)"
+        );
+    }
+    let key = cfg.bundle_key.as_deref().unwrap_or(sign::DEFAULT_KEY);
+    let b = archive::open(Path::new(path), key.as_bytes())?;
+    println!(
+        "bundle: verified {path} (model {}, {} weights, cpu_features {}) digest {}",
+        b.model,
+        if b.untrained { "seeded-untrained" } else { "trained" },
+        b.cpu_features,
+        b.digest
+    );
+    Ok(Some(Arc::new(b)))
+}
+
+/// Like [`create_backend`], but taking an already-verified bundle and/or a
+/// pre-serialized planner table to pin. Fleet factories verify the bundle
+/// once, autotune once, and hand every worker the same `(bundle, table)`
+/// pair so workers never re-verify or re-benchmark.
+pub fn create_backend_with(
+    cfg: &ServerConfig,
+    bundle: Option<&LoadedBundle>,
+    pinned_table: Option<&str>,
+) -> Result<Box<dyn InferenceBackend>> {
     match cfg.backend {
         BackendKind::Native => {
             // The native engine always executes real sparse dispatch (and
@@ -464,11 +519,39 @@ pub fn create_backend(cfg: &ServerConfig) -> Result<Box<dyn InferenceBackend>> {
                     cfg.dispatch
                 );
             }
-            let planner = create_planner(cfg)?;
-            Ok(Box::new(NativeBackend::with_planner(
-                NativeModelConfig::tiny(Variant::SHIFTADD_MOE),
-                planner,
-            )))
+            let planner = match pinned_table {
+                Some(text) => {
+                    // A fleet worker: pin the factory's table silently (the
+                    // factory already printed the shared-table line).
+                    let reg = Arc::new(KernelRegistry::with_defaults());
+                    let planner = Arc::new(Planner::new(reg));
+                    planner.pin_table_json(&Json::parse(text)?)?;
+                    planner
+                }
+                None => {
+                    let planner = create_planner(cfg)?;
+                    if let Some(b) = bundle {
+                        let pinned = planner.pin_table_json(&b.table)?;
+                        println!("bundle: pinned {pinned} planner choices from the bundle");
+                    }
+                    planner
+                }
+            };
+            let model_cfg = NativeModelConfig::tiny(Variant::SHIFTADD_MOE);
+            let model = match bundle {
+                Some(b) => {
+                    if b.model != model_cfg.spec.name {
+                        anyhow::bail!(
+                            "bundle is for model '{}', this server runs '{}'",
+                            b.model,
+                            model_cfg.spec.name
+                        );
+                    }
+                    NativeModel::from_params(model_cfg, planner, &b.params)?
+                }
+                None => NativeModel::new(model_cfg, planner),
+            };
+            Ok(Box::new(NativeBackend::from_model(model)))
         }
         BackendKind::Xla => {
             let manifest = Manifest::load(&Manifest::default_dir())?;

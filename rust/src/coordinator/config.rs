@@ -149,6 +149,11 @@ pub struct ServerConfig {
     pub planner_table: Option<String>,
     /// where to dump the planner's decisions after the run (JSON path)
     pub planner_table_save: Option<String>,
+    /// signed `.sabundle` to verify once and warm-start every engine from
+    /// (params + pinned planner table); native backend only
+    pub bundle: Option<String>,
+    /// HMAC key for bundle verification (default: the dev signing key)
+    pub bundle_key: Option<String>,
     /// engine workers behind the fleet router; 1 = the classic
     /// single-engine loop (no fleet layer)
     pub workers: usize,
@@ -173,6 +178,8 @@ impl Default for ServerConfig {
             prefill_budget: 0,
             planner_table: None,
             planner_table_save: None,
+            bundle: None,
+            bundle_key: None,
             workers: 1,
             policy: PolicyKind::RoundRobin,
         }
@@ -226,6 +233,12 @@ impl ServerConfig {
         }
         if let Some(v) = j.get("planner_table_save").and_then(|v| v.as_str()) {
             c.planner_table_save = Some(v.to_string());
+        }
+        if let Some(v) = j.get("bundle").and_then(|v| v.as_str()) {
+            c.bundle = Some(v.to_string());
+        }
+        if let Some(v) = j.get("bundle_key").and_then(|v| v.as_str()) {
+            c.bundle_key = Some(v.to_string());
         }
         if let Some(v) = j.get("workers").and_then(|v| v.as_usize()) {
             c.workers = v;
@@ -342,6 +355,20 @@ mod tests {
         let d = ServerConfig::default();
         assert_eq!(d.workers, 1);
         assert_eq!(d.policy, PolicyKind::RoundRobin);
+    }
+
+    #[test]
+    fn bundle_fields_parse() {
+        let dir = std::env::temp_dir().join("savit_cfg_bundle_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"bundle": "m.sabundle", "bundle_key": "sekrit"}"#).unwrap();
+        let c = ServerConfig::from_file(&p).unwrap();
+        assert_eq!(c.bundle.as_deref(), Some("m.sabundle"));
+        assert_eq!(c.bundle_key.as_deref(), Some("sekrit"));
+        let d = ServerConfig::default();
+        assert!(d.bundle.is_none());
+        assert!(d.bundle_key.is_none());
     }
 
     #[test]

@@ -53,6 +53,9 @@ pub struct Metrics {
     /// resolved to it, so serve reports show which kernel family actually
     /// ran (the XLA pipeline plans nothing and leaves this empty)
     pub chosen_backends: BTreeMap<String, usize>,
+    /// digest of the verified `.sabundle` the engine warm-started from
+    /// (`None` when serving from seeded init)
+    pub bundle_digest: Option<String>,
 }
 
 impl Metrics {
@@ -154,6 +157,9 @@ impl Metrics {
         for (id, n) in &other.chosen_backends {
             *self.chosen_backends.entry(id.clone()).or_insert(0) += n;
         }
+        if self.bundle_digest.is_none() {
+            self.bundle_digest = other.bundle_digest.clone();
+        }
     }
 
     /// JSON dump for tooling.
@@ -253,6 +259,9 @@ impl Metrics {
             let ids: Vec<f64> = self.request_ids.iter().map(|&id| id as f64).collect();
             pairs.push(("request_ids", Json::arr_num(&ids)));
         }
+        if let Some(d) = &self.bundle_digest {
+            pairs.push(("bundle_digest", Json::str(d)));
+        }
         Json::obj(pairs)
     }
 
@@ -330,6 +339,9 @@ impl Metrics {
                 .map(|(id, n)| format!("{id}×{n}"))
                 .collect();
             println!("  planned kernel backends: {}", parts.join("  "));
+        }
+        if let Some(d) = &self.bundle_digest {
+            println!("  bundle digest: {d}");
         }
     }
 }
@@ -430,18 +442,24 @@ mod tests {
         b.request_ids = vec![1, 3];
         b.chosen_backends.insert("matadd/simd".into(), 1);
         b.chosen_backends.insert("matshift/rowpar".into(), 1);
+        b.bundle_digest = Some("abc123".to_string());
         a.merge(&b);
         assert_eq!(a.batches, 3);
         assert_eq!(a.requests, 5);
         assert_eq!(a.expert_tokens, [11, 9]);
+        assert_eq!(a.bundle_digest.as_deref(), Some("abc123"));
         assert_eq!(a.stage_summary("stem").unwrap().n, 2);
         assert_eq!(a.stage_summary("head").unwrap().n, 1);
         assert_eq!(a.request_ids, vec![0, 2, 1, 3]);
         assert_eq!(a.chosen_backends.get("matadd/simd"), Some(&3));
         assert_eq!(a.chosen_backends.get("matshift/rowpar"), Some(&1));
-        // request ids round-trip through JSON
+        // request ids and the bundle digest round-trip through JSON
         let j = a.to_json();
         assert!(j.get("request_ids").is_some());
+        assert_eq!(
+            j.get("bundle_digest").and_then(|v| v.as_str()),
+            Some("abc123")
+        );
         // Clone gives an independent copy (fleet snapshot semantics)
         let c = a.clone();
         assert_eq!(c.requests, a.requests);

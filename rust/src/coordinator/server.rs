@@ -12,9 +12,9 @@
 //!   dispatches.
 //!
 //! [`serve_auto`] resolves the configured backend through
-//! [`create_backend`] (the single construction path — planner lookup
-//! tables and `--backend` apply uniformly) and dispatches on
-//! `cfg.workload`.
+//! [`crate::coordinator::backend::create_backend`] (the single
+//! construction path — planner lookup tables, `--bundle`, and `--backend`
+//! apply uniformly) and dispatches on `cfg.workload`.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
@@ -23,7 +23,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::backend::{create_backend, create_planner, InferenceBackend, Ticket};
+use crate::coordinator::backend::{
+    create_backend_with, create_planner, load_bundle, InferenceBackend, Ticket,
+};
 use crate::coordinator::batcher::{Batcher, Request};
 use crate::coordinator::config::{BackendKind, SchedulerKind, ServerConfig, Workload};
 use crate::coordinator::metrics::Metrics;
@@ -56,6 +58,8 @@ pub struct ServeReport {
     pub step_tokens: Option<Summary>,
     /// per-worker breakdown (fleet runs; empty on the single-engine path)
     pub per_worker: Vec<WorkerBreakdown>,
+    /// digest of the verified bundle the engine(s) warm-started from
+    pub bundle_digest: Option<String>,
 }
 
 /// Run the serving benchmark against the XLA artifact pipeline (the
@@ -71,15 +75,15 @@ pub fn serve(manifest: &Manifest, cfg: &ServerConfig) -> Result<ServeReport> {
 /// [`StreamReport`], so callers wanting it use [`serve_stream`] directly.)
 pub fn serve_auto(cfg: &ServerConfig) -> Result<ServeReport> {
     if cfg.workers > 1 {
-        // Fleet path: each worker owns its engine and planner inside its
-        // own thread, so there is no single planner table to dump.
-        if cfg.planner_table_save.is_some() {
-            println!("planner table not saved: fleet workers own their planners");
-        }
         return serve_fleet(cfg);
     }
-    let backend = create_backend(cfg)?;
-    let report = serve_backend(backend.as_ref(), cfg)?;
+    let bundle = load_bundle(cfg)?;
+    let backend = create_backend_with(cfg, bundle.as_deref(), None)?;
+    let mut report = serve_backend(backend.as_ref(), cfg)?;
+    if let Some(b) = &bundle {
+        report.bundle_digest = Some(b.digest.clone());
+        report.metrics.bundle_digest = Some(b.digest.clone());
+    }
     save_planner_table(cfg, &backend.planner_choices())?;
     Ok(report)
 }
@@ -208,6 +212,7 @@ pub fn serve_backend(backend: &dyn InferenceBackend, cfg: &ServerConfig) -> Resu
         metrics,
         sample_masks,
         per_worker: Vec::new(),
+        bundle_digest: None,
     })
 }
 
@@ -216,6 +221,9 @@ pub fn serve_backend(backend: &dyn InferenceBackend, cfg: &ServerConfig) -> Resu
 /// are placed by the configured routing policy and every worker fuses its
 /// own queue on its own thread. Outputs are collected through the
 /// supervised poll, so the run survives worker death by resubmission.
+/// The planner is tuned ONCE in the router's factory and every worker
+/// pins the shared table (see [`Router::from_server_config`]), exactly
+/// like the stream fleet — workers never re-benchmark the same shapes.
 pub fn serve_fleet(cfg: &ServerConfig) -> Result<ServeReport> {
     let mut router = Router::from_server_config(cfg)?;
     println!(
@@ -285,6 +293,10 @@ pub fn serve_fleet(cfg: &ServerConfig) -> Result<ServeReport> {
         );
     }
     let (metrics, per_worker) = router.metrics_report();
+    // The factory tuned the planner once and shared the table with every
+    // worker, so its decision log IS the fleet's table.
+    save_planner_table(cfg, router.factory_choices())?;
+    let bundle_digest = router.bundle_digest().map(String::from);
     router.shutdown()?;
 
     Ok(ServeReport {
@@ -301,6 +313,7 @@ pub fn serve_fleet(cfg: &ServerConfig) -> Result<ServeReport> {
         metrics,
         sample_masks,
         per_worker,
+        bundle_digest,
     })
 }
 
@@ -367,6 +380,8 @@ pub struct StreamReport {
     pub metrics: Metrics,
     /// per-worker breakdown (fleet runs; empty on the single-engine path)
     pub per_worker: Vec<WorkerBreakdown>,
+    /// digest of the verified bundle whose planner table the engine pinned
+    pub bundle_digest: Option<String>,
 }
 
 fn summary_json(s: &Summary) -> Json {
@@ -409,7 +424,7 @@ impl StreamReport {
 
     /// JSON shape for benches/tooling (trailing-JSON convention).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut rows = vec![
             ("sessions", Json::num(self.sessions as f64)),
             ("total_tokens", Json::num(self.total_tokens as f64)),
             ("steps", Json::num(self.steps as f64)),
@@ -423,7 +438,11 @@ impl StreamReport {
                 "per_worker",
                 Json::Arr(self.per_worker.iter().map(|b| b.to_json()).collect()),
             ),
-        ])
+        ];
+        if let Some(d) = &self.bundle_digest {
+            rows.push(("bundle_digest", Json::str(d)));
+        }
+        Json::obj(rows)
     }
 }
 
@@ -481,7 +500,14 @@ pub fn serve_stream(cfg: &ServerConfig) -> Result<StreamReport> {
     if cfg.workers > 1 {
         return serve_stream_fleet(cfg);
     }
+    // A bundle pins the streaming planner to its shipped table (stream
+    // weights are spec-seeded; the image path owns the params blob).
+    let bundle = load_bundle(cfg)?;
     let planner = create_planner(cfg)?;
+    if let Some(b) = &bundle {
+        let pinned = planner.pin_table_json(&b.table)?;
+        println!("bundle: pinned {pinned} planner choices from the bundle");
+    }
     let model = StreamModel::new(SessionSpec::tiny(StreamAttn::LinearAdd, Lin::Shift), planner);
     let dim = model.spec.dim;
     let mode = engine_mode(cfg);
@@ -535,6 +561,8 @@ pub fn serve_stream(cfg: &ServerConfig) -> Result<StreamReport> {
     }
     metrics.record_plan(&engine.model.planner.choices());
     save_planner_table(cfg, &engine.model.planner.choices())?;
+    let bundle_digest = bundle.map(|b| b.digest.clone());
+    metrics.bundle_digest = bundle_digest.clone();
 
     Ok(StreamReport {
         sessions: lens.len(),
@@ -550,6 +578,7 @@ pub fn serve_stream(cfg: &ServerConfig) -> Result<StreamReport> {
         step_tokens: metrics.step_tokens_summary(),
         metrics,
         per_worker: Vec::new(),
+        bundle_digest,
     })
 }
 
@@ -611,9 +640,15 @@ fn serve_stream_fleet(cfg: &ServerConfig) -> Result<StreamReport> {
     print_scheduler(mode);
 
     // Plan once in the factory: the probe model autotunes every shape the
-    // workers will need (or pins them from cfg.planner_table), then the
-    // table is shared with every worker at spawn.
+    // workers will need (or pins them from cfg.planner_table / the
+    // verified bundle's table), then the table is shared with every
+    // worker at spawn.
+    let bundle = load_bundle(cfg)?;
     let factory_planner = create_planner(cfg)?;
+    if let Some(b) = &bundle {
+        let pinned = factory_planner.pin_table_json(&b.table)?;
+        println!("bundle: pinned {pinned} planner choices from the bundle");
+    }
     let _probe = StreamModel::new(
         SessionSpec::tiny(StreamAttn::LinearAdd, Lin::Shift),
         Arc::clone(&factory_planner),
@@ -759,6 +794,8 @@ fn serve_stream_fleet(cfg: &ServerConfig) -> Result<StreamReport> {
         });
     }
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let bundle_digest = bundle.map(|b| b.digest.clone());
+    merged.bundle_digest = bundle_digest.clone();
 
     Ok(StreamReport {
         sessions: lens.len(),
@@ -774,6 +811,7 @@ fn serve_stream_fleet(cfg: &ServerConfig) -> Result<StreamReport> {
         step_tokens: merged.step_tokens_summary(),
         metrics: merged,
         per_worker,
+        bundle_digest,
     })
 }
 

@@ -20,12 +20,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::backend::{create_backend, RequestOutput};
+use crate::coordinator::backend::{create_backend_with, load_bundle, RequestOutput};
 use crate::coordinator::batcher::Request;
-use crate::coordinator::config::ServerConfig;
+use crate::coordinator::config::{BackendKind, ServerConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::fleet::policy::{PolicyKind, RoutingPolicy, WorkerView};
 use crate::fleet::worker::{BackendFactory, DoneMap, FleetWorker, WorkerHealth};
+use crate::kernels::planner::{table_json, Choice};
 use crate::util::json::Json;
 
 /// Default seed for policy tiebreaks (override via [`RouterConfig`]).
@@ -119,20 +120,27 @@ impl LivenessReport {
 }
 
 /// `/readiness` shape: ready while at least one worker admits requests.
-#[derive(Clone, Copy, Debug)]
+/// Carries the bundle digest so a deployer can confirm which artifact the
+/// fleet warm-started from.
+#[derive(Clone, Debug)]
 pub struct ReadinessReport {
     pub total: usize,
     pub ready_workers: usize,
     pub ready: bool,
+    pub bundle_digest: Option<String>,
 }
 
 impl ReadinessReport {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut rows = vec![
             ("ready", Json::str(if self.ready { "true" } else { "false" })),
             ("ready_workers", Json::num(self.ready_workers as f64)),
             ("total_workers", Json::num(self.total as f64)),
-        ])
+        ];
+        if let Some(d) = &self.bundle_digest {
+            rows.push(("bundle_digest", Json::str(d)));
+        }
+        Json::obj(rows)
     }
 }
 
@@ -174,6 +182,11 @@ pub struct Router {
     next_fleet_id: u64,
     next_worker_id: usize,
     resubmitted: usize,
+    /// digest of the verified bundle every worker warm-started from
+    bundle_digest: Option<String>,
+    /// planner choices autotuned once in the fleet factory and shared
+    /// with every worker (empty when workers own their planning)
+    factory_choices: Vec<Choice>,
 }
 
 impl Router {
@@ -190,6 +203,8 @@ impl Router {
             next_fleet_id: 0,
             next_worker_id: 0,
             resubmitted: 0,
+            bundle_digest: None,
+            factory_choices: Vec::new(),
         };
         for _ in 0..router.cfg.workers.max(1) {
             router.add_worker()?;
@@ -198,22 +213,53 @@ impl Router {
     }
 
     /// Build a fleet whose workers run the engine described by a
-    /// [`ServerConfig`] (`create_backend` inside each worker thread — the
-    /// single construction path, so `--backend` and planner tables apply
-    /// per worker).
+    /// [`ServerConfig`]. For the native backend the factory does the
+    /// expensive work ONCE before any worker spawns: it verifies the
+    /// configured bundle and autotunes the planner on a throwaway probe
+    /// engine, then every worker warm-starts from the same loaded params
+    /// and pinned table — no per-worker re-verification or benchmarking.
     pub fn from_server_config(cfg: &ServerConfig) -> Result<Router> {
+        let bundle = load_bundle(cfg)?;
+        let digest = bundle.as_ref().map(|b| b.digest.clone());
+        let workers = cfg.workers.max(1);
         let engine_cfg = cfg.clone();
-        let factory: BackendFactory = Arc::new(move || create_backend(&engine_cfg));
-        Router::new(
+        let mut choices: Vec<Choice> = Vec::new();
+        let factory: BackendFactory = if cfg.backend == BackendKind::Native {
+            let probe = create_backend_with(cfg, bundle.as_deref(), None)?;
+            choices = probe.planner_choices();
+            let table = table_json(&choices).to_string();
+            println!(
+                "fleet: planner tuned once in the factory ({} choices shared with {workers} workers)",
+                choices.len()
+            );
+            Arc::new(move || create_backend_with(&engine_cfg, bundle.as_deref(), Some(&table)))
+        } else {
+            Arc::new(move || create_backend_with(&engine_cfg, None, None))
+        };
+        let mut router = Router::new(
             RouterConfig {
-                workers: cfg.workers.max(1),
+                workers,
                 max_batch: cfg.max_batch,
                 policy: cfg.policy,
                 policy_seed: DEFAULT_POLICY_SEED,
                 step_delay_ms: 0.0,
             },
             factory,
-        )
+        )?;
+        router.bundle_digest = digest;
+        router.factory_choices = choices;
+        Ok(router)
+    }
+
+    /// Digest of the verified bundle the fleet warm-started from.
+    pub fn bundle_digest(&self) -> Option<&str> {
+        self.bundle_digest.as_deref()
+    }
+
+    /// Planner choices autotuned once in the fleet factory (what
+    /// `--save-planner-table` persists for a fleet run).
+    pub fn factory_choices(&self) -> &[Choice] {
+        &self.factory_choices
     }
 
     pub fn worker_count(&self) -> usize {
@@ -458,6 +504,7 @@ impl Router {
             total: self.workers.len(),
             ready_workers,
             ready: ready_workers > 0,
+            bundle_digest: self.bundle_digest.clone(),
         }
     }
 
@@ -478,13 +525,14 @@ impl Router {
                 });
             });
         }
+        merged.bundle_digest = self.bundle_digest.clone();
         (merged, per_worker)
     }
 
     /// `/metrics`: merged engine metrics, per-worker rows, resubmissions.
     pub fn metrics_json(&self) -> Json {
         let (merged, per_worker) = self.metrics_report();
-        Json::obj(vec![
+        let mut rows = vec![
             ("policy", Json::str(self.policy.name())),
             ("resubmitted", Json::num(self.resubmitted as f64)),
             (
@@ -492,7 +540,11 @@ impl Router {
                 Json::Arr(per_worker.iter().map(|b| b.to_json()).collect()),
             ),
             ("engine", merged.to_json()),
-        ])
+        ];
+        if let Some(d) = &self.bundle_digest {
+            rows.push(("bundle_digest", Json::str(d)));
+        }
+        Json::obj(rows)
     }
 }
 

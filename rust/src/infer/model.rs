@@ -12,19 +12,25 @@
 //! and image attention is bidirectional), which is why the two entry
 //! points coexist.
 //!
-//! Weights are deterministic from `seed` (the repo has no Rust-side trained
-//! checkpoints; the XLA path bakes trained weights into artifacts). The
-//! planner picks the fastest registered backend per (primitive, shape) at
-//! construction; all backends of a primitive are numerically identical
-//! (the registry's bit-exactness contracts), so outputs depend only on the
-//! seed, never on which backend won.
+//! Weights come from a [`ModelParams`] value: either deterministic seeded
+//! init (`NativeModel::new`, origin [`WeightsOrigin::SeededUntrained`]) or
+//! externally trained params loaded through the flat params format
+//! (`NativeModel::from_params`, fed by `python/compile/params_io.py::
+//! export_flat` via a signed `.sabundle`). The planner picks the fastest
+//! registered backend per (primitive, shape) at construction; all backends
+//! of a primitive are numerically identical (the registry's bit-exactness
+//! contracts), so outputs depend only on the weights, never on which
+//! backend won.
 
 use std::sync::Arc;
 use std::time::Instant;
 
+use anyhow::{bail, Result};
+
+use crate::bundle::params::FlatParams;
 use crate::data::synth_images;
 use crate::infer::block::{dense_init, layer_norm, AttnExec, BlockRaw, LinearLayer, NativeBlock};
-use crate::kernels::api::Primitive;
+use crate::kernels::api::{Primitive, RawWeights};
 use crate::kernels::planner::Planner;
 use crate::kernels::registry::KernelRegistry;
 use crate::model::config::{ModelSpec, Stage};
@@ -112,10 +118,251 @@ pub struct ForwardTrace {
     pub blocks: usize,
 }
 
+/// Where a [`NativeModel`]'s weights came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightsOrigin {
+    /// Deterministic seeded init — an explicitly *untrained* model.
+    SeededUntrained,
+    /// Loaded from external params (a flat params blob or a bundle).
+    Loaded,
+}
+
+/// Raw weights of one stage: the optional 2×2-downsample projection that
+/// enters the stage (weights + bias; None for stage 0), then its blocks.
+pub struct StageParams {
+    pub downsample: Option<(RawWeights, Vec<f32>)>,
+    pub blocks: Vec<BlockRaw>,
+}
+
+/// The complete raw weights of a [`NativeModel`], independent of any
+/// kernel backend — what `export_flat` produces on the Python side and a
+/// `.sabundle` carries. [`ModelParams::seeded`] replicates the historical
+/// seeded init draw-for-draw, so `to_flat` → `from_flat` → `build` is
+/// bit-identical to building from the seed directly.
+pub struct ModelParams {
+    pub embed_w: RawWeights,
+    pub embed_b: Vec<f32>,
+    pub pos: Vec<f32>,
+    pub stages: Vec<StageParams>,
+    pub norm_g: Vec<f32>,
+    pub norm_b: Vec<f32>,
+    pub head_w: RawWeights,
+    pub head_b: Vec<f32>,
+}
+
+impl ModelParams {
+    /// Deterministic seeded init (the RNG draw order is load-bearing: it
+    /// must match what `NativeModel::new` always did, so seeds keep
+    /// producing bit-identical weights across releases).
+    pub fn seeded(cfg: &NativeModelConfig) -> ModelParams {
+        let mut rng = XorShift64::new(cfg.seed);
+        let patch_dim = cfg.patch * cfg.patch * 3;
+        let d0 = cfg.spec.stages[0].dim;
+        let tokens0 = cfg.spec.stages[0].tokens;
+        let embed_w = dense_init(&mut rng, patch_dim, d0);
+        let pos: Vec<f32> = rng.normals(tokens0 * d0).iter().map(|v| v * 0.02).collect();
+        let mut stages = Vec::new();
+        for (si, st) in cfg.spec.stages.iter().enumerate() {
+            let downsample = if si == 0 {
+                None
+            } else {
+                let prev = &cfg.spec.stages[si - 1];
+                Some((dense_init(&mut rng, prev.dim, st.dim), vec![0.0; st.dim]))
+            };
+            let blocks = (0..st.depth)
+                .map(|_| BlockRaw::random(&mut rng, st.dim, st.dim * st.mlp_ratio))
+                .collect();
+            stages.push(StageParams { downsample, blocks });
+        }
+        let dl = cfg.spec.stages.last().unwrap().dim;
+        let head_w = dense_init(&mut rng, dl, cfg.num_classes);
+        ModelParams {
+            embed_w,
+            embed_b: vec![0.0; d0],
+            pos,
+            stages,
+            norm_g: vec![1.0; dl],
+            norm_b: vec![0.0; dl],
+            head_w,
+            head_b: vec![0.0; cfg.num_classes],
+        }
+    }
+
+    /// Serialize into the flat dotted-key tensor format (`embed.w`, `pos`,
+    /// `stages.{si}.downsample.w`, `stages.{si}.blocks.{bi}.wq`, …).
+    pub fn to_flat(&self, cfg: &NativeModelConfig) -> FlatParams {
+        let mut flat = FlatParams::new();
+        insert_mat(&mut flat, "embed.w", &self.embed_w);
+        insert_vec(&mut flat, "embed.b", &self.embed_b);
+        let tokens0 = cfg.spec.stages[0].tokens;
+        let d0 = cfg.spec.stages[0].dim;
+        flat.insert("pos", vec![tokens0, d0], self.pos.clone());
+        for (si, sp) in self.stages.iter().enumerate() {
+            if let Some((w, b)) = &sp.downsample {
+                insert_mat(&mut flat, &format!("stages.{si}.downsample.w"), w);
+                insert_vec(&mut flat, &format!("stages.{si}.downsample.b"), b);
+            }
+            for (bi, blk) in sp.blocks.iter().enumerate() {
+                insert_block(&mut flat, &format!("stages.{si}.blocks.{bi}"), blk);
+            }
+        }
+        insert_vec(&mut flat, "norm.g", &self.norm_g);
+        insert_vec(&mut flat, "norm.b", &self.norm_b);
+        insert_mat(&mut flat, "head.w", &self.head_w);
+        insert_vec(&mut flat, "head.b", &self.head_b);
+        flat
+    }
+
+    /// Strict inverse of [`ModelParams::to_flat`]: every tensor the spec
+    /// calls for must be present with the exact shape, and tensors the
+    /// spec does not know about are rejected by name.
+    pub fn from_flat(cfg: &NativeModelConfig, flat: &FlatParams) -> Result<ModelParams> {
+        if cfg.spec.stages.is_empty() {
+            bail!("spec has no stages");
+        }
+        let mut r = ParamReader {
+            flat,
+            seen: std::collections::BTreeSet::new(),
+        };
+        let patch_dim = cfg.patch * cfg.patch * 3;
+        let d0 = cfg.spec.stages[0].dim;
+        let tokens0 = cfg.spec.stages[0].tokens;
+        let embed_w = r.mat("embed.w", patch_dim, d0)?;
+        let embed_b = r.vec("embed.b", d0)?;
+        let pos = r.shaped("pos", &[tokens0, d0])?;
+        let mut stages = Vec::new();
+        for (si, st) in cfg.spec.stages.iter().enumerate() {
+            let downsample = if si == 0 {
+                None
+            } else {
+                let prev = &cfg.spec.stages[si - 1];
+                let w = r.mat(&format!("stages.{si}.downsample.w"), prev.dim, st.dim)?;
+                let b = r.vec(&format!("stages.{si}.downsample.b"), st.dim)?;
+                Some((w, b))
+            };
+            let mut blocks = Vec::new();
+            for bi in 0..st.depth {
+                let prefix = format!("stages.{si}.blocks.{bi}");
+                blocks.push(read_block(&mut r, &prefix, st.dim, st.dim * st.mlp_ratio)?);
+            }
+            stages.push(StageParams { downsample, blocks });
+        }
+        let dl = cfg.spec.stages.last().unwrap().dim;
+        let params = ModelParams {
+            embed_w,
+            embed_b,
+            pos,
+            stages,
+            norm_g: r.vec("norm.g", dl)?,
+            norm_b: r.vec("norm.b", dl)?,
+            head_w: r.mat("head.w", dl, cfg.num_classes)?,
+            head_b: r.vec("head.b", cfg.num_classes)?,
+        };
+        if r.seen.len() != flat.len() {
+            let extra = flat
+                .names()
+                .into_iter()
+                .find(|n| !r.seen.contains(*n))
+                .unwrap_or("?");
+            bail!(
+                "params contain {} tensors the spec does not know about (e.g. '{extra}')",
+                flat.len() - r.seen.len()
+            );
+        }
+        Ok(params)
+    }
+}
+
+fn insert_mat(flat: &mut FlatParams, name: &str, w: &RawWeights) {
+    flat.insert(name, vec![w.k, w.n], w.data.clone());
+}
+
+fn insert_vec(flat: &mut FlatParams, name: &str, v: &[f32]) {
+    flat.insert(name, vec![v.len()], v.to_vec());
+}
+
+fn insert_block(flat: &mut FlatParams, p: &str, b: &BlockRaw) {
+    insert_vec(flat, &format!("{p}.ln1_g"), &b.ln1_g);
+    insert_vec(flat, &format!("{p}.ln1_b"), &b.ln1_b);
+    insert_vec(flat, &format!("{p}.ln2_g"), &b.ln2_g);
+    insert_vec(flat, &format!("{p}.ln2_b"), &b.ln2_b);
+    insert_mat(flat, &format!("{p}.wq"), &b.wq);
+    insert_vec(flat, &format!("{p}.bq"), &b.bq);
+    insert_mat(flat, &format!("{p}.wk"), &b.wk);
+    insert_vec(flat, &format!("{p}.bk"), &b.bk);
+    insert_mat(flat, &format!("{p}.wv"), &b.wv);
+    insert_vec(flat, &format!("{p}.bv"), &b.bv);
+    insert_mat(flat, &format!("{p}.wo"), &b.wo);
+    insert_vec(flat, &format!("{p}.bo"), &b.bo);
+    flat.insert(&format!("{p}.dw"), vec![9, b.dw.len() / 9], b.dw.clone());
+    insert_mat(flat, &format!("{p}.w1"), &b.w1);
+    insert_vec(flat, &format!("{p}.b1"), &b.b1);
+    insert_mat(flat, &format!("{p}.w2"), &b.w2);
+    insert_vec(flat, &format!("{p}.b2"), &b.b2);
+    insert_mat(flat, &format!("{p}.w1s"), &b.w1s);
+    insert_vec(flat, &format!("{p}.b1s"), &b.b1s);
+    insert_mat(flat, &format!("{p}.w2s"), &b.w2s);
+    insert_vec(flat, &format!("{p}.b2s"), &b.b2s);
+    insert_mat(flat, &format!("{p}.gate_w"), &b.gate_w);
+}
+
+/// Tracks which tensors a [`ModelParams::from_flat`] read consumed so
+/// unknown extras can be rejected afterwards.
+struct ParamReader<'a> {
+    flat: &'a FlatParams,
+    seen: std::collections::BTreeSet<String>,
+}
+
+impl ParamReader<'_> {
+    fn mat(&mut self, name: &str, k: usize, n: usize) -> Result<RawWeights> {
+        self.seen.insert(name.to_string());
+        self.flat.req_matrix(name, k, n)
+    }
+
+    fn vec(&mut self, name: &str, n: usize) -> Result<Vec<f32>> {
+        self.seen.insert(name.to_string());
+        self.flat.req_vec(name, n)
+    }
+
+    fn shaped(&mut self, name: &str, dims: &[usize]) -> Result<Vec<f32>> {
+        self.seen.insert(name.to_string());
+        self.flat.req_shaped(name, dims)
+    }
+}
+
+fn read_block(r: &mut ParamReader<'_>, p: &str, dim: usize, hidden: usize) -> Result<BlockRaw> {
+    Ok(BlockRaw {
+        ln1_g: r.vec(&format!("{p}.ln1_g"), dim)?,
+        ln1_b: r.vec(&format!("{p}.ln1_b"), dim)?,
+        ln2_g: r.vec(&format!("{p}.ln2_g"), dim)?,
+        ln2_b: r.vec(&format!("{p}.ln2_b"), dim)?,
+        wq: r.mat(&format!("{p}.wq"), dim, dim)?,
+        bq: r.vec(&format!("{p}.bq"), dim)?,
+        wk: r.mat(&format!("{p}.wk"), dim, dim)?,
+        bk: r.vec(&format!("{p}.bk"), dim)?,
+        wv: r.mat(&format!("{p}.wv"), dim, dim)?,
+        bv: r.vec(&format!("{p}.bv"), dim)?,
+        wo: r.mat(&format!("{p}.wo"), dim, dim)?,
+        bo: r.vec(&format!("{p}.bo"), dim)?,
+        dw: r.shaped(&format!("{p}.dw"), &[9, dim])?,
+        w1: r.mat(&format!("{p}.w1"), dim, hidden)?,
+        b1: r.vec(&format!("{p}.b1"), hidden)?,
+        w2: r.mat(&format!("{p}.w2"), hidden, dim)?,
+        b2: r.vec(&format!("{p}.b2"), dim)?,
+        w1s: r.mat(&format!("{p}.w1s"), dim, hidden)?,
+        b1s: r.vec(&format!("{p}.b1s"), hidden)?,
+        w2s: r.mat(&format!("{p}.w2s"), hidden, dim)?,
+        b2s: r.vec(&format!("{p}.b2s"), dim)?,
+        gate_w: r.mat(&format!("{p}.gate_w"), dim, 2)?,
+    })
+}
+
 /// The native multi-stage model.
 pub struct NativeModel {
     pub cfg: NativeModelConfig,
     pub planner: Arc<Planner>,
+    /// whether the weights are seeded (untrained) or externally loaded
+    pub origin: WeightsOrigin,
     embed: LinearLayer,
     pos: Vec<f32>,
     stages: Vec<NativeStage>,
@@ -127,32 +374,62 @@ pub struct NativeModel {
 impl NativeModel {
     pub fn new(cfg: NativeModelConfig, planner: Arc<Planner>) -> NativeModel {
         assert!(!cfg.spec.stages.is_empty(), "spec has no stages");
+        let params = ModelParams::seeded(&cfg);
+        NativeModel::build(cfg, planner, params, WeightsOrigin::SeededUntrained)
+    }
+
+    /// Build from externally loaded flat params (strict shape checking; the
+    /// model is marked [`WeightsOrigin::Loaded`]).
+    pub fn from_params(
+        cfg: NativeModelConfig,
+        planner: Arc<Planner>,
+        flat: &FlatParams,
+    ) -> Result<NativeModel> {
+        let params = ModelParams::from_flat(&cfg, flat)?;
+        Ok(NativeModel::build(cfg, planner, params, WeightsOrigin::Loaded))
+    }
+
+    fn build(
+        cfg: NativeModelConfig,
+        planner: Arc<Planner>,
+        params: ModelParams,
+        origin: WeightsOrigin,
+    ) -> NativeModel {
+        assert!(!cfg.spec.stages.is_empty(), "spec has no stages");
         let grid0 = cfg.img / cfg.patch;
         assert_eq!(
             grid0 * grid0,
             cfg.spec.stages[0].tokens,
             "stage-0 tokens must equal the patch grid"
         );
-        let mut rng = XorShift64::new(cfg.seed);
-        let patch_dim = cfg.patch * cfg.patch * 3;
-        let d0 = cfg.spec.stages[0].dim;
+        let ModelParams {
+            embed_w,
+            embed_b,
+            pos,
+            stages: stage_params,
+            norm_g,
+            norm_b,
+            head_w,
+            head_b,
+        } = params;
+        assert_eq!(
+            stage_params.len(),
+            cfg.spec.stages.len(),
+            "params stage count must match the spec"
+        );
         let embed = LinearLayer::new(
             &planner,
             Primitive::MatMul,
-            &dense_init(&mut rng, patch_dim, d0),
-            vec![0.0; d0],
+            &embed_w,
+            embed_b,
             cfg.spec.stages[0].tokens,
         );
-        let pos: Vec<f32> = rng
-            .normals(cfg.spec.stages[0].tokens * d0)
-            .iter()
-            .map(|v| v * 0.02)
-            .collect();
         let mut stages = Vec::new();
-        for (si, st) in cfg.spec.stages.iter().enumerate() {
+        for ((si, st), sp) in cfg.spec.stages.iter().enumerate().zip(stage_params) {
             let grid = (st.tokens as f64).sqrt().round() as usize;
             assert_eq!(grid * grid, st.tokens, "stage {si} tokens must be square");
             let downsample = if si == 0 {
+                assert!(sp.downsample.is_none(), "stage 0 cannot have a downsample");
                 None
             } else {
                 let prev = &cfg.spec.stages[si - 1];
@@ -162,20 +439,24 @@ impl NativeModel {
                     "stage {si} must be a 2×2 downsample of stage {}",
                     si - 1
                 );
+                let (w, b) = sp.downsample.expect("stage params missing the downsample");
                 Some(LinearLayer::new(
                     &planner,
                     Primitive::MatMul,
-                    &dense_init(&mut rng, prev.dim, st.dim),
-                    vec![0.0; st.dim],
+                    &w,
+                    b,
                     st.tokens,
                 ))
             };
+            assert_eq!(sp.blocks.len(), st.depth, "stage {si} depth mismatch");
             // One hash family per stage, shared by the stage's blocks.
             let hash_seed = cfg.seed ^ (0x5A5A_0000 + si as u64);
-            let blocks = (0..st.depth)
-                .map(|_| {
+            let blocks = sp
+                .blocks
+                .into_iter()
+                .map(|raw| {
                     NativeBlock::from_raw(
-                        BlockRaw::random(&mut rng, st.dim, st.dim * st.mlp_ratio),
+                        raw,
                         st.tokens,
                         st.heads,
                         cfg.variant,
@@ -194,18 +475,15 @@ impl NativeModel {
             });
         }
         let dl = cfg.spec.stages.last().unwrap().dim;
-        let head = LinearLayer::new(
-            &planner,
-            Primitive::MatMul,
-            &dense_init(&mut rng, dl, cfg.num_classes),
-            vec![0.0; cfg.num_classes],
-            8,
-        );
+        assert_eq!(norm_g.len(), dl, "final norm params must be dim-sized");
+        assert_eq!(norm_b.len(), dl, "final norm params must be dim-sized");
+        let head = LinearLayer::new(&planner, Primitive::MatMul, &head_w, head_b, 8);
         NativeModel {
-            norm_g: vec![1.0; dl],
-            norm_b: vec![0.0; dl],
+            norm_g,
+            norm_b,
             cfg,
             planner,
+            origin,
             embed,
             pos,
             stages,
@@ -430,6 +708,34 @@ mod tests {
         assert!(trace.stage_ms.iter().any(|(n, _)| n == "stem"));
         assert!(trace.stage_ms.iter().any(|(n, _)| n == "head"));
         assert!(trace.stage_ms.iter().any(|(n, _)| n == "stage1_down"));
+        assert_eq!(model.origin, WeightsOrigin::SeededUntrained);
+    }
+
+    #[test]
+    fn flat_params_round_trip_is_lossless() {
+        let cfg = NativeModelConfig::tiny(Variant::SHIFTADD_MOE);
+        let params = ModelParams::seeded(&cfg);
+        let flat = params.to_flat(&cfg);
+        let back = ModelParams::from_flat(&cfg, &flat).unwrap();
+        assert_eq!(flat, back.to_flat(&cfg));
+    }
+
+    #[test]
+    fn from_flat_rejects_unknown_tensors() {
+        let cfg = NativeModelConfig::tiny(Variant::SHIFTADD_MOE);
+        let mut flat = ModelParams::seeded(&cfg).to_flat(&cfg);
+        flat.insert("rogue.tensor", vec![1], vec![0.0]);
+        let err = ModelParams::from_flat(&cfg, &flat).unwrap_err().to_string();
+        assert!(err.contains("rogue.tensor"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn from_flat_rejects_wrong_shapes() {
+        let cfg = NativeModelConfig::tiny(Variant::SHIFTADD_MOE);
+        let mut flat = ModelParams::seeded(&cfg).to_flat(&cfg);
+        // head bias must be num_classes (8) long
+        flat.insert("head.b", vec![3], vec![0.0; 3]);
+        assert!(ModelParams::from_flat(&cfg, &flat).is_err());
     }
 
     #[test]

@@ -34,7 +34,10 @@
 //!   streaming on the linear-attention state (`begin`/`extend`/`finish`,
 //!   bit-exact under any chunking), and
 //!   `coordinator::sessions::SessionEngine` continuously batches live
-//!   sessions into one fused kernel dispatch per layer per step.
+//!   sessions into one fused kernel dispatch per layer per step. The
+//!   `bundle` subsystem packages model params + the autotuned planner
+//!   table into one signed, content-addressed `.sabundle` archive that
+//!   solo and fleet serving verify once and warm-start from (`--bundle`).
 //! - **L2 (`python/compile/model.py`)** — the ShiftAddViT model family in JAX
 //!   (PVT-style pyramid ViTs, DeiT, a GNT-style ray transformer), lowered once
 //!   to HLO text by `python/compile/aot.py`.
@@ -52,6 +55,7 @@ pub mod energy;
 pub mod model;
 pub mod moe;
 pub mod data;
+pub mod bundle;
 pub mod infer;
 pub mod runtime;
 pub mod coordinator;

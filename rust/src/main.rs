@@ -10,6 +10,11 @@
 //!                     [--prefill-budget TOKENS]
 //!                     [--workers N] [--policy round-robin|least-loaded|affinity]
 //!                     [--planner-table t.json] [--save-planner-table t.json]
+//!                     [--bundle m.sabundle] [--bundle-key K]
+//! shiftaddvit bundle  pack [--out m.sabundle] [--params p.sap]
+//!                     [--planner-table t.json] [--key K]
+//! shiftaddvit bundle  verify|inspect|unpack --bundle m.sabundle
+//!                     [--out dir] [--key K]
 //! shiftaddvit table   --id 1|3|4|6|11|12   [--model pvtv2_b0]
 //! shiftaddvit fig     --id 3|4|5           [--batch 1]
 //! shiftaddvit energy-report [--model pvtv2_b0]
@@ -36,6 +41,7 @@ fn main() -> Result<()> {
     let args = Args::parse();
     match args.subcommand.as_deref() {
         Some("serve") => cmd_serve(&args),
+        Some("bundle") => cmd_bundle(&args),
         Some("table") => cmd_table(&args),
         Some("fig") => cmd_fig(&args),
         Some("energy-report") => cmd_energy(&args),
@@ -48,10 +54,11 @@ fn main() -> Result<()> {
     }
 }
 
-const HELP: &str = "usage: shiftaddvit <serve|table|fig|energy-report|dispatch-viz|nvs-render> [flags]
+const HELP: &str = "usage: shiftaddvit <serve|bundle|table|fig|energy-report|dispatch-viz|nvs-render> [flags]
 `serve` defaults to the native engine (no artifacts needed); the xla
 backend and the nvs/dispatch-viz commands need `make artifacts` first.
-See README.md for details";
+`bundle pack|verify|inspect|unpack` manages signed `.sabundle` model
+archives (serve with `--bundle m.sabundle`). See README.md for details";
 
 fn manifest() -> Result<Manifest> {
     Manifest::load(&Manifest::default_dir())
@@ -91,6 +98,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(p) = args.get("save-planner-table") {
         cfg.planner_table_save = Some(p.to_string());
     }
+    if let Some(p) = args.get("bundle") {
+        cfg.bundle = Some(p.to_string());
+    }
+    if let Some(k) = args.get("bundle-key") {
+        cfg.bundle_key = Some(k.to_string());
+    }
     if cfg.workers > 1 {
         println!(
             "serving the {} workload on the {} backend across {} workers ({})",
@@ -107,6 +120,108 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
     serve_workload(&cfg)
+}
+
+/// `bundle pack|verify|inspect|unpack`: build and manage signed,
+/// content-addressed `.sabundle` model archives. `pack` with no `--params`
+/// exports the deterministic seeded weights (marked untrained in the
+/// manifest) and autotunes a planner table covering both the image model
+/// and the streaming session shapes; `--params p.sap` packs trained
+/// weights exported by `python/compile/params_io.py::export_flat`.
+fn cmd_bundle(args: &Args) -> Result<()> {
+    use shiftaddvit::bundle::{archive, sign, FlatParams};
+    use shiftaddvit::infer::model::{ModelParams, NativeModel, NativeModelConfig};
+    use shiftaddvit::infer::session::{SessionSpec, StreamAttn, StreamModel};
+    use shiftaddvit::kernels::planner::Planner;
+    use shiftaddvit::kernels::registry::KernelRegistry;
+    use shiftaddvit::model::ops::Lin;
+    use shiftaddvit::util::json::Json;
+    use std::path::Path;
+    use std::sync::Arc;
+
+    fn need_bundle<'a>(args: &'a Args, verb: &str) -> Result<&'a str> {
+        match args.get("bundle") {
+            Some(p) => Ok(p),
+            None => bail!("bundle {verb} needs --bundle PATH"),
+        }
+    }
+
+    let key_text = args.get_or("key", sign::DEFAULT_KEY);
+    let key = key_text.as_bytes();
+    match args.positional.first().map(String::as_str) {
+        Some("pack") => {
+            let out = args.get_or("out", "native-tiny.sabundle");
+            let cfg = NativeModelConfig::tiny(Variant::SHIFTADD_MOE);
+            let model_name = cfg.spec.name;
+            let (params, untrained) = match args.get("params") {
+                Some(p) => (FlatParams::load(Path::new(p))?, false),
+                None => (ModelParams::seeded(&cfg).to_flat(&cfg), true),
+            };
+            let table = match args.get("planner-table") {
+                Some(p) => Json::parse(&std::fs::read_to_string(p)?)?,
+                None => {
+                    // Autotune every shape serving will pin: building the
+                    // image model and a streaming session model logs the
+                    // planner decisions both workloads need.
+                    let reg = Arc::new(KernelRegistry::with_defaults());
+                    let planner = Arc::new(Planner::new(reg));
+                    let _img = NativeModel::from_params(cfg, Arc::clone(&planner), &params)?;
+                    let _stream = StreamModel::new(
+                        SessionSpec::tiny(StreamAttn::LinearAdd, Lin::Shift),
+                        Arc::clone(&planner),
+                    );
+                    planner.to_table_json()
+                }
+            };
+            let digest = archive::pack(
+                Path::new(&out),
+                model_name,
+                &params,
+                &table,
+                untrained,
+                key,
+            )?;
+            println!(
+                "packed {out}: model {model_name} ({} weights, {} tensors) digest {digest}",
+                if untrained { "seeded-untrained" } else { "trained" },
+                params.len()
+            );
+        }
+        Some("verify") => {
+            let path = need_bundle(args, "verify")?;
+            let b = archive::open(Path::new(path), key)?;
+            println!(
+                "OK {path}: model {} ({} weights, {} tensors, cpu_features {}) digest {}",
+                b.model,
+                if b.untrained { "seeded-untrained" } else { "trained" },
+                b.params.len(),
+                b.cpu_features,
+                b.digest
+            );
+        }
+        Some("inspect") => {
+            let path = need_bundle(args, "inspect")?;
+            let info = archive::inspect(Path::new(path))?;
+            println!(
+                "bundle {path}: model {} ({}) digest {}",
+                info.model,
+                if info.untrained { "seeded-untrained" } else { "trained" },
+                info.digest
+            );
+            for e in &info.entries {
+                println!("  {:20} {:>10} bytes  sha256 {}", e.name, e.len, e.sha256);
+            }
+            println!("(inspect parses the manifest only; run `bundle verify` to check hashes)");
+        }
+        Some("unpack") => {
+            let path = need_bundle(args, "unpack")?;
+            let dir = args.get_or("out", "bundle_out");
+            archive::unpack(Path::new(path), Path::new(&dir), key)?;
+            println!("unpacked {path} into {dir}/");
+        }
+        other => bail!("bundle needs a verb: pack|verify|inspect|unpack (got {other:?})"),
+    }
+    Ok(())
 }
 
 fn cmd_table(args: &Args) -> Result<()> {

@@ -1,0 +1,203 @@
+//! Integration suite of the signed model-bundle subsystem (`bundle::*`):
+//!
+//! 1. pack → inspect → open round-trips the seeded tiny model losslessly;
+//! 2. TAMPER: flipping any single byte anywhere in the file makes `open`
+//!    fail, and flips inside a payload name the offending entry;
+//! 3. a model rebuilt from bundle params produces bit-identical logits to
+//!    the seeded original (and carries the `Loaded` origin marker);
+//! 4. a fleet warm-started from a bundle is bit-identical to a solo
+//!    backend warm-started from the same bundle.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use shiftaddvit::bundle::{archive, sign};
+use shiftaddvit::coordinator::backend::{create_backend, InferenceBackend};
+use shiftaddvit::coordinator::batcher::Request;
+use shiftaddvit::coordinator::config::ServerConfig;
+use shiftaddvit::coordinator::metrics::Metrics;
+use shiftaddvit::data::synth_images;
+use shiftaddvit::fleet::router::Router;
+use shiftaddvit::infer::model::{ModelParams, NativeModel, NativeModelConfig, WeightsOrigin};
+use shiftaddvit::kernels::planner::Planner;
+use shiftaddvit::kernels::registry::KernelRegistry;
+use shiftaddvit::model::ops::Variant;
+
+const POLL: Duration = Duration::from_secs(120);
+
+fn tmp_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("savit_bundle_it_{}_{name}", std::process::id()))
+}
+
+fn fresh_planner() -> Arc<Planner> {
+    Arc::new(Planner::new(Arc::new(KernelRegistry::with_defaults())))
+}
+
+/// Pack the seeded tiny model (flat params + the construction-time planner
+/// table) into a temp bundle under the default key; returns the path and
+/// the pack-time digest.
+fn packed_seeded_bundle(name: &str) -> (PathBuf, String) {
+    let cfg = NativeModelConfig::tiny(Variant::SHIFTADD_MOE);
+    let model_name = cfg.spec.name;
+    let params = ModelParams::seeded(&cfg).to_flat(&cfg);
+    let planner = fresh_planner();
+    let _probe = NativeModel::from_params(cfg, Arc::clone(&planner), &params).unwrap();
+    let table = planner.to_table_json();
+    let path = tmp_path(name);
+    let digest = archive::pack(
+        &path,
+        model_name,
+        &params,
+        &table,
+        true,
+        sign::DEFAULT_KEY.as_bytes(),
+    )
+    .unwrap();
+    (path, digest)
+}
+
+// ---------------------------------------------------------------------------
+// 1. Round trip
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pack_inspect_open_round_trips() {
+    let (path, digest) = packed_seeded_bundle("roundtrip.sabundle");
+
+    let info = archive::inspect(&path).unwrap();
+    assert_eq!(info.digest, digest);
+    assert!(info.untrained);
+    let names: Vec<&str> = info.entries.iter().map(|e| e.name.as_str()).collect();
+    assert_eq!(names, ["params.sap", "planner_table.json"]);
+
+    let b = archive::open(&path, sign::DEFAULT_KEY.as_bytes()).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(b.digest, digest);
+    let cfg = NativeModelConfig::tiny(Variant::SHIFTADD_MOE);
+    assert_eq!(b.model, cfg.spec.name);
+    assert!(b.untrained);
+    assert!(!b.cpu_features.is_empty());
+    assert_eq!(b.params, ModelParams::seeded(&cfg).to_flat(&cfg));
+    assert!(b.table.get("choices").is_some(), "planner table rides along");
+}
+
+// ---------------------------------------------------------------------------
+// 2. Tamper detection, byte by byte
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_flipped_byte_is_rejected_and_payload_flips_name_the_entry() {
+    let (path, _) = packed_seeded_bundle("tamper.sabundle");
+    let info = archive::inspect(&path).unwrap();
+    let params_len = info.entries[0].len;
+    let clean = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    // On-disk layout: 8B magic + 4B manifest_len + 4B sig_len + 32B sig,
+    // then the manifest, then payloads in entry order.
+    let manifest_len = u32::from_le_bytes([clean[8], clean[9], clean[10], clean[11]]) as usize;
+    let payload_start = 48 + manifest_len;
+    assert_eq!(payload_start + params_len + info.entries[1].len, clean.len());
+
+    let key = sign::DEFAULT_KEY.as_bytes();
+    let step = (clean.len() / 61).max(1);
+    let mut positions: Vec<usize> = (0..clean.len()).step_by(step).collect();
+    positions.push(clean.len() - 1);
+    let flipped = tmp_path("tamper_flip.sabundle");
+    for pos in positions {
+        let mut bytes = clean.clone();
+        bytes[pos] ^= 0x01;
+        std::fs::write(&flipped, &bytes).unwrap();
+        let err = match archive::open(&flipped, key) {
+            Ok(_) => panic!("flip at byte {pos} verified anyway"),
+            Err(e) => format!("{e:#}"),
+        };
+        if pos >= payload_start {
+            let entry = if pos < payload_start + params_len {
+                "params.sap"
+            } else {
+                "planner_table.json"
+            };
+            assert!(
+                err.contains(entry),
+                "flip at byte {pos} blamed the wrong entry: {err}"
+            );
+        }
+    }
+    std::fs::remove_file(&flipped).ok();
+}
+
+// ---------------------------------------------------------------------------
+// 3. Bit-identical logits through the export → pack → open → load chain
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bundle_params_rebuild_bit_identical_logits() {
+    let (path, _) = packed_seeded_bundle("logits.sabundle");
+    let b = archive::open(&path, sign::DEFAULT_KEY.as_bytes()).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    let seeded = NativeModel::tiny(Variant::SHIFTADD_MOE);
+    assert_eq!(seeded.origin, WeightsOrigin::SeededUntrained);
+    let cfg = NativeModelConfig::tiny(Variant::SHIFTADD_MOE);
+    let loaded = NativeModel::from_params(cfg, fresh_planner(), &b.params).unwrap();
+    assert_eq!(loaded.origin, WeightsOrigin::Loaded);
+
+    let (xs, _) = synth_images::gen_batch(17, 2);
+    let (want, _) = seeded.forward(&xs, 2);
+    let (got, _) = loaded.forward(&xs, 2);
+    assert_eq!(want, got, "bundle round-trip must be bit-identical");
+}
+
+// ---------------------------------------------------------------------------
+// 4. Fleet-from-bundle ≡ solo-from-bundle
+// ---------------------------------------------------------------------------
+
+fn bundle_request(id: usize) -> Request {
+    let s = synth_images::gen_image(70_000 + id as u32);
+    Request {
+        id,
+        pixels: s.pixels,
+        label: Some(s.label),
+        arrived: Instant::now(),
+    }
+}
+
+#[test]
+fn fleet_from_bundle_matches_solo_from_bundle() {
+    let (path, digest) = packed_seeded_bundle("fleet.sabundle");
+    // max_batch 1: per-tensor INT8 calibration spans a batch, so bitwise
+    // comparison needs identical batch composition on both sides.
+    let cfg = ServerConfig {
+        bundle: Some(path.to_string_lossy().into_owned()),
+        workers: 2,
+        max_batch: 1,
+        ..ServerConfig::default()
+    };
+
+    let n = 4;
+    let solo = create_backend(&cfg).unwrap();
+    let mut m = Metrics::default();
+    let mut want = Vec::with_capacity(n);
+    for i in 0..n {
+        let t = solo.submit(bundle_request(i));
+        solo.step(1, &mut m).unwrap();
+        want.push(solo.poll(&t).expect("solo step completed").logits);
+    }
+
+    let mut router = Router::from_server_config(&cfg).unwrap();
+    assert_eq!(router.bundle_digest(), Some(digest.as_str()));
+    let tickets: Vec<_> = (0..n)
+        .map(|i| router.submit(bundle_request(i)).unwrap())
+        .collect();
+    for (i, t) in tickets.iter().enumerate() {
+        let out = router.poll_wait(t, POLL).unwrap();
+        assert_eq!(
+            out.logits, want[i],
+            "request {i}: fleet-from-bundle diverged from solo-from-bundle"
+        );
+    }
+    router.shutdown().unwrap();
+    std::fs::remove_file(&path).ok();
+}
