@@ -1,0 +1,168 @@
+//! HTTP front-door overhead: the same classify traffic served (a) by the
+//! in-process router submit/poll surface and (b) over a real TCP socket
+//! through `fleet::http`, sequentially and with concurrent clients. The
+//! delta is the full cost of the front door — parse, JSON body, dispatch,
+//! condvar wait, serialize — per request. Emits a table and a trailing
+//! JSON object for tooling.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use shiftaddvit::coordinator::backend::{InferenceBackend, NativeBackend};
+use shiftaddvit::coordinator::batcher::Request;
+use shiftaddvit::data::synth_images;
+use shiftaddvit::fleet::http::{FrontDoorConfig, HttpFrontDoor};
+use shiftaddvit::fleet::worker::BackendFactory;
+use shiftaddvit::fleet::{Router, RouterConfig};
+use shiftaddvit::model::ops::Variant;
+use shiftaddvit::util::bench::{f1, f2, Table};
+use shiftaddvit::util::httpd;
+use shiftaddvit::util::json::Json;
+use shiftaddvit::util::stats::Summary;
+
+const REQUESTS: usize = 32;
+const WORKERS: usize = 2;
+const CONCURRENT_CLIENTS: usize = 4;
+const TIMEOUT: Duration = Duration::from_secs(120);
+
+fn factory() -> BackendFactory {
+    Arc::new(|| {
+        let b: Box<dyn InferenceBackend> = Box::new(NativeBackend::tiny(Variant::SHIFTADD_MOE));
+        Ok(b)
+    })
+}
+
+fn fleet() -> Router {
+    Router::new(
+        RouterConfig {
+            workers: WORKERS,
+            max_batch: 4,
+            ..RouterConfig::default()
+        },
+        factory(),
+    )
+    .expect("fleet starts")
+}
+
+fn classify_body(pixels: &[f32]) -> String {
+    Json::obj(vec![(
+        "pixels",
+        Json::Arr(pixels.iter().map(|&p| Json::Num(p as f64)).collect()),
+    )])
+    .to_string()
+}
+
+fn summary_row(table: &mut Table, mode: &str, s: &Summary, wall_s: f64) {
+    table.row(&[
+        mode.to_string(),
+        f1(REQUESTS as f64 / wall_s),
+        f2(s.p50),
+        f2(s.p99),
+    ]);
+}
+
+fn latency_json(mode: &str, s: &Summary, wall_s: f64) -> Json {
+    Json::obj(vec![
+        ("mode", Json::str(mode)),
+        ("requests", Json::num(REQUESTS as f64)),
+        ("throughput_rps", Json::num(REQUESTS as f64 / wall_s)),
+        ("p50_ms", Json::num(s.p50)),
+        ("p99_ms", Json::num(s.p99)),
+        ("mean_ms", Json::num(s.mean)),
+    ])
+}
+
+fn main() {
+    let mut table = Table::new(&["mode", "throughput (req/s)", "p50 (ms)", "p99 (ms)"]);
+    let mut rows = Vec::new();
+
+    // --- in-process baseline ------------------------------------------------
+    let mut router = fleet();
+    let mut lat = Vec::with_capacity(REQUESTS);
+    let t0 = Instant::now();
+    for id in 0..REQUESTS {
+        let sample = synth_images::gen_image(8_000_000 + id as u32);
+        let t = Instant::now();
+        let ticket = router
+            .submit(Request {
+                id,
+                pixels: sample.pixels,
+                label: None,
+                arrived: t,
+            })
+            .expect("submit");
+        router.poll_wait(&ticket, TIMEOUT).expect("poll");
+        lat.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    router.shutdown().expect("fleet drains");
+    let s = Summary::from(&lat);
+    summary_row(&mut table, "in-process", &s, wall);
+    rows.push(latency_json("in-process", &s, wall));
+
+    // --- over the socket, one client ---------------------------------------
+    let door = HttpFrontDoor::start(fleet(), None, "127.0.0.1:0", FrontDoorConfig::default())
+        .expect("front door starts");
+    let addr = door.addr();
+    let mut lat = Vec::with_capacity(REQUESTS);
+    let t0 = Instant::now();
+    for id in 0..REQUESTS {
+        let sample = synth_images::gen_image(8_000_000 + id as u32);
+        let body = classify_body(&sample.pixels);
+        let t = Instant::now();
+        let resp = httpd::request(addr, "POST", "/classify", Some(body.as_bytes()), TIMEOUT)
+            .expect("classify over http");
+        assert_eq!(resp.status, 200);
+        lat.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let s = Summary::from(&lat);
+    summary_row(&mut table, "http x1", &s, wall);
+    rows.push(latency_json("http x1", &s, wall));
+
+    // --- over the socket, concurrent clients --------------------------------
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..CONCURRENT_CLIENTS)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut lat = Vec::new();
+                for i in 0..REQUESTS / CONCURRENT_CLIENTS {
+                    let id = c * (REQUESTS / CONCURRENT_CLIENTS) + i;
+                    let sample = synth_images::gen_image(8_000_000 + id as u32);
+                    let body = classify_body(&sample.pixels);
+                    let t = Instant::now();
+                    let resp = httpd::request(
+                        addr,
+                        "POST",
+                        "/classify",
+                        Some(body.as_bytes()),
+                        TIMEOUT,
+                    )
+                    .expect("classify over http");
+                    assert_eq!(resp.status, 200);
+                    lat.push(t.elapsed().as_secs_f64() * 1e3);
+                }
+                lat
+            })
+        })
+        .collect();
+    let mut lat = Vec::with_capacity(REQUESTS);
+    for h in handles {
+        lat.extend(h.join().expect("client thread"));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    door.shutdown().expect("front door drains");
+    let s = Summary::from(&lat);
+    let label = format!("http x{CONCURRENT_CLIENTS}");
+    summary_row(&mut table, &label, &s, wall);
+    rows.push(latency_json(&label, &s, wall));
+
+    table.print("HTTP front door vs in-process classify");
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("http_front")),
+        ("workers", Json::num(WORKERS as f64)),
+        ("modes", Json::Arr(rows)),
+    ]);
+    println!("\n{json}");
+}

@@ -93,18 +93,22 @@ pub struct StepReport {
     pub modularized_ms: f64,
 }
 
-/// Completed outputs a queue will hold for callers that never poll.
-/// A serving loop that polls promptly never comes near this; a caller that
-/// submits and walks away would otherwise grow the done map without bound
-/// (every output holds a logits vector).
+/// Completed outputs a queue holds before it starts warning that nobody
+/// is polling. A serving loop that polls promptly never comes near this;
+/// a caller that submits and walks away grows the done map (every output
+/// holds a logits vector), so the queue complains loudly past this point.
 pub const DEFAULT_DONE_CAP: usize = 4096;
 
 /// Shared submit/poll bookkeeping every backend embeds: a pending queue and
 /// a done map behind one mutex, so the trait methods stay `&self`.
 ///
-/// The done side is bounded: outputs that are never polled are evicted
-/// oldest-first once the map exceeds its cap, so an abandoned ticket leaks
-/// at most `done_cap` outputs, not the whole run.
+/// The done side never drops a completed output: a ticket whose work
+/// finished always polls successfully, however late the caller is —
+/// evicting unpolled outputs (the pre-PR-9 behavior) made `poll_wait` spin
+/// to timeout on requests that had actually completed. Instead the map
+/// grows, with a loud rate-limited warning each time it doubles past
+/// `done_cap`, so an abandoning caller is diagnosed rather than silently
+/// served result loss.
 #[derive(Default)]
 pub struct RequestQueue {
     inner: Mutex<QueueInner>,
@@ -113,10 +117,9 @@ pub struct RequestQueue {
 struct QueueInner {
     pending: VecDeque<(usize, Request)>,
     done: HashMap<usize, RequestOutput>,
-    /// completion order of ids in `done` (may hold stale, already-polled
-    /// ids; compacted when it outgrows the live map)
-    done_order: VecDeque<usize>,
     done_cap: usize,
+    /// next done-map size that triggers a leak warning (doubles each time)
+    warn_at: usize,
     next_id: usize,
 }
 
@@ -125,8 +128,8 @@ impl Default for QueueInner {
         QueueInner {
             pending: VecDeque::new(),
             done: HashMap::new(),
-            done_order: VecDeque::new(),
             done_cap: DEFAULT_DONE_CAP,
+            warn_at: DEFAULT_DONE_CAP,
             next_id: 0,
         }
     }
@@ -137,11 +140,14 @@ impl RequestQueue {
         RequestQueue::default()
     }
 
-    /// A queue that keeps at most `cap` unpolled outputs (tests use tiny
-    /// caps to exercise eviction).
+    /// A queue with a custom warn threshold (tests use tiny caps to
+    /// exercise the leak warning).
     pub fn with_done_cap(cap: usize) -> RequestQueue {
         let q = RequestQueue::default();
-        q.inner.lock().unwrap().done_cap = cap.max(1);
+        let mut inner = q.inner.lock().unwrap();
+        inner.done_cap = cap.max(1);
+        inner.warn_at = cap.max(1);
+        drop(inner);
         q
     }
 
@@ -170,8 +176,10 @@ impl RequestQueue {
     }
 
     /// File per-request outputs sliced out of one batch result, stamping
-    /// each with the step's completion time. Evicts the oldest unpolled
-    /// outputs once the done map exceeds its cap.
+    /// each with the step's completion time. Completed outputs are kept
+    /// until polled — if the map outgrows its cap, the caller is leaking
+    /// tickets, and the queue says so (once per doubling) instead of
+    /// losing results.
     pub fn complete(&self, batch: Vec<(usize, Request)>, out: &BatchOutput) -> Result<()> {
         let n = batch.len();
         let logits = out.logits.as_f32()?;
@@ -198,25 +206,15 @@ impl RequestQueue {
                     label: req.label,
                 },
             );
-            q.done_order.push_back(id);
         }
-        // Oldest-first eviction of unpolled outputs. Stale order entries
-        // (polled ids) pop harmlessly — they no longer remove anything.
-        while q.done.len() > q.done_cap {
-            match q.done_order.pop_front() {
-                Some(old) => {
-                    q.done.remove(&old);
-                }
-                None => break,
-            }
-        }
-        // Compact stale order entries so the order log tracks the live map
-        // instead of the run length.
-        if q.done_order.len() > 2 * q.done_cap {
-            let QueueInner {
-                done, done_order, ..
-            } = &mut *q;
-            done_order.retain(|id| done.contains_key(id));
+        if q.done.len() > q.warn_at {
+            eprintln!(
+                "request queue: {} completed outputs held and nobody is polling \
+                 (warn threshold {}); results are kept — poll your tickets",
+                q.done.len(),
+                q.done_cap
+            );
+            q.warn_at = q.warn_at.saturating_mul(2).max(q.done.len());
         }
         Ok(())
     }
@@ -683,10 +681,11 @@ mod tests {
     }
 
     #[test]
-    fn done_map_is_bounded_for_never_polled_outputs() {
-        // Regression: completed outputs that nobody polls used to
-        // accumulate forever. The queue now evicts oldest-first past its
-        // cap, and keeps exactly the newest `cap` outputs.
+    fn completed_outputs_survive_past_the_done_cap() {
+        // Regression (PR 9): the old oldest-first eviction could drop a
+        // completed-but-never-polled output, making `poll_wait` spin to
+        // timeout on a request that actually finished. Filling way past
+        // the cap must lose nothing — every unpolled ticket still polls.
         let q = RequestQueue::with_done_cap(3);
         let complete_one = |q: &RequestQueue, i: usize| {
             let t = q.submit(Request {
@@ -706,28 +705,17 @@ mod tests {
             t
         };
         let tickets: Vec<Ticket> = (0..10).map(|i| complete_one(&q, i)).collect();
-        assert_eq!(q.done_len(), 3, "cap holds");
-        // the three newest survive, the seven oldest were evicted
-        for t in &tickets[..7] {
-            assert!(q.poll(t).is_none(), "old unpolled output must be evicted");
+        assert_eq!(q.done_len(), 10, "nothing is evicted past the cap");
+        for (i, t) in tickets.iter().enumerate() {
+            let out = q.poll(t).expect("late polls still find their output");
+            assert_eq!(out.logits[0], i as f32);
+            assert_eq!(out.request_id, i);
         }
-        for (i, t) in tickets[7..].iter().enumerate() {
-            let out = q.poll(t).expect("newest outputs survive");
-            assert_eq!(out.logits[0], (7 + i) as f32);
-        }
-        // polling promptly never loses anything, whatever the cap
+        assert_eq!(q.done_len(), 0, "polling drains the map");
+        // prompt polling keeps the map empty, whatever the cap
         let t = complete_one(&q, 99);
         assert_eq!(q.poll(&t).unwrap().request_id, 99);
         assert_eq!(q.done_len(), 0);
-        // long runs with prompt polling keep the order log compacted
-        for i in 0..40 {
-            let t = complete_one(&q, 1000 + i);
-            assert!(q.poll(&t).is_some());
-        }
-        assert!(
-            q.inner.lock().unwrap().done_order.len() <= 6,
-            "stale order entries must be compacted"
-        );
     }
 
     #[test]

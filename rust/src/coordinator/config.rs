@@ -159,6 +159,9 @@ pub struct ServerConfig {
     pub workers: usize,
     /// how the fleet router places requests across workers
     pub policy: PolicyKind,
+    /// serve over HTTP on this port instead of running the synthetic
+    /// benchmark client (0 = off)
+    pub http_port: usize,
 }
 
 impl Default for ServerConfig {
@@ -182,6 +185,7 @@ impl Default for ServerConfig {
             bundle_key: None,
             workers: 1,
             policy: PolicyKind::RoundRobin,
+            http_port: 0,
         }
     }
 }
@@ -245,6 +249,9 @@ impl ServerConfig {
         }
         if let Some(v) = j.get("policy").and_then(|v| v.as_str()) {
             c.policy = PolicyKind::parse(v)?;
+        }
+        if let Some(v) = j.get("http_port").and_then(|v| v.as_usize()) {
+            c.http_port = v;
         }
         Ok(c)
     }
@@ -355,6 +362,16 @@ mod tests {
         let d = ServerConfig::default();
         assert_eq!(d.workers, 1);
         assert_eq!(d.policy, PolicyKind::RoundRobin);
+    }
+
+    #[test]
+    fn http_port_parses_and_defaults_off() {
+        let dir = std::env::temp_dir().join("savit_cfg_http_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"http_port": 8077}"#).unwrap();
+        assert_eq!(ServerConfig::from_file(&p).unwrap().http_port, 8077);
+        assert_eq!(ServerConfig::default().http_port, 0, "off by default");
     }
 
     #[test]

@@ -583,8 +583,9 @@ pub fn serve_stream(cfg: &ServerConfig) -> Result<StreamReport> {
 }
 
 /// Map the configured scheduler onto the engine's mode, resolving the
-/// auto-sized prefill budget.
-fn engine_mode(cfg: &ServerConfig) -> SchedulerMode {
+/// auto-sized prefill budget. `pub(crate)` so the HTTP front door builds
+/// its stream engine exactly the way `serve_stream` would.
+pub(crate) fn engine_mode(cfg: &ServerConfig) -> SchedulerMode {
     match cfg.scheduler {
         SchedulerKind::SinglePhase => SchedulerMode::SinglePhase,
         SchedulerKind::Disaggregated => SchedulerMode::Disaggregated {
@@ -817,8 +818,13 @@ fn serve_stream_fleet(cfg: &ServerConfig) -> Result<StreamReport> {
 
 /// Dispatch `cfg.workload`: classification through [`serve_auto`], or
 /// streaming through [`serve_stream`] (printing its own report). Used by
-/// the `serve` subcommand so one flag switches request shapes.
+/// the `serve` subcommand so one flag switches request shapes. With
+/// `--http PORT` set, both workloads are instead served over a real TCP
+/// socket by the fleet's HTTP front door until the process is killed.
 pub fn serve_workload(cfg: &ServerConfig) -> Result<()> {
+    if cfg.http_port > 0 {
+        return crate::fleet::http::serve_http(cfg, cfg.http_port);
+    }
     match cfg.workload {
         Workload::Classify => {
             let report = serve_auto(cfg)?;

@@ -1,0 +1,617 @@
+//! The HTTP/1.1 front door: the fleet's probe reports and inference
+//! ingress served over a real TCP socket (`shiftaddvit serve --http PORT`).
+//!
+//! Routes:
+//!
+//! - `GET /liveness` / `GET /readiness` — the [`Router`]'s probe reports
+//!   as JSON (200 when live/ready, 503 otherwise), byte-identical to the
+//!   in-process `to_json()` shapes;
+//! - `GET /metrics` — [`Router::metrics_json`] plus a `front_door` section
+//!   (HTTP-stage latencies and the ingress request-id audit trail);
+//! - `POST /classify` — `{"pixels": [f32; H·W·3], "label"?: n}` →
+//!   submit to the fleet, block on the done table's condvar, answer
+//!   `{"id", "pred", "logits", ...}` (the logits round-trip JSON exactly —
+//!   see `util::json`'s shortest-roundtrip number printing);
+//! - `POST /stream` — `{"tokens": [f32; n·dim]}` → a session on the
+//!   [`SessionEngine`] service thread, answered as a chunked
+//!   `application/jsonl` stream of `progress` events and one final `done`
+//!   event carrying the logits.
+//!
+//! Shape: one bounded accept loop (503 above `max_inflight`) dispatching
+//! connections onto a persistent [`Pool`] of handler threads. Handlers
+//! lock the router only for submit/poll bookkeeping — waiting happens on
+//! the [`DoneMap`] condvar, so N handlers block concurrently while the
+//! worker threads step. Shutdown is graceful: stop accepting, drain the
+//! handler pool, retire the stream service, then drain the fleet.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::backend::{create_planner, load_bundle, RequestOutput};
+use crate::coordinator::batcher::Request;
+use crate::coordinator::config::{BackendKind, ServerConfig};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::server::engine_mode;
+use crate::coordinator::sessions::{SessionEngine, StreamStatus, StreamTicket};
+use crate::data::synth_images;
+use crate::fleet::router::{FleetTicket, Router};
+use crate::infer::session::{SessionSpec, StreamAttn, StreamModel};
+use crate::util::httpd::{read_request, write_response, ChunkedWriter, HttpRequest};
+use crate::util::json::Json;
+use crate::util::pool::Pool;
+
+/// Front-door knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct FrontDoorConfig {
+    /// handler threads (concurrent requests actually being served)
+    pub handlers: usize,
+    /// accepted-but-unfinished connection cap; beyond it new connections
+    /// get an immediate 503 instead of queueing unboundedly
+    pub max_inflight: usize,
+    /// per-request deadline (classify poll wait, stream event wait)
+    pub request_timeout: Duration,
+    /// socket read/write timeout (slow-client guard)
+    pub io_timeout: Duration,
+    /// expected flattened pixel count for `/classify` bodies
+    pub pixels: usize,
+}
+
+impl Default for FrontDoorConfig {
+    fn default() -> Self {
+        FrontDoorConfig {
+            handlers: 4,
+            max_inflight: 64,
+            request_timeout: Duration::from_secs(60),
+            io_timeout: Duration::from_secs(10),
+            pixels: synth_images::IMG * synth_images::IMG * 3,
+        }
+    }
+}
+
+/// One streaming event the `/stream` endpoint forwards as a chunk.
+enum StreamEvent {
+    Progress { fed: usize, total: usize },
+    Done { tokens: usize, logits: Vec<f32> },
+}
+
+struct StreamJob {
+    tokens: Vec<f32>,
+    events: mpsc::Sender<StreamEvent>,
+}
+
+/// The `/stream` service: one thread owning one [`SessionEngine`],
+/// continuously batching every HTTP stream session; handlers feed it jobs
+/// and receive per-step events back on their own channel.
+struct StreamService {
+    tx: Mutex<Option<mpsc::Sender<StreamJob>>>,
+    handle: Mutex<Option<thread::JoinHandle<()>>>,
+    dim: usize,
+}
+
+impl StreamService {
+    fn start(mut engine: SessionEngine, metrics: Arc<Mutex<Metrics>>) -> StreamService {
+        let dim = engine.model.spec.dim;
+        let (tx, rx) = mpsc::channel::<StreamJob>();
+        let handle = thread::Builder::new()
+            .name("http-stream".to_string())
+            .spawn(move || {
+                let mut live: Vec<(StreamTicket, mpsc::Sender<StreamEvent>, usize)> = Vec::new();
+                let mut open = true;
+                loop {
+                    // Intake: block only when the engine has nothing to do.
+                    if live.is_empty() && open {
+                        match rx.recv_timeout(Duration::from_millis(50)) {
+                            Ok(job) => {
+                                let t = engine.submit(job.tokens);
+                                live.push((t, job.events, 0));
+                            }
+                            Err(mpsc::RecvTimeoutError::Timeout) => {}
+                            Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
+                        }
+                    }
+                    loop {
+                        match rx.try_recv() {
+                            Ok(job) => {
+                                let t = engine.submit(job.tokens);
+                                live.push((t, job.events, 0));
+                            }
+                            Err(mpsc::TryRecvError::Empty) => break,
+                            Err(mpsc::TryRecvError::Disconnected) => {
+                                open = false;
+                                break;
+                            }
+                        }
+                    }
+                    if live.is_empty() {
+                        if !open {
+                            break;
+                        }
+                        continue;
+                    }
+                    engine.step(&mut metrics.lock().unwrap());
+                    live.retain_mut(|(t, events, last_fed)| {
+                        if let Some(out) = engine.poll(t) {
+                            // a dropped receiver just means the client went
+                            // away mid-stream; the session still completed
+                            let _ = events.send(StreamEvent::Done {
+                                tokens: out.tokens,
+                                logits: out.logits,
+                            });
+                            return false;
+                        }
+                        if let StreamStatus::Streaming { fed, total } = engine.status(t) {
+                            if fed != *last_fed {
+                                *last_fed = fed;
+                                let _ = events.send(StreamEvent::Progress { fed, total });
+                            }
+                        }
+                        true
+                    });
+                }
+            })
+            .expect("spawn http stream service thread");
+        StreamService {
+            tx: Mutex::new(Some(tx)),
+            handle: Mutex::new(Some(handle)),
+            dim,
+        }
+    }
+
+    fn submit(&self, tokens: Vec<f32>, events: mpsc::Sender<StreamEvent>) -> Result<()> {
+        let guard = self.tx.lock().unwrap();
+        let tx = guard
+            .as_ref()
+            .ok_or_else(|| anyhow!("stream service is draining"))?;
+        tx.send(StreamJob { tokens, events })
+            .map_err(|_| anyhow!("stream service thread exited"))
+    }
+
+    /// Drain: close the inbox, let live sessions finish, join the thread.
+    fn stop(&self) {
+        drop(self.tx.lock().unwrap().take());
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct Shared {
+    router: Mutex<Router>,
+    done: crate::fleet::worker::DoneMap,
+    /// front-door stage latencies + ingress audit trail, plus the stream
+    /// engine's gauges (its service thread steps into this same object)
+    metrics: Arc<Mutex<Metrics>>,
+    stream: Option<StreamService>,
+    bundle_digest: Option<String>,
+    next_id: AtomicUsize,
+    inflight: AtomicUsize,
+    shutdown: AtomicBool,
+    cfg: FrontDoorConfig,
+}
+
+/// The running front door: accept loop + handler pool over one [`Router`].
+pub struct HttpFrontDoor {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<thread::JoinHandle<()>>,
+}
+
+impl HttpFrontDoor {
+    /// Bind `bind` (e.g. `"127.0.0.1:0"` for an ephemeral test port) and
+    /// start serving `router` — plus `/stream` when a [`SessionEngine`] is
+    /// supplied (native backends only; without one `/stream` answers 503).
+    pub fn start(
+        router: Router,
+        stream_engine: Option<SessionEngine>,
+        bind: &str,
+        cfg: FrontDoorConfig,
+    ) -> Result<HttpFrontDoor> {
+        let listener = TcpListener::bind(bind)?;
+        let addr = listener.local_addr()?;
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let shared = Arc::new(Shared {
+            done: router.done_map(),
+            bundle_digest: router.bundle_digest().map(String::from),
+            stream: stream_engine.map(|e| StreamService::start(e, Arc::clone(&metrics))),
+            router: Mutex::new(router),
+            metrics,
+            next_id: AtomicUsize::new(0),
+            inflight: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            cfg,
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept = thread::Builder::new()
+            .name("http-accept".to_string())
+            .spawn(move || {
+                // the pool lives (and drains, via Drop) in the accept thread
+                let pool = Pool::new(accept_shared.cfg.handlers);
+                for conn in listener.incoming() {
+                    if accept_shared.shutdown.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let mut sock = match conn {
+                        Ok(s) => s,
+                        Err(_) => continue,
+                    };
+                    if accept_shared.inflight.load(Ordering::SeqCst)
+                        >= accept_shared.cfg.max_inflight
+                    {
+                        let body = error_body("server at capacity");
+                        let _ = write_response(&mut sock, 503, "application/json", &body);
+                        continue;
+                    }
+                    accept_shared.inflight.fetch_add(1, Ordering::SeqCst);
+                    let sh = Arc::clone(&accept_shared);
+                    drop(pool.submit(move || {
+                        handle_connection(&sh, sock);
+                        sh.inflight.fetch_sub(1, Ordering::SeqCst);
+                    }));
+                }
+            })
+            .map_err(|e| anyhow!("spawn http accept thread: {e}"))?;
+        Ok(HttpFrontDoor {
+            addr,
+            shared,
+            accept: Some(accept),
+        })
+    }
+
+    /// The bound address (resolves `:0` bindings for tests).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Chaos hook: kill a fleet worker under live HTTP traffic.
+    pub fn kill_worker(&self, id: usize) -> Result<()> {
+        self.shared.router.lock().unwrap().kill_worker(id)
+    }
+
+    /// Graceful drain: stop accepting, finish in-flight handlers, retire
+    /// the stream service, then drain and join every fleet worker.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.shared.shutdown.store(true, Ordering::Release);
+        // unblock the accept loop (it re-checks the flag per connection)
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(svc) = &self.shared.stream {
+            svc.stop();
+        }
+        self.shared.router.lock().unwrap().shutdown()
+    }
+}
+
+fn error_body(msg: &str) -> Vec<u8> {
+    Json::obj(vec![("error", Json::str(msg))])
+        .to_string()
+        .into_bytes()
+}
+
+fn respond(sock: &mut TcpStream, status: u16, body: &Json) {
+    let _ = write_response(sock, status, "application/json", body.to_string().as_bytes());
+}
+
+fn respond_error(sock: &mut TcpStream, status: u16, msg: &str) {
+    let _ = write_response(sock, status, "application/json", &error_body(msg));
+}
+
+fn handle_connection(shared: &Shared, mut sock: TcpStream) {
+    let _ = sock.set_read_timeout(Some(shared.cfg.io_timeout));
+    let _ = sock.set_write_timeout(Some(shared.cfg.io_timeout));
+    let reader_sock = match sock.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(reader_sock);
+    let req = match read_request(&mut reader) {
+        Ok(Some(r)) => r,
+        Ok(None) => return, // peer connected and left (e.g. the shutdown poke)
+        Err(e) => {
+            respond_error(&mut sock, 400, &format!("{e:#}"));
+            return;
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/liveness") => {
+            let report = shared.router.lock().unwrap().liveness();
+            respond(&mut sock, if report.live { 200 } else { 503 }, &report.to_json());
+        }
+        ("GET", "/readiness") => {
+            let report = shared.router.lock().unwrap().readiness();
+            respond(&mut sock, if report.ready { 200 } else { 503 }, &report.to_json());
+        }
+        ("GET", "/metrics") => {
+            let mut j = shared.router.lock().unwrap().metrics_json();
+            if let Json::Obj(map) = &mut j {
+                map.insert(
+                    "front_door".to_string(),
+                    shared.metrics.lock().unwrap().to_json(),
+                );
+            }
+            respond(&mut sock, 200, &j);
+        }
+        ("POST", "/classify") => classify(shared, &req, &mut sock),
+        ("POST", "/stream") => stream(shared, &req, &mut sock),
+        (_, "/liveness" | "/readiness" | "/metrics" | "/classify" | "/stream") => {
+            respond_error(
+                &mut sock,
+                405,
+                &format!("{} does not accept {}", req.path, req.method),
+            );
+        }
+        (_, path) => respond_error(&mut sock, 404, &format!("no route for {path}")),
+    }
+}
+
+/// Parse a `/classify` body: `{"pixels": [f32; expected], "label"?: n}`.
+fn parse_classify(body: &str, expected: usize) -> Result<(Vec<f32>, Option<usize>)> {
+    let j = Json::parse(body)?;
+    let arr = j
+        .get("pixels")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("body must be {{\"pixels\": [f32; {expected}], \"label\"?: n}}"))?;
+    if arr.len() != expected {
+        bail!("expected {expected} pixels, got {}", arr.len());
+    }
+    let pixels: Vec<f32> = arr
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .map(|f| f as f32)
+                .ok_or_else(|| anyhow!("pixels must all be numbers"))
+        })
+        .collect::<Result<_>>()?;
+    Ok((pixels, j.get("label").and_then(|v| v.as_usize())))
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Block until the fleet completes `ticket`: poll + supervise under a
+/// brief router lock, then wait a bounded slice on the done-table condvar
+/// with the lock released — N handlers park here concurrently while the
+/// worker threads step.
+fn wait_for(
+    shared: &Shared,
+    ticket: &FleetTicket,
+    timeout: Duration,
+) -> std::result::Result<RequestOutput, (u16, String)> {
+    let t0 = Instant::now();
+    loop {
+        {
+            let mut r = shared.router.lock().unwrap();
+            if let Some(out) = r.poll(ticket) {
+                return Ok(out);
+            }
+            if let Err(e) = r.supervise() {
+                return Err((503, format!("{e:#}")));
+            }
+        }
+        if t0.elapsed() > timeout {
+            return Err((
+                504,
+                format!("request {} not completed within {timeout:?}", ticket.id),
+            ));
+        }
+        if let Some(out) = shared.done.wait_remove(ticket.id, Duration::from_millis(5)) {
+            shared.router.lock().unwrap().acknowledge(ticket.id);
+            return Ok(out);
+        }
+    }
+}
+
+fn classify(shared: &Shared, req: &HttpRequest, sock: &mut TcpStream) {
+    let t0 = Instant::now();
+    let body = match req.body_text() {
+        Ok(b) => b,
+        Err(e) => return respond_error(sock, 400, &format!("{e:#}")),
+    };
+    let (pixels, label) = match parse_classify(body, shared.cfg.pixels) {
+        Ok(p) => p,
+        Err(e) => return respond_error(sock, 400, &format!("{e:#}")),
+    };
+    let id = shared.next_id.fetch_add(1, Ordering::SeqCst);
+    let request = Request {
+        id,
+        pixels,
+        label,
+        arrived: Instant::now(),
+    };
+    let ticket = match shared.router.lock().unwrap().submit(request) {
+        Ok(t) => t,
+        Err(e) => return respond_error(sock, 503, &format!("{e:#}")),
+    };
+    let out = match wait_for(shared, &ticket, shared.cfg.request_timeout) {
+        Ok(o) => o,
+        Err((status, msg)) => return respond_error(sock, status, &msg),
+    };
+    let mut rows = vec![
+        ("id", Json::num(id as f64)),
+        ("pred", Json::num(argmax(&out.logits) as f64)),
+        (
+            "logits",
+            Json::Arr(out.logits.iter().map(|&v| Json::Num(v as f64)).collect()),
+        ),
+        ("latency_ms", Json::num(out.latency_ms())),
+    ];
+    if let Some(d) = &shared.bundle_digest {
+        rows.push(("bundle_digest", Json::str(d)));
+    }
+    respond(sock, 200, &Json::obj(rows));
+    let mut m = shared.metrics.lock().unwrap();
+    m.record("http_classify", t0.elapsed().as_secs_f64() * 1e3);
+    m.requests += 1;
+    m.request_ids.push(id);
+}
+
+/// Parse a `/stream` body: `{"tokens": [f32; n·dim]}` with `n ≥ 1`.
+fn parse_stream(body: &str, dim: usize) -> Result<Vec<f32>> {
+    let j = Json::parse(body)?;
+    let arr = j
+        .get("tokens")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("body must be {{\"tokens\": [f32; n*{dim}]}}"))?;
+    if arr.is_empty() || arr.len() % dim != 0 {
+        bail!(
+            "tokens must be a non-empty multiple of dim={dim} floats, got {}",
+            arr.len()
+        );
+    }
+    arr.iter()
+        .map(|v| {
+            v.as_f64()
+                .map(|f| f as f32)
+                .ok_or_else(|| anyhow!("tokens must all be numbers"))
+        })
+        .collect()
+}
+
+fn stream_event_line(event: &str, rows: Vec<(&str, Json)>) -> Vec<u8> {
+    let mut all = vec![("event", Json::str(event))];
+    all.extend(rows);
+    let mut line = Json::obj(all).to_string();
+    line.push('\n');
+    line.into_bytes()
+}
+
+fn stream(shared: &Shared, req: &HttpRequest, sock: &mut TcpStream) {
+    let t0 = Instant::now();
+    let Some(svc) = &shared.stream else {
+        return respond_error(sock, 503, "no stream service (serve a native backend)");
+    };
+    let body = match req.body_text() {
+        Ok(b) => b,
+        Err(e) => return respond_error(sock, 400, &format!("{e:#}")),
+    };
+    // Pre-validate so a bad shape is a 400 here, not an assert in the
+    // engine's submit on the service thread.
+    let tokens = match parse_stream(body, svc.dim) {
+        Ok(t) => t,
+        Err(e) => return respond_error(sock, 400, &format!("{e:#}")),
+    };
+    let n_tokens = tokens.len() / svc.dim;
+    let (etx, erx) = mpsc::channel();
+    if let Err(e) = svc.submit(tokens, etx) {
+        return respond_error(sock, 503, &format!("{e:#}"));
+    }
+    let mut cw = match ChunkedWriter::begin(sock, 200, "application/jsonl") {
+        Ok(c) => c,
+        Err(_) => return,
+    };
+    let deadline = t0 + shared.cfg.request_timeout;
+    loop {
+        let now = Instant::now();
+        if now >= deadline {
+            let _ = cw.chunk(&stream_event_line(
+                "error",
+                vec![("error", Json::str("stream timed out"))],
+            ));
+            break;
+        }
+        match erx.recv_timeout((deadline - now).min(Duration::from_millis(100))) {
+            Ok(StreamEvent::Progress { fed, total }) => {
+                let line = stream_event_line(
+                    "progress",
+                    vec![
+                        ("fed", Json::num(fed as f64)),
+                        ("total", Json::num(total as f64)),
+                    ],
+                );
+                if cw.chunk(&line).is_err() {
+                    return; // client went away; the session finishes anyway
+                }
+            }
+            Ok(StreamEvent::Done { tokens, logits }) => {
+                let line = stream_event_line(
+                    "done",
+                    vec![
+                        ("tokens", Json::num(tokens as f64)),
+                        (
+                            "logits",
+                            Json::Arr(logits.iter().map(|&v| Json::Num(v as f64)).collect()),
+                        ),
+                    ],
+                );
+                let _ = cw.chunk(&line);
+                break;
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                let _ = cw.chunk(&stream_event_line(
+                    "error",
+                    vec![("error", Json::str("stream service exited"))],
+                ));
+                break;
+            }
+        }
+    }
+    let _ = cw.finish();
+    let mut m = shared.metrics.lock().unwrap();
+    m.record("http_stream", t0.elapsed().as_secs_f64() * 1e3);
+    m.requests += 1;
+}
+
+/// Build the `/stream` engine from a [`ServerConfig`] (native only): the
+/// same planner/bundle path as `serve_stream`, one engine for the whole
+/// front door.
+fn build_stream_engine(cfg: &ServerConfig) -> Result<SessionEngine> {
+    let bundle = load_bundle(cfg)?;
+    let planner = create_planner(cfg)?;
+    if let Some(b) = &bundle {
+        let pinned = planner.pin_table_json(&b.table)?;
+        println!("bundle: pinned {pinned} planner choices for the stream engine");
+    }
+    let model = StreamModel::new(
+        SessionSpec::tiny(StreamAttn::LinearAdd, crate::model::ops::Lin::Shift),
+        planner,
+    );
+    Ok(SessionEngine::with_mode(
+        model,
+        cfg.stream_chunk.max(1),
+        cfg.max_live.max(1),
+        engine_mode(cfg),
+    ))
+}
+
+/// `shiftaddvit serve --http PORT`: build the fleet from `cfg`, start the
+/// front door on `0.0.0.0:port`, and serve until the process is killed
+/// (the CI smoke backgrounds and SIGKILLs it).
+pub fn serve_http(cfg: &ServerConfig, port: usize) -> Result<()> {
+    let router = Router::from_server_config(cfg)?;
+    println!(
+        "fleet: {} workers ready  policy {}",
+        router.worker_count(),
+        router.policy_name()
+    );
+    let stream_engine = if cfg.backend == BackendKind::Native {
+        Some(build_stream_engine(cfg)?)
+    } else {
+        None
+    };
+    let door = HttpFrontDoor::start(
+        router,
+        stream_engine,
+        &format!("0.0.0.0:{port}"),
+        FrontDoorConfig::default(),
+    )?;
+    println!("http: front door listening on {}", door.addr());
+    println!("http: GET /liveness | /readiness | /metrics   POST /classify | /stream");
+    loop {
+        thread::sleep(Duration::from_secs(3600));
+    }
+}

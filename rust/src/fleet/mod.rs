@@ -20,7 +20,11 @@
 //!   runtime `add_worker`/`remove_worker` (remove drains: stop admitting,
 //!   finish live work, join the thread), `/liveness`-`/readiness`-
 //!   `/metrics`-shaped reports, and resubmission of requests stranded on a
-//!   dead worker.
+//!   dead worker;
+//! - [`http`] — the HTTP/1.1 front door ([`http::HttpFrontDoor`]): the
+//!   probe reports and classify/stream ingress served over a real TCP
+//!   socket (`serve --http PORT`), with bounded concurrency, per-request
+//!   timeouts, and graceful drain.
 //!
 //! Workers are built by a factory closure, so native and XLA engines mix
 //! in one fleet — they already share the request-level contract from
@@ -28,10 +32,12 @@
 //! worker thread (each worker owns its engine, planner, and caches), which
 //! is what makes shape affinity worth routing for.
 
+pub mod http;
 pub mod policy;
 pub mod router;
 pub mod worker;
 
+pub use http::{FrontDoorConfig, HttpFrontDoor};
 pub use policy::{PolicyKind, RoutingPolicy, WorkerView};
 pub use router::{FleetTicket, Router, RouterConfig, WorkerBreakdown};
 pub use worker::{FleetWorker, WorkerHealth};

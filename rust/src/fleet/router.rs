@@ -15,7 +15,7 @@
 //! [`Router::liveness`], [`Router::readiness`], [`Router::metrics_json`].
 
 use std::collections::{HashMap, HashSet};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -25,7 +25,7 @@ use crate::coordinator::batcher::Request;
 use crate::coordinator::config::{BackendKind, ServerConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::fleet::policy::{PolicyKind, RoutingPolicy, WorkerView};
-use crate::fleet::worker::{BackendFactory, DoneMap, FleetWorker, WorkerHealth};
+use crate::fleet::worker::{BackendFactory, DoneMap, DoneTable, FleetWorker, WorkerHealth};
 use crate::kernels::planner::{table_json, Choice};
 use crate::util::json::Json;
 
@@ -198,7 +198,7 @@ impl Router {
             cfg,
             factory,
             workers: Vec::new(),
-            done: Arc::new(Mutex::new(HashMap::new())),
+            done: DoneTable::new(),
             inflight: HashMap::new(),
             next_fleet_id: 0,
             next_worker_id: 0,
@@ -330,9 +330,24 @@ impl Router {
 
     /// Remove and return a finished request's output, if ready.
     pub fn poll(&mut self, ticket: &FleetTicket) -> Option<RequestOutput> {
-        let out = self.done.lock().unwrap().remove(&ticket.id)?;
+        let out = self.done.remove(ticket.id)?;
         self.inflight.remove(&ticket.id);
         Some(out)
+    }
+
+    /// The fleet-wide completed-output table. Front-door handlers clone
+    /// this so they can block on its completion condvar without holding
+    /// the router lock.
+    pub fn done_map(&self) -> DoneMap {
+        Arc::clone(&self.done)
+    }
+
+    /// Drop the in-flight bookkeeping for a request whose output was taken
+    /// straight from the done map (callers that wait on the done table's
+    /// condvar instead of [`Router::poll_wait`] — the HTTP front door —
+    /// must acknowledge, or the resubmission copy leaks).
+    pub fn acknowledge(&mut self, id: u64) {
+        self.inflight.remove(&id);
     }
 
     /// Health sweep: reap workers whose thread died, then resubmit every
@@ -367,7 +382,7 @@ impl Router {
         // Resubmit stranded work: placed on a worker no longer in the
         // fleet, output never filed.
         let alive: HashSet<usize> = self.workers.iter().map(|w| w.id).collect();
-        let completed: HashSet<u64> = self.done.lock().unwrap().keys().copied().collect();
+        let completed: HashSet<u64> = self.done.ids();
         let stranded: Vec<u64> = self
             .inflight
             .iter()
@@ -396,7 +411,10 @@ impl Router {
     }
 
     /// Poll with supervision: block until the output arrives, resubmitting
-    /// stranded work along the way.
+    /// stranded work along the way. Blocks on the done table's completion
+    /// condvar (bounded slices, so supervision and the deadline still run
+    /// between waits) instead of sleep-spinning — workers wake every
+    /// waiter the moment they file an output.
     pub fn poll_wait(&mut self, ticket: &FleetTicket, timeout: Duration) -> Result<RequestOutput> {
         let t0 = Instant::now();
         loop {
@@ -410,7 +428,10 @@ impl Router {
                     ticket.id
                 ));
             }
-            std::thread::sleep(Duration::from_micros(200));
+            if let Some(out) = self.done.wait_remove(ticket.id, Duration::from_millis(5)) {
+                self.inflight.remove(&ticket.id);
+                return Ok(out);
+            }
         }
     }
 

@@ -14,10 +14,10 @@
 //! worker that produced them — the router polls one map no matter which
 //! worker (or which *re*-placement, after a death) served a request.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, RecvTimeoutError, TryRecvError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::{self, JoinHandle};
 use std::time::Duration;
 
@@ -33,7 +33,65 @@ use crate::coordinator::metrics::Metrics;
 pub type BackendFactory = Arc<dyn Fn() -> Result<Box<dyn InferenceBackend>> + Send + Sync>;
 
 /// Fleet-wide completed-output map: fleet request id → output.
-pub type DoneMap = Arc<Mutex<HashMap<u64, RequestOutput>>>;
+pub type DoneMap = Arc<DoneTable>;
+
+/// The condvar-backed table behind [`DoneMap`]. Workers file outputs with
+/// [`DoneTable::insert`], which notifies every waiter, so pollers block on
+/// [`DoneTable::wait_remove`] instead of sleep-spinning — important once
+/// many HTTP handlers wait in `Router::poll_wait` concurrently.
+#[derive(Default)]
+pub struct DoneTable {
+    map: Mutex<HashMap<u64, RequestOutput>>,
+    completed: Condvar,
+}
+
+impl DoneTable {
+    pub fn new() -> DoneMap {
+        Arc::new(DoneTable::default())
+    }
+
+    /// File one completed output and wake every waiter.
+    pub fn insert(&self, fleet_id: u64, out: RequestOutput) {
+        self.map.lock().unwrap().insert(fleet_id, out);
+        self.completed.notify_all();
+    }
+
+    /// Remove and return `fleet_id`'s output, if filed.
+    pub fn remove(&self, fleet_id: u64) -> Option<RequestOutput> {
+        self.map.lock().unwrap().remove(&fleet_id)
+    }
+
+    pub fn contains(&self, fleet_id: u64) -> bool {
+        self.map.lock().unwrap().contains_key(&fleet_id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of the filed fleet ids (the supervision pass checks these
+    /// before resubmitting stranded work).
+    pub fn ids(&self) -> HashSet<u64> {
+        self.map.lock().unwrap().keys().copied().collect()
+    }
+
+    /// Block until `fleet_id`'s output is filed or `timeout` elapses,
+    /// removing and returning it on success. One bounded wait slice — the
+    /// caller loops, interleaving its own bookkeeping (supervision,
+    /// deadline checks) between slices.
+    pub fn wait_remove(&self, fleet_id: u64, timeout: Duration) -> Option<RequestOutput> {
+        let mut map = self.map.lock().unwrap();
+        if let Some(out) = map.remove(&fleet_id) {
+            return Some(out);
+        }
+        let (mut map, _) = self.completed.wait_timeout(map, timeout).unwrap();
+        map.remove(&fleet_id)
+    }
+}
 
 /// The worker health state machine. Transitions:
 /// `Starting → Ready` (engine built + warmed), `Ready → Draining`
@@ -416,7 +474,7 @@ fn worker_main(
         let mut completed = 0usize;
         pending.retain(|(fleet_id, ticket)| match backend.poll(ticket) {
             Some(out) => {
-                done.lock().unwrap().insert(*fleet_id, out);
+                done.insert(*fleet_id, out);
                 completed += 1;
                 false
             }
@@ -461,22 +519,22 @@ mod tests {
 
     #[test]
     fn worker_lifecycle_serves_then_drains() {
-        let done: DoneMap = Arc::new(Mutex::new(HashMap::new()));
+        let done = DoneTable::new();
         let w = FleetWorker::spawn(0, factory(), 4, 0.0, Arc::clone(&done));
         w.wait_health(WorkerHealth::Ready, Duration::from_secs(60)).unwrap();
         let hb0 = w.heartbeat();
         w.submit(10, request(0)).unwrap();
         w.submit(11, request(1)).unwrap();
-        // outputs land in the shared map
+        // outputs land in the shared map — wake on the completion condvar
         let t0 = Instant::now();
-        while done.lock().unwrap().len() < 2 {
+        while done.len() < 2 {
             assert!(t0.elapsed() < Duration::from_secs(60), "worker never completed");
-            thread::sleep(Duration::from_micros(200));
+            let _ = done.wait_remove(u64::MAX, Duration::from_millis(5));
         }
         assert_eq!(w.load(), 0);
         assert_eq!(w.served(), 2);
         assert!(w.heartbeat() > hb0, "step loop must advance the heartbeat");
-        let out = done.lock().unwrap().remove(&10).unwrap();
+        let out = done.remove(10).unwrap();
         assert_eq!(out.request_id, 0);
         w.drain();
         w.wait_health(WorkerHealth::Dead, Duration::from_secs(60)).unwrap();
@@ -486,7 +544,7 @@ mod tests {
 
     #[test]
     fn kill_strands_live_work_without_filing_outputs() {
-        let done: DoneMap = Arc::new(Mutex::new(HashMap::new()));
+        let done = DoneTable::new();
         // Big step delay: the kill lands before the first step completes.
         let w = FleetWorker::spawn(3, factory(), 4, 200.0, Arc::clone(&done));
         w.wait_health(WorkerHealth::Ready, Duration::from_secs(60)).unwrap();
@@ -495,19 +553,59 @@ mod tests {
         w.wait_health(WorkerHealth::Dead, Duration::from_secs(60)).unwrap();
         w.join();
         assert!(
-            !done.lock().unwrap().contains_key(&7),
+            !done.contains(7),
             "killed worker must not have filed the stranded output"
         );
     }
 
     #[test]
     fn failed_factory_reports_dead_with_error() {
-        let done: DoneMap = Arc::new(Mutex::new(HashMap::new()));
+        let done = DoneTable::new();
         let boom: BackendFactory = Arc::new(|| Err(anyhow!("no engine here")));
         let w = FleetWorker::spawn(9, boom, 4, 0.0, done);
         assert!(w.wait_health(WorkerHealth::Ready, Duration::from_secs(60)).is_err());
         assert_eq!(w.health(), WorkerHealth::Dead);
         assert!(w.error().unwrap().contains("no engine here"));
         w.join();
+    }
+
+    #[test]
+    fn wait_remove_blocks_until_insert_and_consumes() {
+        let done = DoneTable::new();
+        assert!(
+            done.wait_remove(1, Duration::from_millis(5)).is_none(),
+            "timeout with nothing filed"
+        );
+        let peer = Arc::clone(&done);
+        let filer = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(20));
+            let s = synth_images::gen_image(1);
+            peer.insert(
+                1,
+                RequestOutput {
+                    id: 0,
+                    request_id: 42,
+                    logits: vec![1.0],
+                    dispatch_mask_blk0: Vec::new(),
+                    batch_ms: 0.1,
+                    modularized_ms: 0.1,
+                    batch_size: 1,
+                    arrived: Instant::now(),
+                    finished: Instant::now(),
+                    label: Some(s.label),
+                },
+            );
+        });
+        // loop wait slices exactly like poll_wait does
+        let t0 = Instant::now();
+        let out = loop {
+            if let Some(out) = done.wait_remove(1, Duration::from_millis(5)) {
+                break out;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(30), "insert never woke us");
+        };
+        assert_eq!(out.request_id, 42);
+        assert!(done.is_empty(), "wait_remove consumes the output");
+        filer.join().unwrap();
     }
 }

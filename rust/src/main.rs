@@ -11,6 +11,8 @@
 //!                     [--workers N] [--policy round-robin|least-loaded|affinity]
 //!                     [--planner-table t.json] [--save-planner-table t.json]
 //!                     [--bundle m.sabundle] [--bundle-key K]
+//!                     [--http PORT]   (serve over HTTP instead of the
+//!                                      synthetic benchmark client)
 //! shiftaddvit bundle  pack [--out m.sabundle] [--params p.sap]
 //!                     [--planner-table t.json] [--key K]
 //! shiftaddvit bundle  verify|inspect|unpack --bundle m.sabundle
@@ -77,6 +79,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.max_live = args.usize_or("max-live", cfg.max_live)?;
     cfg.prefill_budget = args.usize_or("prefill-budget", cfg.prefill_budget)?;
     cfg.workers = args.usize_or("workers", cfg.workers)?;
+    cfg.http_port = args.usize_or("http", cfg.http_port)?;
     if let Some(s) = args.get("scheduler") {
         cfg.scheduler = SchedulerKind::parse(s)?;
     }

@@ -40,12 +40,14 @@ pub fn ideal_split(per_token_ms: &[f64], total_tokens: usize) -> Vec<usize> {
         .iter()
         .map(|v| ((v / z) * total_tokens as f64).floor() as usize)
         .collect();
-    // distribute rounding remainder to the fastest expert
+    // Distribute the rounding remainder to the fastest expert. total_cmp
+    // keeps the pick total when a latency sample is NaN (NaN ranks
+    // greatest, so a poisoned expert is never chosen as fastest).
     let assigned: usize = out.iter().sum();
     if let Some(fastest) = per_token_ms
         .iter()
         .enumerate()
-        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .min_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i)
     {
         out[fastest] += total_tokens - assigned;
@@ -99,6 +101,15 @@ mod tests {
         assert!(idle < idle_naive, "{idle} vs {idle_naive}");
         // n0·3 ≈ n1·1 ⇒ n0 = 100, n1 = 300
         assert_eq!(split, vec![100, 300]);
+    }
+
+    #[test]
+    fn ideal_split_tolerates_nan_latency() {
+        // A poisoned per-token latency must not panic the fastest-expert
+        // pick, and the healthy expert absorbs the remainder.
+        let split = ideal_split(&[1.0, f64::NAN], 10);
+        assert_eq!(split.iter().sum::<usize>(), 10);
+        assert_eq!(split[1], 0, "NaN expert receives no remainder");
     }
 
     #[test]

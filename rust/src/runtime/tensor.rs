@@ -67,7 +67,9 @@ impl Tensor {
         }
     }
 
-    /// Argmax over the last axis (logits → class ids).
+    /// Argmax over the last axis (logits → class ids). Total on NaN rows:
+    /// `total_cmp` ranks NaN greatest instead of panicking, so a poisoned
+    /// logit row yields a (NaN) class id rather than taking the server down.
     pub fn argmax_last(&self) -> Result<Vec<usize>> {
         let d = *self.shape.last().expect("scalar tensor");
         let v = self.as_f32()?;
@@ -75,7 +77,7 @@ impl Tensor {
             .map(|row| {
                 row.iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .max_by(|a, b| a.1.total_cmp(b.1))
                     .map(|(i, _)| i)
                     .unwrap()
             })
@@ -102,6 +104,14 @@ mod tests {
     #[test]
     fn argmax_rows() {
         let t = Tensor::f32(vec![2, 3], vec![0.1, 0.9, 0.0, 0.5, 0.2, 0.3]);
+        assert_eq!(t.argmax_last().unwrap(), vec![1, 0]);
+    }
+
+    #[test]
+    fn argmax_tolerates_nan_rows() {
+        // NaN ranks greatest under total_cmp: no panic, and the poisoned
+        // entry is what gets reported.
+        let t = Tensor::f32(vec![2, 3], vec![0.1, f32::NAN, 0.3, 0.5, 0.2, 0.3]);
         assert_eq!(t.argmax_last().unwrap(), vec![1, 0]);
     }
 

@@ -1,0 +1,441 @@
+//! Minimal HTTP/1.1 plumbing on `std::net` (hyper/axum are unavailable
+//! offline; DESIGN.md §6). Three pieces:
+//!
+//! - [`read_request`] — a bounded request parser over any `BufRead`
+//!   (request line, headers, `Content-Length` body);
+//! - [`write_response`] / [`ChunkedWriter`] — response writers for fixed
+//!   bodies and `Transfer-Encoding: chunked` streams;
+//! - [`request`] — a tiny blocking client, so integration tests and the
+//!   CI smoke exercise the real socket path without curl.
+//!
+//! Deliberately small: one request per connection (`Connection: close`),
+//! no chunked *request* bodies, no TLS. Every parse error is a caller-side
+//! problem — the front door maps them to 400s.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Request line + headers may not exceed this (slowloris/garbage guard).
+pub const MAX_HEAD_BYTES: usize = 64 * 1024;
+
+/// Largest request body accepted (a classify body is ~100 KB of JSON).
+pub const MAX_BODY_BYTES: usize = 16 * 1024 * 1024;
+
+/// One parsed HTTP request.
+#[derive(Clone, Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    /// path without the query string
+    pub path: String,
+    pub query: Option<String>,
+    /// header names lowercased
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_text(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).map_err(|_| anyhow!("request body is not UTF-8"))
+    }
+}
+
+/// Read one line terminated by `\n`, stripping `\r\n`. `Ok(None)` = clean
+/// EOF before any byte; EOF mid-line is an error.
+fn read_line(r: &mut impl BufRead, budget: &mut usize) -> Result<Option<String>> {
+    let mut buf = Vec::new();
+    let n = r.read_until(b'\n', &mut buf)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if *buf.last().unwrap() != b'\n' {
+        bail!("truncated line (connection closed mid-header)");
+    }
+    *budget = budget
+        .checked_sub(n)
+        .ok_or_else(|| anyhow!("request head exceeds {MAX_HEAD_BYTES} bytes"))?;
+    buf.pop();
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    String::from_utf8(buf).map(Some).map_err(|_| anyhow!("header line is not UTF-8"))
+}
+
+/// Parse one request off the stream. `Ok(None)` means the peer closed the
+/// connection cleanly before sending anything (not an error). Any
+/// malformed input is an `Err` the server maps to a 400.
+pub fn read_request(r: &mut impl BufRead) -> Result<Option<HttpRequest>> {
+    let mut budget = MAX_HEAD_BYTES;
+    let line = match read_line(r, &mut budget)? {
+        Some(l) => l,
+        None => return Ok(None),
+    };
+    let mut parts = line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| anyhow!("empty request line"))?
+        .to_string();
+    let target = parts
+        .next()
+        .ok_or_else(|| anyhow!("request line has no target: '{line}'"))?;
+    let version = parts
+        .next()
+        .ok_or_else(|| anyhow!("request line has no HTTP version: '{line}'"))?;
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported protocol '{version}'");
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), Some(q.to_string())),
+        None => (target.to_string(), None),
+    };
+
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line(r, &mut budget)?
+            .ok_or_else(|| anyhow!("connection closed inside the header block"))?;
+        if line.is_empty() {
+            break;
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| anyhow!("malformed header line '{line}'"))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    let mut req = HttpRequest {
+        method,
+        path,
+        query,
+        headers,
+        body: Vec::new(),
+    };
+    if let Some(te) = req.header("transfer-encoding") {
+        bail!("transfer-encoding '{te}' request bodies are not supported (send Content-Length)");
+    }
+    if let Some(cl) = req.header("content-length") {
+        let len: usize = cl
+            .parse()
+            .map_err(|_| anyhow!("bad Content-Length '{cl}'"))?;
+        if len > MAX_BODY_BYTES {
+            bail!("request body of {len} bytes exceeds the {MAX_BODY_BYTES} byte cap");
+        }
+        let mut body = vec![0u8; len];
+        r.read_exact(&mut body)
+            .map_err(|e| anyhow!("short request body ({e})"))?;
+        req.body = body;
+    }
+    Ok(Some(req))
+}
+
+/// Canonical reason phrases for the statuses the front door emits.
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Write one complete `Connection: close` response with a fixed body.
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {status} {}\r\ncontent-type: {content_type}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+        status_reason(status),
+        body.len()
+    )?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Writer for a `Transfer-Encoding: chunked` response — the `/stream`
+/// endpoint emits one chunk per streaming event.
+pub struct ChunkedWriter<'a, W: Write> {
+    w: &'a mut W,
+}
+
+impl<'a, W: Write> ChunkedWriter<'a, W> {
+    /// Send the status line + chunked headers; chunks follow.
+    pub fn begin(w: &'a mut W, status: u16, content_type: &str) -> std::io::Result<Self> {
+        write!(
+            w,
+            "HTTP/1.1 {status} {}\r\ncontent-type: {content_type}\r\ntransfer-encoding: chunked\r\nconnection: close\r\n\r\n",
+            status_reason(status)
+        )?;
+        w.flush()?;
+        Ok(ChunkedWriter { w })
+    }
+
+    /// Send one chunk (empty input is skipped — an empty chunk would
+    /// terminate the stream).
+    pub fn chunk(&mut self, data: &[u8]) -> std::io::Result<()> {
+        if data.is_empty() {
+            return Ok(());
+        }
+        write!(self.w, "{:x}\r\n", data.len())?;
+        self.w.write_all(data)?;
+        self.w.write_all(b"\r\n")?;
+        self.w.flush()
+    }
+
+    /// Send the terminating zero-length chunk.
+    pub fn finish(mut self) -> std::io::Result<()> {
+        self.w.write_all(b"0\r\n\r\n")?;
+        self.w.flush()
+    }
+}
+
+/// A client-side response. `chunks` keeps per-chunk boundaries when the
+/// server streamed (`body` is always the full concatenation).
+#[derive(Clone, Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    /// header names lowercased
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    pub chunks: Vec<Vec<u8>>,
+}
+
+impl HttpResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn text(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).map_err(|_| anyhow!("response body is not UTF-8"))
+    }
+}
+
+/// Blocking one-shot HTTP client: connect, send, read the full response
+/// (content-length, chunked, or to-EOF). Test/CI plumbing — serving never
+/// calls this.
+pub fn request(
+    addr: impl ToSocketAddrs,
+    method: &str,
+    path: &str,
+    body: Option<&[u8]>,
+    timeout: Duration,
+) -> Result<HttpResponse> {
+    let addr = addr
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| anyhow!("no address to connect to"))?;
+    let stream = TcpStream::connect_timeout(&addr, timeout)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    let mut w = stream.try_clone()?;
+    write!(w, "{method} {path} HTTP/1.1\r\nhost: {addr}\r\nconnection: close\r\n")?;
+    match body {
+        Some(b) => {
+            write!(w, "content-type: application/json\r\ncontent-length: {}\r\n\r\n", b.len())?;
+            w.write_all(b)?;
+        }
+        None => write!(w, "\r\n")?,
+    }
+    w.flush()?;
+
+    let mut r = BufReader::new(stream);
+    let mut budget = MAX_HEAD_BYTES;
+    let status_line = read_line(&mut r, &mut budget)?
+        .ok_or_else(|| anyhow!("server closed before sending a status line"))?;
+    let mut parts = status_line.split_whitespace();
+    let version = parts
+        .next()
+        .ok_or_else(|| anyhow!("empty status line"))?;
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported response protocol '{version}'");
+    }
+    let status: u16 = parts
+        .next()
+        .ok_or_else(|| anyhow!("status line has no code: '{status_line}'"))?
+        .parse()
+        .map_err(|_| anyhow!("bad status code in '{status_line}'"))?;
+
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line(&mut r, &mut budget)?
+            .ok_or_else(|| anyhow!("server closed inside the response headers"))?;
+        if line.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = line.split_once(':') {
+            headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+        }
+    }
+
+    let mut resp = HttpResponse {
+        status,
+        headers,
+        body: Vec::new(),
+        chunks: Vec::new(),
+    };
+    let chunked = resp
+        .header("transfer-encoding")
+        .is_some_and(|v| v.eq_ignore_ascii_case("chunked"));
+    if chunked {
+        // chunk-size lines get their own budget — a long stream of events
+        // is not an oversized head
+        let mut chunk_budget = usize::MAX;
+        loop {
+            let size_line = read_line(&mut r, &mut chunk_budget)?
+                .ok_or_else(|| anyhow!("server closed mid-chunk"))?;
+            let size = usize::from_str_radix(size_line.trim(), 16)
+                .map_err(|_| anyhow!("bad chunk size '{size_line}'"))?;
+            let mut chunk = vec![0u8; size];
+            r.read_exact(&mut chunk)?;
+            let mut crlf = [0u8; 2];
+            r.read_exact(&mut crlf)?;
+            if size == 0 {
+                break;
+            }
+            resp.body.extend_from_slice(&chunk);
+            resp.chunks.push(chunk);
+        }
+    } else if let Some(cl) = resp.header("content-length") {
+        let len: usize = cl
+            .parse()
+            .map_err(|_| anyhow!("bad response Content-Length '{cl}'"))?;
+        let mut body = vec![0u8; len];
+        r.read_exact(&mut body)?;
+        resp.body = body;
+    } else {
+        r.read_to_end(&mut resp.body)?;
+    }
+    Ok(resp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+    use std::net::TcpListener;
+
+    fn parse(text: &str) -> Result<Option<HttpRequest>> {
+        read_request(&mut Cursor::new(text.as_bytes()))
+    }
+
+    #[test]
+    fn parses_get_with_query_and_headers() {
+        let req = parse("GET /metrics?pretty=1 HTTP/1.1\r\nHost: x\r\nX-Trace: 7\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/metrics");
+        assert_eq!(req.query.as_deref(), Some("pretty=1"));
+        assert_eq!(req.header("x-trace"), Some("7"));
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_body_by_content_length() {
+        let req = parse("POST /classify HTTP/1.1\r\ncontent-length: 4\r\n\r\n{\"a\"")
+            .unwrap()
+            .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body_text().unwrap(), "{\"a\"");
+    }
+
+    #[test]
+    fn clean_close_is_none_not_an_error() {
+        assert!(parse("").unwrap().is_none());
+    }
+
+    #[test]
+    fn malformed_requests_error() {
+        assert!(parse("GARBAGE\r\n\r\n").is_err(), "no target");
+        assert!(parse("GET /x SPDY/3\r\n\r\n").is_err(), "bad protocol");
+        assert!(parse("GET /x HTTP/1.1\r\nbroken header\r\n\r\n").is_err());
+        assert!(
+            parse("POST /x HTTP/1.1\r\ncontent-length: 99\r\n\r\nshort").is_err(),
+            "short body"
+        );
+        assert!(
+            parse("POST /x HTTP/1.1\r\ncontent-length: 999999999999\r\n\r\n").is_err(),
+            "body cap"
+        );
+        assert!(
+            parse("POST /x HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n").is_err(),
+            "chunked request bodies unsupported"
+        );
+        assert!(parse("GET /half HTT").is_err(), "EOF mid-line");
+    }
+
+    #[test]
+    fn oversized_head_is_rejected() {
+        let huge = format!("GET /x HTTP/1.1\r\nh: {}\r\n\r\n", "y".repeat(MAX_HEAD_BYTES));
+        assert!(parse(&huge).is_err());
+    }
+
+    #[test]
+    fn response_writer_roundtrips_through_client_parser() {
+        // Server side into a buffer...
+        let mut buf = Vec::new();
+        write_response(&mut buf, 200, "application/json", b"{\"ok\":true}").unwrap();
+        // ...client side over a real socket echoing that buffer.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            // drain the request, then replay the canned response
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            let _ = read_request(&mut r).unwrap();
+            s.write_all(&buf).unwrap();
+        });
+        let resp = request(addr, "GET", "/ok", None, Duration::from_secs(10)).unwrap();
+        server.join().unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.header("content-type"), Some("application/json"));
+        assert_eq!(resp.text().unwrap(), "{\"ok\":true}");
+        assert!(resp.chunks.is_empty());
+    }
+
+    #[test]
+    fn chunked_writer_roundtrips_with_chunk_boundaries() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            let _ = read_request(&mut r).unwrap();
+            let mut cw = ChunkedWriter::begin(&mut s, 200, "application/jsonl").unwrap();
+            cw.chunk(b"{\"event\":\"progress\"}\n").unwrap();
+            cw.chunk(b"").unwrap(); // skipped, must not terminate the stream
+            cw.chunk(b"{\"event\":\"done\"}\n").unwrap();
+            cw.finish().unwrap();
+        });
+        let resp = request(addr, "POST", "/stream", Some(b"{}"), Duration::from_secs(10)).unwrap();
+        server.join().unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.chunks.len(), 2, "per-event chunk boundaries survive");
+        assert_eq!(resp.chunks[0], b"{\"event\":\"progress\"}\n");
+        assert_eq!(
+            resp.text().unwrap(),
+            "{\"event\":\"progress\"}\n{\"event\":\"done\"}\n"
+        );
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod httpd;
 pub mod image;
 pub mod json;
 pub mod pool;

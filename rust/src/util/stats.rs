@@ -15,10 +15,32 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// The zero-sample summary (`n = 0`, every statistic 0.0). Report
+    /// builders use this so a run that completed nothing still reports
+    /// instead of panicking at summary time.
+    pub fn empty() -> Summary {
+        Summary {
+            n: 0,
+            mean: 0.0,
+            std: 0.0,
+            min: 0.0,
+            p50: 0.0,
+            p90: 0.0,
+            p95: 0.0,
+            p99: 0.0,
+            max: 0.0,
+        }
+    }
+
+    /// Total on any input: empty slices summarize to [`Summary::empty`],
+    /// and NaN samples sort via `total_cmp` (they rank greatest) instead
+    /// of panicking.
     pub fn from(samples: &[f64]) -> Summary {
-        assert!(!samples.is_empty(), "no samples");
+        if samples.is_empty() {
+            return Summary::empty();
+        }
         let mut s = samples.to_vec();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(|a, b| a.total_cmp(b));
         let n = s.len();
         let mean = s.iter().sum::<f64>() / n as f64;
         let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
@@ -89,6 +111,26 @@ mod tests {
         let balanced = scv(&[1.0, 1.0]);
         let skewed = scv(&[1.9, 0.1]);
         assert!(skewed > balanced + 0.5);
+    }
+
+    #[test]
+    fn summary_of_empty_is_zeroed_not_a_panic() {
+        let s = Summary::from(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+        assert_eq!(s.p99, 0.0);
+        assert_eq!(s.max, 0.0);
+    }
+
+    #[test]
+    fn summary_tolerates_nan_samples() {
+        // total_cmp ranks NaN greatest, so min/p50 stay meaningful and
+        // nothing panics.
+        let s = Summary::from(&[2.0, f64::NAN, 1.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.p50, 2.0);
+        assert!(s.max.is_nan());
     }
 
     #[test]

@@ -1,0 +1,354 @@
+//! Socket-path integration tests for the HTTP front door: the probe
+//! reports, classify ingress, and stream ingress served over a real
+//! `TcpListener`, checked against the in-process contracts —
+//!
+//! 1. probe JSON over the wire matches the in-process `to_json()` shapes;
+//! 2. a classify POST answers logits **bit-identical** to an in-process
+//!    fleet serving the same pixels (seeded weights + every kernel backend
+//!    bit-exact + shortest-roundtrip JSON numbers);
+//! 3. malformed bodies, wrong methods, and unknown paths map to 4xx
+//!    without wedging the server;
+//! 4. `/stream` answers a chunked event stream ending in deterministic
+//!    logits;
+//! 5. chaos: killing a worker under live HTTP traffic completes every
+//!    request on the survivors;
+//! 6. (serving-path hardening) a zero-request serve run exits with an
+//!    empty report instead of panicking in `Summary::from`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use shiftaddvit::coordinator::backend::{InferenceBackend, NativeBackend};
+use shiftaddvit::coordinator::batcher::Request;
+use shiftaddvit::coordinator::config::{ServerConfig, Workload};
+use shiftaddvit::coordinator::server::{serve_auto, serve_stream};
+use shiftaddvit::coordinator::sessions::{SchedulerMode, SessionEngine};
+use shiftaddvit::data::synth_images;
+use shiftaddvit::fleet::http::{FrontDoorConfig, HttpFrontDoor};
+use shiftaddvit::fleet::policy::PolicyKind;
+use shiftaddvit::fleet::router::ReadinessReport;
+use shiftaddvit::fleet::worker::BackendFactory;
+use shiftaddvit::fleet::{Router, RouterConfig};
+use shiftaddvit::infer::session::{SessionSpec, StreamAttn, StreamModel};
+use shiftaddvit::kernels::planner::Planner;
+use shiftaddvit::kernels::registry::KernelRegistry;
+use shiftaddvit::model::ops::{Lin, Variant};
+use shiftaddvit::util::httpd;
+use shiftaddvit::util::json::Json;
+use shiftaddvit::util::rng::XorShift64;
+
+const CLIENT_TIMEOUT: Duration = Duration::from_secs(120);
+
+fn factory() -> BackendFactory {
+    Arc::new(|| {
+        let b: Box<dyn InferenceBackend> = Box::new(NativeBackend::tiny(Variant::SHIFTADD_MOE));
+        Ok(b)
+    })
+}
+
+fn fleet(workers: usize, max_batch: usize, step_delay_ms: f64) -> Router {
+    Router::new(
+        RouterConfig {
+            workers,
+            max_batch,
+            policy: PolicyKind::RoundRobin,
+            step_delay_ms,
+            ..RouterConfig::default()
+        },
+        factory(),
+    )
+    .expect("fleet starts")
+}
+
+fn stream_engine() -> SessionEngine {
+    let planner = Arc::new(Planner::new(Arc::new(KernelRegistry::with_defaults())));
+    let model = StreamModel::new(SessionSpec::tiny(StreamAttn::LinearAdd, Lin::Shift), planner);
+    SessionEngine::with_mode(model, 4, 4, SchedulerMode::Disaggregated { prefill_budget: 16 })
+}
+
+fn door_cfg() -> FrontDoorConfig {
+    FrontDoorConfig {
+        handlers: 8,
+        request_timeout: CLIENT_TIMEOUT,
+        io_timeout: Duration::from_secs(60),
+        ..FrontDoorConfig::default()
+    }
+}
+
+fn get(addr: std::net::SocketAddr, path: &str) -> httpd::HttpResponse {
+    httpd::request(addr, "GET", path, None, CLIENT_TIMEOUT).expect("GET")
+}
+
+fn post(addr: std::net::SocketAddr, path: &str, body: &str) -> httpd::HttpResponse {
+    httpd::request(addr, "POST", path, Some(body.as_bytes()), CLIENT_TIMEOUT).expect("POST")
+}
+
+fn classify_body(pixels: &[f32], label: Option<usize>) -> String {
+    let mut rows = vec![(
+        "pixels",
+        Json::Arr(pixels.iter().map(|&p| Json::Num(p as f64)).collect()),
+    )];
+    if let Some(l) = label {
+        rows.push(("label", Json::num(l as f64)));
+    }
+    Json::obj(rows).to_string()
+}
+
+fn logits_f32(j: &Json, key: &str) -> Vec<f32> {
+    j.get(key)
+        .and_then(|v| v.as_arr())
+        .expect("logits array")
+        .iter()
+        .map(|v| v.as_f64().expect("logit is a number") as f32)
+        .collect()
+}
+
+#[test]
+fn probes_over_http_match_in_process_shapes() {
+    let door = HttpFrontDoor::start(fleet(2, 4, 0.0), None, "127.0.0.1:0", door_cfg()).unwrap();
+    let addr = door.addr();
+
+    let live = get(addr, "/liveness");
+    assert_eq!(live.status, 200);
+    let j = Json::parse(live.text().unwrap()).unwrap();
+    assert_eq!(j.get("live").and_then(|v| v.as_str()), Some("true"));
+    let rows = j.get("workers").and_then(|v| v.as_arr()).unwrap();
+    assert_eq!(rows.len(), 2);
+    for row in rows {
+        assert_eq!(row.get("state").and_then(|v| v.as_str()), Some("ready"));
+    }
+
+    // Readiness has no heartbeat-varying fields, so the wire bytes must be
+    // EXACTLY the in-process report's serialization.
+    let ready = get(addr, "/readiness");
+    assert_eq!(ready.status, 200);
+    let want = ReadinessReport {
+        total: 2,
+        ready_workers: 2,
+        ready: true,
+        bundle_digest: None,
+    }
+    .to_json()
+    .to_string();
+    assert_eq!(ready.text().unwrap(), want);
+
+    let metrics = get(addr, "/metrics");
+    assert_eq!(metrics.status, 200);
+    let j = Json::parse(metrics.text().unwrap()).unwrap();
+    assert_eq!(
+        j.get("policy").and_then(|v| v.as_str()),
+        Some("round-robin")
+    );
+    assert_eq!(j.get("workers").and_then(|v| v.as_arr()).unwrap().len(), 2);
+    assert!(j.get("engine").is_some());
+    assert!(j.get("front_door").is_some(), "http ingress section");
+
+    door.shutdown().unwrap();
+}
+
+#[test]
+fn classify_over_http_is_bit_identical_to_in_process() {
+    // In-process baseline: a separately built fleet (same seeded weights;
+    // every kernel backend is bit-exact, so planner choices can't diverge
+    // the numbers).
+    let sample = synth_images::gen_image(42_424);
+    let mut baseline = fleet(1, 4, 0.0);
+    let ticket = baseline
+        .submit(Request {
+            id: 0,
+            pixels: sample.pixels.clone(),
+            label: Some(sample.label),
+            arrived: Instant::now(),
+        })
+        .unwrap();
+    let want = baseline.poll_wait(&ticket, CLIENT_TIMEOUT).unwrap();
+    baseline.shutdown().unwrap();
+
+    let door = HttpFrontDoor::start(fleet(2, 4, 0.0), None, "127.0.0.1:0", door_cfg()).unwrap();
+    let resp = post(
+        door.addr(),
+        "/classify",
+        &classify_body(&sample.pixels, Some(sample.label)),
+    );
+    assert_eq!(resp.status, 200, "body: {}", resp.text().unwrap_or(""));
+    let j = Json::parse(resp.text().unwrap()).unwrap();
+    assert_eq!(j.get("id").and_then(|v| v.as_usize()), Some(0));
+    let got = logits_f32(&j, "logits");
+    assert_eq!(got, want.logits, "logits must survive the socket exactly");
+    let pred = j.get("pred").and_then(|v| v.as_usize()).unwrap();
+    assert!(pred < synth_images::NUM_CLASSES);
+
+    // The ingress audit trail saw the request.
+    let m = Json::parse(get(door.addr(), "/metrics").text().unwrap()).unwrap();
+    let front = m.get("front_door").unwrap();
+    assert_eq!(front.get("requests").and_then(|v| v.as_usize()), Some(1));
+    assert_eq!(
+        front.get("request_ids").unwrap().usize_vec().unwrap(),
+        vec![0]
+    );
+
+    door.shutdown().unwrap();
+}
+
+#[test]
+fn malformed_requests_map_to_4xx_without_wedging() {
+    let door = HttpFrontDoor::start(
+        fleet(1, 4, 0.0),
+        Some(stream_engine()),
+        "127.0.0.1:0",
+        door_cfg(),
+    )
+    .unwrap();
+    let addr = door.addr();
+
+    assert_eq!(post(addr, "/classify", "this is not json").status, 400);
+    assert_eq!(
+        post(addr, "/classify", r#"{"pixels": [1.0, 2.0, 3.0]}"#).status,
+        400,
+        "wrong pixel count"
+    );
+    assert_eq!(
+        post(addr, "/classify", r#"{"nope": true}"#).status,
+        400,
+        "missing pixels key"
+    );
+    assert_eq!(post(addr, "/stream", r#"{"tokens": [1.0]}"#).status, 400);
+    assert_eq!(post(addr, "/stream", "garbage").status, 400);
+    assert_eq!(get(addr, "/classify").status, 405, "wrong method");
+    assert_eq!(get(addr, "/no-such-route").status, 404);
+
+    // Every error body carries a machine-readable reason.
+    let resp = post(addr, "/classify", "not json");
+    assert!(Json::parse(resp.text().unwrap())
+        .unwrap()
+        .get("error")
+        .is_some());
+
+    // None of that wedged the server.
+    assert_eq!(get(addr, "/readiness").status, 200);
+    door.shutdown().unwrap();
+}
+
+#[test]
+fn stream_over_http_sends_progress_then_deterministic_done() {
+    let door = HttpFrontDoor::start(
+        fleet(1, 4, 0.0),
+        Some(stream_engine()),
+        "127.0.0.1:0",
+        door_cfg(),
+    )
+    .unwrap();
+    let dim = SessionSpec::tiny(StreamAttn::LinearAdd, Lin::Shift).dim;
+    let n_tokens = 6usize;
+    let tokens: Vec<f32> = XorShift64::new(0x70C0).normals(n_tokens * dim);
+    let body = Json::obj(vec![(
+        "tokens",
+        Json::Arr(tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+    )])
+    .to_string();
+
+    let run = |addr| {
+        let resp = post(addr, "/stream", &body);
+        assert_eq!(resp.status, 200);
+        assert_eq!(
+            resp.header("transfer-encoding").map(str::to_ascii_lowercase),
+            Some("chunked".to_string())
+        );
+        let events: Vec<Json> = resp
+            .text()
+            .unwrap()
+            .lines()
+            .map(|l| Json::parse(l).expect("each chunk line is JSON"))
+            .collect();
+        assert!(!events.is_empty());
+        // progress strictly advances, then exactly one final done event
+        let mut last_fed = 0usize;
+        for e in &events[..events.len() - 1] {
+            assert_eq!(e.get("event").and_then(|v| v.as_str()), Some("progress"));
+            let fed = e.get("fed").and_then(|v| v.as_usize()).unwrap();
+            assert!(fed > last_fed, "progress must advance ({fed} vs {last_fed})");
+            assert_eq!(
+                e.get("total").and_then(|v| v.as_usize()),
+                Some(n_tokens),
+                "total is the session's token count"
+            );
+            last_fed = fed;
+        }
+        let done = events.last().unwrap();
+        assert_eq!(done.get("event").and_then(|v| v.as_str()), Some("done"));
+        assert_eq!(done.get("tokens").and_then(|v| v.as_usize()), Some(n_tokens));
+        logits_f32(done, "logits")
+    };
+
+    let first = run(door.addr());
+    assert!(!first.is_empty());
+    let second = run(door.addr());
+    assert_eq!(first, second, "same tokens, same engine, same logits");
+    door.shutdown().unwrap();
+}
+
+#[test]
+fn killing_a_worker_under_live_http_traffic_loses_nothing() {
+    // Slow steps + batch-of-1 hold requests in flight long enough for the
+    // kill to strand some of them mid-service.
+    let door = HttpFrontDoor::start(fleet(3, 1, 40.0), None, "127.0.0.1:0", door_cfg()).unwrap();
+    let addr = door.addr();
+    let n = 8usize;
+    let clients: Vec<_> = (0..n)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let sample = synth_images::gen_image(90_000 + i as u32);
+                let resp = post(addr, "/classify", &classify_body(&sample.pixels, None));
+                (i, resp)
+            })
+        })
+        .collect();
+
+    std::thread::sleep(Duration::from_millis(120));
+    door.kill_worker(0).expect("worker 0 was alive");
+
+    for c in clients {
+        let (i, resp) = c.join().expect("client thread");
+        assert_eq!(
+            resp.status,
+            200,
+            "request {i} failed: {}",
+            resp.text().unwrap_or("")
+        );
+        let j = Json::parse(resp.text().unwrap()).unwrap();
+        assert_eq!(
+            logits_f32(&j, "logits").len(),
+            synth_images::NUM_CLASSES,
+            "request {i} answered real logits"
+        );
+    }
+    door.shutdown().unwrap();
+}
+
+#[test]
+fn zero_request_serve_exits_with_an_empty_report() {
+    // Regression: report builders called Summary::from on empty samples,
+    // which used to assert. A serve run with no traffic must produce an
+    // all-zero report, not a panic.
+    let cfg = ServerConfig {
+        requests: 0,
+        ..ServerConfig::default()
+    };
+    let report = serve_auto(&cfg).expect("zero-request classify serve completes");
+    assert_eq!(report.metrics.requests, 0);
+    assert_eq!(report.latency.n, 0);
+    assert_eq!(report.latency.p99, 0.0);
+    assert_eq!(report.accuracy, 0.0);
+    report.print(); // must not panic either
+
+    let stream_cfg = ServerConfig {
+        requests: 0,
+        workload: Workload::Stream,
+        ..ServerConfig::default()
+    };
+    let report = serve_stream(&stream_cfg).expect("zero-session stream serve completes");
+    assert_eq!(report.sessions, 0);
+    assert_eq!(report.latency.n, 0);
+    assert_eq!(report.token_latency.n, 0);
+    report.print();
+}
