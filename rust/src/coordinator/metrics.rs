@@ -127,6 +127,38 @@ impl Metrics {
         Some((imp, load))
     }
 
+    /// Bound every per-sample vector to its most recent `cap` entries,
+    /// leaving the scalar counters (which carry the full totals) intact.
+    /// Long-running servers — the HTTP front door records into one Metrics
+    /// forever — call this after recording so memory stays O(cap); batch
+    /// serve runs never call it and keep their complete sample sets.
+    pub fn cap_samples(&mut self, cap: usize) {
+        fn trim(v: &mut Vec<f64>, cap: usize) {
+            if v.len() > cap {
+                let excess = v.len() - cap;
+                v.drain(..excess);
+            }
+        }
+        for v in self.stages.values_mut() {
+            trim(v, cap);
+        }
+        for v in &mut self.expert_times {
+            trim(v, cap);
+        }
+        trim(&mut self.padding_waste, cap);
+        trim(&mut self.batch_occupancy, cap);
+        trim(&mut self.step_tokens, cap);
+        trim(&mut self.attn_dispatches_per_layer, cap);
+        trim(&mut self.live_sessions, cap);
+        trim(&mut self.decode_tokens, cap);
+        trim(&mut self.prefill_tokens, cap);
+        trim(&mut self.prefill_queue, cap);
+        if self.request_ids.len() > cap {
+            let excess = self.request_ids.len() - cap;
+            self.request_ids.drain(..excess);
+        }
+    }
+
     /// Fold another engine's metrics into this one (fleet aggregation:
     /// stage samples concatenate, counters add, gauges concatenate, the
     /// chosen-backend gauge sums per id, request ids concatenate).
@@ -422,6 +454,27 @@ mod tests {
         assert_eq!(m.chosen_backends.get("matadd/simd"), Some(&1));
         assert!(m.chosen_backends.get("matshift/rowpar").is_none());
         m.print(); // should not panic
+    }
+
+    #[test]
+    fn cap_samples_keeps_most_recent_and_preserves_counters() {
+        let mut m = Metrics::default();
+        for i in 0..10 {
+            m.record("http_classify", i as f64);
+            m.request_ids.push(i);
+            m.batch_occupancy.push(i as f64);
+            m.requests += 1;
+        }
+        m.cap_samples(4);
+        assert_eq!(m.requests, 10, "counters keep the full total");
+        assert_eq!(m.stage_summary("http_classify").unwrap().n, 4);
+        assert_eq!(m.request_ids, vec![6, 7, 8, 9], "most recent survive");
+        assert_eq!(m.batch_occupancy, vec![6.0, 7.0, 8.0, 9.0]);
+        // idempotent under the cap
+        m.cap_samples(4);
+        assert_eq!(m.request_ids.len(), 4);
+        m.cap_samples(100);
+        assert_eq!(m.request_ids.len(), 4, "a looser cap drops nothing");
     }
 
     #[test]

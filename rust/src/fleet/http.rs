@@ -7,7 +7,8 @@
 //!   as JSON (200 when live/ready, 503 otherwise), byte-identical to the
 //!   in-process `to_json()` shapes;
 //! - `GET /metrics` — [`Router::metrics_json`] plus a `front_door` section
-//!   (HTTP-stage latencies and the ingress request-id audit trail);
+//!   (HTTP-stage latencies and a bounded recent window of the ingress
+//!   request-id audit trail — the full totals live in the counters);
 //! - `POST /classify` — `{"pixels": [f32; H·W·3], "label"?: n}` →
 //!   submit to the fleet, block on the done table's condvar, answer
 //!   `{"id", "pred", "logits", ...}` (the logits round-trip JSON exactly —
@@ -45,6 +46,15 @@ use crate::infer::session::{SessionSpec, StreamAttn, StreamModel};
 use crate::util::httpd::{read_request, write_response, ChunkedWriter, HttpRequest};
 use crate::util::json::Json;
 use crate::util::pool::Pool;
+
+/// Most-recent per-sample entries the front door's Metrics keeps (stage
+/// latencies, audit-trail ids, engine gauges). A long-running server must
+/// not grow a vector per request served; counters keep the full totals.
+const SAMPLE_CAP: usize = 4096;
+
+/// Most-recent request ids the `/metrics` front-door section reports (the
+/// in-memory trail keeps [`SAMPLE_CAP`]; the wire response stays small).
+const RECENT_IDS: usize = 64;
 
 /// Front-door knobs.
 #[derive(Clone, Copy, Debug)]
@@ -134,7 +144,11 @@ impl StreamService {
                         }
                         continue;
                     }
-                    engine.step(&mut metrics.lock().unwrap());
+                    {
+                        let mut m = metrics.lock().unwrap();
+                        engine.step(&mut m);
+                        m.cap_samples(SAMPLE_CAP);
+                    }
                     live.retain_mut(|(t, events, last_fed)| {
                         if let Some(out) = engine.poll(t) {
                             // a dropped receiver just means the client went
@@ -303,6 +317,23 @@ fn respond_error(sock: &mut TcpStream, status: u16, msg: &str) {
     let _ = write_response(sock, status, "application/json", &error_body(msg));
 }
 
+/// Replace a Metrics JSON section's full `request_ids` audit list with a
+/// bounded `recent_request_ids` window, keeping the `/metrics` response
+/// size independent of how long the server has been up (the `requests`
+/// counter carries the total).
+fn bound_request_ids(section: &mut Json) {
+    if let Json::Obj(map) = section {
+        if let Some(ids) = map.remove("request_ids") {
+            let ids = ids.as_arr().unwrap_or(&[]);
+            let start = ids.len().saturating_sub(RECENT_IDS);
+            map.insert(
+                "recent_request_ids".to_string(),
+                Json::Arr(ids[start..].to_vec()),
+            );
+        }
+    }
+}
+
 fn handle_connection(shared: &Shared, mut sock: TcpStream) {
     let _ = sock.set_read_timeout(Some(shared.cfg.io_timeout));
     let _ = sock.set_write_timeout(Some(shared.cfg.io_timeout));
@@ -331,10 +362,12 @@ fn handle_connection(shared: &Shared, mut sock: TcpStream) {
         ("GET", "/metrics") => {
             let mut j = shared.router.lock().unwrap().metrics_json();
             if let Json::Obj(map) = &mut j {
-                map.insert(
-                    "front_door".to_string(),
-                    shared.metrics.lock().unwrap().to_json(),
-                );
+                if let Some(engine) = map.get_mut("engine") {
+                    bound_request_ids(engine);
+                }
+                let mut front = shared.metrics.lock().unwrap().to_json();
+                bound_request_ids(&mut front);
+                map.insert("front_door".to_string(), front);
             }
             respond(&mut sock, 200, &j);
         }
@@ -403,6 +436,11 @@ fn wait_for(
             }
         }
         if t0.elapsed() > timeout {
+            // Give up on the request for real: retire the in-flight copy
+            // (so supervision stops resubmitting it) and cancel its
+            // done-table id (so the worker's late completion is dropped
+            // instead of pinned in the table forever).
+            shared.router.lock().unwrap().acknowledge(ticket.id);
             return Err((
                 504,
                 format!("request {} not completed within {timeout:?}", ticket.id),
@@ -457,6 +495,7 @@ fn classify(shared: &Shared, req: &HttpRequest, sock: &mut TcpStream) {
     m.record("http_classify", t0.elapsed().as_secs_f64() * 1e3);
     m.requests += 1;
     m.request_ids.push(id);
+    m.cap_samples(SAMPLE_CAP);
 }
 
 /// Parse a `/stream` body: `{"tokens": [f32; n·dim]}` with `n ≥ 1`.
@@ -504,7 +543,6 @@ fn stream(shared: &Shared, req: &HttpRequest, sock: &mut TcpStream) {
         Ok(t) => t,
         Err(e) => return respond_error(sock, 400, &format!("{e:#}")),
     };
-    let n_tokens = tokens.len() / svc.dim;
     let (etx, erx) = mpsc::channel();
     if let Err(e) = svc.submit(tokens, etx) {
         return respond_error(sock, 503, &format!("{e:#}"));
@@ -564,6 +602,7 @@ fn stream(shared: &Shared, req: &HttpRequest, sock: &mut TcpStream) {
     let mut m = shared.metrics.lock().unwrap();
     m.record("http_stream", t0.elapsed().as_secs_f64() * 1e3);
     m.requests += 1;
+    m.cap_samples(SAMPLE_CAP);
 }
 
 /// Build the `/stream` engine from a [`ServerConfig`] (native only): the

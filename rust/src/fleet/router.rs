@@ -342,12 +342,16 @@ impl Router {
         Arc::clone(&self.done)
     }
 
-    /// Drop the in-flight bookkeeping for a request whose output was taken
-    /// straight from the done map (callers that wait on the done table's
-    /// condvar instead of [`Router::poll_wait`] — the HTTP front door —
-    /// must acknowledge, or the resubmission copy leaks).
+    /// Retire a request the caller is finished with — either its output
+    /// was taken straight off the done table's condvar (the HTTP front
+    /// door), or the caller gave up on it (timeout). Drops the in-flight
+    /// resubmission copy AND cancels the id in the done table, so an
+    /// output filed late — by a worker finishing after a timeout, or by a
+    /// resubmission that raced the delivery — is dropped instead of
+    /// pinned in the table forever.
     pub fn acknowledge(&mut self, id: u64) {
         self.inflight.remove(&id);
+        self.done.cancel(id);
     }
 
     /// Health sweep: reap workers whose thread died, then resubmit every
@@ -423,13 +427,17 @@ impl Router {
             }
             self.supervise()?;
             if t0.elapsed() > timeout {
+                // Abandon the request: retire its in-flight copy and cancel
+                // the done-table id, so a worker completing it after this
+                // deadline doesn't leak the output into the table.
+                self.acknowledge(ticket.id);
                 return Err(anyhow!(
                     "request {} not completed within {timeout:?}",
                     ticket.id
                 ));
             }
             if let Some(out) = self.done.wait_remove(ticket.id, Duration::from_millis(5)) {
-                self.inflight.remove(&ticket.id);
+                self.acknowledge(ticket.id);
                 return Ok(out);
             }
         }
@@ -637,6 +645,38 @@ mod tests {
         assert!(r.readiness().to_json().get("ready").is_some());
         r.shutdown().unwrap();
         assert_eq!(r.worker_count(), 0);
+    }
+
+    #[test]
+    fn timed_out_request_does_not_leak_its_output() {
+        // Slow steps guarantee the deadline passes before the work lands.
+        let mut r = Router::new(
+            RouterConfig {
+                workers: 1,
+                max_batch: 1,
+                policy: PolicyKind::RoundRobin,
+                step_delay_ms: 100.0,
+                ..RouterConfig::default()
+            },
+            factory(),
+        )
+        .expect("fleet starts");
+        let t = r.submit(request(0)).unwrap();
+        assert!(
+            r.poll_wait(&t, Duration::from_millis(1)).is_err(),
+            "deadline too tight to meet"
+        );
+        // The worker still completes the abandoned request; the cancel
+        // tombstone must drop its output instead of retaining it forever.
+        let done = r.done_map();
+        let t0 = Instant::now();
+        while r.liveness().workers[0].served < 1 {
+            assert!(t0.elapsed() < Duration::from_secs(60), "worker never finished");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(done.is_empty(), "cancelled output must not be retained");
+        assert!(r.poll(&t).is_none());
+        r.shutdown().unwrap();
     }
 
     #[test]

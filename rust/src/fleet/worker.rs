@@ -14,7 +14,7 @@
 //! worker that produced them — the router polls one map no matter which
 //! worker (or which *re*-placement, after a death) served a request.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, RecvTimeoutError, TryRecvError};
 use std::sync::{Arc, Condvar, Mutex};
@@ -35,14 +35,39 @@ pub type BackendFactory = Arc<dyn Fn() -> Result<Box<dyn InferenceBackend>> + Se
 /// Fleet-wide completed-output map: fleet request id → output.
 pub type DoneMap = Arc<DoneTable>;
 
+/// Most-recent per-sample metrics entries a worker retains. Bounded serve
+/// runs stay far below this (their end-of-run reports see every sample);
+/// a worker behind the HTTP front door steps forever and must not grow
+/// its stage/audit vectors without limit — the counters keep the totals.
+const METRICS_SAMPLE_CAP: usize = 4096;
+
+/// Cancelled-id tombstones the table remembers, so a worker filing a
+/// cancelled request's output late finds the tombstone and drops it.
+/// Bounded: the set only needs to cover the cancel→late-file window, and
+/// an evicted tombstone degrades to (at worst) one retained output.
+const CANCELLED_CAP: usize = 4096;
+
 /// The condvar-backed table behind [`DoneMap`]. Workers file outputs with
 /// [`DoneTable::insert`], which notifies every waiter, so pollers block on
 /// [`DoneTable::wait_remove`] instead of sleep-spinning — important once
 /// many HTTP handlers wait in `Router::poll_wait` concurrently.
+///
+/// Requests that time out (or were delivered while a resubmission raced)
+/// are [`DoneTable::cancel`]led: any already-filed output is dropped on
+/// the spot, and a tombstone drops the output if a worker files it later —
+/// otherwise every abandoned ticket would pin a logits vector forever.
 #[derive(Default)]
 pub struct DoneTable {
-    map: Mutex<HashMap<u64, RequestOutput>>,
+    inner: Mutex<DoneInner>,
     completed: Condvar,
+}
+
+#[derive(Default)]
+struct DoneInner {
+    map: HashMap<u64, RequestOutput>,
+    cancelled: HashSet<u64>,
+    /// insertion order of `cancelled`, for FIFO eviction past the cap
+    cancelled_order: VecDeque<u64>,
 }
 
 impl DoneTable {
@@ -50,23 +75,49 @@ impl DoneTable {
         Arc::new(DoneTable::default())
     }
 
-    /// File one completed output and wake every waiter.
+    /// File one completed output and wake every waiter. Output for a
+    /// cancelled id is dropped (consuming the tombstone — fleet ids are
+    /// never reused, so at most one late filing can arrive per cancel).
     pub fn insert(&self, fleet_id: u64, out: RequestOutput) {
-        self.map.lock().unwrap().insert(fleet_id, out);
+        let mut inner = self.inner.lock().unwrap();
+        if inner.cancelled.remove(&fleet_id) {
+            inner.cancelled_order.retain(|id| *id != fleet_id);
+            return;
+        }
+        inner.map.insert(fleet_id, out);
+        drop(inner);
         self.completed.notify_all();
     }
 
     /// Remove and return `fleet_id`'s output, if filed.
     pub fn remove(&self, fleet_id: u64) -> Option<RequestOutput> {
-        self.map.lock().unwrap().remove(&fleet_id)
+        self.inner.lock().unwrap().map.remove(&fleet_id)
+    }
+
+    /// Give up on `fleet_id`: drop its output if already filed, and leave
+    /// a tombstone so a late filing is dropped instead of retained forever
+    /// (timed-out front-door requests, delivered-then-resubmitted races).
+    pub fn cancel(&self, fleet_id: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.map.remove(&fleet_id).is_some() {
+            return; // the output existed and is now dropped; no late filing follows
+        }
+        if inner.cancelled.insert(fleet_id) {
+            inner.cancelled_order.push_back(fleet_id);
+            while inner.cancelled_order.len() > CANCELLED_CAP {
+                if let Some(old) = inner.cancelled_order.pop_front() {
+                    inner.cancelled.remove(&old);
+                }
+            }
+        }
     }
 
     pub fn contains(&self, fleet_id: u64) -> bool {
-        self.map.lock().unwrap().contains_key(&fleet_id)
+        self.inner.lock().unwrap().map.contains_key(&fleet_id)
     }
 
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        self.inner.lock().unwrap().map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -76,7 +127,7 @@ impl DoneTable {
     /// Snapshot of the filed fleet ids (the supervision pass checks these
     /// before resubmitting stranded work).
     pub fn ids(&self) -> HashSet<u64> {
-        self.map.lock().unwrap().keys().copied().collect()
+        self.inner.lock().unwrap().map.keys().copied().collect()
     }
 
     /// Block until `fleet_id`'s output is filed or `timeout` elapses,
@@ -84,12 +135,12 @@ impl DoneTable {
     /// caller loops, interleaving its own bookkeeping (supervision,
     /// deadline checks) between slices.
     pub fn wait_remove(&self, fleet_id: u64, timeout: Duration) -> Option<RequestOutput> {
-        let mut map = self.map.lock().unwrap();
-        if let Some(out) = map.remove(&fleet_id) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(out) = inner.map.remove(&fleet_id) {
             return Some(out);
         }
-        let (mut map, _) = self.completed.wait_timeout(map, timeout).unwrap();
-        map.remove(&fleet_id)
+        let (mut inner, _) = self.completed.wait_timeout(inner, timeout).unwrap();
+        inner.map.remove(&fleet_id)
     }
 }
 
@@ -462,7 +513,9 @@ fn worker_main(
             }
             let step = {
                 let mut metrics = shared.metrics.lock().unwrap();
-                backend.step(max_batch.max(1), &mut metrics)
+                let r = backend.step(max_batch.max(1), &mut metrics);
+                metrics.cap_samples(METRICS_SAMPLE_CAP);
+                r
             };
             if let Err(e) = step {
                 shared.fail(format!("worker {id} engine step failed: {e}"));
@@ -567,6 +620,38 @@ mod tests {
         assert_eq!(w.health(), WorkerHealth::Dead);
         assert!(w.error().unwrap().contains("no engine here"));
         w.join();
+    }
+
+    fn output(request_id: usize) -> RequestOutput {
+        RequestOutput {
+            id: 0,
+            request_id,
+            logits: vec![1.0],
+            dispatch_mask_blk0: Vec::new(),
+            batch_ms: 0.1,
+            modularized_ms: 0.1,
+            batch_size: 1,
+            arrived: Instant::now(),
+            finished: Instant::now(),
+            label: None,
+        }
+    }
+
+    #[test]
+    fn cancel_drops_filed_outputs_and_tombstones_late_filings() {
+        let done = DoneTable::new();
+        // Cancel after filing: the output is dropped on the spot.
+        done.insert(1, output(10));
+        done.cancel(1);
+        assert!(done.is_empty(), "cancel must drop the filed output");
+        assert!(done.remove(1).is_none());
+        // Cancel before filing: the tombstone drops the late filing.
+        done.cancel(2);
+        done.insert(2, output(20));
+        assert!(!done.contains(2), "late filing of a cancelled id is dropped");
+        // The tombstone is consumed — an unrelated later id still files.
+        done.insert(3, output(30));
+        assert!(done.contains(3));
     }
 
     #[test]

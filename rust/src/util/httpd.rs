@@ -54,11 +54,19 @@ impl HttpRequest {
 /// EOF before any byte; EOF mid-line is an error.
 fn read_line(r: &mut impl BufRead, budget: &mut usize) -> Result<Option<String>> {
     let mut buf = Vec::new();
-    let n = r.read_until(b'\n', &mut buf)?;
+    // Bound the read itself, not just the post-hoc budget check: a peer
+    // streaming an endless line with no '\n' must error here instead of
+    // growing `buf` without limit (remote memory-exhaustion guard).
+    let n = r
+        .take((*budget as u64).saturating_add(1))
+        .read_until(b'\n', &mut buf)?;
     if n == 0 {
         return Ok(None);
     }
     if *buf.last().unwrap() != b'\n' {
+        if n > *budget {
+            bail!("request head exceeds {MAX_HEAD_BYTES} bytes");
+        }
         bail!("truncated line (connection closed mid-header)");
     }
     *budget = budget
@@ -389,6 +397,21 @@ mod tests {
     fn oversized_head_is_rejected() {
         let huge = format!("GET /x HTTP/1.1\r\nh: {}\r\n\r\n", "y".repeat(MAX_HEAD_BYTES));
         assert!(parse(&huge).is_err());
+    }
+
+    #[test]
+    fn endless_header_line_errors_without_buffering_unboundedly() {
+        // A peer that streams forever without ever sending '\n' must hit
+        // the head budget mid-read, not accumulate bytes until OOM.
+        struct Endless;
+        impl Read for Endless {
+            fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+                buf.fill(b'a');
+                Ok(buf.len())
+            }
+        }
+        let err = read_request(&mut BufReader::new(Endless)).unwrap_err();
+        assert!(err.to_string().contains("exceeds"), "got: {err:#}");
     }
 
     #[test]

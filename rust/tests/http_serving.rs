@@ -178,14 +178,16 @@ fn classify_over_http_is_bit_identical_to_in_process() {
     let pred = j.get("pred").and_then(|v| v.as_usize()).unwrap();
     assert!(pred < synth_images::NUM_CLASSES);
 
-    // The ingress audit trail saw the request.
+    // The ingress audit trail saw the request (reported as a bounded
+    // recent window, so a long-running /metrics response can't grow).
     let m = Json::parse(get(door.addr(), "/metrics").text().unwrap()).unwrap();
     let front = m.get("front_door").unwrap();
     assert_eq!(front.get("requests").and_then(|v| v.as_usize()), Some(1));
     assert_eq!(
-        front.get("request_ids").unwrap().usize_vec().unwrap(),
+        front.get("recent_request_ids").unwrap().usize_vec().unwrap(),
         vec![0]
     );
+    assert!(front.get("request_ids").is_none(), "full id list must not ship");
 
     door.shutdown().unwrap();
 }
