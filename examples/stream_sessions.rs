@@ -112,8 +112,8 @@ fn main() -> Result<()> {
             );
         }
     }
-    let dec: f64 = metrics.decode_tokens.iter().sum();
-    let pre: f64 = metrics.prefill_tokens.iter().sum();
+    let dec: f64 = metrics.decode_tokens.sum();
+    let pre: f64 = metrics.prefill_tokens.sum();
     println!("bit-exactness under disaggregation ✓  ({dec:.0} decode + {pre:.0} prefill tokens)");
     Ok(())
 }

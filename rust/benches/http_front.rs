@@ -89,6 +89,7 @@ fn main() {
                 pixels: sample.pixels,
                 label: None,
                 arrived: t,
+                trace: shiftaddvit::obs::trace::TraceCtx::NONE,
             })
             .expect("submit");
         router.poll_wait(&ticket, TIMEOUT).expect("poll");

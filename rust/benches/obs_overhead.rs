@@ -1,0 +1,125 @@
+//! Observability overhead: the same in-process classify traffic timed with
+//! (a) tracing off, (b) the span ring recording, and (c) recording plus a
+//! Chrome-JSON export per batch of requests. The deltas are the full cost
+//! of the span plumbing on the serving path — target: ring-on throughput
+//! within 2% of tracing-off. Emits a table and a trailing JSON object.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use shiftaddvit::coordinator::backend::{InferenceBackend, NativeBackend};
+use shiftaddvit::coordinator::batcher::Request;
+use shiftaddvit::data::synth_images;
+use shiftaddvit::fleet::worker::BackendFactory;
+use shiftaddvit::fleet::{Router, RouterConfig};
+use shiftaddvit::model::ops::Variant;
+use shiftaddvit::obs::trace as otrace;
+use shiftaddvit::util::bench::{f1, f2, Table};
+use shiftaddvit::util::json::Json;
+use shiftaddvit::util::stats::Summary;
+
+const REQUESTS: usize = 48;
+const WORKERS: usize = 2;
+const TIMEOUT: Duration = Duration::from_secs(120);
+
+fn factory() -> BackendFactory {
+    Arc::new(|| {
+        let b: Box<dyn InferenceBackend> = Box::new(NativeBackend::tiny(Variant::SHIFTADD_MOE));
+        Ok(b)
+    })
+}
+
+fn fleet() -> Router {
+    Router::new(
+        RouterConfig {
+            workers: WORKERS,
+            max_batch: 4,
+            ..RouterConfig::default()
+        },
+        factory(),
+    )
+    .expect("fleet starts")
+}
+
+/// Drive `REQUESTS` classify requests through an in-process fleet and
+/// return (throughput req/s, latency summary, spans recorded).
+fn run(mode: &str, export_each: usize) -> (f64, Summary, usize) {
+    otrace::reset();
+    let mut router = fleet();
+    let mut lat = Vec::with_capacity(REQUESTS);
+    let t0 = Instant::now();
+    for id in 0..REQUESTS {
+        let sample = synth_images::gen_image(9_100_000 + id as u32);
+        let t = Instant::now();
+        let root = otrace::root(mode);
+        let ticket = router
+            .submit(Request {
+                id,
+                pixels: sample.pixels,
+                label: None,
+                arrived: t,
+                trace: root.ctx(),
+            })
+            .expect("submit");
+        router.poll_wait(&ticket, TIMEOUT).expect("poll");
+        drop(root);
+        lat.push(t.elapsed().as_secs_f64() * 1e3);
+        if export_each > 0 && (id + 1) % export_each == 0 {
+            // live export, like a scraper hitting GET /trace mid-run
+            let _ = otrace::export_chrome().to_string();
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    router.shutdown().expect("fleet drains");
+    (REQUESTS as f64 / wall, Summary::from(&lat), otrace::len())
+}
+
+fn main() {
+    let mut table = Table::new(&["mode", "throughput (req/s)", "p50 (ms)", "p99 (ms)", "spans"]);
+    let mut rows = Vec::new();
+
+    // warmup run so planner autotuning doesn't land in any timed mode
+    otrace::set_enabled(false);
+    run("warmup", 0);
+
+    let mut results = Vec::new();
+    for (mode, enabled, export_each) in [
+        ("tracing-off", false, 0usize),
+        ("ring-on", true, 0),
+        ("ring+export", true, 16),
+    ] {
+        otrace::set_enabled(enabled);
+        let (rps, s, spans) = run(mode, export_each);
+        otrace::set_enabled(false);
+        table.row(&[
+            mode.to_string(),
+            f1(rps),
+            f2(s.p50),
+            f2(s.p99),
+            spans.to_string(),
+        ]);
+        rows.push(Json::obj(vec![
+            ("mode", Json::str(mode)),
+            ("throughput_rps", Json::num(rps)),
+            ("p50_ms", Json::num(s.p50)),
+            ("p99_ms", Json::num(s.p99)),
+            ("spans_recorded", Json::num(spans as f64)),
+        ]));
+        results.push((mode, rps));
+    }
+    otrace::reset();
+
+    table.print("span-ring overhead on the in-process classify path");
+    let off = results[0].1;
+    let on = results[1].1;
+    let overhead_pct = 100.0 * (off - on) / off;
+    println!("ring-on overhead vs tracing-off: {overhead_pct:.2}% (target < 2%)");
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("obs_overhead")),
+        ("workers", Json::num(WORKERS as f64)),
+        ("ring_on_overhead_pct", Json::num(overhead_pct)),
+        ("modes", Json::Arr(rows)),
+    ]);
+    println!("\n{json}");
+}

@@ -32,10 +32,9 @@ fn main() {
             Ok(report) => {
                 let t = &report.metrics.expert_times;
                 let n = &report.metrics.expert_tokens;
-                let mean = |v: &Vec<f64>| v.iter().sum::<f64>() / v.len().max(1) as f64;
                 let per = [
-                    mean(&t[0]) / (n[0].max(1) as f64 / report.metrics.batches.max(1) as f64),
-                    mean(&t[1]) / (n[1].max(1) as f64 / report.metrics.batches.max(1) as f64),
+                    t[0].mean() / (n[0].max(1) as f64 / report.metrics.batches.max(1) as f64),
+                    t[1].mean() / (n[1].max(1) as f64 / report.metrics.batches.max(1) as f64),
                 ];
                 println!(
                     "measured per-token expert cost: mult {:.4} ms, shift {:.4} ms",

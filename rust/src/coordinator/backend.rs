@@ -35,7 +35,9 @@ use crate::coordinator::scheduler::MoePipeline;
 use crate::infer::model::{NativeModel, NativeModelConfig};
 use crate::kernels::planner::{Choice, Planner};
 use crate::kernels::registry::KernelRegistry;
+use crate::log_warn;
 use crate::model::ops::Variant;
+use crate::obs::trace::{self as otrace, TraceCtx};
 use crate::runtime::artifact::Manifest;
 use crate::runtime::tensor::Tensor;
 use crate::util::json::Json;
@@ -208,7 +210,7 @@ impl RequestQueue {
             );
         }
         if q.done.len() > q.warn_at {
-            eprintln!(
+            log_warn!(
                 "request queue: {} completed outputs held and nobody is polling \
                  (warn threshold {}); results are kept — poll your tickets",
                 q.done.len(),
@@ -279,6 +281,7 @@ pub trait InferenceBackend {
                     pixels: images[i * px..(i + 1) * px].to_vec(),
                     label: None,
                     arrived: Instant::now(),
+                    trace: otrace::current(),
                 })
             })
             .collect();
@@ -395,8 +398,26 @@ impl InferenceBackend for NativeBackend {
             pixels.extend_from_slice(&r.pixels);
         }
 
+        // The step span parents on the first traced request in the batch
+        // (requests that joined an already-traced batch show up in its
+        // `request_ids` arg); kernel dispatches deeper in the forward pass
+        // parent on this span through the thread-local ambient context.
+        let parent = batch
+            .iter()
+            .map(|(_, r)| r.trace)
+            .find(|t| t.is_active())
+            .unwrap_or(TraceCtx::NONE);
         let t0 = Instant::now();
-        let (logits, trace) = self.model.forward(&pixels, n);
+        let (logits, trace) = {
+            let mut span = otrace::span("backend_step", parent);
+            if otrace::enabled() {
+                span.arg("batch", n.to_string());
+                let ids: Vec<String> = batch.iter().map(|(_, r)| r.id.to_string()).collect();
+                span.arg("request_ids", ids.join(","));
+            }
+            let _cur = otrace::set_current(span.ctx());
+            self.model.forward(&pixels, n)
+        };
         let batch_ms = t0.elapsed().as_secs_f64() * 1e3;
         for (name, ms) in &trace.stage_ms {
             metrics.record(name, *ms);
@@ -410,14 +431,18 @@ impl InferenceBackend for NativeBackend {
         // MoE layer's e0+e1 with max(e0, e1).
         let mut modularized_ms = batch_ms;
         for [e0, e1] in &trace.expert_ms {
-            metrics.expert_times[0].push(*e0);
-            metrics.expert_times[1].push(*e1);
+            metrics.expert_times[0].record(*e0);
+            metrics.expert_times[1].record(*e1);
             modularized_ms -= e0.min(*e1);
         }
-        metrics.padding_waste.extend(trace.padding_waste.iter());
+        for &w in &trace.padding_waste {
+            metrics.padding_waste.record(w);
+        }
         metrics.batches += 1;
         metrics.requests += n;
-        metrics.request_ids.extend(batch.iter().map(|(_, r)| r.id));
+        for (_, r) in &batch {
+            metrics.push_request_id(r.id);
+        }
         metrics.record_step_occupancy(n, max_batch.max(1), n * self.tokens());
         if trace.blocks > 0 {
             // Fused-path amortization gauge: attention kernel calls per
@@ -426,7 +451,7 @@ impl InferenceBackend for NativeBackend {
             // b·heads·4 plain calls).
             metrics
                 .attn_dispatches_per_layer
-                .push(trace.attn_dispatches as f64 / trace.blocks as f64);
+                .record(trace.attn_dispatches as f64 / trace.blocks as f64);
         }
 
         let out = BatchOutput {
@@ -589,9 +614,9 @@ mod tests {
         assert!(metrics.expert_tokens.iter().sum::<usize>() > 0);
         // the adapter went through the request path, so occupancy gauges
         // must be populated
-        assert_eq!(metrics.batch_occupancy.len(), 1);
-        assert!((metrics.batch_occupancy[0] - 1.0).abs() < 1e-12);
-        assert_eq!(metrics.step_tokens[0], (2 * backend.tokens()) as f64);
+        assert_eq!(metrics.batch_occupancy.count(), 1);
+        assert!((metrics.batch_occupancy.max() - 1.0).abs() < 1e-12);
+        assert_eq!(metrics.step_tokens.sum(), (2 * backend.tokens()) as f64);
     }
 
     #[test]
@@ -609,6 +634,7 @@ mod tests {
                     pixels: xs[i * px..(i + 1) * px].to_vec(),
                     label: Some(i),
                     arrived: Instant::now(),
+                    trace: TraceCtx::NONE,
                 })
             })
             .collect();
@@ -673,6 +699,7 @@ mod tests {
                 pixels: xs[i * px..(i + 1) * px].to_vec(),
                 label: None,
                 arrived: Instant::now(),
+                trace: TraceCtx::NONE,
             });
         }
         let mut m = Metrics::default();
@@ -693,6 +720,7 @@ mod tests {
                 pixels: vec![0.0; 4],
                 label: None,
                 arrived: Instant::now(),
+                trace: TraceCtx::NONE,
             });
             let batch = q.take(1);
             let out = BatchOutput {

@@ -5,6 +5,8 @@
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
+use crate::obs::trace::TraceCtx;
+
 /// One inference request. `Clone` exists for the fleet router, which keeps
 /// a copy of every in-flight request so work stranded on a dead worker can
 /// be resubmitted.
@@ -16,6 +18,10 @@ pub struct Request {
     /// ground-truth label (for online accuracy accounting); None in prod
     pub label: Option<usize>,
     pub arrived: Instant,
+    /// tracing context of the ingress span that admitted this request
+    /// ([`TraceCtx::NONE`] when untraced): placement, worker-step, and
+    /// kernel-dispatch spans parent on it across thread hops
+    pub trace: TraceCtx,
 }
 
 /// A formed batch.
@@ -106,6 +112,7 @@ mod tests {
             pixels: vec![id as f32; 4],
             label: None,
             arrived: Instant::now(),
+            trace: TraceCtx::NONE,
         }
     }
 

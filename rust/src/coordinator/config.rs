@@ -162,6 +162,9 @@ pub struct ServerConfig {
     /// serve over HTTP on this port instead of running the synthetic
     /// benchmark client (0 = off)
     pub http_port: usize,
+    /// write the run's span ring as Chrome trace-event JSON here after the
+    /// workload finishes (Perfetto-loadable); also enables tracing
+    pub trace_out: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -186,6 +189,7 @@ impl Default for ServerConfig {
             workers: 1,
             policy: PolicyKind::RoundRobin,
             http_port: 0,
+            trace_out: None,
         }
     }
 }
@@ -252,6 +256,9 @@ impl ServerConfig {
         }
         if let Some(v) = j.get("http_port").and_then(|v| v.as_usize()) {
             c.http_port = v;
+        }
+        if let Some(v) = j.get("trace_out").and_then(|v| v.as_str()) {
+            c.trace_out = Some(v.to_string());
         }
         Ok(c)
     }
@@ -372,6 +379,19 @@ mod tests {
         std::fs::write(&p, r#"{"http_port": 8077}"#).unwrap();
         assert_eq!(ServerConfig::from_file(&p).unwrap().http_port, 8077);
         assert_eq!(ServerConfig::default().http_port, 0, "off by default");
+    }
+
+    #[test]
+    fn trace_out_parses_and_defaults_off() {
+        let dir = std::env::temp_dir().join("savit_cfg_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"trace_out": "run.trace.json"}"#).unwrap();
+        assert_eq!(
+            ServerConfig::from_file(&p).unwrap().trace_out.as_deref(),
+            Some("run.trace.json")
+        );
+        assert!(ServerConfig::default().trace_out.is_none());
     }
 
     #[test]

@@ -1,52 +1,72 @@
 //! Serving metrics: per-stage latency accumulation, expert load tracking,
 //! and the LL-loss diagnostics surfaced by the `metrics` CLI output.
+//!
+//! Since PR 10 every per-sample series is a bounded log-bucketed
+//! [`Hist`] (64 buckets, O(1) record) instead of an unbounded `Vec<f64>`:
+//! long-running servers no longer trim samples (`cap_samples` is gone),
+//! and fleet aggregation merges bucket counts exactly, so merged
+//! percentiles equal what one recorder would have measured over the union
+//! of the traffic — the old concatenate-after-trim bias is structurally
+//! impossible. Counts, sums, means, min/max stay exact; percentiles carry
+//! the histogram's documented ≤19% bucket error.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 
 use crate::kernels::planner::Choice;
 use crate::moe::balance;
+use crate::obs::hist::Hist;
+use crate::obs::prom::PromWriter;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
+
+/// Most-recent completed-request ids the audit trail retains. Bounded
+/// serve runs stay far below this, so their reports see the full trail;
+/// a server behind the HTTP front door completes requests forever and
+/// keeps only this recent window (the `requests` counter keeps the total).
+pub const REQUEST_ID_CAP: usize = 4096;
 
 /// Accumulates samples per named stage.
 #[derive(Default, Debug, Clone)]
 pub struct Metrics {
-    stages: BTreeMap<String, Vec<f64>>,
+    stages: BTreeMap<String, Hist>,
     /// tokens routed per expert (cumulative)
     pub expert_tokens: [usize; 2],
     /// gate-value sums per expert (cumulative)
     pub expert_gates: [f64; 2],
     /// measured per-expert batch times (ms)
-    pub expert_times: [Vec<f64>; 2],
+    pub expert_times: [Hist; 2],
     pub batches: usize,
     pub requests: usize,
-    pub padding_waste: Vec<f64>,
+    pub padding_waste: Hist,
     /// per-step batch occupancy: requests served / `max_batch` (image path)
     /// or live sessions / `max_live` (streaming path) ∈ (0, 1]
-    pub batch_occupancy: Vec<f64>,
+    pub batch_occupancy: Hist,
     /// per-step token rows packed into the fused dispatches
-    pub step_tokens: Vec<f64>,
+    pub step_tokens: Hist,
     /// per-step attention kernel calls per block layer (native image
     /// path): the fused path holds this at 2 grouped calls per LinearAdd
     /// layer no matter the batch size — each grouped call packs all
     /// images×heads into one operand, with per-group fan-out left to the
     /// backend — where per-image execution pays b·heads·4 plain calls
-    pub attn_dispatches_per_layer: Vec<f64>,
+    pub attn_dispatches_per_layer: Hist,
     /// per-step live session count (streaming path only)
-    pub live_sessions: Vec<f64>,
+    pub live_sessions: Hist,
     /// per-step token rows advanced by the decode dispatch (streaming
     /// path; the single-phase scheduler reports its whole fused step here,
     /// prompts included — that asymmetry IS the phase-disaggregation story)
-    pub decode_tokens: Vec<f64>,
+    pub decode_tokens: Hist,
     /// per-step token rows fed by the budgeted prefill dispatch (streaming
     /// path; 0 under the single-phase scheduler)
-    pub prefill_tokens: Vec<f64>,
+    pub prefill_tokens: Hist,
     /// per-step prefill-queue depth at step start (streaming path)
-    pub prefill_queue: Vec<f64>,
+    pub prefill_queue: Hist,
     /// caller-supplied ids of the requests completed so far, in completion
     /// order — the audit trail a fleet merge preserves (every submitted id
-    /// shows up exactly once across all workers)
-    pub request_ids: Vec<usize>,
+    /// shows up exactly once across all workers while under
+    /// [`REQUEST_ID_CAP`]); a bounded FIFO ring, so long-running servers
+    /// retain only the most recent window — append via
+    /// [`Metrics::push_request_id`]
+    pub request_ids: VecDeque<usize>,
     /// per-primitive chosen-backend gauge, recorded from the planner's
     /// plan-time decisions (`NativeBackend` / streaming engine
     /// construction): `"primitive/backend"` id → number of shapes that
@@ -60,7 +80,7 @@ pub struct Metrics {
 
 impl Metrics {
     pub fn record(&mut self, stage: &str, ms: f64) {
-        self.stages.entry(stage.to_string()).or_default().push(ms);
+        self.stages.entry(stage.to_string()).or_default().record(ms);
     }
 
     /// Rebuild the chosen-backend gauge from a planner decision log (plan
@@ -74,19 +94,29 @@ impl Metrics {
         }
     }
 
+    /// Append one completed request id to the audit trail, evicting the
+    /// oldest entry past [`REQUEST_ID_CAP`] so long-running servers stay
+    /// bounded.
+    pub fn push_request_id(&mut self, id: usize) {
+        self.request_ids.push_back(id);
+        if self.request_ids.len() > REQUEST_ID_CAP {
+            self.request_ids.pop_front();
+        }
+    }
+
     /// Record one engine step's occupancy gauges (shared by the image
     /// request path and the streaming session path).
     pub fn record_step_occupancy(&mut self, served: usize, capacity: usize, tokens: usize) {
         self.batch_occupancy
-            .push(served as f64 / capacity.max(1) as f64);
-        self.step_tokens.push(tokens as f64);
+            .record(served as f64 / capacity.max(1) as f64);
+        self.step_tokens.record(tokens as f64);
     }
 
     pub fn occupancy_summary(&self) -> Option<Summary> {
         if self.batch_occupancy.is_empty() {
             None
         } else {
-            Some(Summary::from(&self.batch_occupancy))
+            Some(self.batch_occupancy.summary())
         }
     }
 
@@ -94,12 +124,12 @@ impl Metrics {
         if self.step_tokens.is_empty() {
             None
         } else {
-            Some(Summary::from(&self.step_tokens))
+            Some(self.step_tokens.summary())
         }
     }
 
     pub fn stage_summary(&self, stage: &str) -> Option<Summary> {
-        self.stages.get(stage).map(|v| Summary::from(v))
+        self.stages.get(stage).map(|h| h.summary())
     }
 
     /// Observed expert load fractions.
@@ -117,75 +147,40 @@ impl Metrics {
         if self.expert_times[0].is_empty() || self.expert_times[1].is_empty() {
             return None;
         }
-        let lat = [
-            mean(&self.expert_times[0]),
-            mean(&self.expert_times[1]),
-        ];
+        let lat = [self.expert_times[0].mean(), self.expert_times[1].mean()];
         let a = balance::alphas(&lat);
         let imp = balance::importance_loss(&self.expert_gates.map(|g| g), &a);
         let load = balance::load_loss(&self.expert_tokens, &a);
         Some((imp, load))
     }
 
-    /// Bound every per-sample vector to its most recent `cap` entries,
-    /// leaving the scalar counters (which carry the full totals) intact.
-    /// Long-running servers — the HTTP front door records into one Metrics
-    /// forever — call this after recording so memory stays O(cap); batch
-    /// serve runs never call it and keep their complete sample sets.
-    pub fn cap_samples(&mut self, cap: usize) {
-        fn trim(v: &mut Vec<f64>, cap: usize) {
-            if v.len() > cap {
-                let excess = v.len() - cap;
-                v.drain(..excess);
-            }
-        }
-        for v in self.stages.values_mut() {
-            trim(v, cap);
-        }
-        for v in &mut self.expert_times {
-            trim(v, cap);
-        }
-        trim(&mut self.padding_waste, cap);
-        trim(&mut self.batch_occupancy, cap);
-        trim(&mut self.step_tokens, cap);
-        trim(&mut self.attn_dispatches_per_layer, cap);
-        trim(&mut self.live_sessions, cap);
-        trim(&mut self.decode_tokens, cap);
-        trim(&mut self.prefill_tokens, cap);
-        trim(&mut self.prefill_queue, cap);
-        if self.request_ids.len() > cap {
-            let excess = self.request_ids.len() - cap;
-            self.request_ids.drain(..excess);
-        }
-    }
-
     /// Fold another engine's metrics into this one (fleet aggregation:
-    /// stage samples concatenate, counters add, gauges concatenate, the
-    /// chosen-backend gauge sums per id, request ids concatenate).
+    /// histograms merge with exact bucket counts, counters add, the
+    /// chosen-backend gauge sums per id, request ids concatenate). Merged
+    /// percentiles equal the percentiles of the union of the samples.
     pub fn merge(&mut self, other: &Metrics) {
-        for (k, v) in &other.stages {
-            self.stages
-                .entry(k.clone())
-                .or_default()
-                .extend_from_slice(v);
+        for (k, h) in &other.stages {
+            self.stages.entry(k.clone()).or_default().merge(h);
         }
         for e in 0..2 {
             self.expert_tokens[e] += other.expert_tokens[e];
             self.expert_gates[e] += other.expert_gates[e];
-            self.expert_times[e].extend_from_slice(&other.expert_times[e]);
+            self.expert_times[e].merge(&other.expert_times[e]);
         }
         self.batches += other.batches;
         self.requests += other.requests;
-        self.padding_waste.extend_from_slice(&other.padding_waste);
-        self.batch_occupancy.extend_from_slice(&other.batch_occupancy);
-        self.step_tokens.extend_from_slice(&other.step_tokens);
+        self.padding_waste.merge(&other.padding_waste);
+        self.batch_occupancy.merge(&other.batch_occupancy);
+        self.step_tokens.merge(&other.step_tokens);
         self.attn_dispatches_per_layer
-            .extend_from_slice(&other.attn_dispatches_per_layer);
-        self.live_sessions.extend_from_slice(&other.live_sessions);
-        self.decode_tokens.extend_from_slice(&other.decode_tokens);
-        self.prefill_tokens.extend_from_slice(&other.prefill_tokens);
-        self.prefill_queue.extend_from_slice(&other.prefill_queue);
-        self.request_ids.extend_from_slice(&other.request_ids);
+            .merge(&other.attn_dispatches_per_layer);
+        self.live_sessions.merge(&other.live_sessions);
+        self.decode_tokens.merge(&other.decode_tokens);
+        self.prefill_tokens.merge(&other.prefill_tokens);
+        self.prefill_queue.merge(&other.prefill_queue);
+        for &id in &other.request_ids {
+            self.push_request_id(id);
+        }
         for (id, n) in &other.chosen_backends {
             *self.chosen_backends.entry(id.clone()).or_insert(0) += n;
         }
@@ -205,8 +200,8 @@ impl Metrics {
             ),
         ];
         let mut stage_obj = Vec::new();
-        for (k, v) in &self.stages {
-            let s = Summary::from(v);
+        for (k, h) in &self.stages {
+            let s = h.summary();
             stage_obj.push((
                 k.as_str(),
                 Json::obj(vec![
@@ -239,7 +234,7 @@ impl Metrics {
             ));
         }
         if !self.attn_dispatches_per_layer.is_empty() {
-            let s = Summary::from(&self.attn_dispatches_per_layer);
+            let s = self.attn_dispatches_per_layer.summary();
             pairs.push((
                 "attn_dispatches_per_layer",
                 Json::obj(vec![
@@ -250,7 +245,7 @@ impl Metrics {
             ));
         }
         if !self.live_sessions.is_empty() {
-            let s = Summary::from(&self.live_sessions);
+            let s = self.live_sessions.summary();
             pairs.push((
                 "live_sessions",
                 Json::obj(vec![
@@ -268,7 +263,7 @@ impl Metrics {
             if gauge.is_empty() {
                 continue;
             }
-            let s = Summary::from(gauge);
+            let s = gauge.summary();
             pairs.push((
                 key,
                 Json::obj(vec![
@@ -297,6 +292,118 @@ impl Metrics {
         Json::obj(pairs)
     }
 
+    /// Prometheus text exposition of the same registry `to_json` reads —
+    /// the `/metrics.prom` (and `/metrics?format=prometheus`) body.
+    pub fn to_prometheus(&self) -> String {
+        let mut w = PromWriter::new();
+        w.counter(
+            "shiftaddvit_requests_total",
+            "requests completed",
+            &[],
+            self.requests as f64,
+        );
+        w.counter(
+            "shiftaddvit_batches_total",
+            "fused engine steps",
+            &[],
+            self.batches as f64,
+        );
+        for e in 0..2 {
+            let expert = if e == 0 { "0" } else { "1" };
+            w.counter(
+                "shiftaddvit_expert_tokens_total",
+                "tokens routed per MoE expert",
+                &[("expert", expert)],
+                self.expert_tokens[e] as f64,
+            );
+            w.counter(
+                "shiftaddvit_expert_gate_sum",
+                "cumulative gate-value mass per MoE expert",
+                &[("expert", expert)],
+                self.expert_gates[e],
+            );
+            if !self.expert_times[e].is_empty() {
+                w.histogram(
+                    "shiftaddvit_expert_time_ms",
+                    "measured per-expert batch time (ms)",
+                    &[("expert", expert)],
+                    &self.expert_times[e],
+                );
+            }
+        }
+        for (k, h) in &self.stages {
+            w.histogram(
+                "shiftaddvit_stage_duration_ms",
+                "per-stage latency (ms)",
+                &[("stage", k.as_str())],
+                h,
+            );
+        }
+        for (name, help, h) in [
+            (
+                "shiftaddvit_batch_occupancy",
+                "per-step served/capacity fraction",
+                &self.batch_occupancy,
+            ),
+            (
+                "shiftaddvit_step_tokens",
+                "token rows per fused step",
+                &self.step_tokens,
+            ),
+            (
+                "shiftaddvit_attn_dispatches_per_layer",
+                "attention kernel calls per block layer per step",
+                &self.attn_dispatches_per_layer,
+            ),
+            (
+                "shiftaddvit_live_sessions",
+                "live streaming sessions per step",
+                &self.live_sessions,
+            ),
+            (
+                "shiftaddvit_decode_tokens",
+                "token rows advanced by the decode dispatch per step",
+                &self.decode_tokens,
+            ),
+            (
+                "shiftaddvit_prefill_tokens",
+                "token rows fed by the budgeted prefill dispatch per step",
+                &self.prefill_tokens,
+            ),
+            (
+                "shiftaddvit_prefill_queue",
+                "prefill queue depth at step start",
+                &self.prefill_queue,
+            ),
+            (
+                "shiftaddvit_padding_waste",
+                "fraction of padded rows in bucketed batches",
+                &self.padding_waste,
+            ),
+        ] {
+            if !h.is_empty() {
+                w.histogram(name, help, &[], h);
+            }
+        }
+        for (id, n) in &self.chosen_backends {
+            w.gauge(
+                "shiftaddvit_planner_backend_shapes",
+                "shapes resolved to each kernel backend at plan time",
+                &[("backend", id.as_str())],
+                *n as f64,
+            );
+        }
+        if let Some(d) = &self.bundle_digest {
+            w.gauge(
+                "shiftaddvit_bundle_info",
+                "digest of the verified bundle the engine warm-started from",
+                &[("digest", d.as_str())],
+                1.0,
+            );
+        }
+        w.finish()
+    }
+
     pub fn print(&self) {
         println!("-- serving metrics --");
         println!(
@@ -308,8 +415,8 @@ impl Metrics {
         if let Some((imp, load)) = self.ll_loss() {
             println!("LL-loss diagnostics: L_IMP {imp:.4}  L_LOAD {load:.4}");
         }
-        for (k, v) in &self.stages {
-            let s = Summary::from(v);
+        for (k, h) in &self.stages {
+            let s = h.summary();
             println!(
                 "  {k:28} mean {:8.3} ms  p50 {:8.3}  p99 {:8.3}  (n={})",
                 s.mean, s.p50, s.p99, s.n
@@ -318,7 +425,7 @@ impl Metrics {
         if !self.padding_waste.is_empty() {
             println!(
                 "  bucket padding waste: {:.1}%",
-                100.0 * mean(&self.padding_waste)
+                100.0 * self.padding_waste.mean()
             );
         }
         if let Some(s) = self.occupancy_summary() {
@@ -336,32 +443,33 @@ impl Metrics {
             );
         }
         if !self.attn_dispatches_per_layer.is_empty() {
-            let s = Summary::from(&self.attn_dispatches_per_layer);
             println!(
                 "  attn dispatches per layer: mean {:.1}  max {:.0}",
-                s.mean, s.max
+                self.attn_dispatches_per_layer.mean(),
+                self.attn_dispatches_per_layer.max()
             );
         }
         if !self.live_sessions.is_empty() {
             println!(
                 "  live sessions per step: mean {:.1}  max {:.0}",
-                mean(&self.live_sessions),
-                self.live_sessions.iter().cloned().fold(0.0, f64::max)
+                self.live_sessions.mean(),
+                self.live_sessions.max()
             );
         }
         if !self.decode_tokens.is_empty() {
-            let dec = Summary::from(&self.decode_tokens);
-            let pre = Summary::from(&self.prefill_tokens);
             println!(
                 "  decode tokens per step: mean {:.1}  p99 {:.0}  |  prefill: mean {:.1}  p99 {:.0}",
-                dec.mean, dec.p99, pre.mean, pre.p99
+                self.decode_tokens.mean(),
+                self.decode_tokens.percentile(0.99),
+                self.prefill_tokens.mean(),
+                self.prefill_tokens.percentile(0.99)
             );
         }
-        if self.prefill_queue.iter().any(|&q| q > 0.0) {
-            let s = Summary::from(&self.prefill_queue);
+        if self.prefill_queue.max() > 0.0 {
             println!(
                 "  prefill queue depth: mean {:.1}  max {:.0}",
-                s.mean, s.max
+                self.prefill_queue.mean(),
+                self.prefill_queue.max()
             );
         }
         if !self.chosen_backends.is_empty() {
@@ -376,10 +484,6 @@ impl Metrics {
             println!("  bundle digest: {d}");
         }
     }
-}
-
-fn mean(v: &[f64]) -> f64 {
-    v.iter().sum::<f64>() / v.len().max(1) as f64
 }
 
 #[cfg(test)]
@@ -409,8 +513,8 @@ mod tests {
     fn ll_loss_requires_both_experts() {
         let mut m = Metrics::default();
         assert!(m.ll_loss().is_none());
-        m.expert_times[0].push(2.0);
-        m.expert_times[1].push(1.0);
+        m.expert_times[0].record(2.0);
+        m.expert_times[1].record(1.0);
         m.expert_tokens = [100, 200];
         m.expert_gates = [60.0, 110.0];
         let (imp, load) = m.ll_loss().unwrap();
@@ -457,24 +561,32 @@ mod tests {
     }
 
     #[test]
-    fn cap_samples_keeps_most_recent_and_preserves_counters() {
+    fn request_id_trail_is_a_bounded_ring() {
         let mut m = Metrics::default();
-        for i in 0..10 {
-            m.record("http_classify", i as f64);
-            m.request_ids.push(i);
-            m.batch_occupancy.push(i as f64);
+        for id in 0..(REQUEST_ID_CAP + 10) {
+            m.push_request_id(id);
+        }
+        assert_eq!(m.request_ids.len(), REQUEST_ID_CAP);
+        assert_eq!(m.request_ids.front(), Some(&10), "oldest ids evicted FIFO");
+        assert_eq!(m.request_ids.back(), Some(&(REQUEST_ID_CAP + 9)));
+    }
+
+    #[test]
+    fn unbounded_traffic_needs_no_trimming() {
+        // The cap_samples era is over: 100k samples cost the same fixed
+        // footprint as 10, and nothing is dropped from the statistics.
+        let mut m = Metrics::default();
+        for i in 0..100_000 {
+            m.record("http_classify", (i % 97) as f64 + 0.5);
+            m.batch_occupancy.record(((i % 8) + 1) as f64 / 8.0);
             m.requests += 1;
         }
-        m.cap_samples(4);
-        assert_eq!(m.requests, 10, "counters keep the full total");
-        assert_eq!(m.stage_summary("http_classify").unwrap().n, 4);
-        assert_eq!(m.request_ids, vec![6, 7, 8, 9], "most recent survive");
-        assert_eq!(m.batch_occupancy, vec![6.0, 7.0, 8.0, 9.0]);
-        // idempotent under the cap
-        m.cap_samples(4);
-        assert_eq!(m.request_ids.len(), 4);
-        m.cap_samples(100);
-        assert_eq!(m.request_ids.len(), 4, "a looser cap drops nothing");
+        assert_eq!(m.requests, 100_000);
+        assert_eq!(m.stage_summary("http_classify").unwrap().n, 100_000);
+        assert_eq!(m.batch_occupancy.count(), 100_000);
+        // exact moments survive at any scale
+        let s = m.stage_summary("http_classify").unwrap();
+        assert!(s.mean > 0.0 && s.max <= 97.0);
     }
 
     #[test]
@@ -484,7 +596,7 @@ mod tests {
         a.batches = 2;
         a.requests = 3;
         a.expert_tokens = [10, 5];
-        a.request_ids = vec![0, 2];
+        a.request_ids = VecDeque::from(vec![0, 2]);
         a.chosen_backends.insert("matadd/simd".into(), 2);
         let mut b = Metrics::default();
         b.record("stem", 3.0);
@@ -492,7 +604,7 @@ mod tests {
         b.batches = 1;
         b.requests = 2;
         b.expert_tokens = [1, 4];
-        b.request_ids = vec![1, 3];
+        b.request_ids = VecDeque::from(vec![1, 3]);
         b.chosen_backends.insert("matadd/simd".into(), 1);
         b.chosen_backends.insert("matshift/rowpar".into(), 1);
         b.bundle_digest = Some("abc123".to_string());
@@ -519,20 +631,52 @@ mod tests {
     }
 
     #[test]
+    fn merged_percentiles_equal_solo_on_identical_traffic() {
+        // Regression for the fleet-merge bias: N workers' histograms
+        // merged must report exactly the percentiles one solo recorder
+        // sees over the union of the samples (the old Vec concatenation
+        // after per-worker capping biased toward the least-trimmed worker).
+        let samples: Vec<f64> = (0..10_000).map(|i| ((i * 37) % 991) as f64 + 0.25).collect();
+        let mut solo = Metrics::default();
+        for &v in &samples {
+            solo.record("http_classify", v);
+        }
+        let mut merged = Metrics::default();
+        for w in 0..4 {
+            let mut worker = Metrics::default();
+            for (i, &v) in samples.iter().enumerate() {
+                if i % 4 == w {
+                    worker.record("http_classify", v);
+                }
+            }
+            merged.merge(&worker);
+        }
+        let s = solo.stage_summary("http_classify").unwrap();
+        let m = merged.stage_summary("http_classify").unwrap();
+        assert_eq!(s.n, m.n);
+        assert_eq!(s.mean, m.mean);
+        assert_eq!(s.p50, m.p50);
+        assert_eq!(s.p95, m.p95);
+        assert_eq!(s.p99, m.p99);
+        assert_eq!(s.max, m.max);
+    }
+
+    #[test]
     fn phase_gauges_merge_and_serialize() {
         let mut a = Metrics::default();
         assert!(a.to_json().get("decode_tokens").is_none(), "empty → absent");
-        a.decode_tokens.push(8.0);
-        a.prefill_tokens.push(16.0);
-        a.prefill_queue.push(2.0);
+        a.decode_tokens.record(8.0);
+        a.prefill_tokens.record(16.0);
+        a.prefill_queue.record(2.0);
         let mut b = Metrics::default();
-        b.decode_tokens.push(4.0);
-        b.prefill_tokens.push(0.0);
-        b.prefill_queue.push(0.0);
+        b.decode_tokens.record(4.0);
+        b.prefill_tokens.record(0.0);
+        b.prefill_queue.record(0.0);
         a.merge(&b);
-        assert_eq!(a.decode_tokens, vec![8.0, 4.0]);
-        assert_eq!(a.prefill_tokens, vec![16.0, 0.0]);
-        assert_eq!(a.prefill_queue, vec![2.0, 0.0]);
+        assert_eq!(a.decode_tokens.count(), 2);
+        assert_eq!(a.decode_tokens.sum(), 12.0);
+        assert_eq!(a.prefill_tokens.sum(), 16.0);
+        assert_eq!(a.prefill_queue.max(), 2.0);
         let j = a.to_json();
         let dec = j.get("decode_tokens").expect("gauge serialized");
         assert_eq!(dec.get("n").and_then(|v| v.as_usize()), Some(2));
@@ -552,11 +696,32 @@ mod tests {
         assert!((occ.mean - 0.625).abs() < 1e-12);
         let tok = m.step_tokens_summary().unwrap();
         assert!((tok.mean - 320.0).abs() < 1e-12);
-        m.live_sessions.push(2.0);
+        m.live_sessions.record(2.0);
         let j = m.to_json();
         assert!(j.get("batch_occupancy").is_some());
         assert!(j.get("step_tokens").is_some());
         assert!(j.get("live_sessions").is_some());
         m.print(); // should not panic
+    }
+
+    #[test]
+    fn prometheus_exposition_lints_clean() {
+        let mut m = Metrics::default();
+        m.requests = 7;
+        m.batches = 3;
+        m.record("http_classify", 1.5);
+        m.record("forward", 0.8);
+        m.expert_times[0].record(0.4);
+        m.expert_times[1].record(0.6);
+        m.record_step_occupancy(4, 8, 64);
+        m.chosen_backends.insert("matadd/simd".into(), 2);
+        m.bundle_digest = Some("deadbeef".into());
+        let text = m.to_prometheus();
+        crate::obs::prom::lint(&text).expect("exposition lints clean");
+        assert!(text.contains("# TYPE shiftaddvit_requests_total counter"));
+        assert!(text.contains("shiftaddvit_requests_total 7"));
+        assert!(text.contains("# TYPE shiftaddvit_stage_duration_ms histogram"));
+        assert!(text.contains("stage=\"http_classify\""));
+        assert!(text.contains("shiftaddvit_planner_backend_shapes{backend=\"matadd/simd\"} 2"));
     }
 }

@@ -174,7 +174,7 @@ impl MoePipeline {
             let u_flat = &u.as_f32()?[..total_tokens * s.dim];
             let mut parts =
                 dispatch::partition(u_flat, s.dim, &routes, 2, &s.token_buckets);
-            metrics.padding_waste.push(padding_waste(&parts));
+            metrics.padding_waste.record(padding_waste(&parts));
 
             let mut y = vec![0.0f32; total_tokens * s.dim];
             let t0 = Instant::now();
@@ -221,8 +221,8 @@ impl MoePipeline {
                         per_expert[part.expert] += ms_since(te);
                         dispatch::scatter(&mut y, s.dim, part, out[0].as_f32()?, &routes);
                     }
-                    metrics.expert_times[0].push(per_expert[0]);
-                    metrics.expert_times[1].push(per_expert[1]);
+                    metrics.expert_times[0].record(per_expert[0]);
+                    metrics.expert_times[1].record(per_expert[1]);
                     let charged = per_expert[0].max(per_expert[1]);
                     metrics.record(&format!("blk{i}_moe"), charged);
                     modularized_ms += charged;
@@ -339,7 +339,9 @@ impl InferenceBackend for MoePipeline {
         }
         let out = MoePipeline::run_batch(self, &pixels, n, metrics)?;
         metrics.record_step_occupancy(n, max_batch.max(1), n * self.serve.tokens);
-        metrics.request_ids.extend(batch.iter().map(|(_, r)| r.id));
+        for (_, r) in &batch {
+            metrics.push_request_id(r.id);
+        }
         let rep = StepReport {
             served: n,
             batch_ms: out.batch_ms,

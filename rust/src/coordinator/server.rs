@@ -38,6 +38,7 @@ use crate::infer::session::{SessionSpec, StreamAttn, StreamModel};
 use crate::kernels::planner::{table_json, Choice, Planner};
 use crate::kernels::registry::KernelRegistry;
 use crate::model::ops::Lin;
+use crate::obs::trace::TraceCtx;
 use crate::runtime::artifact::Manifest;
 use crate::util::json::Json;
 use crate::util::rng::XorShift64;
@@ -131,6 +132,7 @@ pub fn serve_backend(backend: &dyn InferenceBackend, cfg: &ServerConfig) -> Resu
                 pixels: sample.pixels,
                 label: Some(sample.label),
                 arrived: Instant::now(),
+                trace: TraceCtx::NONE,
             };
             if tx.send(req).is_err() {
                 return;
@@ -246,6 +248,7 @@ pub fn serve_fleet(cfg: &ServerConfig) -> Result<ServeReport> {
                 pixels: sample.pixels,
                 label: Some(sample.label),
                 arrived: Instant::now(),
+                trace: TraceCtx::NONE,
             };
             if tx.send(req).is_err() {
                 return;
@@ -821,7 +824,16 @@ fn serve_stream_fleet(cfg: &ServerConfig) -> Result<StreamReport> {
 /// the `serve` subcommand so one flag switches request shapes. With
 /// `--http PORT` set, both workloads are instead served over a real TCP
 /// socket by the fleet's HTTP front door until the process is killed.
+///
+/// `--trace-out PATH` turns on span recording for the run and writes the
+/// ring as Chrome trace-event JSON when the workload finishes (the HTTP
+/// front door records too, but exports live via `GET /trace` since it
+/// never returns).
 pub fn serve_workload(cfg: &ServerConfig) -> Result<()> {
+    if let Some(path) = &cfg.trace_out {
+        crate::obs::trace::set_enabled(true);
+        println!("tracing: span ring on, will write {path}");
+    }
     if cfg.http_port > 0 {
         return crate::fleet::http::serve_http(cfg, cfg.http_port);
     }
@@ -834,6 +846,14 @@ pub fn serve_workload(cfg: &ServerConfig) -> Result<()> {
             let report = serve_stream(cfg)?;
             report.print();
         }
+    }
+    if let Some(path) = &cfg.trace_out {
+        let trace = crate::obs::trace::export_chrome();
+        std::fs::write(path, trace.to_string())?;
+        println!(
+            "tracing: wrote {} spans to {path} (load in Perfetto / chrome://tracing)",
+            crate::obs::trace::len()
+        );
     }
     Ok(())
 }

@@ -33,6 +33,7 @@ use std::time::Instant;
 
 use crate::coordinator::metrics::Metrics;
 use crate::infer::session::{SessionState, StreamModel};
+use crate::obs::trace::{self as otrace, TraceCtx};
 
 /// Handle to a submitted streaming request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -89,6 +90,10 @@ pub struct StreamOutput {
     /// when the fused step that first fed it completed
     pub first_done: Instant,
     pub finished: Instant,
+    /// tracing context of the ingress span that submitted this session
+    /// ([`TraceCtx::NONE`] when untraced), echoed back so callers can
+    /// close out their own request spans
+    pub trace: TraceCtx,
 }
 
 impl StreamOutput {
@@ -144,6 +149,7 @@ struct Session {
     arrived: Instant,
     first_fed: Option<Instant>,
     first_done: Option<Instant>,
+    trace: TraceCtx,
 }
 
 impl Session {
@@ -224,6 +230,14 @@ impl SessionEngine {
 
     /// Enqueue one request: a flattened (n × dim) token sequence.
     pub fn submit(&mut self, tokens: Vec<f32>) -> StreamTicket {
+        self.submit_traced(tokens, TraceCtx::NONE)
+    }
+
+    /// [`SessionEngine::submit`] with an explicit tracing context: the
+    /// decode/prefill phase spans that later feed this session parent on
+    /// `ctx` (the ingress span), connecting the request's span tree across
+    /// the queue.
+    pub fn submit_traced(&mut self, tokens: Vec<f32>, ctx: TraceCtx) -> StreamTicket {
         let d = self.model.spec.dim;
         assert!(
             !tokens.is_empty() && tokens.len() % d == 0,
@@ -240,6 +254,7 @@ impl SessionEngine {
             arrived: Instant::now(),
             first_fed: None,
             first_done: None,
+            trace: ctx,
         });
         StreamTicket { id }
     }
@@ -293,12 +308,30 @@ impl SessionEngine {
     /// sessions, decode dispatch (live only), then the budgeted prefill
     /// dispatch over the queue.
     pub fn step(&mut self, metrics: &mut Metrics) -> StepStats {
-        match self.mode {
+        // Parent the step span on the first traced session anywhere in the
+        // engine (falling back to the ambient context), so one HTTP request
+        // connects through to the fused dispatches that fed it.
+        let parent = self
+            .live
+            .iter()
+            .chain(self.queue.iter())
+            .map(|s| s.trace)
+            .find(|t| t.is_active())
+            .unwrap_or_else(otrace::current);
+        let mut span = otrace::span("stream_step", parent);
+        let _cur = otrace::set_current(span.ctx());
+        let stats = match self.mode {
             SchedulerMode::SinglePhase => self.step_single_phase(metrics),
             SchedulerMode::Disaggregated { prefill_budget } => {
                 self.step_disaggregated(prefill_budget, metrics)
             }
+        };
+        if otrace::enabled() {
+            span.arg("live", stats.live.to_string());
+            span.arg("tokens", stats.tokens.to_string());
+            span.arg("mode", self.mode.name().to_string());
         }
+        stats
     }
 
     fn step_single_phase(&mut self, metrics: &mut Metrics) -> StepStats {
@@ -322,7 +355,14 @@ impl SessionEngine {
         let t0 = Instant::now();
         let chunk = self.chunk;
         let takes = vec![chunk; self.live.len()];
-        let trace = fused_feed(&self.model, &mut self.live, &takes);
+        let trace = {
+            let mut sp = otrace::span("stream_decode", otrace::current());
+            if otrace::enabled() {
+                sp.arg("sessions", self.live.len().to_string());
+            }
+            let _cur = otrace::set_current(sp.ctx());
+            fused_feed(&self.model, &mut self.live, &takes)
+        };
         let live = self.live.len();
         let finished = self.retire(metrics);
         let step_ms = t0.elapsed().as_secs_f64() * 1e3;
@@ -374,7 +414,14 @@ impl SessionEngine {
         } else {
             let td = Instant::now();
             let takes = vec![chunk; self.live.len()];
-            let trace = fused_feed(&self.model, &mut self.live, &takes);
+            let trace = {
+                let mut sp = otrace::span("stream_decode", otrace::current());
+                if otrace::enabled() {
+                    sp.arg("sessions", self.live.len().to_string());
+                }
+                let _cur = otrace::set_current(sp.ctx());
+                fused_feed(&self.model, &mut self.live, &takes)
+            };
             let finished = self.retire(metrics);
             let decode_ms = td.elapsed().as_secs_f64() * 1e3;
             metrics.record("stream_decode", decode_ms);
@@ -404,7 +451,14 @@ impl SessionEngine {
             (0, 0.0)
         } else {
             let tp = Instant::now();
-            let trace = fused_feed(&self.model, self.queue.make_contiguous(), &takes);
+            let trace = {
+                let mut sp = otrace::span("stream_prefill", otrace::current());
+                if otrace::enabled() {
+                    sp.arg("sessions", prefill_sessions.to_string());
+                }
+                let _cur = otrace::set_current(sp.ctx());
+                fused_feed(&self.model, self.queue.make_contiguous(), &takes)
+            };
             let prefill_ms = tp.elapsed().as_secs_f64() * 1e3;
             metrics.record("stream_prefill", prefill_ms);
             (trace.total_tokens, prefill_ms)
@@ -440,10 +494,10 @@ impl SessionEngine {
     ) {
         metrics.record("stream_step", step_ms);
         metrics.record_step_occupancy(live, self.max_live, decode_tokens + prefill_tokens);
-        metrics.live_sessions.push(live as f64);
-        metrics.decode_tokens.push(decode_tokens as f64);
-        metrics.prefill_tokens.push(prefill_tokens as f64);
-        metrics.prefill_queue.push(waiting as f64);
+        metrics.live_sessions.record(live as f64);
+        metrics.decode_tokens.record(decode_tokens as f64);
+        metrics.prefill_tokens.record(prefill_tokens as f64);
+        metrics.prefill_queue.record(waiting as f64);
         metrics.batches += 1;
     }
 
@@ -453,13 +507,13 @@ impl SessionEngine {
         let mut finished = 0usize;
         let model = &self.model;
         let done = &mut self.done;
-        let req_ids = &mut metrics.request_ids;
+        let mut retired: Vec<usize> = Vec::new();
         self.live.retain(|s| {
             if s.fed * d < s.tokens.len() {
                 return true;
             }
             finished += 1;
-            req_ids.push(s.id);
+            retired.push(s.id);
             done.insert(
                 s.id,
                 StreamOutput {
@@ -470,10 +524,14 @@ impl SessionEngine {
                     first_fed: s.first_fed.expect("finished session was fed"),
                     first_done: s.first_done.expect("finished session was fed"),
                     finished: Instant::now(),
+                    trace: s.trace,
                 },
             );
             false
         });
+        for id in retired {
+            metrics.push_request_id(id);
+        }
         finished
     }
 
@@ -579,16 +637,13 @@ mod tests {
             );
         }
         // occupancy gauges populated, live cap respected
-        assert_eq!(m.live_sessions.len(), steps);
-        assert!(m.live_sessions.iter().all(|&l| l <= 2.0));
-        assert!(m.batch_occupancy.iter().any(|&o| o == 1.0));
+        assert_eq!(m.live_sessions.count() as usize, steps);
+        assert!(m.live_sessions.max() <= 2.0);
+        assert_eq!(m.batch_occupancy.max(), 1.0, "live cap was saturated");
         assert_eq!(m.requests, 4);
         // single-phase: every token counts as decode, prefill gauge stays 0
-        assert!(m.prefill_tokens.iter().all(|&t| t == 0.0));
-        assert_eq!(
-            m.decode_tokens.iter().sum::<f64>(),
-            lens.iter().sum::<usize>() as f64
-        );
+        assert_eq!(m.prefill_tokens.max(), 0.0);
+        assert_eq!(m.decode_tokens.sum(), lens.iter().sum::<usize>() as f64);
     }
 
     #[test]
@@ -675,10 +730,10 @@ mod tests {
         assert_eq!(m.requests, lens.len());
         // both phases actually ran: the 17- and 9-token prompts must have
         // prefilled (backlog > chunk), the short ones decoded straight away
-        assert!(m.prefill_tokens.iter().sum::<f64>() > 0.0);
-        assert!(m.decode_tokens.iter().sum::<f64>() > 0.0);
+        assert!(m.prefill_tokens.sum() > 0.0);
+        assert!(m.decode_tokens.sum() > 0.0);
         assert_eq!(
-            m.prefill_tokens.iter().sum::<f64>() + m.decode_tokens.iter().sum::<f64>(),
+            m.prefill_tokens.sum() + m.decode_tokens.sum(),
             lens.iter().sum::<usize>() as f64
         );
     }

@@ -9,6 +9,10 @@
 //! - `GET /metrics` — [`Router::metrics_json`] plus a `front_door` section
 //!   (HTTP-stage latencies and a bounded recent window of the ingress
 //!   request-id audit trail — the full totals live in the counters);
+//! - `GET /metrics.prom` (or `/metrics?format=prometheus`) — the same
+//!   registry as Prometheus text exposition, scrape-ready;
+//! - `GET /trace` — the span ring as Chrome trace-event JSON (open in
+//!   Perfetto / `chrome://tracing`);
 //! - `POST /classify` — `{"pixels": [f32; H·W·3], "label"?: n}` →
 //!   submit to the fleet, block on the done table's condvar, answer
 //!   `{"id", "pred", "logits", ...}` (the logits round-trip JSON exactly —
@@ -43,17 +47,14 @@ use crate::coordinator::sessions::{SessionEngine, StreamStatus, StreamTicket};
 use crate::data::synth_images;
 use crate::fleet::router::{FleetTicket, Router};
 use crate::infer::session::{SessionSpec, StreamAttn, StreamModel};
+use crate::obs::trace::{self as otrace, TraceCtx};
 use crate::util::httpd::{read_request, write_response, ChunkedWriter, HttpRequest};
 use crate::util::json::Json;
 use crate::util::pool::Pool;
 
-/// Most-recent per-sample entries the front door's Metrics keeps (stage
-/// latencies, audit-trail ids, engine gauges). A long-running server must
-/// not grow a vector per request served; counters keep the full totals.
-const SAMPLE_CAP: usize = 4096;
-
 /// Most-recent request ids the `/metrics` front-door section reports (the
-/// in-memory trail keeps [`SAMPLE_CAP`]; the wire response stays small).
+/// in-memory trail is already bounded at `metrics::REQUEST_ID_CAP`; the
+/// wire response stays smaller still).
 const RECENT_IDS: usize = 64;
 
 /// Front-door knobs.
@@ -93,6 +94,10 @@ enum StreamEvent {
 struct StreamJob {
     tokens: Vec<f32>,
     events: mpsc::Sender<StreamEvent>,
+    /// ingress span of the `/stream` handler that submitted this job —
+    /// the engine's decode/prefill spans parent on it across the hop to
+    /// the service thread
+    trace: TraceCtx,
 }
 
 /// The `/stream` service: one thread owning one [`SessionEngine`],
@@ -118,7 +123,7 @@ impl StreamService {
                     if live.is_empty() && open {
                         match rx.recv_timeout(Duration::from_millis(50)) {
                             Ok(job) => {
-                                let t = engine.submit(job.tokens);
+                                let t = engine.submit_traced(job.tokens, job.trace);
                                 live.push((t, job.events, 0));
                             }
                             Err(mpsc::RecvTimeoutError::Timeout) => {}
@@ -128,7 +133,7 @@ impl StreamService {
                     loop {
                         match rx.try_recv() {
                             Ok(job) => {
-                                let t = engine.submit(job.tokens);
+                                let t = engine.submit_traced(job.tokens, job.trace);
                                 live.push((t, job.events, 0));
                             }
                             Err(mpsc::TryRecvError::Empty) => break,
@@ -147,7 +152,6 @@ impl StreamService {
                     {
                         let mut m = metrics.lock().unwrap();
                         engine.step(&mut m);
-                        m.cap_samples(SAMPLE_CAP);
                     }
                     live.retain_mut(|(t, events, last_fed)| {
                         if let Some(out) = engine.poll(t) {
@@ -177,13 +181,22 @@ impl StreamService {
         }
     }
 
-    fn submit(&self, tokens: Vec<f32>, events: mpsc::Sender<StreamEvent>) -> Result<()> {
+    fn submit(
+        &self,
+        tokens: Vec<f32>,
+        events: mpsc::Sender<StreamEvent>,
+        trace: TraceCtx,
+    ) -> Result<()> {
         let guard = self.tx.lock().unwrap();
         let tx = guard
             .as_ref()
             .ok_or_else(|| anyhow!("stream service is draining"))?;
-        tx.send(StreamJob { tokens, events })
-            .map_err(|_| anyhow!("stream service thread exited"))
+        tx.send(StreamJob {
+            tokens,
+            events,
+            trace,
+        })
+        .map_err(|_| anyhow!("stream service thread exited"))
     }
 
     /// Drain: close the inbox, let live sessions finish, join the thread.
@@ -317,6 +330,23 @@ fn respond_error(sock: &mut TcpStream, status: u16, msg: &str) {
     let _ = write_response(sock, status, "application/json", &error_body(msg));
 }
 
+/// True when a `/metrics` request asked for Prometheus text exposition
+/// (`?format=prometheus`).
+fn wants_prometheus(req: &HttpRequest) -> bool {
+    req.query
+        .as_deref()
+        .is_some_and(|q| q.split('&').any(|kv| kv == "format=prometheus"))
+}
+
+/// One Prometheus exposition over everything this process measures: the
+/// fleet's merged engine metrics folded together with the front door's
+/// HTTP-stage metrics (disjoint stage labels, so the merge is lossless).
+fn prometheus_body(shared: &Shared) -> String {
+    let (mut merged, _) = shared.router.lock().unwrap().metrics_report();
+    merged.merge(&shared.metrics.lock().unwrap());
+    merged.to_prometheus()
+}
+
 /// Replace a Metrics JSON section's full `request_ids` audit list with a
 /// bounded `recent_request_ids` window, keeping the `/metrics` response
 /// size independent of how long the server has been up (the `requests`
@@ -359,6 +389,15 @@ fn handle_connection(shared: &Shared, mut sock: TcpStream) {
             let report = shared.router.lock().unwrap().readiness();
             respond(&mut sock, if report.ready { 200 } else { 503 }, &report.to_json());
         }
+        ("GET", "/metrics") if wants_prometheus(&req) => {
+            let body = prometheus_body(shared);
+            let _ = write_response(
+                &mut sock,
+                200,
+                "text/plain; version=0.0.4; charset=utf-8",
+                body.as_bytes(),
+            );
+        }
         ("GET", "/metrics") => {
             let mut j = shared.router.lock().unwrap().metrics_json();
             if let Json::Obj(map) = &mut j {
@@ -371,9 +410,25 @@ fn handle_connection(shared: &Shared, mut sock: TcpStream) {
             }
             respond(&mut sock, 200, &j);
         }
+        ("GET", "/metrics.prom") => {
+            let body = prometheus_body(shared);
+            let _ = write_response(
+                &mut sock,
+                200,
+                "text/plain; version=0.0.4; charset=utf-8",
+                body.as_bytes(),
+            );
+        }
+        ("GET", "/trace") => {
+            respond(&mut sock, 200, &otrace::export_chrome());
+        }
         ("POST", "/classify") => classify(shared, &req, &mut sock),
         ("POST", "/stream") => stream(shared, &req, &mut sock),
-        (_, "/liveness" | "/readiness" | "/metrics" | "/classify" | "/stream") => {
+        (
+            _,
+            "/liveness" | "/readiness" | "/metrics" | "/metrics.prom" | "/trace" | "/classify"
+            | "/stream",
+        ) => {
             respond_error(
                 &mut sock,
                 405,
@@ -464,11 +519,19 @@ fn classify(shared: &Shared, req: &HttpRequest, sock: &mut TcpStream) {
         Err(e) => return respond_error(sock, 400, &format!("{e:#}")),
     };
     let id = shared.next_id.fetch_add(1, Ordering::SeqCst);
+    // Ingress root span: covers placement, the condvar wait, and the
+    // response write; every downstream span (place → worker_inbox →
+    // backend_step → kernel dispatches) parents on its context.
+    let mut span = otrace::root("http_classify");
+    if otrace::enabled() {
+        span.arg("id", id.to_string());
+    }
     let request = Request {
         id,
         pixels,
         label,
         arrived: Instant::now(),
+        trace: span.ctx(),
     };
     let ticket = match shared.router.lock().unwrap().submit(request) {
         Ok(t) => t,
@@ -494,8 +557,7 @@ fn classify(shared: &Shared, req: &HttpRequest, sock: &mut TcpStream) {
     let mut m = shared.metrics.lock().unwrap();
     m.record("http_classify", t0.elapsed().as_secs_f64() * 1e3);
     m.requests += 1;
-    m.request_ids.push(id);
-    m.cap_samples(SAMPLE_CAP);
+    m.push_request_id(id);
 }
 
 /// Parse a `/stream` body: `{"tokens": [f32; n·dim]}` with `n ≥ 1`.
@@ -544,7 +606,10 @@ fn stream(shared: &Shared, req: &HttpRequest, sock: &mut TcpStream) {
         Err(e) => return respond_error(sock, 400, &format!("{e:#}")),
     };
     let (etx, erx) = mpsc::channel();
-    if let Err(e) = svc.submit(tokens, etx) {
+    // Ingress root span for the stream: the engine's step/decode/prefill
+    // spans parent on it through the session's stored context.
+    let span = otrace::root("http_stream");
+    if let Err(e) = svc.submit(tokens, etx, span.ctx()) {
         return respond_error(sock, 503, &format!("{e:#}"));
     }
     let mut cw = match ChunkedWriter::begin(sock, 200, "application/jsonl") {
@@ -602,7 +667,6 @@ fn stream(shared: &Shared, req: &HttpRequest, sock: &mut TcpStream) {
     let mut m = shared.metrics.lock().unwrap();
     m.record("http_stream", t0.elapsed().as_secs_f64() * 1e3);
     m.requests += 1;
-    m.cap_samples(SAMPLE_CAP);
 }
 
 /// Build the `/stream` engine from a [`ServerConfig`] (native only): the
@@ -631,6 +695,10 @@ fn build_stream_engine(cfg: &ServerConfig) -> Result<SessionEngine> {
 /// front door on `0.0.0.0:port`, and serve until the process is killed
 /// (the CI smoke backgrounds and SIGKILLs it).
 pub fn serve_http(cfg: &ServerConfig, port: usize) -> Result<()> {
+    // The front door always records spans: `GET /trace` is only useful
+    // when the ring has something in it, and the off-path cost is one
+    // bounded ring append per span.
+    otrace::set_enabled(true);
     let router = Router::from_server_config(cfg)?;
     println!(
         "fleet: {} workers ready  policy {}",
@@ -649,7 +717,9 @@ pub fn serve_http(cfg: &ServerConfig, port: usize) -> Result<()> {
         FrontDoorConfig::default(),
     )?;
     println!("http: front door listening on {}", door.addr());
-    println!("http: GET /liveness | /readiness | /metrics   POST /classify | /stream");
+    println!(
+        "http: GET /liveness | /readiness | /metrics | /metrics.prom | /trace   POST /classify | /stream"
+    );
     loop {
         thread::sleep(Duration::from_secs(3600));
     }

@@ -27,6 +27,8 @@ use crate::coordinator::metrics::Metrics;
 use crate::fleet::policy::{PolicyKind, RoutingPolicy, WorkerView};
 use crate::fleet::worker::{BackendFactory, DoneMap, DoneTable, FleetWorker, WorkerHealth};
 use crate::kernels::planner::{table_json, Choice};
+use crate::log_warn;
+use crate::obs::trace as otrace;
 use crate::util::json::Json;
 
 /// Default seed for policy tiebreaks (override via [`RouterConfig`]).
@@ -300,6 +302,7 @@ impl Router {
     /// Place `fleet_id` on a policy-chosen worker; re-picks when a worker
     /// races to dead between the snapshot and the send.
     fn place(&mut self, fleet_id: u64, request: &Request) -> Result<usize> {
+        let mut span = otrace::span("place", request.trace);
         let shape_key = request.pixels.len() as u64;
         for _ in 0..self.workers.len().max(1) {
             let views = self.views();
@@ -307,6 +310,11 @@ impl Router {
                 break;
             };
             if self.worker(wid)?.submit(fleet_id, request.clone()).is_ok() {
+                if otrace::enabled() {
+                    span.arg("worker", wid.to_string());
+                    span.arg("policy", self.policy.name().to_string());
+                    span.arg("fleet_id", fleet_id.to_string());
+                }
                 return Ok(wid);
             }
         }
@@ -371,9 +379,9 @@ impl Router {
             for w in self.workers.drain(..) {
                 if w.health() == WorkerHealth::Dead {
                     if let Some(e) = w.error() {
-                        eprintln!("fleet: reaping worker {}: {e}", w.id);
+                        log_warn!("fleet: reaping worker {}: {e}", w.id);
                     } else {
-                        eprintln!("fleet: reaping dead worker {}", w.id);
+                        log_warn!("fleet: reaping dead worker {}", w.id);
                     }
                     w.join();
                 } else {
@@ -401,6 +409,10 @@ impl Router {
                 .expect("stranded id came from inflight")
                 .request
                 .clone();
+            let mut span = otrace::span("resubmit", request.trace);
+            if otrace::enabled() {
+                span.arg("fleet_id", fid.to_string());
+            }
             let worker = self.place(fid, &request).map_err(|e| {
                 anyhow!("request {fid} stranded on a dead worker and could not be re-placed: {e}")
             })?;
@@ -599,6 +611,7 @@ mod tests {
             pixels: s.pixels,
             label: Some(s.label),
             arrived: Instant::now(),
+            trace: crate::obs::trace::TraceCtx::NONE,
         }
     }
 

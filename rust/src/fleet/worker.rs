@@ -26,6 +26,7 @@ use anyhow::{anyhow, Result};
 use crate::coordinator::backend::{InferenceBackend, RequestOutput, Ticket};
 use crate::coordinator::batcher::Request;
 use crate::coordinator::metrics::Metrics;
+use crate::obs::trace as otrace;
 
 /// Builds a worker's engine inside its thread. Shared by every spawn so
 /// `add_worker` clones are identical (same config ⇒ same seeded weights ⇒
@@ -34,12 +35,6 @@ pub type BackendFactory = Arc<dyn Fn() -> Result<Box<dyn InferenceBackend>> + Se
 
 /// Fleet-wide completed-output map: fleet request id → output.
 pub type DoneMap = Arc<DoneTable>;
-
-/// Most-recent per-sample metrics entries a worker retains. Bounded serve
-/// runs stay far below this (their end-of-run reports see every sample);
-/// a worker behind the HTTP front door steps forever and must not grow
-/// its stage/audit vectors without limit — the counters keep the totals.
-const METRICS_SAMPLE_CAP: usize = 4096;
 
 /// Cancelled-id tombstones the table remembers, so a worker filing a
 /// cancelled request's output late finds the tombstone and drops it.
@@ -401,6 +396,14 @@ fn handle_command(
 ) -> Flow {
     match cmd {
         Command::Submit(fleet_id, request) => {
+            // The inbox span bridges the thread hop: it parents on the
+            // ingress span carried by the request, and the engine-step span
+            // the backend later records parents on the same context.
+            let mut span = otrace::span("worker_inbox", request.trace);
+            if otrace::enabled() {
+                span.arg("fleet_id", fleet_id.to_string());
+                span.arg("request_id", request.id.to_string());
+            }
             let ticket = backend.submit(request);
             pending.push((fleet_id, ticket));
             Flow::Continue
@@ -513,9 +516,7 @@ fn worker_main(
             }
             let step = {
                 let mut metrics = shared.metrics.lock().unwrap();
-                let r = backend.step(max_batch.max(1), &mut metrics);
-                metrics.cap_samples(METRICS_SAMPLE_CAP);
-                r
+                backend.step(max_batch.max(1), &mut metrics)
             };
             if let Err(e) = step {
                 shared.fail(format!("worker {id} engine step failed: {e}"));
@@ -567,6 +568,7 @@ mod tests {
             pixels: s.pixels,
             label: Some(s.label),
             arrived: Instant::now(),
+            trace: crate::obs::trace::TraceCtx::NONE,
         }
     }
 

@@ -21,6 +21,7 @@
 use std::sync::Arc;
 
 use crate::kernels::api::{LinearKernel, PreparedWeights, RawWeights};
+use crate::kernels::registry::dispatch_grouped;
 
 /// Numerical floor shared with `python/compile/kernels/ref.py::linattn_ref`.
 pub const EPS: f32 = 1e-6;
@@ -445,7 +446,7 @@ pub fn hamming_linear_attn_batched(
         })
         .collect();
     let mut kvz = vec![0.0f32; g * rows * bits];
-    kernel.run_grouped(&kc_w, &x1, rows, &mut kvz);
+    dispatch_grouped(kernel.as_ref(), &kc_w, &x1, rows, &mut kvz);
 
     // Stage-2 weights: qcᵀ (bits × n) per group.
     let qc_w: Vec<PreparedWeights> = (0..g)
@@ -460,7 +461,7 @@ pub fn hamming_linear_attn_batched(
         })
         .collect();
     let mut numden = vec![0.0f32; g * rows * n];
-    kernel.run_grouped(&qc_w, &kvz, rows, &mut numden);
+    dispatch_grouped(kernel.as_ref(), &qc_w, &kvz, rows, &mut numden);
 
     // Epilogue: per-group Σⱼvⱼ and the shared normalizer, same ascending-j
     // order as the per-head path.

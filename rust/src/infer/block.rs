@@ -184,7 +184,7 @@ impl LinearLayer {
             None => self.kernel.prepare_operand(x, m, k),
         };
         let mut out = vec![0.0f32; m * self.weights.n()];
-        self.kernel.run(&self.weights, &op, &mut out);
+        crate::kernels::registry::dispatch(self.kernel.as_ref(), &self.weights, &op, &mut out);
         for row in out.chunks_mut(self.bias.len()) {
             for (v, &b) in row.iter_mut().zip(&self.bias) {
                 *v += b;

@@ -28,6 +28,7 @@ use anyhow::{anyhow, Result};
 use crate::kernels::api::{LinearKernel, Primitive, RawWeights};
 use crate::kernels::registry::KernelRegistry;
 use crate::kernels::simd::detect;
+use crate::log_warn;
 use crate::util::json::Json;
 use crate::util::rng::XorShift64;
 
@@ -242,7 +243,7 @@ impl Planner {
         if let Some(stamp) = table.get("cpu_features").and_then(|v| v.as_str()) {
             let host = detect::active_level().name();
             if stamp != host {
-                eprintln!(
+                log_warn!(
                     "planner: table was autotuned with cpu_features={stamp}, this host runs \
                      {host}; choices may be suboptimal and unknown backends will re-plan"
                 );
@@ -269,7 +270,7 @@ impl Planner {
                 row.req("n")?.as_usize().ok_or_else(|| anyhow!("bad n"))?,
             );
             let Some(primitive) = Primitive::parse(prim_name) else {
-                eprintln!(
+                log_warn!(
                     "planner: skipping table entry for unknown primitive '{prim_name}' \
                      (shape {}x{}x{} will re-plan)",
                     shape.m, shape.k, shape.n
@@ -278,7 +279,7 @@ impl Planner {
                 continue;
             };
             if self.registry.get(primitive, backend).is_none() {
-                eprintln!(
+                log_warn!(
                     "planner: skipping table entry {}/{backend} — not in this registry \
                      (shape {}x{}x{} will re-plan)",
                     primitive.name(),
@@ -293,7 +294,7 @@ impl Planner {
             pinned += 1;
         }
         if skipped > 0 {
-            eprintln!(
+            log_warn!(
                 "planner: {skipped} table entries skipped; affected shapes re-plan on first use"
             );
         }

@@ -8,13 +8,53 @@
 
 use std::sync::Arc;
 
-use crate::kernels::api::{LinearKernel, Primitive};
+use crate::kernels::api::{LinearKernel, Operand, PreparedWeights, Primitive};
 use crate::kernels::backends::{
     FakeShiftCached, FakeShiftRef, MatAddBitplane, MatAddPacked, MatAddRef, MatMulBlocked,
     MatMulNaive, MatShiftPlanes, MatShiftRef,
 };
 use crate::kernels::parallel::{MatAddRowPar, MatShiftRowPar};
 use crate::kernels::simd::{MatAddSimd, MatShiftSimd};
+use crate::obs::trace as otrace;
+
+/// Run `kernel` on one prepared operand, bracketing the call in a span
+/// named after the kernel's `"primitive/backend"` id (dispatch shape as
+/// args) parented on the ambient tracing context — this is where a traced
+/// request's span tree bottoms out at actual kernel work. With tracing
+/// disabled the wrapper is a direct call (one relaxed atomic load).
+pub fn dispatch(kernel: &dyn LinearKernel, w: &PreparedWeights, x: &Operand, out: &mut [f32]) {
+    if !otrace::enabled() {
+        return kernel.run(w, x, out);
+    }
+    let mut span = otrace::span(&kernel.id(), otrace::current());
+    span.arg("m", (out.len() / w.n().max(1)).to_string());
+    span.arg("k", w.k().to_string());
+    span.arg("n", w.n().to_string());
+    kernel.run(w, x, out);
+}
+
+/// [`dispatch`] for one fused grouped call ([`LinearKernel::run_grouped`]):
+/// one span covers all `ws.len()` groups, which is exactly the fused
+/// image-path attention's amortization story rendered in the trace.
+pub fn dispatch_grouped(
+    kernel: &dyn LinearKernel,
+    ws: &[PreparedWeights],
+    x: &[f32],
+    m: usize,
+    out: &mut [f32],
+) {
+    if !otrace::enabled() {
+        return kernel.run_grouped(ws, x, m, out);
+    }
+    let mut span = otrace::span(&kernel.id(), otrace::current());
+    span.arg("groups", ws.len().to_string());
+    span.arg("m", m.to_string());
+    if let Some(w) = ws.first() {
+        span.arg("k", w.k().to_string());
+        span.arg("n", w.n().to_string());
+    }
+    kernel.run_grouped(ws, x, m, out);
+}
 
 /// An ordered collection of backends (registration order is enumeration
 /// order, so defaults list reference kernels before deployment ones).

@@ -49,6 +49,7 @@
 //! to `artifacts/*.hlo.txt` and the Rust binary is self-contained afterwards.
 
 pub mod util;
+pub mod obs;
 pub mod quant;
 pub mod kernels;
 pub mod energy;

@@ -13,6 +13,8 @@
 //!                     [--bundle m.sabundle] [--bundle-key K]
 //!                     [--http PORT]   (serve over HTTP instead of the
 //!                                      synthetic benchmark client)
+//!                     [--trace-out trace.json]  (dump Chrome trace-event
+//!                                      JSON of the run, Perfetto-loadable)
 //! shiftaddvit bundle  pack [--out m.sabundle] [--params p.sap]
 //!                     [--planner-table t.json] [--key K]
 //! shiftaddvit bundle  verify|inspect|unpack --bundle m.sabundle
@@ -40,6 +42,7 @@ use shiftaddvit::runtime::engine::Engine;
 use shiftaddvit::util::cli::Args;
 
 fn main() -> Result<()> {
+    shiftaddvit::util::log::init_default(shiftaddvit::util::log::Level::Warn);
     let args = Args::parse();
     match args.subcommand.as_deref() {
         Some("serve") => cmd_serve(&args),
@@ -106,6 +109,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if let Some(k) = args.get("bundle-key") {
         cfg.bundle_key = Some(k.to_string());
+    }
+    if let Some(p) = args.get("trace-out") {
+        cfg.trace_out = Some(p.to_string());
     }
     if cfg.workers > 1 {
         println!(

@@ -40,7 +40,7 @@ impl Expert {
     pub fn forward(&self, x: &[f32], m: usize) -> Vec<f32> {
         let op = self.kernel.prepare_operand(x, m, self.weights.k());
         let mut out = vec![0.0f32; m * self.weights.n()];
-        self.kernel.run(&self.weights, &op, &mut out);
+        crate::kernels::registry::dispatch(self.kernel.as_ref(), &self.weights, &op, &mut out);
         out
     }
 }

@@ -1,0 +1,306 @@
+//! Fixed-size log-bucketed latency/size histograms — the bounded
+//! replacement for the per-sample `Vec<f64>` buffers that
+//! `coordinator::metrics` used to trim with `cap_samples`.
+//!
+//! Layout: 64 half-octave buckets (successive upper bounds grow by √2)
+//! spanning `2^-16 .. 2^16`, which covers sub-microsecond stage timings in
+//! milliseconds up through 65 k-token gauges. Recording is O(1) and
+//! allocation-free; `merge` adds bucket counts exactly, so fleet-merged
+//! percentiles equal the percentiles a single recorder would have produced
+//! over the union of the samples — no per-worker trimming bias.
+//!
+//! Accuracy: percentiles are reported at the geometric midpoint of the
+//! selected bucket (clamped into the exact observed `[min, max]`), so the
+//! relative error of any quantile is at most `2^(1/4) − 1 ≈ 19%` for
+//! in-range positive samples. Count, sum, mean, min and max are exact.
+
+use crate::util::stats::Summary;
+
+/// Number of buckets (half-octaves over `2^-16 .. 2^16`).
+pub const BUCKETS: usize = 64;
+
+/// log2 of bucket 0's lower edge.
+const MIN_EXP: f64 = -16.0;
+
+/// Buckets per octave (√2 spacing).
+const PER_OCTAVE: f64 = 2.0;
+
+/// A bounded histogram: 64 bucket counts plus exact count/sum/sum²/min/max.
+#[derive(Clone, Debug)]
+pub struct Hist {
+    counts: [u64; BUCKETS],
+    count: u64,
+    sum: f64,
+    sum_sq: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist {
+            counts: [0; BUCKETS],
+            count: 0,
+            sum: 0.0,
+            sum_sq: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+/// Bucket index for a sample: values ≤ 0 (and NaN) land in bucket 0,
+/// values above the range clamp into the top bucket.
+fn index(v: f64) -> usize {
+    if !(v > 0.0) {
+        return 0;
+    }
+    let i = ((v.log2() - MIN_EXP) * PER_OCTAVE).floor();
+    if i < 0.0 {
+        0
+    } else if i >= (BUCKETS - 1) as f64 {
+        BUCKETS - 1
+    } else {
+        i as usize
+    }
+}
+
+/// Upper edge of bucket `i` (inclusive for classification purposes). The
+/// top bucket is unbounded (`+∞`) because overflow clamps into it.
+pub fn upper_bound(i: usize) -> f64 {
+    if i >= BUCKETS - 1 {
+        f64::INFINITY
+    } else {
+        ((MIN_EXP + (i as f64 + 1.0) / PER_OCTAVE) * std::f64::consts::LN_2).exp()
+    }
+}
+
+/// Geometric midpoint of bucket `i` — the representative value percentile
+/// queries report (before clamping into the exact `[min, max]`).
+fn midpoint(i: usize) -> f64 {
+    ((MIN_EXP + (i as f64 + 0.5) / PER_OCTAVE) * std::f64::consts::LN_2).exp()
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist::default()
+    }
+
+    /// Record one sample. O(1), allocation-free.
+    pub fn record(&mut self, v: f64) {
+        self.counts[index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.sum_sq += v * v;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact sum of recorded samples.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact mean (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Exact minimum (0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact maximum (0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Raw bucket counts (for Prometheus `_bucket` series).
+    pub fn bucket_counts(&self) -> &[u64; BUCKETS] {
+        &self.counts
+    }
+
+    /// Fold another histogram in. Bucket counts add exactly, so the merge
+    /// of N workers' histograms yields the same percentiles as one
+    /// histogram fed all N workers' samples — the property the fleet
+    /// aggregation path relies on.
+    pub fn merge(&mut self, other: &Hist) {
+        for i in 0..BUCKETS {
+            self.counts[i] += other.counts[i];
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.sum_sq += other.sum_sq;
+        if other.count > 0 {
+            if other.min < self.min {
+                self.min = other.min;
+            }
+            if other.max > self.max {
+                self.max = other.max;
+            }
+        }
+    }
+
+    /// Quantile `q ∈ [0, 1]` with bucket resolution: walks cumulative
+    /// counts to the bucket holding rank `q·(n−1)` and reports its
+    /// geometric midpoint clamped into the exact `[min, max]`. Relative
+    /// error ≤ `2^(1/4) − 1 ≈ 19%` for in-range positive samples; exact
+    /// when all samples share one value.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = q.clamp(0.0, 1.0) * (self.count - 1) as f64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum as f64 > target {
+                return midpoint(i).clamp(self.min, self.max);
+            }
+        }
+        self.max()
+    }
+
+    /// Standard deviation from the exact moment sums (0 when empty).
+    pub fn std(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let mean = self.mean();
+        (self.sum_sq / self.count as f64 - mean * mean).max(0.0).sqrt()
+    }
+
+    /// Project into the repo-wide [`Summary`] shape: n/mean/std/min/max are
+    /// exact, percentiles carry the documented bucket error.
+    pub fn summary(&self) -> Summary {
+        if self.count == 0 {
+            return Summary::empty();
+        }
+        Summary {
+            n: self.count as usize,
+            mean: self.mean(),
+            std: self.std(),
+            min: self.min(),
+            p50: self.percentile(0.50),
+            p90: self.percentile(0.90),
+            p95: self.percentile(0.95),
+            p99: self.percentile(0.99),
+            max: self.max(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_hist_is_zeroed() {
+        let h = Hist::new();
+        assert!(h.is_empty());
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.percentile(0.5), 0.0);
+        assert_eq!(h.summary().n, 0);
+    }
+
+    #[test]
+    fn constant_samples_are_exact() {
+        let mut h = Hist::new();
+        for _ in 0..100 {
+            h.record(5.0);
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.mean(), 5.0);
+        // min == max == 5 ⇒ the midpoint clamps to the exact value
+        assert_eq!(h.percentile(0.5), 5.0);
+        assert_eq!(h.percentile(0.99), 5.0);
+        assert_eq!(h.summary().std, 0.0);
+    }
+
+    #[test]
+    fn percentiles_within_documented_bucket_error() {
+        let mut h = Hist::new();
+        let samples: Vec<f64> = (1..=1000).map(|i| i as f64 * 0.37).collect();
+        for &s in &samples {
+            h.record(s);
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        for q in [0.5, 0.9, 0.95, 0.99] {
+            let exact = crate::util::stats::percentile(&sorted, q);
+            let approx = h.percentile(q);
+            assert!(
+                (approx - exact).abs() / exact <= 0.20,
+                "q={q}: approx {approx} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_equals_union() {
+        let mut a = Hist::new();
+        let mut b = Hist::new();
+        let mut all = Hist::new();
+        for i in 0..500 {
+            let v = (i as f64 * 0.13).exp().min(1e4);
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            all.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.sum(), all.sum());
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(a.percentile(q), all.percentile(q));
+        }
+    }
+
+    #[test]
+    fn zero_and_overflow_samples_are_counted() {
+        let mut h = Hist::new();
+        h.record(0.0);
+        h.record(1e12); // far above the top bucket's edge
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 1e12);
+        // percentiles stay inside the observed range
+        assert!(h.percentile(0.99) <= 1e12);
+    }
+
+    #[test]
+    fn upper_bounds_grow_by_sqrt_two() {
+        let r = upper_bound(10) / upper_bound(9);
+        assert!((r - std::f64::consts::SQRT_2).abs() < 1e-9);
+        assert!(upper_bound(BUCKETS - 1).is_infinite());
+    }
+}

@@ -1,0 +1,20 @@
+//! Observability: request tracing, bounded histogram metrics, and
+//! Prometheus/Chrome-trace export — all zero-dependency (DESIGN.md §6).
+//!
+//! Three pillars:
+//! - [`trace`] — a process-global bounded ring of span events plus the
+//!   [`trace::TraceCtx`] threaded through `Request`/`StreamOutput`, so one
+//!   HTTP request yields a connected span tree: socket ingress → router
+//!   placement → worker step → per-kernel grouped dispatch. Exported as
+//!   Chrome trace-event JSON (`--trace-out`, `GET /trace`) for Perfetto.
+//! - [`hist`] — fixed-size log-bucketed histograms backing
+//!   `coordinator::metrics`: O(1) record, exact-count merge (fleet
+//!   aggregation is unbiased), percentiles within a documented ≤19%
+//!   bucket error while count/sum/mean/min/max stay exact.
+//! - [`prom`] — Prometheus text exposition rendered from the same metrics
+//!   that feed the JSON endpoints (`GET /metrics.prom`), plus the minimal
+//!   format lint the test suite and CI smoke assert against.
+
+pub mod hist;
+pub mod prom;
+pub mod trace;

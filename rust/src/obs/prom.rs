@@ -1,0 +1,219 @@
+//! Prometheus text exposition (version 0.0.4) rendered from the same
+//! metrics registry that feeds the JSON endpoints — no external crates.
+//!
+//! [`PromWriter`] enforces the two invariants scrapers trip over most:
+//! every sample line belongs to a family with exactly one `# TYPE` line,
+//! and no two sample lines share a series key (name + label set).
+//! Histograms emit cumulative `_bucket{le=...}` lines (empty runs are
+//! compressed away; `+Inf`, `_sum` and `_count` are always present).
+
+use std::collections::BTreeSet;
+use std::fmt::Write as _;
+
+use crate::obs::hist::{upper_bound, Hist, BUCKETS};
+
+/// Builder for one exposition document.
+#[derive(Default)]
+pub struct PromWriter {
+    out: String,
+    typed: BTreeSet<String>,
+    series: BTreeSet<String>,
+}
+
+fn escape_label(v: &str) -> String {
+    let mut s = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => s.push_str("\\\\"),
+            '"' => s.push_str("\\\""),
+            '\n' => s.push_str("\\n"),
+            c => s.push(c),
+        }
+    }
+    s
+}
+
+fn label_str(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let inner: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    format!("{{{}}}", inner.join(","))
+}
+
+fn fmt_value(v: f64) -> String {
+    if v.is_infinite() {
+        if v > 0.0 { "+Inf".into() } else { "-Inf".into() }
+    } else if v.is_nan() {
+        "NaN".into()
+    } else {
+        format!("{v}")
+    }
+}
+
+impl PromWriter {
+    pub fn new() -> PromWriter {
+        PromWriter::default()
+    }
+
+    fn type_line(&mut self, name: &str, help: &str, kind: &str) {
+        if self.typed.insert(name.to_string()) {
+            let _ = writeln!(self.out, "# HELP {name} {help}");
+            let _ = writeln!(self.out, "# TYPE {name} {kind}");
+        }
+    }
+
+    fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        let key = format!("{name}{}", label_str(labels));
+        if !self.series.insert(key.clone()) {
+            debug_assert!(false, "duplicate Prometheus series {key}");
+            return;
+        }
+        let _ = writeln!(self.out, "{key} {}", fmt_value(value));
+    }
+
+    pub fn counter(&mut self, name: &str, help: &str, labels: &[(&str, &str)], value: f64) {
+        self.type_line(name, help, "counter");
+        self.sample(name, labels, value);
+    }
+
+    pub fn gauge(&mut self, name: &str, help: &str, labels: &[(&str, &str)], value: f64) {
+        self.type_line(name, help, "gauge");
+        self.sample(name, labels, value);
+    }
+
+    /// Emit one labeled histogram series set from a [`Hist`]: cumulative
+    /// `_bucket` lines (runs of unchanged cumulative count are skipped),
+    /// then `_sum` and `_count`.
+    pub fn histogram(&mut self, name: &str, help: &str, labels: &[(&str, &str)], h: &Hist) {
+        self.type_line(name, help, "histogram");
+        let bucket = format!("{name}_bucket");
+        let mut cum = 0u64;
+        let mut last_emitted = u64::MAX;
+        for (i, &c) in h.bucket_counts().iter().enumerate() {
+            cum += c;
+            let is_last = i == BUCKETS - 1;
+            if cum == last_emitted && !is_last {
+                continue;
+            }
+            let le = fmt_value(upper_bound(i));
+            let mut ls: Vec<(&str, &str)> = labels.to_vec();
+            ls.push(("le", le.as_str()));
+            self.sample(&bucket, &ls, cum as f64);
+            last_emitted = cum;
+        }
+        self.sample(&format!("{name}_sum"), labels, h.sum());
+        self.sample(&format!("{name}_count"), labels, h.count() as f64);
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// Minimal exposition-format lint (what the property suite and CI smoke
+/// assert): every sample line belongs to a `# TYPE`-declared family
+/// (histogram suffixes `_bucket`/`_sum`/`_count` resolve to their base
+/// family), and no two sample lines repeat a series key.
+pub fn lint(text: &str) -> Result<(), String> {
+    use std::collections::BTreeMap;
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    let mut seen: BTreeSet<String> = BTreeSet::new();
+    for (no, line) in text.lines().enumerate() {
+        let line = line.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().ok_or_else(|| format!("line {no}: bare TYPE"))?;
+            let kind = it.next().ok_or_else(|| format!("line {no}: TYPE without kind"))?;
+            if types.insert(name.to_string(), kind.to_string()).is_some() {
+                return Err(format!("line {no}: duplicate TYPE for {name}"));
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+        // sample line: name[{labels}] value
+        let name_end = line
+            .find(|c: char| c == '{' || c == ' ')
+            .ok_or_else(|| format!("line {no}: malformed sample: {line}"))?;
+        let name = &line[..name_end];
+        let series_end = if line.as_bytes()[name_end] == b'{' {
+            line.find('}')
+                .ok_or_else(|| format!("line {no}: unclosed labels: {line}"))?
+                + 1
+        } else {
+            name_end
+        };
+        let series = &line[..series_end];
+        let value = line[series_end..].trim();
+        value
+            .parse::<f64>()
+            .or_else(|e| match value {
+                "+Inf" | "-Inf" | "NaN" => Ok(0.0),
+                _ => Err(e),
+            })
+            .map_err(|e| format!("line {no}: bad value '{value}': {e}"))?;
+        let family = ["_bucket", "_sum", "_count"]
+            .iter()
+            .find_map(|suf| {
+                let base = name.strip_suffix(suf)?;
+                (types.get(base).map(String::as_str) == Some("histogram")).then_some(base)
+            })
+            .unwrap_or(name);
+        if !types.contains_key(family) {
+            return Err(format!("line {no}: sample {name} has no # TYPE for {family}"));
+        }
+        if !seen.insert(series.to_string()) {
+            return Err(format!("line {no}: duplicate series {series}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writer_output_passes_lint() {
+        let mut w = PromWriter::new();
+        w.counter("sa_requests_total", "requests served", &[], 42.0);
+        w.gauge("sa_live", "live sessions", &[("worker", "0")], 3.0);
+        let mut h = Hist::new();
+        for i in 1..200 {
+            h.record(i as f64 * 0.1);
+        }
+        w.histogram("sa_stage_ms", "stage timings", &[("stage", "forward")], &h);
+        w.histogram("sa_stage_ms", "stage timings", &[("stage", "dispatch")], &h);
+        let text = w.finish();
+        lint(&text).expect("writer output lints clean");
+        // one TYPE line even with two label sets in the family
+        assert_eq!(text.matches("# TYPE sa_stage_ms histogram").count(), 1);
+        assert!(text.contains("le=\"+Inf\""));
+    }
+
+    #[test]
+    fn lint_rejects_untyped_and_duplicate_series() {
+        assert!(lint("nope 1\n").is_err());
+        let dup = "# TYPE a counter\na 1\na 2\n";
+        assert!(lint(dup).is_err());
+        let ok = "# TYPE a counter\na{x=\"1\"} 1\na{x=\"2\"} 2\n";
+        assert!(lint(ok).is_ok());
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let mut w = PromWriter::new();
+        w.gauge("g", "h", &[("k", "a\"b\\c\nd")], 1.0);
+        let text = w.finish();
+        assert!(text.contains("k=\"a\\\"b\\\\c\\nd\""));
+        lint(&text).expect("escaped labels lint clean");
+    }
+}

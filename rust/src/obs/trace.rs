@@ -1,0 +1,365 @@
+//! Request tracing: a process-global bounded ring of span events plus the
+//! [`TraceCtx`] threaded through `Request`/`StreamOutput` so one request
+//! produces a connected span tree from the HTTP socket down to individual
+//! grouped kernel dispatches.
+//!
+//! Design constraints (DESIGN.md §6: no external crates):
+//! - **Off means free**: every hot-path entry checks one relaxed atomic and
+//!   returns an inert guard without allocating. Call sites that format
+//!   span arguments guard the formatting behind [`enabled`].
+//! - **Bounded**: the ring holds at most [`RING_CAP`] finished spans;
+//!   older spans are evicted FIFO, mirroring how the histogram metrics
+//!   bound their memory.
+//! - **Deterministic ids**: span/trace ids come from one process-global
+//!   counter ([`reset`] rewinds it), so identical single-threaded
+//!   executions emit identical id sequences — tests walk parent links by
+//!   value.
+//!
+//! Spans are recorded when their RAII [`SpanGuard`] drops, so the ring
+//! stores children before parents; [`export_chrome`] emits Chrome
+//! trace-event JSON (`ph: "X"` complete events, µs timestamps) loadable in
+//! Perfetto or `chrome://tracing`.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Maximum finished spans held; older spans are evicted FIFO.
+pub const RING_CAP: usize = 65_536;
+
+/// Trace id + parent span id carried by a request as it crosses threads.
+/// `NONE` (all zeros) means "not traced" — spans opened under it become
+/// roots of fresh traces when recording is on.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceCtx {
+    pub trace: u64,
+    pub span: u64,
+}
+
+impl TraceCtx {
+    pub const NONE: TraceCtx = TraceCtx { trace: 0, span: 0 };
+
+    pub fn is_active(&self) -> bool {
+        self.trace != 0
+    }
+}
+
+/// One finished span.
+#[derive(Clone, Debug)]
+pub struct SpanEvent {
+    pub trace: u64,
+    pub id: u64,
+    /// 0 for roots.
+    pub parent: u64,
+    pub name: String,
+    /// µs since the recorder epoch.
+    pub start_us: f64,
+    pub dur_us: f64,
+    /// Small dense per-thread id (Chrome `tid`).
+    pub tid: u64,
+    pub args: Vec<(String, String)>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+fn ring() -> &'static Mutex<VecDeque<SpanEvent>> {
+    static RING: OnceLock<Mutex<VecDeque<SpanEvent>>> = OnceLock::new();
+    RING.get_or_init(|| Mutex::new(VecDeque::new()))
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+thread_local! {
+    static CURRENT: Cell<TraceCtx> = Cell::new(TraceCtx::NONE);
+    static TID: Cell<u64> = Cell::new(0);
+}
+
+fn tid() -> u64 {
+    TID.with(|t| {
+        if t.get() == 0 {
+            t.set(NEXT_TID.fetch_add(1, Ordering::Relaxed));
+        }
+        t.get()
+    })
+}
+
+/// Is the recorder on? Hot paths check this before formatting span args.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+/// Rewind the id counter and drop all recorded spans (tests; fresh runs).
+pub fn reset() {
+    NEXT_ID.store(1, Ordering::SeqCst);
+    ring().lock().unwrap().clear();
+}
+
+/// Number of finished spans currently held.
+pub fn len() -> usize {
+    ring().lock().unwrap().len()
+}
+
+/// Snapshot of all finished spans (oldest first).
+pub fn events() -> Vec<SpanEvent> {
+    ring().lock().unwrap().iter().cloned().collect()
+}
+
+/// The calling thread's ambient context (set around engine steps so kernel
+/// dispatches deep in the forward pass can parent themselves without every
+/// intermediate signature carrying a `TraceCtx`).
+pub fn current() -> TraceCtx {
+    CURRENT.with(|c| c.get())
+}
+
+/// Install `ctx` as the thread's ambient context until the guard drops
+/// (the previous value is restored, so nesting works).
+pub fn set_current(ctx: TraceCtx) -> CurrentGuard {
+    let prev = CURRENT.with(|c| c.replace(ctx));
+    CurrentGuard { prev }
+}
+
+pub struct CurrentGuard {
+    prev: TraceCtx,
+}
+
+impl Drop for CurrentGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        CURRENT.with(|c| c.set(prev));
+    }
+}
+
+struct SpanInner {
+    ctx: TraceCtx,
+    parent: u64,
+    name: String,
+    args: Vec<(String, String)>,
+    start: Instant,
+    start_us: f64,
+}
+
+/// RAII span: opened by [`span`]/[`root`], recorded into the ring when
+/// dropped. Inert (no allocation, no time capture) while recording is off.
+pub struct SpanGuard {
+    inner: Option<SpanInner>,
+}
+
+impl SpanGuard {
+    /// The context children should use as their parent. `NONE` when the
+    /// recorder was off at open time.
+    pub fn ctx(&self) -> TraceCtx {
+        self.inner.as_ref().map(|i| i.ctx).unwrap_or(TraceCtx::NONE)
+    }
+
+    /// Attach a key/value argument (shown in the Perfetto side panel).
+    /// No-op on inert guards.
+    pub fn arg(&mut self, key: &str, value: impl Into<String>) {
+        if let Some(i) = &mut self.inner {
+            i.args.push((key.to_string(), value.into()));
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(i) = self.inner.take() {
+            let dur_us = i.start.elapsed().as_secs_f64() * 1e6;
+            let ev = SpanEvent {
+                trace: i.ctx.trace,
+                id: i.ctx.span,
+                parent: i.parent,
+                name: i.name,
+                start_us: i.start_us,
+                dur_us,
+                tid: tid(),
+                args: i.args,
+            };
+            let mut r = ring().lock().unwrap();
+            if r.len() >= RING_CAP {
+                r.pop_front();
+            }
+            r.push_back(ev);
+        }
+    }
+}
+
+/// Open a span under `parent`. If `parent` is [`TraceCtx::NONE`] the span
+/// roots a fresh trace. Inert when recording is off.
+pub fn span(name: &str, parent: TraceCtx) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { inner: None };
+    }
+    let id = NEXT_ID.fetch_add(1, Ordering::SeqCst);
+    let (trace, parent_span) = if parent.is_active() {
+        (parent.trace, parent.span)
+    } else {
+        (NEXT_ID.fetch_add(1, Ordering::SeqCst), 0)
+    };
+    let start = Instant::now();
+    let start_us = start.duration_since(epoch()).as_secs_f64() * 1e6;
+    SpanGuard {
+        inner: Some(SpanInner {
+            ctx: TraceCtx { trace, span: id },
+            parent: parent_span,
+            name: name.to_string(),
+            args: Vec::new(),
+            start,
+            start_us,
+        }),
+    }
+}
+
+/// Open a root span of a brand-new trace (request ingress).
+pub fn root(name: &str) -> SpanGuard {
+    span(name, TraceCtx::NONE)
+}
+
+fn event_json(e: &SpanEvent) -> Json {
+    let mut args = std::collections::BTreeMap::new();
+    args.insert("trace_id".to_string(), Json::num(e.trace as f64));
+    args.insert("span_id".to_string(), Json::num(e.id as f64));
+    args.insert("parent_id".to_string(), Json::num(e.parent as f64));
+    for (k, v) in &e.args {
+        args.insert(k.clone(), Json::str(v.clone()));
+    }
+    Json::obj(vec![
+        ("name", Json::str(e.name.clone())),
+        ("cat", Json::str("shiftaddvit")),
+        ("ph", Json::str("X")),
+        ("ts", Json::num(e.start_us)),
+        ("dur", Json::num(e.dur_us)),
+        ("pid", Json::num(1.0)),
+        ("tid", Json::num(e.tid as f64)),
+        ("args", Json::Obj(args)),
+    ])
+}
+
+/// Export all recorded spans as Chrome trace-event JSON (the object form:
+/// `{"traceEvents": [...]}`), loadable in Perfetto / `chrome://tracing`.
+/// Span/parent/trace ids ride in each event's `args`, so tools (and the
+/// repo's tests) can walk the tree structurally.
+pub fn export_chrome() -> Json {
+    let events = events();
+    Json::obj(vec![
+        (
+            "traceEvents",
+            Json::Arr(events.iter().map(event_json).collect()),
+        ),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The recorder is process-global; unit tests that toggle it serialize
+    // on this lock so parallel test threads don't interleave rings.
+    fn test_lock() -> &'static Mutex<()> {
+        static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+        LOCK.get_or_init(|| Mutex::new(()))
+    }
+
+    #[test]
+    fn disabled_recorder_emits_nothing() {
+        let _l = test_lock().lock().unwrap();
+        set_enabled(false);
+        reset();
+        {
+            let mut s = root("noop");
+            s.arg("k", "v");
+            assert_eq!(s.ctx(), TraceCtx::NONE);
+        }
+        assert_eq!(len(), 0);
+    }
+
+    #[test]
+    fn spans_nest_and_link_parents() {
+        let _l = test_lock().lock().unwrap();
+        set_enabled(true);
+        reset();
+        let (root_ctx, child_ctx);
+        {
+            let r = root("ingress");
+            root_ctx = r.ctx();
+            {
+                let c = span("step", r.ctx());
+                child_ctx = c.ctx();
+                let _g = set_current(c.ctx());
+                let _k = span("kernel", current());
+            }
+        }
+        set_enabled(false);
+        let evs = events();
+        assert_eq!(evs.len(), 3);
+        // children recorded before parents (drop order)
+        assert_eq!(evs[0].name, "kernel");
+        assert_eq!(evs[1].name, "step");
+        assert_eq!(evs[2].name, "ingress");
+        assert_eq!(evs[2].parent, 0);
+        assert_eq!(evs[1].parent, root_ctx.span);
+        assert_eq!(evs[0].parent, child_ctx.span);
+        assert!(evs.iter().all(|e| e.trace == root_ctx.trace));
+        reset();
+    }
+
+    #[test]
+    fn current_guard_restores_previous_ctx() {
+        let _l = test_lock().lock().unwrap();
+        let outer = TraceCtx { trace: 7, span: 9 };
+        let _a = set_current(outer);
+        {
+            let inner = TraceCtx { trace: 7, span: 11 };
+            let _b = set_current(inner);
+            assert_eq!(current(), inner);
+        }
+        assert_eq!(current(), outer);
+    }
+
+    #[test]
+    fn ring_is_bounded() {
+        let _l = test_lock().lock().unwrap();
+        set_enabled(true);
+        reset();
+        for _ in 0..(RING_CAP + 10) {
+            let _s = root("x");
+        }
+        assert_eq!(len(), RING_CAP);
+        set_enabled(false);
+        reset();
+    }
+
+    #[test]
+    fn chrome_export_parses_and_carries_ids() {
+        let _l = test_lock().lock().unwrap();
+        set_enabled(true);
+        reset();
+        {
+            let r = root("req");
+            let _c = span("work", r.ctx());
+        }
+        set_enabled(false);
+        let text = export_chrome().to_string();
+        reset();
+        let v = Json::parse(&text).expect("chrome trace JSON parses");
+        let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 2);
+        for e in evs {
+            assert_eq!(e.get("ph").unwrap().as_str(), Some("X"));
+            assert!(e.get("args").unwrap().get("span_id").is_some());
+        }
+    }
+}

@@ -9,6 +9,7 @@ use std::thread;
 
 use anyhow::{anyhow, Result};
 
+use crate::log_error;
 use crate::runtime::artifact::Manifest;
 use crate::runtime::engine::Engine;
 use crate::runtime::tensor::Tensor;
@@ -56,7 +57,7 @@ impl EngineWorker {
                 let engine = match Engine::new(manifest) {
                     Ok(e) => e,
                     Err(e) => {
-                        eprintln!("engine-{id}: failed to init: {e:#}");
+                        log_error!("engine-{id}: failed to init: {e:#}");
                         return;
                     }
                 };

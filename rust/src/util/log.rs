@@ -1,0 +1,159 @@
+//! Tiny leveled logger (`SHIFTADD_LOG=error|warn|info|debug|off`) — the
+//! structured replacement for the ad-hoc `eprintln!` warnings that used to
+//! live in the request queue, the planner's table pinning, and the fleet
+//! supervisor.
+//!
+//! The level resolves lazily on first use: the environment variable wins;
+//! otherwise the process default applies — [`Level::Off`] unless the
+//! binary opted in via [`init_default`] (`main` sets `warn`), so library
+//! consumers and the test suite stay silent by default.
+//!
+//! Use through the crate-root macros:
+//! `crate::log_warn!("fleet: reaping worker {id}")` etc. Message
+//! formatting is skipped entirely when the level is disabled.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+}
+
+impl Level {
+    fn from_u8(v: u8) -> Level {
+        match v {
+            1 => Level::Error,
+            2 => Level::Warn,
+            3 => Level::Info,
+            4 => Level::Debug,
+            _ => Level::Off,
+        }
+    }
+
+    fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "none" | "0" => Some(Level::Off),
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Off => "off",
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// Sentinel meaning "not resolved yet".
+const UNSET: u8 = u8::MAX;
+
+static LEVEL: AtomicU8 = AtomicU8::new(UNSET);
+static DEFAULT: AtomicU8 = AtomicU8::new(Level::Off as u8);
+
+fn resolve() -> Level {
+    let cur = LEVEL.load(Ordering::Relaxed);
+    if cur != UNSET {
+        return Level::from_u8(cur);
+    }
+    let l = std::env::var("SHIFTADD_LOG")
+        .ok()
+        .and_then(|s| Level::parse(&s))
+        .unwrap_or_else(|| Level::from_u8(DEFAULT.load(Ordering::Relaxed)));
+    LEVEL.store(l as u8, Ordering::Relaxed);
+    l
+}
+
+/// Current level (resolving `SHIFTADD_LOG` on first call).
+pub fn level() -> Level {
+    resolve()
+}
+
+/// Force the level, overriding the environment (tests, tooling).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Set the level used when `SHIFTADD_LOG` is unset. Called by the binary's
+/// entry point (`warn`); library/test use keeps the silent default. No-op
+/// once the level has resolved.
+pub fn init_default(l: Level) {
+    DEFAULT.store(l as u8, Ordering::Relaxed);
+}
+
+/// Would a message at `l` be emitted?
+pub fn enabled(l: Level) -> bool {
+    l != Level::Off && l <= resolve()
+}
+
+/// Emit one line to stderr (macro backend — call via `log_warn!` etc.).
+pub fn log(l: Level, module: &str, args: std::fmt::Arguments<'_>) {
+    if enabled(l) {
+        eprintln!("[{}] {}: {}", l.tag(), module, args);
+    }
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($t:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Error, module_path!(), format_args!($($t)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($t:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn, module_path!(), format_args!($($t)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($t:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info, module_path!(), format_args!($($t)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($t:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug, module_path!(), format_args!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_documented_levels() {
+        assert_eq!(Level::parse("off"), Some(Level::Off));
+        assert_eq!(Level::parse("ERROR"), Some(Level::Error));
+        assert_eq!(Level::parse("warn"), Some(Level::Warn));
+        assert_eq!(Level::parse("info"), Some(Level::Info));
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("verbose"), None);
+    }
+
+    #[test]
+    fn levels_order_and_gate() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Off);
+        assert!(!enabled(Level::Error));
+    }
+}

@@ -7,6 +7,7 @@ pub mod cli;
 pub mod httpd;
 pub mod image;
 pub mod json;
+pub mod log;
 pub mod pool;
 pub mod prop;
 pub mod rng;

@@ -161,6 +161,7 @@ fn bundle_request(id: usize) -> Request {
         pixels: s.pixels,
         label: Some(s.label),
         arrived: Instant::now(),
+        trace: shiftaddvit::obs::trace::TraceCtx::NONE,
     }
 }
 

@@ -45,6 +45,7 @@ fn request(id: usize) -> Request {
         pixels: s.pixels,
         label: Some(s.label),
         arrived: Instant::now(),
+        trace: shiftaddvit::obs::trace::TraceCtx::NONE,
     }
 }
 
@@ -273,7 +274,7 @@ fn serve_fleet_end_to_end_reports_per_worker_breakdown() {
     );
     // per-request ids were threaded into the merged metrics: every client
     // id shows up exactly once across the fleet
-    let mut ids = report.metrics.request_ids.clone();
+    let mut ids: Vec<usize> = report.metrics.request_ids.iter().copied().collect();
     ids.sort_unstable();
     assert_eq!(ids, (0..10).collect::<Vec<_>>());
     report.print(); // smoke: fleet report printing must not panic

@@ -159,6 +159,7 @@ fn classify_over_http_is_bit_identical_to_in_process() {
             pixels: sample.pixels.clone(),
             label: Some(sample.label),
             arrived: Instant::now(),
+            trace: shiftaddvit::obs::trace::TraceCtx::NONE,
         })
         .unwrap();
     let want = baseline.poll_wait(&ticket, CLIENT_TIMEOUT).unwrap();

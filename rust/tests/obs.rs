@@ -1,0 +1,408 @@
+//! Property + end-to-end suite for the observability subsystem (PR 10):
+//!
+//! 1. histogram record/merge agree with exact percentiles within the
+//!    documented bucket error, across several sample distributions;
+//! 2. span trees are well-formed — every recorded parent id is live in the
+//!    ring and child intervals nest strictly inside their parents;
+//! 3. the Chrome trace export round-trips through `util::json`;
+//! 4. `GET /metrics.prom` (and `/metrics?format=prometheus`) over a real
+//!    socket passes the exposition lint;
+//! 5. one `POST /classify` over a real socket yields a **connected span
+//!    tree** — ingress → placement → worker inbox → backend step → at
+//!    least one kernel-dispatch span — verified by walking parent ids.
+//!
+//! The span recorder is process-global, so every test that toggles it
+//! serializes on [`recorder_lock`].
+
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use shiftaddvit::coordinator::backend::{InferenceBackend, NativeBackend};
+use shiftaddvit::coordinator::metrics::Metrics;
+use shiftaddvit::fleet::http::{FrontDoorConfig, HttpFrontDoor};
+use shiftaddvit::fleet::policy::PolicyKind;
+use shiftaddvit::fleet::worker::BackendFactory;
+use shiftaddvit::fleet::{Router, RouterConfig};
+use shiftaddvit::model::ops::Variant;
+use shiftaddvit::obs::hist::Hist;
+use shiftaddvit::obs::trace::{self as otrace, SpanEvent};
+use shiftaddvit::obs::prom;
+use shiftaddvit::util::httpd;
+use shiftaddvit::util::json::Json;
+use shiftaddvit::util::rng::XorShift64;
+use shiftaddvit::util::stats;
+
+const CLIENT_TIMEOUT: Duration = Duration::from_secs(120);
+
+fn recorder_lock() -> &'static Mutex<()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+}
+
+// ---------------------------------------------------------------------------
+// 1. Histogram accuracy properties
+// ---------------------------------------------------------------------------
+
+/// Record `samples` into one histogram and into 4 shards merged back
+/// together; assert both agree with each other exactly and with the exact
+/// percentiles within the documented ≤19% bucket error (0.20 in tests).
+fn check_hist_accuracy(name: &str, samples: &[f64]) {
+    let mut solo = Hist::new();
+    let mut shards = vec![Hist::new(), Hist::new(), Hist::new(), Hist::new()];
+    for (i, &v) in samples.iter().enumerate() {
+        solo.record(v);
+        shards[i % 4].record(v);
+    }
+    let mut merged = Hist::new();
+    for s in &shards {
+        merged.merge(s);
+    }
+    assert_eq!(solo.count(), merged.count(), "{name}: merge loses samples");
+    assert_eq!(solo.sum(), merged.sum(), "{name}: merge changes the sum");
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    for q in [0.1, 0.5, 0.9, 0.95, 0.99] {
+        let exact = stats::percentile(&sorted, q);
+        for (which, h) in [("solo", &solo), ("merged", &merged)] {
+            let approx = h.percentile(q);
+            assert_eq!(
+                solo.percentile(q),
+                merged.percentile(q),
+                "{name} q={q}: merged percentile must equal solo exactly"
+            );
+            if exact > 0.0 {
+                let rel = (approx - exact).abs() / exact;
+                assert!(
+                    rel <= 0.20,
+                    "{name} {which} q={q}: approx {approx} vs exact {exact} (rel {rel:.3})"
+                );
+            }
+        }
+    }
+    // exact moments survive bucketing
+    let mean_exact = samples.iter().sum::<f64>() / samples.len() as f64;
+    assert!((solo.mean() - mean_exact).abs() < 1e-9 * mean_exact.abs().max(1.0));
+    assert_eq!(solo.max(), sorted.last().copied().unwrap());
+    assert_eq!(solo.min(), sorted.first().copied().unwrap());
+}
+
+#[test]
+fn hist_tracks_exact_percentiles_across_distributions() {
+    let mut rng = XorShift64::new(0x0B5E);
+    // uniform-ish latencies around 1ms
+    let uniform: Vec<f64> = (0..5000).map(|_| 0.1 + 2.0 * rng.uniform() as f64).collect();
+    check_hist_accuracy("uniform", &uniform);
+    // heavy-tailed: most requests fast, stragglers 1000x slower
+    let tailed: Vec<f64> = (0..5000)
+        .map(|i| {
+            let base = 0.2 + rng.uniform() as f64;
+            if i % 100 == 0 {
+                base * 1000.0
+            } else {
+                base
+            }
+        })
+        .collect();
+    check_hist_accuracy("heavy-tail", &tailed);
+    // geometric sweep spanning many octaves
+    let sweep: Vec<f64> = (0..2000).map(|i| (i as f64 * 0.01).exp()).collect();
+    check_hist_accuracy("geometric", &sweep);
+}
+
+#[test]
+fn metrics_fleet_merge_equals_solo_percentiles() {
+    // Regression for the fleet-merge percentile bias (satellite b): with
+    // histogram merging, N workers' merged report is exactly the solo
+    // report over the union of the traffic, including tail percentiles.
+    let samples: Vec<f64> = (0..20_000).map(|i| ((i * 61) % 1237) as f64 * 0.05 + 0.1).collect();
+    let mut solo = Metrics::default();
+    let mut workers = vec![Metrics::default(), Metrics::default(), Metrics::default()];
+    for (i, &v) in samples.iter().enumerate() {
+        solo.record("http_classify", v);
+        solo.decode_tokens.record((i % 32) as f64);
+        let w = &mut workers[i % 3];
+        w.record("http_classify", v);
+        w.decode_tokens.record((i % 32) as f64);
+    }
+    let mut merged = Metrics::default();
+    for w in &workers {
+        merged.merge(w);
+    }
+    let s = solo.stage_summary("http_classify").unwrap();
+    let m = merged.stage_summary("http_classify").unwrap();
+    assert_eq!(s.n, m.n);
+    assert_eq!(s.mean, m.mean);
+    assert_eq!(s.p50, m.p50);
+    assert_eq!(s.p95, m.p95);
+    assert_eq!(s.p99, m.p99);
+    assert_eq!(solo.decode_tokens.percentile(0.99), merged.decode_tokens.percentile(0.99));
+}
+
+// ---------------------------------------------------------------------------
+// 2 + 3. Span-tree shape and Chrome export round-trip
+// ---------------------------------------------------------------------------
+
+/// Walk every recorded span: non-zero parents must exist in the snapshot
+/// (live parents), and a child's interval must nest inside its parent's.
+fn assert_well_formed(events: &[SpanEvent]) {
+    let by_id: std::collections::BTreeMap<u64, &SpanEvent> =
+        events.iter().map(|e| (e.id, e)).collect();
+    for e in events {
+        if e.parent == 0 {
+            continue;
+        }
+        let p = by_id
+            .get(&e.parent)
+            .unwrap_or_else(|| panic!("span {} '{}' has dead parent {}", e.id, e.name, e.parent));
+        assert_eq!(e.trace, p.trace, "child and parent share a trace id");
+        // strict nesting: the child opened after and closed before its
+        // parent (parents drop last, so their duration covers children)
+        assert!(
+            e.start_us >= p.start_us - 1.0,
+            "span '{}' starts before its parent '{}'",
+            e.name,
+            p.name
+        );
+        assert!(
+            e.start_us + e.dur_us <= p.start_us + p.dur_us + 1.0,
+            "span '{}' outlives its parent '{}'",
+            e.name,
+            p.name
+        );
+    }
+}
+
+#[test]
+fn span_trees_are_well_formed_and_bounded() {
+    let _l = recorder_lock().lock().unwrap();
+    otrace::set_enabled(true);
+    otrace::reset();
+    // three levels, several siblings, on one thread
+    {
+        let r = otrace::root("request");
+        for _ in 0..3 {
+            let s = otrace::span("step", r.ctx());
+            let _g = otrace::set_current(s.ctx());
+            for _ in 0..2 {
+                let _k = otrace::span("matadd/simd", otrace::current());
+            }
+        }
+    }
+    otrace::set_enabled(false);
+    let events = otrace::events();
+    otrace::reset();
+    assert_eq!(events.len(), 1 + 3 + 6);
+    assert_well_formed(&events);
+    let roots: Vec<_> = events.iter().filter(|e| e.parent == 0).collect();
+    assert_eq!(roots.len(), 1);
+    assert_eq!(roots[0].name, "request");
+    assert!(events.iter().all(|e| e.trace == roots[0].trace));
+}
+
+#[test]
+fn chrome_export_round_trips_through_util_json() {
+    let _l = recorder_lock().lock().unwrap();
+    otrace::set_enabled(true);
+    otrace::reset();
+    {
+        let mut r = otrace::root("req");
+        r.arg("id", "7");
+        let _c = otrace::span("work", r.ctx());
+    }
+    otrace::set_enabled(false);
+    let text = otrace::export_chrome().to_string();
+    otrace::reset();
+
+    let v = Json::parse(&text).expect("chrome export parses back");
+    assert_eq!(v.get("displayTimeUnit").and_then(|d| d.as_str()), Some("ms"));
+    let evs = v.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+    assert_eq!(evs.len(), 2);
+    for e in evs {
+        assert_eq!(e.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(e.get("pid").unwrap().as_usize(), Some(1));
+        assert!(e.get("ts").unwrap().as_f64().is_some());
+        assert!(e.get("dur").unwrap().as_f64().is_some());
+        let args = e.get("args").unwrap();
+        assert!(args.get("span_id").unwrap().as_f64().is_some());
+        assert!(args.get("parent_id").unwrap().as_f64().is_some());
+        assert!(args.get("trace_id").unwrap().as_f64().is_some());
+    }
+    // re-serialize: identical bytes (shortest-roundtrip numbers)
+    assert_eq!(v.to_string(), Json::parse(&text).unwrap().to_string());
+}
+
+// ---------------------------------------------------------------------------
+// 4 + 5. Socket-path: Prometheus exposition + connected span tree
+// ---------------------------------------------------------------------------
+
+fn factory() -> BackendFactory {
+    Arc::new(|| {
+        let b: Box<dyn InferenceBackend> = Box::new(NativeBackend::tiny(Variant::SHIFTADD_MOE));
+        Ok(b)
+    })
+}
+
+fn fleet(workers: usize) -> Router {
+    Router::new(
+        RouterConfig {
+            workers,
+            max_batch: 4,
+            policy: PolicyKind::RoundRobin,
+            step_delay_ms: 0.0,
+            ..RouterConfig::default()
+        },
+        factory(),
+    )
+    .expect("fleet starts")
+}
+
+fn door_cfg() -> FrontDoorConfig {
+    FrontDoorConfig {
+        handlers: 4,
+        request_timeout: CLIENT_TIMEOUT,
+        io_timeout: Duration::from_secs(60),
+        ..FrontDoorConfig::default()
+    }
+}
+
+fn get(addr: std::net::SocketAddr, path: &str) -> httpd::HttpResponse {
+    httpd::request(addr, "GET", path, None, CLIENT_TIMEOUT).expect("GET")
+}
+
+#[test]
+fn metrics_prom_over_socket_passes_exposition_lint() {
+    let _l = recorder_lock().lock().unwrap();
+    otrace::set_enabled(false);
+    let door = HttpFrontDoor::start(fleet(2), None, "127.0.0.1:0", door_cfg()).unwrap();
+    let addr = door.addr();
+
+    // drive one request through so histogram families are populated
+    let sample = shiftaddvit::data::synth_images::gen_image(31_337);
+    let body = Json::obj(vec![(
+        "pixels",
+        Json::Arr(sample.pixels.iter().map(|&p| Json::Num(p as f64)).collect()),
+    )])
+    .to_string();
+    let resp = httpd::request(addr, "POST", "/classify", Some(body.as_bytes()), CLIENT_TIMEOUT)
+        .expect("POST /classify");
+    assert_eq!(resp.status, 200, "body: {}", resp.text().unwrap_or(""));
+
+    for path in ["/metrics.prom", "/metrics?format=prometheus"] {
+        let resp = get(addr, path);
+        assert_eq!(resp.status, 200, "{path}");
+        assert!(
+            resp.header("content-type")
+                .is_some_and(|ct| ct.starts_with("text/plain")),
+            "{path}: exposition is text/plain"
+        );
+        let text = resp.text().expect("exposition is UTF-8");
+        prom::lint(text).unwrap_or_else(|e| panic!("{path} fails lint: {e}"));
+        assert!(text.contains("# TYPE shiftaddvit_requests_total counter"));
+        assert!(
+            text.contains("shiftaddvit_stage_duration_ms_bucket"),
+            "{path}: histogram families present after traffic"
+        );
+        assert!(text.contains("le=\"+Inf\""));
+    }
+    // the JSON shape is still served at the bare path
+    let j = Json::parse(get(addr, "/metrics").text().unwrap()).unwrap();
+    assert!(j.get("engine").is_some());
+    assert!(j.get("front_door").is_some());
+    door.shutdown().unwrap();
+}
+
+#[test]
+fn classify_over_socket_yields_a_connected_span_tree() {
+    let _l = recorder_lock().lock().unwrap();
+    let door = HttpFrontDoor::start(fleet(1), None, "127.0.0.1:0", door_cfg()).unwrap();
+    let addr = door.addr();
+    // enable AFTER fleet warmup so the ring holds only this request's tree
+    otrace::set_enabled(true);
+    otrace::reset();
+
+    let sample = shiftaddvit::data::synth_images::gen_image(77_001);
+    let body = Json::obj(vec![(
+        "pixels",
+        Json::Arr(sample.pixels.iter().map(|&p| Json::Num(p as f64)).collect()),
+    )])
+    .to_string();
+    let resp = httpd::request(addr, "POST", "/classify", Some(body.as_bytes()), CLIENT_TIMEOUT)
+        .expect("POST /classify");
+    assert_eq!(resp.status, 200, "body: {}", resp.text().unwrap_or(""));
+    let id = Json::parse(resp.text().unwrap())
+        .unwrap()
+        .get("id")
+        .and_then(|v| v.as_usize())
+        .expect("response carries the request id");
+
+    // The ingress span records when the handler drops it, which can land
+    // just after the client sees the response: poll briefly for the root.
+    let mut events = Vec::new();
+    for _ in 0..200 {
+        events = otrace::events();
+        if events.iter().any(|e| e.name == "http_classify") {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    otrace::set_enabled(false);
+    door.shutdown().unwrap();
+    otrace::reset();
+
+    assert_well_formed(&events);
+    let root = events
+        .iter()
+        .find(|e| e.name == "http_classify")
+        .expect("ingress root span recorded");
+    assert_eq!(root.parent, 0, "ingress is a trace root");
+    assert!(
+        root.args.iter().any(|(k, v)| k == "id" && *v == id.to_string()),
+        "root span tagged with the request id"
+    );
+    let in_trace: Vec<&SpanEvent> = events.iter().filter(|e| e.trace == root.trace).collect();
+
+    // Every layer of the request path shows up inside THIS trace, each
+    // reachable from the root by walking parent ids.
+    let find = |name: &str| {
+        in_trace
+            .iter()
+            .find(|e| e.name == name)
+            .copied()
+            .unwrap_or_else(|| panic!("no '{name}' span in the request's trace"))
+    };
+    let by_id: std::collections::BTreeMap<u64, &SpanEvent> =
+        in_trace.iter().map(|e| (e.id, *e)).collect();
+    let reaches_root = |mut e: &SpanEvent| {
+        for _ in 0..64 {
+            if e.id == root.id {
+                return true;
+            }
+            match by_id.get(&e.parent) {
+                Some(p) => e = *p,
+                None => return false,
+            }
+        }
+        false
+    };
+    let place = find("place");
+    let inbox = find("worker_inbox");
+    let step = find("backend_step");
+    assert_eq!(place.parent, root.id, "placement parents on ingress");
+    assert_eq!(inbox.parent, root.id, "worker inbox parents on ingress");
+    assert!(reaches_root(step), "backend step links back to ingress");
+    assert!(
+        step.args
+            .iter()
+            .any(|(k, v)| k == "request_ids" && v.split(',').any(|s| s == id.to_string())),
+        "backend step served this request"
+    );
+    let kernels: Vec<&&SpanEvent> = in_trace
+        .iter()
+        .filter(|e| e.name.contains('/') && e.parent == step.id)
+        .collect();
+    assert!(
+        !kernels.is_empty(),
+        "at least one kernel-dispatch span (primitive/backend) under the step"
+    );
+    assert!(kernels.iter().all(|k| reaches_root(k)));
+}

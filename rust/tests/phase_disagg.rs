@@ -126,13 +126,13 @@ fn property_any_budget_and_interleaving_matches_single_phase() {
                      {chunk}, max_live {max_live}, lens {lens:?}, arrivals {arrive_at:?})"
                 ));
             }
-            if m.prefill_tokens.iter().any(|&t| t > budget as f64) {
+            if m.prefill_tokens.max() > budget as f64 {
                 return Err(format!(
-                    "budget {budget}: a prefill dispatch exceeded it ({:?})",
-                    m.prefill_tokens
+                    "budget {budget}: a prefill dispatch exceeded it (max {})",
+                    m.prefill_tokens.max()
                 ));
             }
-            if m.decode_tokens.iter().any(|&t| t > (chunk * max_live) as f64) {
+            if m.decode_tokens.max() > (chunk * max_live) as f64 {
                 return Err(format!(
                     "a decode dispatch exceeded max_live·chunk = {}",
                     chunk * max_live
@@ -234,7 +234,7 @@ fn serve_stream_reports_latency_gauges_under_both_schedulers() {
         if kind == SchedulerKind::Disaggregated {
             // both phase gauges flowed into the merged metrics
             assert!(!report.metrics.prefill_queue.is_empty());
-            assert!(report.metrics.decode_tokens.iter().sum::<f64>() > 0.0);
+            assert!(report.metrics.decode_tokens.sum() > 0.0);
         }
     }
 }
